@@ -1,0 +1,61 @@
+//! Run the paper's §2.5 greedy precision search for one network and print
+//! its accuracy/traffic Pareto frontier and Table-2-style rows.
+//!
+//! ```sh
+//! cargo run --release --example pareto_search [net] [n_images]
+//! ```
+
+use anyhow::Result;
+use qbound::report::{pct, ratio, Chart, Table};
+use qbound::repro::{self, ReproCtx};
+use qbound::search::{pareto, table2};
+
+fn main() -> Result<()> {
+    qbound::util::init_logging();
+    let net = std::env::args().nth(1).unwrap_or_else(|| "lenet".into());
+    let n_images: usize =
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let mut ctx = ReproCtx::new(std::path::Path::new("reports"), 0, n_images)?;
+
+    let t0 = std::time::Instant::now();
+    let dse = repro::explore_net(&mut ctx, &net)?;
+    println!(
+        "explored {} configurations in {:.1}s (descent length {})",
+        dse.descent.explored.len(),
+        t0.elapsed().as_secs_f64(),
+        dse.descent.visited.len()
+    );
+
+    let pts: Vec<(f64, f64)> =
+        dse.descent.explored.iter().map(|v| (v.traffic_ratio, v.accuracy)).collect();
+    let front = pareto::frontier(&pts);
+    let mut chart = Chart::new(
+        &format!("{net} — design space (accuracy vs traffic)"),
+        "traffic ratio vs 32-bit",
+        "top-1",
+    );
+    chart.series('.', pts.clone());
+    chart.series('#', front.iter().map(|&i| pts[i]).collect());
+    print!("{}", chart.render());
+
+    let mut t = Table::new(
+        &format!("{net} — min traffic per tolerance (Table 2 row)"),
+        &["tol", "data bits/layer", "weight F/layer", "top-1", "TR"],
+    );
+    for row in dse.rows.iter().flatten() {
+        let data = if repro::data_f_policy(&net).is_some() {
+            table2::notation_total(&row.cfg)
+        } else {
+            table2::notation_if(&row.cfg)
+        };
+        t.row(vec![
+            format!("{:.0}%", row.tol * 100.0),
+            data,
+            table2::notation_weights(&row.cfg),
+            pct(row.accuracy),
+            ratio(row.traffic_ratio),
+        ]);
+    }
+    print!("{}", t.text());
+    Ok(())
+}

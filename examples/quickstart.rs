@@ -1,0 +1,69 @@
+//! Quickstart: load a compiled network, evaluate it at fp32 and at a
+//! reduced-precision configuration, and report accuracy + traffic.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::nets::NetManifest;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::traffic::{self, Mode};
+use qbound::util;
+
+fn main() -> Result<()> {
+    util::init_logging();
+    let dir = util::artifacts_dir()?;
+    let net = "lenet";
+    let m = NetManifest::load(&dir, net)?;
+    println!(
+        "{}: {} layers, {} weights, trained baseline top-1 {:.4}",
+        m.name,
+        m.n_layers(),
+        util::human_count(m.total_weights() as f64),
+        m.baseline_top1
+    );
+
+    // One worker is plenty for a single network.
+    let mut coord = Coordinator::new(&dir, 1)?;
+
+    // fp32 baseline through the PJRT runtime (should match the manifest).
+    let fp32 = PrecisionConfig::fp32(m.n_layers());
+    let base = coord.eval_one(EvalJob { net: net.into(), cfg: fp32, n_images: 0 })?;
+    println!("fp32 baseline (rust runtime): {base:.4}");
+
+    // A reduced-precision configuration: 1.8 weights, 10.2 data (12 bits).
+    let cfg = PrecisionConfig::uniform(
+        m.n_layers(),
+        QFormat::parse("1.8")?,
+        QFormat::parse("10.2")?,
+    );
+    let acc = coord.eval_one(EvalJob { net: net.into(), cfg: cfg.clone(), n_images: 0 })?;
+    let tr = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &cfg);
+    println!(
+        "quantized {}: top-1 {acc:.4} (rel err {:.3}), traffic ratio {tr:.3} ({:.0}% less traffic)",
+        cfg,
+        (base - acc) / base,
+        (1.0 - tr) * 100.0
+    );
+
+    // Per-layer mixed precision: squeeze late layers harder.
+    let mut mixed = cfg.clone();
+    for l in 0..m.n_layers() {
+        if l >= m.n_layers() / 2 {
+            mixed.dq[l] = QFormat::new(6, 1);
+            mixed.wq[l] = QFormat::new(1, 5);
+        }
+    }
+    let acc_m = coord.eval_one(EvalJob { net: net.into(), cfg: mixed.clone(), n_images: 0 })?;
+    let tr_m = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &mixed);
+    println!(
+        "mixed {}: top-1 {acc_m:.4} (rel err {:.3}), traffic ratio {tr_m:.3}",
+        mixed,
+        (base - acc_m) / base
+    );
+    println!("\n(cache: {} entries, {:?})", coord.cache_len(), coord.stats());
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! End-to-end driver: deploy a searched mixed-precision network behind the
+//! coordinator and serve a Poisson stream of classification requests,
+//! reporting latency, throughput, accuracy and the effective traffic
+//! ratio — the "bounded-memory deployment" the paper motivates.
+//!
+//! All layers compose here: L1 Pallas quantize kernels inside the L2
+//! JAX-lowered HLO, executed by the L3 coordinator's PJRT workers.
+//!
+//! ```sh
+//! cargo run --release --example serve_quantized [net] [requests] [rate]
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::nets::NetManifest;
+use qbound::prng::Xoshiro256pp;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::traffic::{self, Mode};
+use qbound::util;
+
+fn main() -> Result<()> {
+    util::init_logging();
+    let net = std::env::args().nth(1).unwrap_or_else(|| "convnet".into());
+    let n_req: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let rate: f64 = std::env::args().nth(3).and_then(|s| s.parse().ok()).unwrap_or(6.0);
+
+    let dir = util::artifacts_dir()?;
+    let m = NetManifest::load(&dir, &net)?;
+    let nl = m.n_layers();
+
+    // A production-ish mixed config: early layers wider, late layers narrow
+    // (the shape the paper's search converges to).
+    let mut cfg = PrecisionConfig::uniform(nl, QFormat::new(1, 8), QFormat::new(10, 2));
+    for l in 0..nl {
+        if l * 2 >= nl {
+            cfg.dq[l] = QFormat::new(8, 1);
+            cfg.wq[l] = QFormat::new(1, 6);
+        }
+    }
+    let tr = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &cfg);
+
+    let workers = qbound::coordinator::default_workers();
+    let mut coord = Coordinator::new(&dir, workers)?;
+    let n_images = m.batch; // one batch per request
+
+    // Warm both workers (compile once, off the clock).
+    println!("warming {workers} workers on {net}…");
+    coord.eval_batch(&vec![
+        EvalJob { net: net.clone(), cfg: PrecisionConfig::fp32(nl), n_images };
+        workers
+    ])?;
+    let base = coord.eval_one(EvalJob {
+        net: net.clone(),
+        cfg: PrecisionConfig::fp32(nl),
+        n_images: 0,
+    })?;
+    let acc = coord.eval_one(EvalJob { net: net.clone(), cfg: cfg.clone(), n_images: 0 })?;
+
+    // Poisson arrivals; per-request UNIQUE config (rotating fields span a
+    // space ≫ n_req) defeats the memo cache so every request pays real
+    // inference.
+    let mut rng = Xoshiro256pp::new(7);
+    let mut arrivals = Vec::with_capacity(n_req);
+    let mut t = 0.0;
+    for i in 0..n_req {
+        t += rng.exponential(rate);
+        let mut c = cfg.clone();
+        c.dq[i % nl].fbits = 2 + ((i / nl) % 12) as i8;
+        c.dq[(i + 1) % nl].ibits = 8 + ((i / (nl * 12)) % 6) as i8;
+        arrivals.push((Duration::from_secs_f64(t), EvalJob { net: net.clone(), cfg: c, n_images }));
+    }
+
+    let t0 = std::time::Instant::now();
+    let lat = coord.run_stream(&arrivals)?;
+    let wall = t0.elapsed();
+    let mut sorted = lat.clone();
+    sorted.sort_unstable();
+    let p = |q: f64| sorted[((sorted.len() - 1) as f64 * q) as usize];
+
+    println!("\nserve_quantized — {net}, {n_req} requests, Poisson rate {rate}/s, {workers} workers");
+    println!("  config          {cfg}");
+    println!("  accuracy        {acc:.4}  (fp32 {base:.4}, rel err {:.3})", (base - acc) / base);
+    println!("  traffic ratio   {tr:.3} vs fp32  ({:.0}% reduction)", (1.0 - tr) * 100.0);
+    println!("  wall            {}", util::human_duration(wall));
+    println!(
+        "  throughput      {:.1} req/s = {:.0} img/s",
+        n_req as f64 / wall.as_secs_f64(),
+        (n_req * n_images) as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  latency         p50 {}  p95 {}  p99 {}  max {}",
+        util::human_duration(p(0.50)),
+        util::human_duration(p(0.95)),
+        util::human_duration(p(0.99)),
+        util::human_duration(*sorted.last().unwrap())
+    );
+    let busy = coord.busy_time().as_secs_f64();
+    println!(
+        "  utilization     {:.0}% across {workers} workers",
+        100.0 * busy / (wall.as_secs_f64() * workers as f64)
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! The paper's Fig-4 traffic analysis across all shipped networks:
+//! single-image vs batched classification, weights vs data, and where the
+//! bytes actually go.
+//!
+//! ```sh
+//! cargo run --release --example traffic_report
+//! ```
+
+use anyhow::Result;
+use qbound::nets::{ArtifactIndex, NetManifest};
+use qbound::quant::QFormat;
+use qbound::report::Table;
+use qbound::search::space::PrecisionConfig;
+use qbound::traffic::{self, Mode};
+use qbound::util;
+
+fn main() -> Result<()> {
+    util::init_logging();
+    let dir = util::artifacts_dir()?;
+    let index = ArtifactIndex::load(&dir)?;
+
+    let mut t = Table::new(
+        "traffic per image (accesses; batch amortizes weights)",
+        &["net", "weights", "data", "single total", "batch total", "weights share single", "weights share batch"],
+    );
+    for name in &index.nets {
+        let m = NetManifest::load(&dir, name)?;
+        let single = traffic::accesses_per_image(&m, Mode::Single);
+        let batch = traffic::accesses_per_image(&m, Mode::Batch(m.batch));
+        let w: f64 = single.iter().map(|l| l.weight_accesses).sum();
+        let d: f64 = single.iter().map(|l| l.data_accesses).sum();
+        let wb: f64 = batch.iter().map(|l| l.weight_accesses).sum();
+        t.row(vec![
+            name.clone(),
+            util::human_count(w),
+            util::human_count(d),
+            util::human_count(w + d),
+            util::human_count(wb + d),
+            format!("{:.0}%", 100.0 * w / (w + d)),
+            format!("{:.0}%", 100.0 * wb / (wb + d)),
+        ]);
+    }
+    print!("{}", t.text());
+
+    // What a 16-bit uniform and an aggressive mixed config buy, per net.
+    let mut t2 = Table::new(
+        "bit-weighted traffic ratio vs fp32 (batch mode)",
+        &["net", "uniform 16-bit", "uniform 8-bit", "half-net mixed 8/16"],
+    );
+    for name in &index.nets {
+        let m = NetManifest::load(&dir, name)?;
+        let nl = m.n_layers();
+        let u16 = PrecisionConfig::uniform(nl, QFormat::new(1, 15), QFormat::new(14, 2));
+        let u8c = PrecisionConfig::uniform(nl, QFormat::new(1, 7), QFormat::new(6, 2));
+        let mut mixed = u16.clone();
+        for l in nl / 2..nl {
+            mixed.dq[l] = QFormat::new(6, 2);
+            mixed.wq[l] = QFormat::new(1, 7);
+        }
+        let mode = Mode::Batch(m.batch);
+        t2.row(vec![
+            name.clone(),
+            format!("{:.3}", traffic::traffic_ratio(&m, mode, &u16)),
+            format!("{:.3}", traffic::traffic_ratio(&m, mode, &u8c)),
+            format!("{:.3}", traffic::traffic_ratio(&m, mode, &mixed)),
+        ]);
+    }
+    print!("{}", t2.text());
+    println!("\nNote: accuracy impact of these configs is measured by `qbound eval` /");
+    println!("the fig5 exploration; this example isolates the traffic model itself.");
+    Ok(())
+}

@@ -1,0 +1,273 @@
+"""AOT build driver: train → lower → serialize artifacts for the rust L3.
+
+Per network this emits into ``artifacts/``:
+
+    <net>.hlo.txt        — HLO text of forward(params…, images, wq, dq)
+    <net>.weights.ntf    — trained parameters (manifest order)
+    <net>.dataset.ntf    — eval images (N,H,W,C f32) + labels (N i32)
+    <net>.manifest.json  — everything the rust side needs: layer metadata
+                           (elems/weights/MACs for the Fig-4 traffic
+                           model), parameter names/shapes, baseline top-1,
+                           batch size, file names
+    alexnet_stages.hlo.txt — Fig-1 variant with per-stage quantization
+                           inputs for AlexNet layer 2
+
+plus once: ``golden_quant.ntf`` (cross-language quantizer lock vectors)
+and ``index.json`` (build metadata + net list).
+
+HLO **text** is the interchange format (NOT serialized protos): jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` — a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, layers, model, ntf, train
+from .nets import NET_ORDER, NetDef, get
+
+BATCH = 64
+STAGE_NET = "alexnet"
+STAGE_GROUP = 1  # paper Fig 1: AlexNet's *second* convolution layer
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(net: NetDef, params, *, stage_group: int | None = None) -> str:
+    """Lower forward(params…, images, wq, dq[, sq]) at batch=BATCH to HLO text."""
+    L = len(net.groups)
+    img_spec = jax.ShapeDtypeStruct((BATCH, *net.input_shape), jnp.float32)
+    cfg_spec = jax.ShapeDtypeStruct((L, 2), jnp.float32)
+    param_specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params]
+    fwd = model.make_forward(net, use_pallas=True, stage_group=stage_group)
+
+    if stage_group is None:
+
+        def fn(*args):
+            ps = list(args[:-3])
+            images, wq, dq = args[-3:]
+            return (fwd(ps, images, wq, dq),)
+
+        specs = [*param_specs, img_spec, cfg_spec, cfg_spec]
+    else:
+        n_stages = len(net.groups[stage_group].ops)
+        sq_spec = jax.ShapeDtypeStruct((n_stages, 2), jnp.float32)
+
+        def fn(*args):
+            ps = list(args[:-4])
+            images, wq, dq, sq = args[-4:]
+            return (fwd(ps, images, wq, dq, sq),)
+
+        specs = [*param_specs, img_spec, cfg_spec, cfg_spec, sq_spec]
+
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def build_manifest(net: NetDef, names, params, info, files: dict) -> dict:
+    meta, out_shape = layers.shape_walk(net.groups, net.input_shape)
+    return {
+        "name": net.name,
+        "dataset": net.dataset,
+        "num_classes": net.num_classes,
+        "input_shape": list(net.input_shape),
+        "batch": BATCH,
+        "n_eval": net.n_eval,
+        "baseline_top1": info["top1"],
+        "train": {
+            "steps": info["steps"],
+            "final_loss": info["final_loss"],
+            "seconds": round(info["train_seconds"], 2),
+        },
+        "layers": meta,
+        "params": [
+            {"name": n, "shape": list(p.shape)} for n, p in zip(names, params)
+        ],
+        "files": files,
+        "stage_variant": (
+            {
+                "hlo": files.get("stages_hlo"),
+                "group_index": STAGE_GROUP,
+                "n_stages": len(net.groups[STAGE_GROUP].ops),
+                "stage_names": [op.name for op in net.groups[STAGE_GROUP].ops],
+            }
+            if net.name == STAGE_NET
+            else None
+        ),
+    }
+
+
+KERNEL_N = 65536  # element count of the standalone kernel executables
+
+
+def write_kernel_artifacts(out_dir: str) -> None:
+    """Standalone L1-kernel executables (beyond the in-net use):
+
+    kernel_rne.hlo.txt — quantize_fixed(x[N], cfg[2]) -> q[N]
+    kernel_sr.hlo.txt  — quantize_stochastic(x[N], cfg[2], u[N]) -> q[N]
+
+    Used by the rust side for (a) device-vs-host bit-parity tests on the
+    *compiled* kernel (closing the loop the golden vectors only test via
+    the oracle), (b) kernel throughput benches, and (c) the stochastic-
+    vs-RNE rounding study (paper §4 future work; Gupta et al. 2015).
+    """
+    from .kernels import fixedpoint as fp
+
+    x = jax.ShapeDtypeStruct((KERNEL_N,), jnp.float32)
+    cfg = jax.ShapeDtypeStruct((2,), jnp.float32)
+
+    lowered = jax.jit(lambda x, c: (fp.quantize_fixed(x, c),)).lower(x, cfg)
+    with open(os.path.join(out_dir, "kernel_rne.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(lambda x, c, u: (fp.quantize_stochastic(x, c, u),)).lower(x, cfg, x)
+    with open(os.path.join(out_dir, "kernel_sr.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def write_golden_quant(out_dir: str, seed: int = 123) -> None:
+    """Cross-language lock vectors: x plus q(x) for a grid of (I, F)."""
+    rng = np.random.RandomState(seed)
+    x = np.concatenate(
+        [
+            rng.randn(512).astype(np.float32) * 8.0,
+            rng.uniform(-1, 1, 256).astype(np.float32),
+            np.array(
+                [0.0, -0.0, 0.5, -0.5, 0.25, -0.25, 1.5, 2.5, -1.5, -2.5, 1e6, -1e6, 1e-6],
+                np.float32,
+            ),
+        ]
+    )
+    tensors: dict[str, np.ndarray] = {"x": x}
+    from .kernels import ref
+
+    for i in [0, 1, 2, 4, 8, 12, 16]:
+        for f in [0, 1, 2, 4, 8, 12]:
+            q = np.asarray(ref.quantize_ref(x, float(i), float(f)))
+            tensors[f"q_{i}_{f}"] = q
+    tensors["q_sentinel"] = np.asarray(ref.quantize_ref(x, -1.0, 0.0))
+    ntf.write(os.path.join(out_dir, "golden_quant.ntf"), tensors)
+
+
+def load_or_train(net: NetDef, out_dir: str, retrain: bool):
+    """Reuse previously-trained weights when the artifacts already carry
+    them (training is the expensive build phase; re-lowering after a
+    kernel/graph change should not repeat it). `--retrain` forces a fresh
+    run. The eval split is regenerated deterministically either way.
+    """
+    import jax.numpy as jnp
+
+    from . import datasets as ds
+
+    wpath = os.path.join(out_dir, f"{net.name}.weights.ntf")
+    mpath = os.path.join(out_dir, f"{net.name}.manifest.json")
+    if not retrain and os.path.exists(wpath) and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        if old.get("n_eval") == net.n_eval and old.get("train", {}).get("steps") == net.train_steps:
+            tensors = ntf.read(wpath)
+            names, _ = layers.init_params(net.groups, net.input_shape, seed=77)
+            if all(n in tensors for n in names):
+                print(f"  reusing trained weights from {wpath}")
+                params = [jnp.asarray(tensors[n]) for n in names]
+                _, _, ex, ey = ds.load(net.dataset, 1, net.n_eval, seed=0)
+                info = {
+                    "top1": old["baseline_top1"],
+                    "final_loss": old["train"]["final_loss"],
+                    "train_seconds": 0.0,
+                    "steps": old["train"]["steps"],
+                }
+                return names, params, (ex, ey), info
+    return train.train(net)
+
+
+def build_net(net: NetDef, out_dir: str, quick: bool, retrain: bool = False) -> dict:
+    if quick:
+        net.train_steps = max(60, net.train_steps // 10)
+        net.n_eval = 256
+    print(f"== {net.name} ({net.dataset}) ==")
+    names, params, (ex, ey), info = load_or_train(net, out_dir, retrain)
+
+    files = {
+        "hlo": f"{net.name}.hlo.txt",
+        "weights": f"{net.name}.weights.ntf",
+        "dataset": f"{net.name}.dataset.ntf",
+    }
+    t0 = time.time()
+    hlo = lower_forward(net, params)
+    print(f"  lowered HLO: {len(hlo)/1e6:.2f} MB in {time.time()-t0:.1f}s")
+    with open(os.path.join(out_dir, files["hlo"]), "w") as f:
+        f.write(hlo)
+
+    if net.name == STAGE_NET:
+        files["stages_hlo"] = f"{net.name}_stages.hlo.txt"
+        hlo_s = lower_forward(net, params, stage_group=STAGE_GROUP)
+        with open(os.path.join(out_dir, files["stages_hlo"]), "w") as f:
+            f.write(hlo_s)
+
+    ntf.write(
+        os.path.join(out_dir, files["weights"]),
+        {n: np.asarray(p) for n, p in zip(names, params)},
+    )
+    ntf.write(
+        os.path.join(out_dir, files["dataset"]),
+        {"images": ex.astype(np.float32), "labels": ey.astype(np.int32)},
+    )
+    manifest = build_manifest(net, names, params, info, files)
+    with open(os.path.join(out_dir, f"{net.name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return {"name": net.name, "baseline_top1": info["top1"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--nets", default=",".join(NET_ORDER))
+    ap.add_argument(
+        "--quick", action="store_true", help="tiny training run (CI / smoke only)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    t0 = time.time()
+    entries = []
+    for name in args.nets.split(","):
+        entries.append(build_net(get(name), args.out_dir, args.quick))
+    write_golden_quant(args.out_dir)
+    write_kernel_artifacts(args.out_dir)
+    index = {
+        "nets": entries,
+        "batch": BATCH,
+        "kernel_n": KERNEL_N,
+        "quick": args.quick,
+        "jax_version": jax.__version__,
+        "built_unix": int(time.time()),
+        "build_seconds": round(time.time() - t0, 1),
+    }
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"artifacts complete in {index['build_seconds']}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Layer-1 Pallas kernels: fixed-point quantize/dequantize round-trip.
+
+The paper's hot spot is the representation conversion applied to every
+value crossing a layer boundary (§2.1).  On TPU we express it as a Pallas
+kernel so the HBM<->VMEM schedule is explicit:
+
+  * the activation tensor is flattened and tiled into ``(1, BLOCK)`` VMEM
+    blocks (BLOCK a multiple of 128 lanes x 8 sublanes for fp32);
+  * the per-layer ``(I, F)`` configuration is a tiny operand mapped to the
+    same (0,)-block for every grid step — the scalar-prefetch idiom — so a
+    single compiled executable serves *every* precision configuration;
+  * the body is pure VPU work (exp2 / rint / clip / mul): arithmetic
+    intensity ~1 flop/byte, i.e. memory-bound; see DESIGN.md
+    §Hardware-Adaptation for the roofline discussion.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO.  Numerics are identical; TPU performance is estimated
+analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile geometry. Blocks are multiples of (8 sublanes x 128 lanes) fp32
+# vregs; MAX_BLOCK = 2^20 fp32 = 4 MiB, which double-buffers comfortably
+# inside a 16 MiB VMEM budget. Small tensors get a single right-sized
+# block (grid=1) instead of padding up to MAX_BLOCK — under the Pallas
+# interpreter every grid step costs a serialized dynamic-slice copy, so
+# the schedule minimizes grid steps first, block size second
+# (EXPERIMENTS.md §Perf records the 8192->adaptive change: interpret-mode
+# quantize of 2M fp32 went 396 ms -> ~8 ms).
+LANE = 1024  # 8 sublanes x 128 lanes
+MAX_BLOCK = 1 << 20
+
+
+def _block_for(n: int) -> int:
+    """Smallest LANE-multiple block covering n, capped at MAX_BLOCK."""
+    b = (n + LANE - 1) // LANE * LANE
+    return min(b, MAX_BLOCK)
+
+
+def _grid(i, f):
+    """Exact Q(I.F) grid parameters (see ref._grid for the exp2 story:
+    XLA's exp2 is exp(x·ln2) and drifts off integer powers; rint snaps it
+    back so rust/oracle/kernel stay bit-identical)."""
+    scale = jnp.rint(jnp.exp2(f))
+    inv = 1.0 / scale
+    hipow = jnp.rint(jnp.exp2(i)) * 0.5  # exact for I >= 0 incl. I = 0
+    return scale, inv, -hipow, hipow - inv
+
+
+def _quantize_kernel(cfg_ref, x_ref, o_ref):
+    """Pallas body: o = clip(rint(x * 2^F) * 2^-F, lo, hi); sentinel I<0."""
+    i = cfg_ref[0]
+    f = cfg_ref[1]
+    scale, inv, lo, hi = _grid(i, f)
+    x = x_ref[...]
+    q = jnp.clip(jnp.rint(x * scale) * inv, lo, hi)
+    o_ref[...] = jnp.where(i < 0.0, x, q)
+
+
+def _stochastic_kernel(cfg_ref, x_ref, u_ref, o_ref):
+    """Stochastic-rounding body (extension): floor(x*2^F + u) * 2^-F."""
+    i = cfg_ref[0]
+    f = cfg_ref[1]
+    scale, inv, lo, hi = _grid(i, f)
+    x = x_ref[...]
+    q = jnp.clip(jnp.floor(x * scale + u_ref[...]) * inv, lo, hi)
+    o_ref[...] = jnp.where(i < 0.0, x, q)
+
+
+def _pad_to_block(flat: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+    n = flat.shape[0]
+    padded = (n + block - 1) // block * block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat, n
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantize_fixed(x: jnp.ndarray, cfg: jnp.ndarray) -> jnp.ndarray:
+    """Quantize ``x`` (any shape, fp32) to the Q(I.F) grid given by ``cfg``.
+
+    ``cfg`` is a ``(2,)`` fp32 array ``[I, F]``; ``I < 0`` is the
+    fp32-pass-through sentinel.  Returns fp32 of the same shape.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    shape = x.shape
+    block = _block_for(x.size)
+    flat, n = _pad_to_block(x.reshape(-1), block)
+    tiles = flat.reshape(-1, block)
+    grid = (tiles.shape[0],)
+    out = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),          # cfg: same block each step
+            pl.BlockSpec((1, block), lambda i: (i, 0)),  # x: stream tiles
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
+        interpret=True,
+    )(jnp.asarray(cfg, jnp.float32), tiles)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantize_stochastic(x: jnp.ndarray, cfg: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Stochastic-rounding quantize; ``u`` ~ U[0,1) with the shape of ``x``."""
+    x = jnp.asarray(x, jnp.float32)
+    shape = x.shape
+    block = _block_for(x.size)
+    flat, n = _pad_to_block(x.reshape(-1), block)
+    uflat, _ = _pad_to_block(jnp.asarray(u, jnp.float32).reshape(-1), block)
+    tiles = flat.reshape(-1, block)
+    utiles = uflat.reshape(-1, block)
+    out = pl.pallas_call(
+        _stochastic_kernel,
+        grid=(tiles.shape[0],),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
+        interpret=True,
+    )(jnp.asarray(cfg, jnp.float32), tiles, utiles)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def quantize(x: jnp.ndarray, cfg: jnp.ndarray, *, use_pallas: bool = True) -> jnp.ndarray:
+    """Dispatch between the Pallas kernel and the jnp oracle.
+
+    The network graphs call this; ``use_pallas=True`` is the shipped
+    configuration so the kernel lowers into the same HLO artifact the rust
+    runtime executes.  The oracle path exists for A/B perf comparisons
+    (EXPERIMENTS.md §Perf) and as the hypothesis-test reference.
+    """
+    if use_pallas:
+        return quantize_fixed(x, cfg)
+    from . import ref
+
+    return ref.quantize_ref(x, cfg[0], cfg[1])

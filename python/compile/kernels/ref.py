@@ -1,0 +1,92 @@
+"""Pure-jnp oracle for the fixed-point quantization kernels.
+
+This module is the *semantic source of truth* for the numeric format used
+throughout the repo (paper §2.1 "Target Numerical Representation"):
+
+    Q(I.F)  — a fixed-point value with I integer bits (including the sign
+              bit) and F fractional bits.
+
+Representable values are ``k * 2^-F`` for integer ``k`` in
+``[-2^(I-1+F), 2^(I-1+F) - 1]``, i.e. the closed range
+
+    lo = -2^(I-1)            hi = 2^(I-1) - 2^-F
+
+Quantization is round-to-nearest-even (``rint``) followed by saturation,
+performed on fp32 values and returned as fp32 — exactly the paper's
+"convert at layer read/write, compute in fp32" methodology.
+
+A configuration with ``I < 0`` is the *pass-through sentinel*: the value
+is returned untouched (fp32 baseline). This lets one AOT-compiled
+executable serve both the baseline and every quantized configuration.
+
+The Rust-side quantizer (``rust/src/quant``) and the Pallas kernel
+(``fixedpoint.py``) are locked bit-for-bit against this definition by
+tests on both sides of the language boundary.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray, ibits: jnp.ndarray, fbits: jnp.ndarray) -> jnp.ndarray:
+    """Round-trip ``x`` through the Q(ibits.fbits) fixed-point grid.
+
+    Args:
+      x: fp32 array of any shape.
+      ibits: scalar (or broadcastable) fp32 — integer bits incl. sign.
+        Negative means pass-through.
+      fbits: scalar (or broadcastable) fp32 — fractional bits (>= 0).
+
+    Returns:
+      fp32 array of the same shape as ``x``.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    i = jnp.asarray(ibits, jnp.float32)
+    f = jnp.asarray(fbits, jnp.float32)
+    scale, inv, lo, hi = _grid(i, f)
+    q = jnp.clip(jnp.rint(x * scale) * inv, lo, hi)
+    return jnp.where(i < 0.0, x, q).astype(jnp.float32)
+
+
+def _grid(i, f):
+    """Exact Q(I.F) grid parameters.
+
+    XLA lowers ``exp2`` through ``exp(x * ln 2)``, which is NOT exact for
+    integer exponents (e.g. 2^15 -> 32767.998) — and the rust host
+    quantizer uses the exactly-rounded libm ``exp2f``. To keep the three
+    implementations bit-identical we snap the (always power-of-two)
+    magnitudes to integers with ``rint`` and derive the reciprocal by exact
+    division: 1/2^k is exact in fp32 for the k used here (|k| <= 16).
+    """
+    scale = jnp.rint(jnp.exp2(f))          # 2^F, exact after rounding
+    inv = 1.0 / scale                      # 2^-F, exact (power of two)
+    hipow = jnp.rint(jnp.exp2(i)) * 0.5    # 2^(I-1); snap 2^I (integer for
+    lo = -hipow                            # I >= 0) then halve exactly —
+    hi = hipow - inv                       # keeps I = 0 formats correct
+    return scale, inv, lo, hi
+
+
+def quantize_stochastic_ref(
+    x: jnp.ndarray, ibits: jnp.ndarray, fbits: jnp.ndarray, u: jnp.ndarray
+) -> jnp.ndarray:
+    """Stochastic-rounding variant (paper §4 future work; Gupta et al. 2015).
+
+    ``u`` is uniform noise in [0, 1) of the same shape as ``x``; the value
+    is rounded down with probability equal to its distance to the upper
+    grid point. Saturation and the sentinel behave as in `quantize_ref`.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    i = jnp.asarray(ibits, jnp.float32)
+    f = jnp.asarray(fbits, jnp.float32)
+    scale, inv, lo, hi = _grid(i, f)
+    q = jnp.clip(jnp.floor(x * scale + u) * inv, lo, hi)
+    return jnp.where(i < 0.0, x, q).astype(jnp.float32)
+
+
+def qformat_range(ibits: float, fbits: float) -> tuple[float, float, float]:
+    """(lo, hi, step) of the Q(I.F) grid — mirrors rust `QFormat::range`."""
+    step = 2.0 ** (-fbits)
+    hi = 2.0 ** (ibits - 1.0) - step
+    lo = -(2.0 ** (ibits - 1.0))
+    return lo, hi, step

@@ -1,0 +1,431 @@
+"""Layer-2 building blocks: ops, parameter init, shape/MAC accounting.
+
+A network is described declaratively as a list of `LayerGroup`s, each a
+list of `Op`s. The same description drives four consumers:
+
+  1. `init_params`  — parameter initialization (He-normal),
+  2. `apply`        — the jit-able forward pass (with quantization hooks),
+  3. `shape_walk`   — analytic shape/weight/MAC accounting used for the
+                      paper's traffic model (Fig 4) and the manifest,
+  4. the AOT manifest consumed by the rust coordinator.
+
+Grouping follows the paper's Appendix A: each "layer" is a main conv/FC
+stage plus its trailing relu/pool/LRN/dropout stages, and for GoogLeNet a
+whole inception module is one group. Data quantization is applied to each
+group's *output*; weight quantization to each group's weights.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# ----------------------------------------------------------------------------
+# Ops
+# ----------------------------------------------------------------------------
+
+
+@dataclass
+class Conv:
+    """2-D convolution, NHWC x HWIO -> NHWC, with bias."""
+
+    out_c: int
+    k: int
+    stride: int = 1
+    padding: str = "SAME"  # or "VALID"
+    name: str = "conv"
+
+
+@dataclass
+class Dense:
+    """Fully-connected layer (expects flattened input), with bias."""
+
+    out: int
+    name: str = "fc"
+
+
+@dataclass
+class ReLU:
+    name: str = "relu"
+
+
+@dataclass
+class MaxPool:
+    k: int
+    stride: int
+    name: str = "pool"
+
+
+@dataclass
+class AvgPool:
+    k: int
+    stride: int
+    name: str = "avgpool"
+
+
+@dataclass
+class GlobalAvgPool:
+    name: str = "gap"
+
+
+@dataclass
+class LRN:
+    """Local response normalization across channels (AlexNet norm1/norm2)."""
+
+    n: int = 5
+    alpha: float = 1e-4
+    beta: float = 0.75
+    name: str = "norm"
+
+
+@dataclass
+class Flatten:
+    name: str = "flatten"
+
+
+@dataclass
+class Dropout:
+    """Identity at inference (classification study only)."""
+
+    rate: float = 0.5
+    name: str = "drop"
+
+
+@dataclass
+class Inception:
+    """GoogLeNet inception module: 1x1 / 3x3(reduce) / 5x5(reduce) / pool-proj.
+
+    All six convolutions (plus their biases) belong to one precision group,
+    matching the paper's treatment of inception modules as single layers.
+    """
+
+    b1: int
+    b3r: int
+    b3: int
+    b5r: int
+    b5: int
+    pp: int
+    name: str = "inception"
+
+    @property
+    def out_c(self) -> int:
+        return self.b1 + self.b3 + self.b5 + self.pp
+
+
+@dataclass
+class LayerGroup:
+    """One paper-granularity 'layer': name, kind, and its op pipeline."""
+
+    name: str
+    kind: str  # "conv" | "fc" | "inception"
+    ops: list = field(default_factory=list)
+
+
+# ----------------------------------------------------------------------------
+# Parameter init
+# ----------------------------------------------------------------------------
+
+
+def _he(rng: np.random.RandomState, shape: tuple[int, ...], fan_in: int) -> np.ndarray:
+    return (rng.randn(*shape) * math.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def _conv_params(rng, op: Conv, in_c: int, prefix: str) -> list[tuple[str, np.ndarray]]:
+    w = _he(rng, (op.k, op.k, in_c, op.out_c), op.k * op.k * in_c)
+    b = np.zeros((op.out_c,), np.float32)
+    return [(f"{prefix}.w", w), (f"{prefix}.b", b)]
+
+
+def init_params(groups: list[LayerGroup], input_shape: tuple[int, int, int], seed: int):
+    """Return (names, arrays) in deterministic order; shapes from shape_walk."""
+    rng = np.random.RandomState(seed)
+    names: list[str] = []
+    arrays: list[np.ndarray] = []
+    shape = input_shape  # (H, W, C)
+    for g in groups:
+        for op in g.ops:
+            prefix = f"{g.name}.{op.name}"
+            if isinstance(op, Conv):
+                for n, a in _conv_params(rng, op, shape[2], prefix):
+                    names.append(n)
+                    arrays.append(a)
+            elif isinstance(op, Dense):
+                fan_in = int(np.prod(shape))
+                w = _he(rng, (fan_in, op.out), fan_in)
+                b = np.zeros((op.out,), np.float32)
+                names += [f"{prefix}.w", f"{prefix}.b"]
+                arrays += [w, b]
+            elif isinstance(op, Inception):
+                in_c = shape[2]
+                branches = [
+                    (f"{prefix}.b1", 1, in_c, op.b1),
+                    (f"{prefix}.b3r", 1, in_c, op.b3r),
+                    (f"{prefix}.b3", 3, op.b3r, op.b3),
+                    (f"{prefix}.b5r", 1, in_c, op.b5r),
+                    (f"{prefix}.b5", 5, op.b5r, op.b5),
+                    (f"{prefix}.pp", 1, in_c, op.pp),
+                ]
+                for n, k, ic, oc in branches:
+                    names.append(f"{n}.w")
+                    arrays.append(_he(rng, (k, k, ic, oc), k * k * ic))
+                    names.append(f"{n}.b")
+                    arrays.append(np.zeros((oc,), np.float32))
+            shape = _op_out_shape(op, shape)
+    return names, arrays
+
+
+# ----------------------------------------------------------------------------
+# Shape / MAC walk (analytic — no tracing)
+# ----------------------------------------------------------------------------
+
+
+def _conv_out_hw(h: int, w: int, k: int, s: int, padding: str) -> tuple[int, int]:
+    if padding == "SAME":
+        return (h + s - 1) // s, (w + s - 1) // s
+    return (h - k) // s + 1, (w - k) // s + 1
+
+
+def _op_out_shape(op, shape: tuple[int, ...]) -> tuple[int, ...]:
+    if isinstance(op, Conv):
+        h, w = _conv_out_hw(shape[0], shape[1], op.k, op.stride, op.padding)
+        return (h, w, op.out_c)
+    if isinstance(op, Dense):
+        return (op.out,)
+    if isinstance(op, (MaxPool, AvgPool)):
+        h, w = _conv_out_hw(shape[0], shape[1], op.k, op.stride, "SAME")
+        return (h, w, shape[2])
+    if isinstance(op, GlobalAvgPool):
+        return (shape[2],)
+    if isinstance(op, Flatten):
+        return (int(np.prod(shape)),)
+    if isinstance(op, Inception):
+        return (shape[0], shape[1], op.out_c)
+    return shape  # ReLU, LRN, Dropout
+
+
+def _op_counts(op, in_shape: tuple[int, ...]) -> tuple[int, int]:
+    """(weight_elems incl. bias, MACs) for one op given its input shape."""
+    if isinstance(op, Conv):
+        h, w = _conv_out_hw(in_shape[0], in_shape[1], op.k, op.stride, op.padding)
+        wts = op.k * op.k * in_shape[2] * op.out_c + op.out_c
+        macs = h * w * op.out_c * op.k * op.k * in_shape[2]
+        return wts, macs
+    if isinstance(op, Dense):
+        fan_in = int(np.prod(in_shape))
+        return fan_in * op.out + op.out, fan_in * op.out
+    if isinstance(op, Inception):
+        h, w, c = in_shape
+        wts = macs = 0
+        for k, ic, oc in [
+            (1, c, op.b1),
+            (1, c, op.b3r),
+            (3, op.b3r, op.b3),
+            (1, c, op.b5r),
+            (5, op.b5r, op.b5),
+            (1, c, op.pp),
+        ]:
+            wts += k * k * ic * oc + oc
+            macs += h * w * oc * k * k * ic
+        return wts, macs
+    return 0, 0
+
+
+def shape_walk(groups: list[LayerGroup], input_shape: tuple[int, int, int]):
+    """Per-group metadata: dict with in/out elems, weights, MACs, stages."""
+    meta = []
+    shape = input_shape
+    for g in groups:
+        in_elems = int(np.prod(shape))
+        wts = 0
+        macs = 0
+        stages = []
+        for op in g.ops:
+            w, m = _op_counts(op, shape)
+            wts += w
+            macs += m
+            shape = _op_out_shape(op, shape)
+            stages.append({"name": op.name, "out_shape": list(shape)})
+        meta.append(
+            {
+                "name": g.name,
+                "kind": g.kind,
+                "in_elems": in_elems,
+                "out_elems": int(np.prod(shape)),
+                "weight_elems": int(wts),
+                "macs": int(macs),
+                "stages": stages,
+            }
+        )
+    return meta, shape
+
+
+# ----------------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------------
+
+_DIMNUMS = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv2d(x, w, b, stride: int, padding: str):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding, dimension_numbers=_DIMNUMS
+    )
+    return y + b
+
+
+def _maxpool(x, k: int, s: int):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, s, s, 1), "SAME"
+    )
+
+
+def _avgpool(x, k: int, s: int):
+    summed = lax.reduce_window(x, 0.0, lax.add, (1, k, k, 1), (1, s, s, 1), "SAME")
+    ones = jnp.ones_like(x)
+    counts = lax.reduce_window(ones, 0.0, lax.add, (1, k, k, 1), (1, s, s, 1), "SAME")
+    return summed / counts
+
+
+def _lrn(x, n: int, alpha: float, beta: float):
+    """Caffe-style across-channel LRN: x / (1 + alpha/n * sum x^2)^beta."""
+    half = n // 2
+    sq = x * x
+    pad = jnp.pad(sq, ((0, 0), (0, 0), (0, 0), (half, half)))
+    acc = jnp.zeros_like(x)
+    for d in range(n):
+        acc = acc + lax.dynamic_slice_in_dim(pad, d, x.shape[3], axis=3)
+    return x / jnp.power(1.0 + (alpha / n) * acc, beta)
+
+
+def group_param_counts(groups: list[LayerGroup]) -> list[int]:
+    """Number of flat parameter tensors consumed by each group."""
+    counts = []
+    for g in groups:
+        n = 0
+        for op in g.ops:
+            if isinstance(op, (Conv, Dense)):
+                n += 2
+            elif isinstance(op, Inception):
+                n += 12
+        counts.append(n)
+    return counts
+
+
+def quantize_group_params(params: list, counts: list[int], wq, quantize):
+    """Quantize each group's parameters with its (I, F) row — batched.
+
+    All tensors of a group are flattened into ONE vector and quantized with
+    a single kernel invocation (elementwise op, so semantics are identical
+    to per-tensor quantization), then split back. This keeps the number of
+    Pallas calls proportional to the number of *layers*, not tensors —
+    GoogLeNet drops from 114 to 11 weight-quant kernel launches.
+    """
+    out = []
+    idx = 0
+    for gi, n in enumerate(counts):
+        group = params[idx : idx + n]
+        idx += n
+        if not group:
+            continue
+        flats = [p.reshape(-1) for p in group]
+        sizes = [f.shape[0] for f in flats]
+        q = quantize(jnp.concatenate(flats), wq[gi])
+        off = 0
+        for p, s in zip(group, sizes):
+            out.append(q[off : off + s].reshape(p.shape))
+            off += s
+    return out
+
+
+class ParamCursor:
+    """Sequential reader over the flat parameter list (order = init order)."""
+
+    def __init__(self, params: list):
+        self.params = params
+        self.idx = 0
+
+    def take(self, n: int = 1):
+        out = self.params[self.idx : self.idx + n]
+        self.idx += n
+        return out if n > 1 else out[0]
+
+
+def _apply_op(op, x, cursor: ParamCursor, qw):
+    """Apply one op; `qw` quantizes any weight tensor it consumes."""
+    if isinstance(op, Conv):
+        w, b = cursor.take(2)
+        return _conv2d(x, qw(w), qw(b), op.stride, op.padding)
+    if isinstance(op, Dense):
+        w, b = cursor.take(2)
+        return x @ qw(w) + qw(b)
+    if isinstance(op, ReLU):
+        return jax.nn.relu(x)
+    if isinstance(op, MaxPool):
+        return _maxpool(x, op.k, op.stride)
+    if isinstance(op, AvgPool):
+        return _avgpool(x, op.k, op.stride)
+    if isinstance(op, GlobalAvgPool):
+        return jnp.mean(x, axis=(1, 2))
+    if isinstance(op, LRN):
+        return _lrn(x, op.n, op.alpha, op.beta)
+    if isinstance(op, Flatten):
+        return x.reshape(x.shape[0], -1)
+    if isinstance(op, Dropout):
+        return x  # inference
+    if isinstance(op, Inception):
+        ps = cursor.take(12)
+        w1, b1, w3r, b3r, w3, b3, w5r, b5r, w5, b5, wp, bp = [qw(p) for p in ps]
+        br1 = jax.nn.relu(_conv2d(x, w1, b1, 1, "SAME"))
+        br3 = jax.nn.relu(_conv2d(x, w3r, b3r, 1, "SAME"))
+        br3 = jax.nn.relu(_conv2d(br3, w3, b3, 1, "SAME"))
+        br5 = jax.nn.relu(_conv2d(x, w5r, b5r, 1, "SAME"))
+        br5 = jax.nn.relu(_conv2d(br5, w5, b5, 1, "SAME"))
+        brp = _maxpool(x, 3, 1)
+        brp = jax.nn.relu(_conv2d(brp, wp, bp, 1, "SAME"))
+        return jnp.concatenate([br1, br3, br5, brp], axis=3)
+    raise TypeError(f"unknown op {op!r}")
+
+
+def apply(
+    groups: list[LayerGroup],
+    params: list,
+    x,
+    wq,
+    dq,
+    quantize,
+    stage_group: int | None = None,
+    stage_cfg=None,
+):
+    """Forward pass with per-layer quantization.
+
+    Args:
+      params: flat parameter list (init_params order).
+      x: (B, H, W, C) fp32 batch.
+      wq: (L, 2) per-group weight (I, F); sentinel I<0 = fp32.
+      dq: (L, 2) per-group *output-data* (I, F); the network input is
+        quantized with dq[0] (the first layer's data format — see DESIGN.md).
+      quantize: fn(x, cfg2) -> x (the L1 kernel or the oracle).
+      stage_group: if set (Fig 1 mode), group index whose intermediate
+        stage outputs are quantized with rows of `stage_cfg`
+        ((n_ops, 2)); that group's normal output quant is skipped in
+        favour of the final stage row.
+    """
+    counts = group_param_counts(groups)
+    qparams = quantize_group_params(params, counts, wq, quantize)
+    cursor = ParamCursor(qparams)
+    ident = lambda w: w  # weights already quantized group-wise above
+    h = quantize(x, dq[0])
+    for gi, g in enumerate(groups):
+        for oi, op in enumerate(g.ops):
+            h = _apply_op(op, h, cursor, ident)
+            if stage_group is not None and gi == stage_group:
+                h = quantize(h, stage_cfg[oi])
+        if not (stage_group is not None and gi == stage_group):
+            h = quantize(h, dq[gi])
+    assert cursor.idx == len(qparams), "parameter list length mismatch"
+    return h

@@ -1,0 +1,72 @@
+"""Layer-2 entry point: the quantized forward pass that gets AOT-lowered.
+
+`forward` is the function whose lowered HLO the rust coordinator executes.
+Its signature is designed so that ONE compiled executable serves every
+precision configuration (precision arrives as runtime operands):
+
+    forward(params..., images, wq, dq) -> (logits,)
+
+  * ``params...`` — the network's flat weight list (manifest order);
+  * ``images``    — (B, H, W, C) fp32 batch (fixed B at lowering time);
+  * ``wq``        — (L, 2) fp32 per-layer weight (I, F), I<0 = fp32;
+  * ``dq``        — (L, 2) fp32 per-layer output-data (I, F);
+  * for the Fig-1 stage-granularity variant, an extra
+    ``sq`` — (S, 2) per-stage config for one designated group.
+
+Quantization uses the L1 Pallas kernel so it lowers into the same HLO
+module (kernels/fixedpoint.py; interpret=True — see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers
+from .kernels import fixedpoint
+from .nets import NetDef
+
+
+def make_forward(net: NetDef, *, use_pallas: bool = True, stage_group: int | None = None):
+    """Build the jit-able forward for `net`.
+
+    Returns fn(params_list, images, wq, dq[, sq]) -> logits.
+    """
+
+    def quantize(x, cfg):
+        return fixedpoint.quantize(x, cfg, use_pallas=use_pallas)
+
+    if stage_group is None:
+
+        def forward(params, images, wq, dq):
+            return layers.apply(net.groups, params, images, wq, dq, quantize)
+
+        return forward
+
+    def forward_stages(params, images, wq, dq, sq):
+        return layers.apply(
+            net.groups,
+            params,
+            images,
+            wq,
+            dq,
+            quantize,
+            stage_group=stage_group,
+            stage_cfg=sq,
+        )
+
+    return forward_stages
+
+
+def passthrough_cfg(n_layers: int) -> jnp.ndarray:
+    """(L, 2) all-sentinel config: fp32 baseline."""
+    cfg = jnp.full((n_layers, 2), -1.0, jnp.float32)
+    return cfg
+
+
+def uniform_cfg(n_layers: int, ibits: float, fbits: float) -> jnp.ndarray:
+    return jnp.tile(jnp.array([[ibits, fbits]], jnp.float32), (n_layers, 1))
+
+
+def top1_accuracy(logits, labels) -> float:
+    pred = jnp.argmax(logits, axis=-1)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))

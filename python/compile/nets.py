@@ -1,0 +1,147 @@
+"""The five CNN architectures of the paper (Table 1 / Appendix A), scaled.
+
+Every network keeps the paper's *structure* — layer count, layer kinds,
+grouping of stages into precision "layers", inception-module treatment —
+while channel widths and input resolution are scaled to this CPU-only
+testbed (DESIGN.md §2 documents the substitution argument).
+
+| net            | paper                        | here                           |
+|----------------|------------------------------|--------------------------------|
+| lenet          | 2 CONV + 2 FC, MNIST         | 2 CONV + 2 FC, synmnist 28x28  |
+| convnet        | 3 CONV + 2 FC, CIFAR10       | 3 CONV + 2 FC, syncifar 32x32  |
+| alexnet        | 5 CONV + 3 FC, ImageNet      | 5 CONV + 3 FC, synimagenet     |
+| nin            | 12 CONV, ImageNet            | 12 CONV, synimagenet           |
+| googlenet      | 2 CONV + 9 IM, ImageNet      | 2 CONV + 9 IM, synimagenet     |
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .layers import (
+    LRN,
+    AvgPool,
+    Conv,
+    Dense,
+    Dropout,
+    Flatten,
+    GlobalAvgPool,
+    Inception,
+    LayerGroup,
+    MaxPool,
+    ReLU,
+)
+
+
+@dataclass
+class NetDef:
+    name: str
+    dataset: str
+    input_shape: tuple[int, int, int]
+    num_classes: int
+    groups: list[LayerGroup] = field(default_factory=list)
+    # training hyper-parameters (build path only)
+    train_steps: int = 600
+    batch: int = 64
+    lr: float = 1e-3
+    n_train: int = 8192
+    n_eval: int = 1024
+
+
+def lenet() -> NetDef:
+    """LeNet: conv1+pool / conv2+pool / ip1+relu / ip2 (Appendix A)."""
+    g = [
+        LayerGroup("L1", "conv", [Conv(8, 5, padding="VALID"), MaxPool(2, 2)]),
+        LayerGroup("L2", "conv", [Conv(16, 5, padding="VALID"), MaxPool(2, 2)]),
+        LayerGroup("L3", "fc", [Flatten(), Dense(64), ReLU()]),
+        LayerGroup("L4", "fc", [Dense(10)]),
+    ]
+    return NetDef("lenet", "synmnist", (28, 28, 1), 10, g, train_steps=2000)
+
+
+def convnet() -> NetDef:
+    """cuda-convnet CIFAR10 model: 3 conv+pool layers, 2 FC (ip1, ip2)."""
+    g = [
+        LayerGroup("L1", "conv", [Conv(16, 5), MaxPool(3, 2), ReLU()]),
+        LayerGroup("L2", "conv", [Conv(16, 5), ReLU(), MaxPool(3, 2)]),
+        LayerGroup("L3", "conv", [Conv(16, 5), ReLU(), MaxPool(3, 2)]),
+        LayerGroup("L4", "fc", [Flatten(), Dense(32)]),
+        LayerGroup("L5", "fc", [Dense(10)]),
+    ]
+    return NetDef("convnet", "syncifar", (32, 32, 3), 10, g, train_steps=900)
+
+
+def alexnet() -> NetDef:
+    """AlexNet: 5 conv (first two with pool+LRN) + 3 FC, Appendix-A grouping."""
+    g = [
+        LayerGroup("L1", "conv", [Conv(24, 3), ReLU(), MaxPool(3, 2), LRN()]),
+        LayerGroup("L2", "conv", [Conv(32, 3), ReLU(), MaxPool(3, 2), LRN()]),
+        LayerGroup("L3", "conv", [Conv(48, 3), ReLU()]),
+        LayerGroup("L4", "conv", [Conv(48, 3), ReLU()]),
+        LayerGroup("L5", "conv", [Conv(32, 3), ReLU(), MaxPool(3, 2)]),
+        LayerGroup("L6", "fc", [Flatten(), Dense(128), ReLU(), Dropout()]),
+        LayerGroup("L7", "fc", [Dense(128), ReLU(), Dropout()]),
+        LayerGroup("L8", "fc", [Dense(20)]),
+    ]
+    return NetDef("alexnet", "synimagenet", (32, 32, 3), 20, g, train_steps=1100)
+
+
+def nin() -> NetDef:
+    """Network-in-Network: 4 blocks of conv+2x(1x1 cccp), global avg pool."""
+    g = [
+        LayerGroup("L1", "conv", [Conv(32, 5), ReLU()]),
+        LayerGroup("L2", "conv", [Conv(24, 1, name="cccp"), ReLU()]),
+        LayerGroup("L3", "conv", [Conv(16, 1, name="cccp"), ReLU(), MaxPool(3, 2)]),
+        LayerGroup("L4", "conv", [Conv(48, 5), ReLU()]),
+        LayerGroup("L5", "conv", [Conv(32, 1, name="cccp"), ReLU()]),
+        LayerGroup("L6", "conv", [Conv(32, 1, name="cccp"), ReLU(), MaxPool(3, 2)]),
+        LayerGroup("L7", "conv", [Conv(48, 3), ReLU()]),
+        LayerGroup("L8", "conv", [Conv(48, 1, name="cccp"), ReLU()]),
+        LayerGroup("L9", "conv", [Conv(32, 1, name="cccp"), ReLU(), MaxPool(3, 2), Dropout()]),
+        LayerGroup("L10", "conv", [Conv(64, 3), ReLU()]),
+        LayerGroup("L11", "conv", [Conv(48, 1, name="cccp"), ReLU()]),
+        LayerGroup("L12", "conv", [Conv(20, 1, name="cccp"), ReLU(), GlobalAvgPool()]),
+    ]
+    return NetDef("nin", "synimagenet", (32, 32, 3), 20, g, train_steps=1100)
+
+
+def googlenet() -> NetDef:
+    """GoogLeNet: 2 conv layers + 9 inception modules (+ classifier in L11)."""
+    g = [
+        LayerGroup("L1", "conv", [Conv(16, 3), ReLU(), MaxPool(3, 2)]),
+        LayerGroup("L2", "conv", [Conv(32, 3), ReLU(), MaxPool(3, 2)]),
+        LayerGroup("L3", "inception", [Inception(8, 8, 16, 4, 8, 8, name="i3a")]),
+        LayerGroup(
+            "L4", "inception", [Inception(16, 16, 24, 4, 8, 8, name="i3b"), MaxPool(3, 2)]
+        ),
+        LayerGroup("L5", "inception", [Inception(16, 12, 24, 4, 8, 8, name="i4a")]),
+        LayerGroup("L6", "inception", [Inception(16, 12, 24, 4, 8, 8, name="i4b")]),
+        LayerGroup("L7", "inception", [Inception(16, 12, 24, 4, 8, 8, name="i4c")]),
+        LayerGroup("L8", "inception", [Inception(16, 12, 24, 4, 8, 8, name="i4d")]),
+        LayerGroup(
+            "L9", "inception", [Inception(24, 16, 32, 6, 12, 12, name="i4e"), MaxPool(3, 2)]
+        ),
+        LayerGroup("L10", "inception", [Inception(24, 16, 32, 6, 12, 12, name="i5a")]),
+        LayerGroup(
+            "L11",
+            "inception",
+            [Inception(24, 16, 32, 6, 12, 12, name="i5b"), GlobalAvgPool(), Dense(20)],
+        ),
+    ]
+    return NetDef("googlenet", "synimagenet", (32, 32, 3), 20, g, train_steps=1200)
+
+
+NETS = {
+    "lenet": lenet,
+    "convnet": convnet,
+    "alexnet": alexnet,
+    "nin": nin,
+    "googlenet": googlenet,
+}
+
+# Order used throughout the repo (reports, manifests, reproduction).
+NET_ORDER = ["lenet", "convnet", "alexnet", "nin", "googlenet"]
+
+
+def get(name: str) -> NetDef:
+    return NETS[name]()

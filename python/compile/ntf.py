@@ -1,0 +1,81 @@
+"""NTF — the repo's tiny named-tensor container format (python writer).
+
+Layout (little-endian):
+
+    magic   b"NTF1"
+    u32     entry count
+    entries:
+        u16     name length, then name bytes (utf-8)
+        u8      dtype  (0 = f32, 1 = i32)
+        u8      ndim
+        u64*nd  dims
+        raw     data  (len = prod(dims) * 4)
+    u32     CRC32 of everything before the footer
+
+The rust reader lives in ``rust/src/tensor/ntf.rs``; the two are locked
+together by round-trip tests on both sides (python writes → rust reads the
+shipped artifacts; rust writes → python reads in pytest via this module).
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+
+import numpy as np
+
+MAGIC = b"NTF1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def write(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write `tensors` (name -> f32/i32 ndarray) to `path`."""
+    buf = bytearray()
+    buf += MAGIC
+    buf += struct.pack("<I", len(tensors))
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype not in DTYPES:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        nb = name.encode("utf-8")
+        buf += struct.pack("<H", len(nb))
+        buf += nb
+        buf += struct.pack("<BB", DTYPES[arr.dtype], arr.ndim)
+        for d in arr.shape:
+            buf += struct.pack("<Q", d)
+        buf += arr.tobytes()
+    crc = zlib.crc32(bytes(buf)) & 0xFFFFFFFF
+    buf += struct.pack("<I", crc)
+    with open(path, "wb") as f:
+        f.write(bytes(buf))
+
+
+def read(path: str) -> dict[str, np.ndarray]:
+    """Read an NTF file, verifying magic and CRC."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    if raw[:4] != MAGIC:
+        raise ValueError("bad magic")
+    crc_stored = struct.unpack("<I", raw[-4:])[0]
+    if zlib.crc32(raw[:-4]) & 0xFFFFFFFF != crc_stored:
+        raise ValueError("CRC mismatch")
+    off = 4
+    (count,) = struct.unpack_from("<I", raw, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", raw, off)
+        off += 2
+        name = raw[off : off + nlen].decode("utf-8")
+        off += nlen
+        dtype_id, ndim = struct.unpack_from("<BB", raw, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}Q", raw, off)
+        off += 8 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        dt = DTYPES_INV[dtype_id]
+        arr = np.frombuffer(raw, dtype=dt, count=n, offset=off).reshape(dims)
+        off += n * 4
+        out[name] = arr.copy()
+    return out

@@ -1,0 +1,103 @@
+"""Build-time training for the five networks (fp32, plain JAX).
+
+The paper uses pre-trained Model-Zoo weights; this repo trains its scaled
+networks from scratch at build time (`make artifacts`). Training is pure
+fp32 with no quantization in the graph — matching the paper's setting
+where quantization is applied only at classification time (§2.1).
+
+Optimizer: hand-rolled Adam (optax is not available in this environment).
+Everything is seeded and deterministic.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, layers
+from .nets import NetDef
+
+
+def _plain_forward(net: NetDef):
+    """fp32 forward with quantization compiled out entirely."""
+    sentinel = jnp.full((len(net.groups), 2), -1.0, jnp.float32)
+
+    def fwd(params, x):
+        return layers.apply(net.groups, params, x, sentinel, sentinel, lambda v, cfg: v)
+
+    return fwd
+
+
+def _loss_fn(fwd):
+    def loss(params, x, y):
+        logits = fwd(params, x)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+        return nll
+
+    return loss
+
+
+def adam_init(params):
+    zeros = [jnp.zeros_like(p) for p in params]
+    return {"m": zeros, "v": [jnp.zeros_like(p) for p in params], "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = [b1 * m_ + (1 - b1) * g for m_, g in zip(state["m"], grads)]
+    v = [b2 * v_ + (1 - b2) * g * g for v_, g in zip(state["v"], grads)]
+    tf = t.astype(jnp.float32)
+    bc1 = 1 - b1**tf
+    bc2 = 1 - b2**tf
+    new = [
+        p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        for p, m_, v_ in zip(params, m, v)
+    ]
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(net: NetDef, seed: int = 0, verbose: bool = True):
+    """Train `net` on its dataset; return (param_names, params, info dict)."""
+    t0 = time.time()
+    tx, ty, ex, ey = datasets.load(net.dataset, net.n_train, net.n_eval, seed=seed)
+    names, arrays = layers.init_params(net.groups, net.input_shape, seed=seed + 77)
+    params = [jnp.asarray(a) for a in arrays]
+    fwd = _plain_forward(net)
+    loss = _loss_fn(fwd)
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+
+    @jax.jit
+    def eval_logits(params, x):
+        return fwd(params, x)
+
+    state = adam_init(params)
+    rng = np.random.RandomState(seed + 1)
+    B = net.batch
+    losses = []
+    for step in range(net.train_steps):
+        idx = rng.randint(0, tx.shape[0], size=B)
+        lv, grads = grad_fn(params, jnp.asarray(tx[idx]), jnp.asarray(ty[idx]))
+        params, state = adam_step(params, grads, state, net.lr)
+        losses.append(float(lv))
+        if verbose and (step % 200 == 0 or step == net.train_steps - 1):
+            print(f"  [{net.name}] step {step:5d} loss {float(lv):.4f}")
+
+    # eval top-1 (batched to bound memory)
+    correct = 0
+    for i in range(0, ex.shape[0], B):
+        lg = eval_logits(params, jnp.asarray(ex[i : i + B]))
+        correct += int(jnp.sum(jnp.argmax(lg, axis=-1) == jnp.asarray(ey[i : i + B])))
+    top1 = correct / ex.shape[0]
+    info = {
+        "top1": top1,
+        "final_loss": float(np.mean(losses[-25:])),
+        "train_seconds": time.time() - t0,
+        "steps": net.train_steps,
+    }
+    if verbose:
+        print(f"  [{net.name}] baseline top-1 {top1:.4f} ({info['train_seconds']:.1f}s)")
+    return names, params, (ex, ey), info

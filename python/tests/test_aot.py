@@ -1,0 +1,89 @@
+"""AOT pipeline: HLO lowering sanity and manifest consistency (uses a tiny
+untrained net so the test stays fast; the full pipeline is exercised by
+`make artifacts` + the rust integration tests)."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, layers, model, nets
+
+
+@pytest.fixture(scope="module")
+def lenet_params():
+    net = nets.get("lenet")
+    names, arrays = layers.init_params(net.groups, net.input_shape, seed=11)
+    return net, names, [jnp.asarray(a) for a in arrays]
+
+
+def test_lowered_hlo_is_parseable_text(lenet_params):
+    net, _, params = lenet_params
+    hlo = aot.lower_forward(net, params)
+    assert "HloModule" in hlo
+    assert "ENTRY" in hlo
+    # parameters: weights + images + wq + dq
+    assert hlo.count("parameter(") >= len(params) + 3
+    # tuple-rooted (return_tuple=True contract with the rust loader)
+    assert "ROOT" in hlo
+
+
+def test_stage_variant_has_extra_parameter(lenet_params):
+    net = nets.get("alexnet")
+    names, arrays = layers.init_params(net.groups, net.input_shape, seed=12)
+    params = [jnp.asarray(a) for a in arrays]
+    hlo_std = aot.lower_forward(net, params)
+    hlo_stage = aot.lower_forward(net, params, stage_group=aot.STAGE_GROUP)
+
+    def entry_arity(hlo: str) -> int:
+        # count tensors in the entry layout: "entry_computation_layout={(...)}"
+        layout = hlo.split("entry_computation_layout={(", 1)[1].split(")}", 1)[0]
+        return layout.count("f32[")
+
+    assert entry_arity(hlo_stage) == entry_arity(hlo_std) + 1
+
+
+def test_manifest_contents(lenet_params):
+    net, names, params = lenet_params
+    info = {"top1": 0.5, "final_loss": 1.0, "train_seconds": 0.0, "steps": 1}
+    m = aot.build_manifest(net, names, params, info, {"hlo": "x", "weights": "y", "dataset": "z"})
+    assert m["batch"] == aot.BATCH
+    assert len(m["layers"]) == len(net.groups)
+    assert len(m["params"]) == len(params)
+    # weight accounting matches
+    total_meta = sum(l["weight_elems"] for l in m["layers"])
+    total_real = sum(int(np.prod(p["shape"])) for p in m["params"])
+    assert total_meta == total_real
+    # chain consistency (what the rust validator enforces)
+    for a, b in zip(m["layers"], m["layers"][1:]):
+        assert a["out_elems"] == b["in_elems"]
+    assert m["stage_variant"] is None  # lenet has no stage variant
+    assert json.dumps(m)  # serializable
+
+
+def test_golden_quant_writer(tmp_path):
+    aot.write_golden_quant(str(tmp_path))
+    from compile import ntf
+
+    g = ntf.read(os.path.join(str(tmp_path), "golden_quant.ntf"))
+    assert "x" in g and "q_sentinel" in g
+    assert sum(1 for k in g if k.startswith("q_")) >= 40
+    np.testing.assert_array_equal(g["q_sentinel"], g["x"])
+
+
+def test_shipped_artifacts_if_present():
+    """When `make artifacts` has run, validate the shipped manifests."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    idx_path = os.path.join(art, "index.json")
+    if not os.path.exists(idx_path):
+        pytest.skip("artifacts not built")
+    idx = json.load(open(idx_path))
+    assert {n["name"] for n in idx["nets"]} == set(nets.NET_ORDER)
+    for entry in idx["nets"]:
+        man = json.load(open(os.path.join(art, f"{entry['name']}.manifest.json")))
+        assert os.path.exists(os.path.join(art, man["files"]["hlo"]))
+        assert os.path.exists(os.path.join(art, man["files"]["weights"]))
+        assert os.path.exists(os.path.join(art, man["files"]["dataset"]))
+        assert 0.2 < man["baseline_top1"] <= 1.0

@@ -1,0 +1,77 @@
+"""Dataset generators: determinism, shapes, value ranges, learnability
+signal (class separation), label-noise calibration."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+@pytest.mark.parametrize("name", list(datasets.DATASETS))
+def test_shapes_and_ranges(name):
+    spec = datasets.DATASETS[name]
+    xs, ys = spec["fn"](64, seed=3)
+    assert xs.shape == (64, *spec["shape"])
+    assert xs.dtype == np.float32
+    assert ys.dtype == np.int32
+    assert xs.min() >= 0.0 and xs.max() <= 1.0
+    assert ys.min() >= 0 and ys.max() < spec["classes"]
+
+
+@pytest.mark.parametrize("name", list(datasets.DATASETS))
+def test_deterministic_given_seed(name):
+    fn = datasets.DATASETS[name]["fn"]
+    a_x, a_y = fn(32, seed=7)
+    b_x, b_y = fn(32, seed=7)
+    np.testing.assert_array_equal(a_x, b_x)
+    np.testing.assert_array_equal(a_y, b_y)
+    c_x, _ = fn(32, seed=8)
+    assert not np.array_equal(a_x, c_x)
+
+
+def test_train_eval_splits_disjoint_streams():
+    tx, ty, ex, ey = datasets.load("synmnist", 64, 64, seed=0)
+    assert tx.shape[0] == 64 and ex.shape[0] == 64
+    assert not np.array_equal(tx, ex)
+
+
+def test_classes_are_visually_distinct_synmnist():
+    # mean image per class should differ clearly from other classes
+    xs, ys = datasets.synmnist(1500, seed=1)
+    means = np.stack([xs[ys == c].mean(axis=0) for c in range(10)])
+    for a in range(10):
+        for b in range(a + 1, 10):
+            d = np.abs(means[a] - means[b]).mean()
+            assert d > 0.005, f"classes {a},{b} indistinct ({d})"
+
+
+def test_texture_classes_separable_on_average():
+    xs, ys = datasets.syncifar(1200, seed=2)
+    means = np.stack([xs[ys == c].mean(axis=0) for c in range(10)])
+    dists = []
+    for a in range(10):
+        for b in range(a + 1, 10):
+            dists.append(np.abs(means[a] - means[b]).mean())
+    assert np.mean(dists) > 0.02
+
+
+def test_label_noise_rate_synmnist_low():
+    # ~0.5% flips: glyph class and label agree almost always; proxy — the
+    # per-class mean images should carry strong signal (tested above);
+    # here verify labels cover all classes roughly uniformly
+    _, ys = datasets.synmnist(3000, seed=4)
+    counts = np.bincount(ys, minlength=10)
+    assert counts.min() > 200
+
+
+def test_synimagenet_has_20_classes():
+    _, ys = datasets.synimagenet(2000, seed=5)
+    assert ys.max() == 19
+    assert len(np.unique(ys)) == 20
+
+
+def test_glyph_font_complete_and_5x7():
+    for d in range(10):
+        g = datasets._glyph(d)
+        assert g.shape == (7, 5)
+        assert g.sum() > 5  # non-trivial ink

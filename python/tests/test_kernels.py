@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle — the core
+cross-implementation lock, with hypothesis sweeping shapes and formats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fixedpoint as fp
+from compile.kernels import ref
+
+SHAPES = [(7,), (64,), (3, 5), (64, 28, 28, 1), (2, 130, 7), (1, 1), (8192,), (8193,)]
+
+
+def rand(shape, seed=0, scale=8.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kernel_matches_ref_across_shapes(shape):
+    x = rand(shape, seed=1)
+    cfg = jnp.array([6.0, 3.0], jnp.float32)
+    a = fp.quantize_fixed(x, cfg)
+    b = ref.quantize_ref(x, 6.0, 3.0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ibits=st.integers(min_value=0, max_value=16),
+    fbits=st.integers(min_value=0, max_value=14),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n=st.integers(min_value=1, max_value=3000),
+    scale=st.sampled_from([0.1, 1.0, 16.0, 1e4]),
+)
+def test_kernel_matches_ref_hypothesis(ibits, fbits, seed, n, scale):
+    x = rand((n,), seed=seed, scale=scale)
+    cfg = jnp.array([float(ibits), float(fbits)], jnp.float32)
+    a = np.asarray(fp.quantize_fixed(x, cfg))
+    b = np.asarray(ref.quantize_ref(x, float(ibits), float(fbits)))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ibits=st.integers(min_value=1, max_value=12),
+    fbits=st.integers(min_value=0, max_value=10),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_quantize_lands_on_grid_and_in_range(ibits, fbits, seed):
+    x = rand((500,), seed=seed, scale=2.0 ** (ibits - 1) * 2)
+    q = np.asarray(ref.quantize_ref(x, float(ibits), float(fbits)))
+    lo, hi, step = ref.qformat_range(float(ibits), float(fbits))
+    assert q.min() >= lo and q.max() <= hi
+    scaled = q.astype(np.float64) * 2.0**fbits
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-6)
+
+
+def test_sentinel_passthrough_is_bit_exact():
+    x = rand((1000,), seed=3, scale=1e6)
+    out = np.asarray(fp.quantize_fixed(x, jnp.array([-1.0, 0.0], jnp.float32)))
+    np.testing.assert_array_equal(out, x)
+
+
+def test_quantize_idempotent():
+    x = rand((2048,), seed=4)
+    cfg = jnp.array([5.0, 2.0], jnp.float32)
+    once = fp.quantize_fixed(x, cfg)
+    twice = fp.quantize_fixed(once, cfg)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_round_half_to_even():
+    x = np.array([0.5, 1.5, 2.5, -0.5, -1.5, 3.5], np.float32)
+    q = np.asarray(ref.quantize_ref(x, 8.0, 0.0))
+    np.testing.assert_array_equal(q, [0.0, 2.0, 2.0, 0.0, -2.0, 4.0])
+
+
+def test_saturation_bounds_are_exact_powers():
+    # the rint-snapped grid must hit exact powers of two (the XLA exp2 fix)
+    q = np.asarray(ref.quantize_ref(np.array([1e9], np.float32), 16.0, 0.0))
+    assert q[0] == 32767.0
+    q = np.asarray(ref.quantize_ref(np.array([-1e9], np.float32), 16.0, 0.0))
+    assert q[0] == -32768.0
+
+
+def test_i_zero_pure_fraction_format():
+    x = np.array([0.4, -0.7, 0.1], np.float32)
+    q = np.asarray(ref.quantize_ref(x, 0.0, 3.0))
+    np.testing.assert_allclose(q, [0.375, -0.5, 0.125])
+
+
+def test_stochastic_kernel_matches_ref():
+    x = rand((4096,), seed=5)
+    u = np.random.RandomState(6).rand(4096).astype(np.float32)
+    cfg = jnp.array([6.0, 2.0], jnp.float32)
+    a = np.asarray(fp.quantize_stochastic(x, cfg, u))
+    b = np.asarray(ref.quantize_stochastic_ref(x, 6.0, 2.0, u))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_stochastic_rounding_unbiased():
+    # mean of stochastic rounding approaches the true value
+    x = np.full((20000,), 0.3, np.float32)
+    u = np.random.RandomState(7).rand(20000).astype(np.float32)
+    q = np.asarray(ref.quantize_stochastic_ref(x, 4.0, 0.0, u))
+    assert abs(q.mean() - 0.3) < 0.02
+    assert set(np.unique(q)) == {0.0, 1.0}
+
+
+def test_block_padding_edges():
+    # shapes straddling the block boundary quantize identically
+    for n in [fp.LANE - 1, fp.LANE, fp.LANE + 1, fp.MAX_BLOCK, fp.MAX_BLOCK + 17]:
+        x = rand((n,), seed=n % 97)
+        cfg = jnp.array([7.0, 1.0], jnp.float32)
+        a = np.asarray(fp.quantize_fixed(x, cfg))
+        b = np.asarray(ref.quantize_ref(x, 7.0, 1.0))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_kernel_under_jit_and_vmap_composition():
+    x = rand((4, 256), seed=9)
+    cfg = jnp.array([5.0, 1.0], jnp.float32)
+    jitted = jax.jit(lambda v: fp.quantize_fixed(v, cfg))
+    np.testing.assert_array_equal(
+        np.asarray(jitted(x)), np.asarray(ref.quantize_ref(x, 5.0, 1.0))
+    )

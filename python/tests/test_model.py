@@ -1,0 +1,159 @@
+"""L2 correctness: network shapes, quantization plumbing, metadata
+consistency between the analytic shape walk and the real forward pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers, model, nets
+
+ALL_NETS = nets.NET_ORDER
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Init (untrained) params for every net once."""
+    out = {}
+    for name in ALL_NETS:
+        net = nets.get(name)
+        names, arrays = layers.init_params(net.groups, net.input_shape, seed=5)
+        out[name] = (net, names, [jnp.asarray(a) for a in arrays])
+    return out
+
+
+@pytest.mark.parametrize("name", ALL_NETS)
+def test_forward_shape_and_finiteness(built, name):
+    net, _, params = built[name]
+    fwd = model.make_forward(net, use_pallas=False)
+    x = jnp.asarray(np.random.RandomState(0).rand(4, *net.input_shape).astype(np.float32))
+    L = len(net.groups)
+    logits = fwd(params, x, model.passthrough_cfg(L), model.passthrough_cfg(L))
+    assert logits.shape == (4, net.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ALL_NETS)
+def test_shape_walk_matches_traced_output(built, name):
+    net, _, params = built[name]
+    meta, out_shape = layers.shape_walk(net.groups, net.input_shape)
+    assert out_shape == (net.num_classes,)
+    # weight totals agree with actual parameter sizes
+    walk_weights = sum(m["weight_elems"] for m in meta)
+    real_weights = sum(int(np.prod(p.shape)) for p in params)
+    assert walk_weights == real_weights
+    # layer chain is consistent
+    for a, b in zip(meta, meta[1:]):
+        assert a["out_elems"] == b["in_elems"]
+
+
+@pytest.mark.parametrize("name", ALL_NETS)
+def test_paper_layer_structure(built, name):
+    net, _, _ = built[name]
+    kinds = [g.kind for g in net.groups]
+    expected = {
+        "lenet": (2, 2, 0),
+        "convnet": (3, 2, 0),
+        "alexnet": (5, 3, 0),
+        "nin": (12, 0, 0),
+        "googlenet": (2, 0, 9),
+    }[name]
+    assert (kinds.count("conv"), kinds.count("fc"), kinds.count("inception")) == expected
+
+
+def test_sentinel_config_equals_unquantized(built):
+    net, _, params = built["lenet"]
+    x = jnp.asarray(np.random.RandomState(1).rand(2, *net.input_shape).astype(np.float32))
+    L = len(net.groups)
+    fwd = model.make_forward(net, use_pallas=True)
+    sent = model.passthrough_cfg(L)
+    quantized_path = fwd(params, x, sent, sent)
+    plain = layers.apply(net.groups, params, x, sent, sent, lambda v, c: v)
+    np.testing.assert_allclose(np.asarray(quantized_path), np.asarray(plain), atol=1e-5)
+
+
+def test_pallas_and_ref_forwards_agree(built):
+    net, _, params = built["convnet"]
+    x = jnp.asarray(np.random.RandomState(2).rand(2, *net.input_shape).astype(np.float32))
+    L = len(net.groups)
+    wq = model.uniform_cfg(L, 1.0, 6.0)
+    dq = model.uniform_cfg(L, 8.0, 2.0)
+    a = model.make_forward(net, use_pallas=True)(params, x, wq, dq)
+    b = model.make_forward(net, use_pallas=False)(params, x, wq, dq)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_quantization_actually_changes_logits(built):
+    net, _, params = built["lenet"]
+    x = jnp.asarray(np.random.RandomState(3).rand(2, *net.input_shape).astype(np.float32))
+    L = len(net.groups)
+    fwd = model.make_forward(net, use_pallas=False)
+    base = fwd(params, x, model.passthrough_cfg(L), model.passthrough_cfg(L))
+    harsh = fwd(params, x, model.uniform_cfg(L, 1.0, 2.0), model.uniform_cfg(L, 2.0, 0.0))
+    assert float(jnp.max(jnp.abs(base - harsh))) > 1e-4
+
+
+def test_group_param_counts_cover_all_params(built):
+    for name in ALL_NETS:
+        net, names, params = built[name]
+        counts = layers.group_param_counts(net.groups)
+        assert sum(counts) == len(params)
+        assert len(counts) == len(net.groups)
+
+
+def test_group_quantize_equals_per_tensor(built):
+    net, _, params = built["convnet"]
+    counts = layers.group_param_counts(net.groups)
+    L = len(net.groups)
+    wq = model.uniform_cfg(L, 1.0, 3.0)
+    from compile.kernels import ref
+
+    grouped = layers.quantize_group_params(
+        params, counts, wq, lambda v, c: ref.quantize_ref(v, c[0], c[1])
+    )
+    idx = 0
+    for g, n in enumerate(counts):
+        for p in params[idx : idx + n]:
+            direct = ref.quantize_ref(p, wq[g, 0], wq[g, 1])
+            np.testing.assert_array_equal(np.asarray(grouped[idx - 0]), np.asarray(direct))
+            idx += 1
+            break  # first tensor of each group suffices (same code path)
+        idx = sum(counts[: g + 1])
+
+
+def test_stage_forward_matches_standard_when_sentinel(built):
+    net, _, params = built["alexnet"]
+    x = jnp.asarray(np.random.RandomState(4).rand(2, *net.input_shape).astype(np.float32))
+    L = len(net.groups)
+    n_stages = len(net.groups[1].ops)
+    sent = model.passthrough_cfg(L)
+    sq = model.passthrough_cfg(n_stages)
+    a = model.make_forward(net, use_pallas=False, stage_group=1)(params, x, sent, sent, sq)
+    b = model.make_forward(net, use_pallas=False)(params, x, sent, sent)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_stage_quantization_differs_from_layer_quantization(built):
+    net, _, params = built["alexnet"]
+    x = jnp.asarray(np.random.RandomState(5).rand(2, *net.input_shape).astype(np.float32))
+    L = len(net.groups)
+    n_stages = len(net.groups[1].ops)
+    sent = model.passthrough_cfg(L)
+    # quantize only the first stage (conv output) harshly
+    sq = np.full((n_stages, 2), -1.0, np.float32)
+    sq[0] = [3.0, 0.0]
+    a = model.make_forward(net, use_pallas=False, stage_group=1)(
+        params, x, sent, sent, jnp.asarray(sq)
+    )
+    b = model.make_forward(net, use_pallas=False)(params, x, sent, sent)
+    assert float(jnp.max(jnp.abs(a - b))) > 1e-5
+
+
+def test_lrn_normalizes_across_channels():
+    x = jnp.ones((1, 2, 2, 8), jnp.float32) * 2.0
+    y = layers._lrn(x, n=5, alpha=1e-1, beta=0.75)
+    assert y.shape == x.shape
+    # with alpha>0 the response is strictly damped
+    assert float(jnp.max(y)) < 2.0
+    # border channels have smaller windows -> less damping
+    assert float(y[0, 0, 0, 0]) > float(y[0, 0, 0, 4])

@@ -1,0 +1,68 @@
+"""NTF container: round-trip, corruption detection, dtype handling —
+the python half of the cross-language format lock."""
+
+import numpy as np
+import pytest
+
+from compile import ntf
+
+
+def sample():
+    return {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4) * -1.5,
+        "labels": np.array([0, 5, -3], np.int32),
+        "scalar_ish": np.array([2.5], np.float32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    p = str(tmp_path / "t.ntf")
+    ntf.write(p, sample())
+    back = ntf.read(p)
+    for k, v in sample().items():
+        np.testing.assert_array_equal(back[k], v)
+        assert back[k].dtype == v.dtype
+
+
+def test_crc_detects_corruption(tmp_path):
+    p = str(tmp_path / "t.ntf")
+    ntf.write(p, sample())
+    raw = bytearray(open(p, "rb").read())
+    raw[len(raw) // 2] ^= 0x20
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="CRC"):
+        ntf.read(p)
+
+
+def test_bad_magic(tmp_path):
+    p = str(tmp_path / "t.ntf")
+    open(p, "wb").write(b"JUNKdata")
+    with pytest.raises(ValueError):
+        ntf.read(p)
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    p = str(tmp_path / "t.ntf")
+    with pytest.raises(TypeError):
+        ntf.write(p, {"bad": np.zeros(3, np.float64)})
+
+
+def test_empty_container(tmp_path):
+    p = str(tmp_path / "t.ntf")
+    ntf.write(p, {})
+    assert ntf.read(p) == {}
+
+
+def test_preserves_insertion_order_content(tmp_path):
+    p = str(tmp_path / "t.ntf")
+    tensors = {f"t{i}": np.full((i + 1,), float(i), np.float32) for i in range(20)}
+    ntf.write(p, tensors)
+    back = ntf.read(p)
+    assert set(back) == set(tensors)
+
+
+def test_high_dim_and_big_tensor(tmp_path):
+    p = str(tmp_path / "t.ntf")
+    t = {"big": np.random.RandomState(0).randn(4, 3, 2, 5, 2).astype(np.float32)}
+    ntf.write(p, t)
+    np.testing.assert_array_equal(ntf.read(p)["big"], t["big"])

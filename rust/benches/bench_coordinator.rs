@@ -1,0 +1,97 @@
+//! Coordinator benchmarks: dispatch overhead on the cached path, uncached
+//! burst wall-time vs worker count, and dedup behaviour — the L3
+//! contribution's own performance characteristics.
+//!
+//! Note: this testbed is single-core, so multi-worker speedup is bounded
+//! by XLA's own CPU usage; the interesting numbers are the µs-scale
+//! dispatch overheads (L3 must never be the bottleneck — DESIGN.md §8).
+
+use std::time::Instant;
+
+use qbound::benchkit::BenchSuite;
+use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+
+/// Distinct-by-construction configs: a counter spread over a product
+/// space far larger than any iteration count here.
+fn unique_cfg(counter: &mut u32) -> PrecisionConfig {
+    let c = *counter;
+    *counter += 1;
+    let mut cfg = PrecisionConfig::uniform(
+        4,
+        QFormat::new(1, 2 + (c % 13) as i8),
+        QFormat::new(2 + ((c / 13) % 13) as i8, (c / 169 % 7) as i8),
+    );
+    cfg.dq[(c % 4) as usize].ibits += 1;
+    cfg
+}
+
+fn main() {
+    qbound::util::init_logging();
+    let dir = qbound::util::artifacts_dir().expect("run `make artifacts` first");
+    let mut suite = BenchSuite::new("coordinator (lenet, 128-image evals)");
+    let net = "lenet";
+    let n_images = 128;
+    let mut counter = 0u32;
+
+    // (a) uncached burst of 24 unique evals, 1 vs 2 workers (wall once).
+    for workers in [1usize, 2] {
+        let mut coord = Coordinator::new(&dir, workers).unwrap();
+        let warm: Vec<EvalJob> = (0..workers)
+            .map(|_| EvalJob {
+                net: net.into(),
+                cfg: PrecisionConfig::fp32(4),
+                n_images,
+            })
+            .collect();
+        coord.eval_batch(&warm).unwrap(); // compile off the clock
+        let jobs: Vec<EvalJob> = (0..24)
+            .map(|_| EvalJob { net: net.into(), cfg: unique_cfg(&mut counter), n_images })
+            .collect();
+        let t0 = Instant::now();
+        coord.eval_batch(&jobs).unwrap();
+        let wall = t0.elapsed();
+        suite.record_once(&format!("24 unique evals, {workers} worker(s)"), wall);
+        let busy = coord.busy_time().as_secs_f64();
+        eprintln!(
+            "    utilization {:.0}% (busy {:.2}s / wall {:.2}s x {workers})",
+            100.0 * busy / (wall.as_secs_f64() * workers as f64),
+            busy,
+            wall.as_secs_f64()
+        );
+    }
+
+    // (b) dedup: one burst of 32 *identical* fresh jobs ≈ cost of 1 eval.
+    let mut coord = Coordinator::new(&dir, 1).unwrap();
+    coord
+        .eval_one(EvalJob { net: net.into(), cfg: PrecisionConfig::fp32(4), n_images })
+        .unwrap();
+    let single = {
+        let t0 = Instant::now();
+        coord
+            .eval_one(EvalJob { net: net.into(), cfg: unique_cfg(&mut counter), n_images })
+            .unwrap();
+        t0.elapsed()
+    };
+    suite.record_once("1 unique eval (reference)", single);
+    let dup_jobs: Vec<EvalJob> = {
+        let cfg = unique_cfg(&mut counter);
+        (0..32).map(|_| EvalJob { net: net.into(), cfg: cfg.clone(), n_images }).collect()
+    };
+    let t0 = Instant::now();
+    coord.eval_batch(&dup_jobs).unwrap();
+    suite.record_once("32 identical jobs (dedup) ≈ 1 eval", t0.elapsed());
+    let s = coord.stats();
+    eprintln!(
+        "    stats: submitted {} executed {} deduped {} cache hits {}",
+        s.submitted, s.executed, s.deduped, s.cache_hits
+    );
+
+    // (c) cached-path dispatch overhead: the same 32 jobs again must cost µs.
+    suite.bench_elems("cached burst of 32 (dispatch overhead)", 32.0, || {
+        std::hint::black_box(coord.eval_batch(&dup_jobs).unwrap());
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,80 @@
+//! End-to-end inference benchmarks: per-batch latency of every network
+//! through the PJRT runtime at fp32 and quantized, plus the eval-cache
+//! hit path. These are the numbers every sweep/search cost estimate in
+//! EXPERIMENTS.md §Perf is built from.
+
+use qbound::benchkit::BenchSuite;
+use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::eval::{Dataset, Evaluator};
+use qbound::nets::{ArtifactIndex, NetManifest};
+use qbound::quant::QFormat;
+use qbound::runtime::{Session, Variant};
+use qbound::search::space::PrecisionConfig;
+
+fn main() {
+    qbound::util::init_logging();
+    let dir = qbound::util::artifacts_dir().expect("run `make artifacts` first");
+    let index = ArtifactIndex::load(&dir).unwrap();
+    let mut suite = BenchSuite::new("engine inference (per batch) + eval cache");
+    let session = Session::cpu().unwrap();
+
+    for net in &index.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let t0 = std::time::Instant::now();
+        let engine = session.load_engine(&m, Variant::Standard).unwrap();
+        suite.record_once(&format!("{net}: load+compile"), t0.elapsed());
+        let dataset = Dataset::load(&m).unwrap();
+        let nl = m.n_layers();
+        let images = dataset.batch_images(0, m.batch).to_vec();
+
+        let fp32 = PrecisionConfig::fp32(nl);
+        let quant = PrecisionConfig::uniform(nl, QFormat::new(1, 8), QFormat::new(10, 2));
+        for (label, cfg) in [("fp32", &fp32), ("q(1.8/10.2)", &quant)] {
+            let wq = cfg.wire_wq();
+            let dq = cfg.wire_dq();
+            suite.bench_elems(
+                &format!("{net}: infer batch {} {label}", m.batch),
+                m.batch as f64,
+                || {
+                    std::hint::black_box(
+                        engine.infer(&session, &images, &wq, &dq, None).unwrap(),
+                    );
+                },
+            );
+        }
+        // §Perf A/B: per-call image upload vs device-resident batch.
+        let img_buf = engine.upload_images(&session, &images).unwrap();
+        let wq = quant.wire_wq();
+        let dq = quant.wire_dq();
+        suite.bench_elems(
+            &format!("{net}: infer batch {} q, preloaded images", m.batch),
+            m.batch as f64,
+            || {
+                std::hint::black_box(
+                    engine.infer_prepared(&session, &img_buf, &wq, &dq, None).unwrap(),
+                );
+            },
+        );
+    }
+
+    // Evaluator memo-cache hit path (must be ~ns — the search leans on it).
+    let m = NetManifest::load(&dir, &index.nets[0]).unwrap();
+    let mut ev = Evaluator::new(&session, &m).unwrap();
+    let cfg = PrecisionConfig::fp32(m.n_layers());
+    ev.accuracy(&session, &cfg, 0).unwrap(); // warm (miss)
+    suite.bench("evaluator cache hit", || {
+        std::hint::black_box(ev.accuracy(&session, &cfg, 0).unwrap());
+    });
+
+    // Coordinator dispatch overhead on a fully-cached burst.
+    let mut coord = Coordinator::new(&dir, 2).unwrap();
+    let jobs: Vec<EvalJob> = (0..64)
+        .map(|_| EvalJob { net: index.nets[0].clone(), cfg: cfg.clone(), n_images: 128 })
+        .collect();
+    coord.eval_batch(&jobs[..1]).unwrap(); // warm
+    suite.bench_elems("coordinator cached burst of 64", 64.0, || {
+        std::hint::black_box(coord.eval_batch(&jobs).unwrap());
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,62 @@
+//! L3 hot-loop micro-benchmarks: the host-side quantizer, top-1 scoring,
+//! traffic-model evaluation, and NTF parsing throughput.
+
+use qbound::benchkit::BenchSuite;
+use qbound::eval::top1;
+use qbound::prng::Xoshiro256pp;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::tensor::{ntf, Tensor};
+use qbound::traffic::{self, Mode};
+
+fn main() {
+    qbound::util::init_logging();
+    let mut suite = BenchSuite::new("quantize + host hot paths");
+    let mut rng = Xoshiro256pp::new(1);
+
+    // Host quantizer over 1M floats (the rust mirror of the L1 kernel).
+    let n = 1 << 20;
+    let xs: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-16.0, 16.0)).collect();
+    let fmt = QFormat::new(8, 4);
+    let mut buf = xs.clone();
+    suite.bench_bytes("quantize_slice 1M f32 (Q8.4)", (n * 4) as f64, || {
+        buf.copy_from_slice(&xs);
+        fmt.quantize_slice(&mut buf);
+        std::hint::black_box(&buf);
+    });
+
+    // top-1 scoring of a logits block (64 x 20).
+    let logits: Vec<f32> = (0..64 * 20).map(|_| rng.uniform_f32(-4.0, 4.0)).collect();
+    let labels: Vec<i32> = (0..64).map(|_| rng.below(20) as i32).collect();
+    suite.bench_elems("top1 64x20 logits", 64.0, || {
+        std::hint::black_box(top1(&logits, &labels, 20));
+    });
+
+    // Traffic-model evaluation for a 12-layer manifest-shaped config.
+    let dir = qbound::util::artifacts_dir().expect("run `make artifacts` first");
+    let m = qbound::nets::NetManifest::load(&dir, "nin").expect("nin manifest");
+    let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 7), QFormat::new(9, 0));
+    suite.bench("traffic_ratio nin (12 layers)", || {
+        std::hint::black_box(traffic::traffic_ratio(&m, Mode::Batch(64), &cfg));
+    });
+
+    // Descent-neighbour generation (search inner loop).
+    let opts = qbound::search::space::DescentOptions::default();
+    let big = PrecisionConfig::uniform(12, QFormat::new(1, 8), QFormat::new(11, 2));
+    suite.bench("descent_neighbours 12 layers", || {
+        std::hint::black_box(big.descent_neighbours(&opts));
+    });
+
+    // NTF round-trip of a weights-sized container.
+    let mut tensors = std::collections::BTreeMap::new();
+    tensors.insert(
+        "w".to_string(),
+        Tensor::from_f32(vec![64, 1024], (0..64 * 1024).map(|i| i as f32).collect()).unwrap(),
+    );
+    let bytes = ntf::write_bytes(&tensors).unwrap();
+    suite.bench_bytes("ntf parse 256 KiB", bytes.len() as f64, || {
+        std::hint::black_box(ntf::read_bytes(&bytes).unwrap());
+    });
+
+    suite.finish();
+}

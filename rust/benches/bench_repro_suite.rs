@@ -1,0 +1,52 @@
+//! One bench per paper table/figure: times each reproduction harness on a
+//! reduced evaluation subset and prints its headline rows. `cargo bench`
+//! therefore regenerates (a small-n version of) every artifact of the
+//! paper's evaluation section; `qbound repro all` is the full-size run.
+
+use std::time::Instant;
+
+use qbound::benchkit::BenchSuite;
+use qbound::repro::{self, ReproCtx};
+
+fn main() {
+    qbound::util::init_logging();
+    let out = std::path::PathBuf::from("reports/bench");
+    // Small subset + 4 workers keeps the full suite in benchable territory.
+    let n_images = std::env::var("QBOUND_BENCH_IMAGES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128);
+    let mut ctx = ReproCtx::new(&out, 0, n_images).expect("artifacts present");
+    let mut suite = BenchSuite::new(&format!("paper reproduction suite (n_images={n_images})"));
+
+    let t = Instant::now();
+    repro::table1(&mut ctx).unwrap();
+    suite.record_once("table1: nets + baselines", t.elapsed());
+
+    let t = Instant::now();
+    repro::fig4(&mut ctx).unwrap();
+    suite.record_once("fig4: traffic model", t.elapsed());
+
+    let t = Instant::now();
+    repro::fig2(&mut ctx).unwrap();
+    suite.record_once("fig2: uniform sweeps", t.elapsed());
+
+    let t = Instant::now();
+    repro::fig1(&mut ctx).unwrap();
+    suite.record_once("fig1: stage sweep", t.elapsed());
+
+    let t = Instant::now();
+    repro::fig3(&mut ctx).unwrap();
+    suite.record_once("fig3: per-layer sweeps", t.elapsed());
+
+    let t = Instant::now();
+    repro::fig5_table2(&mut ctx).unwrap();
+    suite.record_once("fig5+table2: greedy exploration", t.elapsed());
+
+    let stats = ctx.coord.stats();
+    eprintln!(
+        "coordinator totals: {} submitted, {} executed, {} cache hits, {} deduped",
+        stats.submitted, stats.executed, stats.cache_hits, stats.deduped
+    );
+    suite.finish();
+}

@@ -1,0 +1,226 @@
+//! Measurement harness (substrate — `criterion` is unavailable offline).
+//!
+//! Criterion-style flow: warm-up, timed iterations, robust statistics
+//! (mean / median / p95 / stddev / min), throughput annotations, and an
+//! aligned text report. `cargo bench` targets build a [`BenchSuite`],
+//! register closures, and call [`BenchSuite::finish`].
+
+use std::time::{Duration, Instant};
+
+/// Statistics over per-iteration wall-clock samples.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            p95: samples[(n as f64 * 0.95) as usize - if n > 20 { 1 } else { 0 }],
+            min: samples[0],
+            stddev: Duration::from_secs_f64(var.sqrt()),
+        }
+    }
+}
+
+/// One benchmark's result row.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems_per_iter: Option<f64>,
+    /// Optional bytes-per-iteration for bandwidth reporting.
+    pub bytes_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput_line(&self) -> String {
+        let mut extra = String::new();
+        let per_s = 1.0 / self.stats.mean.as_secs_f64();
+        if let Some(e) = self.elems_per_iter {
+            extra.push_str(&format!("  {}/s", crate::util::human_count(e * per_s)));
+        }
+        if let Some(b) = self.bytes_per_iter {
+            extra.push_str(&format!("  {}/s", crate::util::human_bytes(b * per_s)));
+        }
+        extra
+    }
+}
+
+/// Benchmark registry + runner.
+pub struct BenchSuite {
+    pub title: String,
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // QBOUND_BENCH_FAST=1 trims times for CI smoke runs.
+        let fast = std::env::var("QBOUND_BENCH_FAST").is_ok();
+        Self {
+            title: title.to_string(),
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; `f` should perform one logical iteration.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &mut BenchResult {
+        self.bench_with(name, None, None, &mut f)
+    }
+
+    /// Variant with throughput annotations.
+    pub fn bench_elems(&mut self, name: &str, elems: f64, mut f: impl FnMut()) -> &mut BenchResult {
+        self.bench_with(name, Some(elems), None, &mut f)
+    }
+
+    pub fn bench_bytes(&mut self, name: &str, bytes: f64, mut f: impl FnMut()) -> &mut BenchResult {
+        self.bench_with(name, None, Some(bytes), &mut f)
+    }
+
+    fn bench_with(
+        &mut self,
+        name: &str,
+        elems: Option<f64>,
+        bytes: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &mut BenchResult {
+        // Warm-up.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure && samples.len() < self.max_iters {
+            let it = Instant::now();
+            f();
+            samples.push(it.elapsed());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            stats: Stats::from_samples(samples),
+            elems_per_iter: elems,
+            bytes_per_iter: bytes,
+        };
+        eprintln!("  {:<44} {}", res.name, summary(&res));
+        self.results.push(res);
+        self.results.last_mut().unwrap()
+    }
+
+    /// Record an externally-measured one-shot duration (end-to-end phases
+    /// too slow to iterate).
+    pub fn record_once(&mut self, name: &str, elapsed: Duration) {
+        let res = BenchResult {
+            name: name.to_string(),
+            stats: Stats::from_samples(vec![elapsed]),
+            elems_per_iter: None,
+            bytes_per_iter: None,
+        };
+        eprintln!("  {:<44} {}", res.name, summary(&res));
+        self.results.push(res);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the aligned report table; returns it as a string too.
+    pub fn finish(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        out.push_str(&format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10} {:>7}  throughput\n",
+            "benchmark", "mean", "median", "p95", "min", "iters"
+        ));
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>10} {:>10} {:>10} {:>10} {:>7} {}\n",
+                r.name,
+                crate::util::human_duration(r.stats.mean),
+                crate::util::human_duration(r.stats.median),
+                crate::util::human_duration(r.stats.p95),
+                crate::util::human_duration(r.stats.min),
+                r.stats.iters,
+                r.throughput_line(),
+            ));
+        }
+        print!("{out}");
+        out
+    }
+}
+
+fn summary(r: &BenchResult) -> String {
+    format!(
+        "mean {} (p95 {}, n={}){}",
+        crate::util::human_duration(r.stats.mean),
+        crate::util::human_duration(r.stats.p95),
+        r.stats.iters,
+        r.throughput_line()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = Stats::from_samples(samples);
+        assert_eq!(s.iters, 100);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.median, Duration::from_micros(51));
+        assert!((s.mean.as_micros() as i64 - 50).abs() <= 1);
+        assert!(s.p95 >= Duration::from_micros(90));
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("QBOUND_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("smoke");
+        let mut acc = 0u64;
+        suite.bench_elems("noop-ish", 1000.0, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(suite.results().len(), 1);
+        let report = suite.finish();
+        assert!(report.contains("noop-ish"));
+    }
+
+    #[test]
+    fn record_once_appears_in_report() {
+        let mut suite = BenchSuite::new("once");
+        suite.record_once("phase", Duration::from_millis(123));
+        assert!(suite.finish().contains("phase"));
+    }
+}

@@ -1,0 +1,259 @@
+//! Declarative CLI argument parser (substrate — `clap` is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, required arguments, and generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+/// Specification of a (sub)command: its options and positional params.
+#[derive(Clone, Debug, Default)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+impl CmdSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false, required: false });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render the help text.
+    pub fn help(&self, prog: &str) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {prog} {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p:<12}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let mut line = format!("  --{:<18} {}", o.name, o.help);
+                if let Some(d) = o.default {
+                    line.push_str(&format!(" [default: {d}]"));
+                }
+                if o.required {
+                    line.push_str(" [required]");
+                }
+                s.push_str(&line);
+                s.push('\n');
+            }
+        }
+        s
+    }
+
+    /// Parse `args` (everything after the subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Args> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.help("qbound"));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.help("qbound")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        bail!("--{key} is a flag and takes no value");
+                    }
+                    flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?,
+                    };
+                    values.insert(key, val);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+        }
+        if positionals.len() > self.positionals.len() {
+            bail!(
+                "unexpected positional {:?}\n\n{}",
+                positionals[self.positionals.len()],
+                self.help("qbound")
+            );
+        }
+        for o in &self.opts {
+            if o.required && !values.contains_key(o.name) {
+                bail!("missing required option --{}\n\n{}", o.name, self.help("qbound"));
+            }
+            if let Some(d) = o.default {
+                values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(Args { values, flags, positionals })
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_else(|| panic!("option --{name} has no value/default"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name).parse().map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name).parse().map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn i32(&self, name: &str) -> Result<i32> {
+        self.str(name).parse().map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.str(name)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CmdSpec {
+        CmdSpec::new("eval", "run an evaluation")
+            .opt("net", "network name", "lenet")
+            .opt("batches", "number of batches", "16")
+            .opt_req("config", "precision config")
+            .flag("verbose", "chatty output")
+            .positional("target", "what to evaluate")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse(&s(&["--config", "1.8"])).unwrap();
+        assert_eq!(a.str("net"), "lenet");
+        assert_eq!(a.usize("batches").unwrap(), 16);
+        assert_eq!(a.str("config"), "1.8");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&s(&[])).is_err());
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = spec().parse(&s(&["--config=2.4", "--batches", "8", "--verbose"])).unwrap();
+        assert_eq!(a.str("config"), "2.4");
+        assert_eq!(a.usize("batches").unwrap(), 8);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_captured_and_excess_rejected() {
+        let a = spec().parse(&s(&["--config", "x", "thing"])).unwrap();
+        assert_eq!(a.positional(0), Some("thing"));
+        assert!(spec().parse(&s(&["--config", "x", "a", "b"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&s(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(spec().parse(&s(&["--config", "x", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let sp = CmdSpec::new("x", "y").opt("nets", "nets", "a,b, c");
+        let a = sp.parse(&s(&[])).unwrap();
+        assert_eq!(a.list("nets"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let h = spec().help("qbound");
+        assert!(h.contains("--net"));
+        assert!(h.contains("[default: lenet]"));
+        assert!(h.contains("[required]"));
+    }
+}

@@ -1,0 +1,69 @@
+//! `qbound eval` — accuracy of one precision configuration.
+
+use anyhow::Result;
+use qbound::cli::CmdSpec;
+use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::nets::NetManifest;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::traffic::{self, Mode};
+use qbound::util;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("eval", "evaluate a precision configuration")
+        .opt("net", "network name", "lenet")
+        .opt("weights", "uniform weight format I.F (or fp32)", "fp32")
+        .opt("data", "uniform data format I.F (or fp32)", "fp32")
+        .opt(
+            "data-per-layer",
+            "comma-separated per-layer data formats, overrides --data",
+            "",
+        )
+        .opt(
+            "weights-per-layer",
+            "comma-separated per-layer weight formats, overrides --weights",
+            "",
+        )
+        .opt("n-images", "images to evaluate (0 = full split)", "0")
+        .opt("workers", "worker threads (0 = one per core)", "0");
+    let a = spec.parse(args)?;
+
+    let dir = util::artifacts_dir()?;
+    let net = a.str("net").to_string();
+    let m = NetManifest::load(&dir, &net)?;
+    let nl = m.n_layers();
+
+    let mut cfg = PrecisionConfig::uniform(
+        nl,
+        QFormat::parse(a.str("weights"))?,
+        QFormat::parse(a.str("data"))?,
+    );
+    let per_layer = |list: &str| -> Result<Vec<QFormat>> {
+        let v: Vec<QFormat> =
+            list.split(',').map(QFormat::parse).collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(v.len() == nl, "need {nl} formats, got {}", v.len());
+        Ok(v)
+    };
+    if !a.str("data-per-layer").is_empty() {
+        cfg.dq = per_layer(a.str("data-per-layer"))?;
+    }
+    if !a.str("weights-per-layer").is_empty() {
+        cfg.wq = per_layer(a.str("weights-per-layer"))?;
+    }
+
+    let mut coord = Coordinator::new(&dir, a.usize("workers")?)?;
+    let n_images = a.usize("n-images")?;
+    let base = coord.eval_one(EvalJob {
+        net: net.clone(),
+        cfg: PrecisionConfig::fp32(nl),
+        n_images,
+    })?;
+    let acc = coord.eval_one(EvalJob { net: net.clone(), cfg: cfg.clone(), n_images })?;
+    let tr = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &cfg);
+    println!("net:            {net}");
+    println!("config:         {cfg}");
+    println!("top-1:          {acc:.4}  (baseline {base:.4})");
+    println!("relative error: {:.4}", (base - acc) / base.max(1e-9));
+    println!("traffic ratio:  {tr:.3} vs fp32  ({:.0}% reduction)", (1.0 - tr) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! `qbound info` — artifact inventory.
+
+use anyhow::Result;
+use qbound::cli::CmdSpec;
+use qbound::nets::{ArtifactIndex, NetManifest};
+use qbound::report::Table;
+use qbound::util;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("info", "artifact inventory: nets, baselines, sizes")
+        .flag("layers", "also print per-layer detail");
+    let a = spec.parse(args)?;
+
+    let dir = util::artifacts_dir()?;
+    let index = ArtifactIndex::load(&dir)?;
+    println!("artifacts: {}  (batch={}, quick={})", dir.display(), index.batch, index.quick);
+
+    let mut t = Table::new(
+        "networks",
+        &["net", "dataset", "layers", "weights", "MACs/img", "baseline top-1"],
+    );
+    for name in &index.nets {
+        let m = NetManifest::load(&dir, name)?;
+        t.row(vec![
+            m.name.clone(),
+            m.dataset.clone(),
+            m.n_layers().to_string(),
+            util::human_count(m.total_weights() as f64),
+            util::human_count(m.total_macs() as f64),
+            format!("{:.4}", m.baseline_top1),
+        ]);
+    }
+    print!("{}", t.text());
+
+    if a.flag("layers") {
+        for name in &index.nets {
+            let m = NetManifest::load(&dir, name)?;
+            let mut lt = Table::new(
+                &format!("{name} layers"),
+                &["layer", "kind", "in", "out", "weights", "MACs", "stages"],
+            );
+            for l in &m.layers {
+                lt.row(vec![
+                    l.name.clone(),
+                    l.kind.clone(),
+                    l.in_elems.to_string(),
+                    l.out_elems.to_string(),
+                    l.weight_elems.to_string(),
+                    util::human_count(l.macs as f64),
+                    l.stages.join(","),
+                ]);
+            }
+            print!("{}", lt.text());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! CLI subcommand implementations (thin veneers over the `qbound` library).
+
+pub mod eval;
+pub mod info;
+pub mod repro_cmd;
+pub mod search_cmd;
+pub mod serve;
+pub mod sweeps;
+pub mod traffic_cmd;

@@ -1,0 +1,50 @@
+//! `qbound repro` — regenerate the paper's tables and figures.
+
+use anyhow::Result;
+use qbound::cli::CmdSpec;
+use qbound::repro::{self, ReproCtx};
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("repro", "regenerate a paper experiment")
+        .positional(
+            "experiment",
+            "table1 | fig1 | fig2 | fig3 | fig4 | fig5 | table2 | all | ablation",
+        )
+        .opt("net", "network for `ablation` policy study", "convnet")
+        .opt("out-dir", "report directory", "reports")
+        .opt("n-images", "images per evaluation (0 = full split)", "256")
+        .opt("workers", "worker threads (0 = one per core)", "0");
+    let a = spec.parse(args)?;
+    let exp = a.positional(0).unwrap_or("all").to_string();
+    let mut ctx = ReproCtx::new(
+        std::path::Path::new(a.str("out-dir")),
+        a.usize("workers")?,
+        a.usize("n-images")?,
+    )?;
+    let t0 = std::time::Instant::now();
+    match exp.as_str() {
+        "table1" => repro::table1(&mut ctx).map(|_| ())?,
+        "fig1" => repro::fig1(&mut ctx).map(|_| ())?,
+        "fig2" => repro::fig2(&mut ctx).map(|_| ())?,
+        "fig3" => repro::fig3(&mut ctx).map(|_| ())?,
+        "fig4" => repro::fig4(&mut ctx).map(|_| ())?,
+        // fig5 and table2 come from the same exploration run
+        "fig5" | "table2" => repro::fig5_table2(&mut ctx).map(|_| ())?,
+        "ablation" => {
+            repro::ablation_eval_subset(&mut ctx)?;
+            repro::ablation_policy(&mut ctx, a.str("net"))?;
+        }
+        "all" => repro::all(&mut ctx).map(|_| ())?,
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    }
+    let stats = ctx.coord.stats();
+    eprintln!(
+        "[repro {exp}] {:.1}s — {} jobs ({} cache hits, {} executed, {} workers)",
+        t0.elapsed().as_secs_f64(),
+        stats.submitted,
+        stats.cache_hits,
+        stats.executed,
+        ctx.coord.n_workers
+    );
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! `qbound search` — the §2.5 greedy descent for one network.
+
+use anyhow::Result;
+use qbound::cli::CmdSpec;
+use qbound::report::{pct, ratio, Table};
+use qbound::repro::{self, ReproCtx};
+use qbound::search::table2;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("search", "greedy precision search (paper §2.5)")
+        .opt("net", "network name", "lenet")
+        .opt("n-images", "images per evaluation (0 = full)", "256")
+        .opt("workers", "worker threads (0 = one per core)", "0")
+        .opt("out-dir", "report directory", "reports");
+    let a = spec.parse(args)?;
+    let mut ctx = ReproCtx::new(
+        std::path::Path::new(a.str("out-dir")),
+        a.usize("workers")?,
+        a.usize("n-images")?,
+    )?;
+    let net = a.str("net").to_string();
+    let dse = repro::explore_net(&mut ctx, &net)?;
+
+    println!(
+        "descent: {} steps, {} configs explored, baseline {:.4}",
+        dse.descent.visited.len(),
+        dse.descent.explored.len(),
+        dse.descent.baseline
+    );
+    let mut t = Table::new(
+        &format!("{net} — minimum traffic per tolerance"),
+        &["tol", "data bits", "weight F", "top-1", "rel err", "TR"],
+    );
+    for row in dse.rows.iter().flatten() {
+        let data = if repro::data_f_policy(&net).is_some() {
+            table2::notation_total(&row.cfg)
+        } else {
+            table2::notation_if(&row.cfg)
+        };
+        t.row(vec![
+            format!("{:.0}%", row.tol * 100.0),
+            data,
+            table2::notation_weights(&row.cfg),
+            pct(row.accuracy),
+            format!("{:.3}", row.rel_err),
+            ratio(row.traffic_ratio),
+        ]);
+    }
+    print!("{}", t.text());
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! `qbound serve` — replay a Poisson classification request stream against
+//! a quantized network: the "bounded-memory deployment" E2E driver.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use qbound::cli::CmdSpec;
+use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::nets::NetManifest;
+use qbound::prng::Xoshiro256pp;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::traffic::{self, Mode};
+use qbound::util;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("serve", "serve a timed classification request stream")
+        .opt("net", "network name", "lenet")
+        .opt("requests", "number of requests", "64")
+        .opt("rate", "mean arrival rate (requests/s)", "8")
+        .opt("weights", "weight format I.F (or fp32)", "1.8")
+        .opt("data", "data format I.F (or fp32)", "10.2")
+        .opt("batches-per-request", "eval batches per request", "1")
+        .opt("workers", "worker threads (0 = one per core)", "0")
+        .opt("seed", "arrival-process seed", "42");
+    let a = spec.parse(args)?;
+    let dir = util::artifacts_dir()?;
+    let net = a.str("net").to_string();
+    let m = NetManifest::load(&dir, &net)?;
+    let cfg = PrecisionConfig::uniform(
+        m.n_layers(),
+        QFormat::parse(a.str("weights"))?,
+        QFormat::parse(a.str("data"))?,
+    );
+    let n_req = a.usize("requests")?;
+    let rate = a.f64("rate")?;
+    let n_images = a.usize("batches-per-request")? * m.batch;
+
+    let mut coord = Coordinator::new(&dir, a.usize("workers")?)?;
+    // Warm the engines (compile once, off the clock) with the fp32 config.
+    coord.eval_one(EvalJob {
+        net: net.clone(),
+        cfg: PrecisionConfig::fp32(m.n_layers()),
+        n_images,
+    })?;
+
+    let mut rng = Xoshiro256pp::new(a.usize("seed")? as u64);
+    let mut arrivals = Vec::with_capacity(n_req);
+    let mut t = 0.0f64;
+    let nl = m.n_layers();
+    for i in 0..n_req {
+        t += rng.exponential(rate);
+        // per-request UNIQUE config (two rotating per-layer fields span a
+        // space ≫ n_req) so the memo cache cannot shortcut service —
+        // every request pays real inference.
+        let mut c = cfg.clone();
+        c.dq[i % nl].fbits = 2 + ((i / nl) % 12) as i8;
+        c.dq[(i + 1) % nl].ibits = 8 + ((i / (nl * 12)) % 6) as i8;
+        arrivals.push((Duration::from_secs_f64(t), EvalJob {
+            net: net.clone(),
+            cfg: c,
+            n_images,
+        }));
+    }
+
+    let t0 = std::time::Instant::now();
+    let lat = coord.run_stream(&arrivals)?;
+    let wall = t0.elapsed();
+
+    let mut sorted = lat.clone();
+    sorted.sort_unstable();
+    let p = |q: f64| sorted[((sorted.len() - 1) as f64 * q) as usize];
+    let tr = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &cfg);
+    println!("serve — {net} @ {} req, {} imgs/req, rate {rate}/s, {} workers", n_req, n_images, coord.n_workers);
+    println!("  config            {cfg}");
+    println!("  traffic ratio     {tr:.3} vs fp32 ({:.0}% reduction)", (1.0 - tr) * 100.0);
+    println!("  wall time         {}", util::human_duration(wall));
+    println!(
+        "  throughput        {:.1} req/s   {:.0} images/s",
+        n_req as f64 / wall.as_secs_f64(),
+        (n_req * n_images) as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  latency           p50 {}  p95 {}  p99 {}  max {}",
+        util::human_duration(p(0.50)),
+        util::human_duration(p(0.95)),
+        util::human_duration(p(0.99)),
+        util::human_duration(*sorted.last().unwrap())
+    );
+    let busy = coord.busy_time().as_secs_f64();
+    println!(
+        "  worker utilization {:.0}%  (busy {:.2}s over {} workers)",
+        100.0 * busy / (wall.as_secs_f64() * coord.n_workers as f64),
+        busy,
+        coord.n_workers
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! `qbound sweep-uniform` / `qbound sweep-layer`.
+
+use anyhow::Result;
+use qbound::cli::CmdSpec;
+use qbound::coordinator::Coordinator;
+use qbound::nets::NetManifest;
+use qbound::report::{Chart, Table};
+use qbound::search::{perlayer, uniform, Param};
+use qbound::util;
+
+fn parse_param(s: &str) -> Result<Param> {
+    Ok(match s {
+        "weight-f" | "wf" => Param::WeightF,
+        "data-i" | "di" => Param::DataI,
+        "data-f" | "df" => Param::DataF,
+        other => anyhow::bail!("unknown param {other:?} (weight-f | data-i | data-f)"),
+    })
+}
+
+pub fn run_uniform(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("sweep-uniform", "uniform representation sweep (Fig 2)")
+        .opt("net", "network name", "lenet")
+        .opt("param", "weight-f | data-i | data-f", "weight-f")
+        .opt("min", "minimum bits", "1")
+        .opt("max", "maximum bits", "12")
+        .opt("n-images", "images per evaluation (0 = full)", "0")
+        .opt("workers", "worker threads (0 = one per core)", "0");
+    let a = spec.parse(args)?;
+    let dir = util::artifacts_dir()?;
+    let net = a.str("net").to_string();
+    let m = NetManifest::load(&dir, &net)?;
+    let param = parse_param(a.str("param"))?;
+    let mut coord = Coordinator::new(&dir, a.usize("workers")?)?;
+
+    let pts = uniform::sweep(
+        &mut coord,
+        &net,
+        m.n_layers(),
+        param,
+        (a.i32("min")? as i8, a.i32("max")? as i8),
+        a.usize("n-images")?,
+    )?;
+    let mut t = Table::new(
+        &format!("{net} — uniform {}", param.label()),
+        &["bits", "top-1", "relative"],
+    );
+    for p in &pts {
+        t.row(vec![p.bits.to_string(), format!("{:.4}", p.accuracy), format!("{:.4}", p.relative)]);
+    }
+    print!("{}", t.text());
+    let mut chart = Chart::new(&format!("{net}"), param.label(), "relative accuracy");
+    chart.series('*', pts.iter().map(|p| (p.bits as f64, p.relative)).collect());
+    print!("{}", chart.render());
+    if let Some(b) = uniform::min_bits_within(&pts, 0.01) {
+        println!("min bits within 1%: {b}");
+    }
+    Ok(())
+}
+
+pub fn run_layer(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("sweep-layer", "one-layer-at-a-time sweep (Fig 3)")
+        .opt("net", "network name", "lenet")
+        .opt("layer", "layer index (0-based), or 'all'", "all")
+        .opt("param", "weight-f | data-i | data-f", "data-i")
+        .opt("min", "minimum bits", "1")
+        .opt("max", "maximum bits", "12")
+        .opt("n-images", "images per evaluation (0 = full)", "0")
+        .opt("workers", "worker threads (0 = one per core)", "0");
+    let a = spec.parse(args)?;
+    let dir = util::artifacts_dir()?;
+    let net = a.str("net").to_string();
+    let m = NetManifest::load(&dir, &net)?;
+    let param = parse_param(a.str("param"))?;
+    let range = (a.i32("min")? as i8, a.i32("max")? as i8);
+    let n_images = a.usize("n-images")?;
+    let mut coord = Coordinator::new(&dir, a.usize("workers")?)?;
+
+    let layers: Vec<usize> = if a.str("layer") == "all" {
+        (0..m.n_layers()).collect()
+    } else {
+        vec![a.usize("layer")?]
+    };
+
+    let matrix = perlayer::sweep_all_layers(
+        &mut coord,
+        &net,
+        m.n_layers(),
+        &[param],
+        range,
+        n_images,
+    )?;
+    let mut t = Table::new(
+        &format!("{net} — per-layer {}", param.label()),
+        &["layer", "min bits @1%", "series (bits:rel)"],
+    );
+    for &l in &layers {
+        let series = &matrix[0][l];
+        t.row(vec![
+            m.layers[l].name.clone(),
+            uniform::min_bits_within(series, 0.01)
+                .map(|b| b.to_string())
+                .unwrap_or("-".into()),
+            series.iter().map(|p| format!("{}:{:.3}", p.bits, p.relative)).collect::<Vec<_>>().join(" "),
+        ]);
+    }
+    print!("{}", t.text());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! `qbound traffic` — the Fig-4 traffic model from the manifests.
+
+use anyhow::Result;
+use qbound::cli::CmdSpec;
+use qbound::nets::{ArtifactIndex, NetManifest};
+use qbound::report::Table;
+use qbound::traffic::{self, Mode};
+use qbound::util;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("traffic", "memory-traffic model (Fig 4)")
+        .opt("net", "network name, or 'all'", "all")
+        .opt("batch", "batch size for the batched use case", "64");
+    let a = spec.parse(args)?;
+    let dir = util::artifacts_dir()?;
+    let batch = a.usize("batch")?;
+    let nets: Vec<String> = if a.str("net") == "all" {
+        ArtifactIndex::load(&dir)?.nets
+    } else {
+        vec![a.str("net").to_string()]
+    };
+    for net in nets {
+        let m = NetManifest::load(&dir, &net)?;
+        let single = traffic::accesses_per_image(&m, Mode::Single);
+        let batched = traffic::accesses_per_image(&m, Mode::Batch(batch));
+        let mut t = Table::new(
+            &format!("{net} — accesses per image"),
+            &["layer", "weights single", "weights batch", "data", "weight share (single)"],
+        );
+        for (s, b) in single.iter().zip(&batched) {
+            let share = s.weight_accesses / (s.weight_accesses + s.data_accesses);
+            t.row(vec![
+                s.name.clone(),
+                util::human_count(s.weight_accesses),
+                util::human_count(b.weight_accesses),
+                util::human_count(s.data_accesses),
+                format!("{:.0}%", share * 100.0),
+            ]);
+        }
+        print!("{}", t.text());
+        println!(
+            "total/image: single {}  batch {}\n",
+            util::human_count(traffic::total_accesses(&m, Mode::Single)),
+            util::human_count(traffic::total_accesses(&m, Mode::Batch(batch))),
+        );
+    }
+    Ok(())
+}

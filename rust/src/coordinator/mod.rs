@@ -1,0 +1,318 @@
+//! The evaluation coordinator: a worker-pool service that answers
+//! accuracy queries for (network, precision-config) pairs.
+//!
+//! This is the L3 systems core (vLLM-router-shaped, scaled to this
+//! paper's workload): sweeps and searches generate bursts of hundreds of
+//! evaluation jobs; the coordinator
+//!
+//!   * deduplicates identical jobs within a burst,
+//!   * consults a global memo cache (shared across workers and bursts),
+//!   * dispatches remaining work over N worker threads — each worker owns
+//!     its own PJRT CPU client (+ per-net engines with device-resident
+//!     weights, created lazily on first use), because `PjRtClient` is
+//!     `Rc`-based and must not cross threads,
+//!   * preserves job order in the returned results.
+//!
+//! `tokio` is unavailable offline; the pool is std threads + mpsc channels
+//! with a `Mutex<Receiver>` work queue (work-stealing by contention).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::eval::Evaluator;
+use crate::nets::{ArtifactIndex, NetManifest};
+use crate::runtime::Session;
+use crate::search::space::PrecisionConfig;
+
+/// One unit of work: evaluate top-1 accuracy of `cfg` on `net`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct EvalJob {
+    pub net: String,
+    pub cfg: PrecisionConfig,
+    /// Number of images (0 = full eval split).
+    pub n_images: usize,
+}
+
+type JobMsg = (u64, EvalJob);
+type DoneMsg = (u64, Result<f64, String>);
+
+/// Aggregate service counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinatorStats {
+    pub submitted: u64,
+    pub cache_hits: u64,
+    pub deduped: u64,
+    pub executed: u64,
+    pub errors: u64,
+}
+
+/// Worker-pool evaluation service. Single consumer (`&mut self` API),
+/// many internal workers.
+pub struct Coordinator {
+    job_tx: Sender<JobMsg>,
+    done_rx: Receiver<DoneMsg>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    cache: Arc<Mutex<HashMap<EvalJob, f64>>>,
+    stats: Arc<Stats>,
+    next_id: u64,
+    pub n_workers: usize,
+}
+
+#[derive(Default)]
+struct Stats {
+    submitted: AtomicU64,
+    cache_hits: AtomicU64,
+    deduped: AtomicU64,
+    executed: AtomicU64,
+    errors: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+/// Worker-count heuristic: one worker per available core. Each worker
+/// owns a full XLA CPU client with its own thread pool; oversubscribing
+/// cores makes bursts *slower* (measured 2.2× on a 1-core box — see
+/// EXPERIMENTS.md §Perf), so the default never exceeds the core count.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Coordinator {
+    /// Start `n_workers` workers (0 = auto, one per core) serving the
+    /// networks listed in the artifact index at `dir`.
+    pub fn new(dir: &std::path::Path, n_workers: usize) -> Result<Coordinator> {
+        let n_workers = if n_workers == 0 { default_workers() } else { n_workers };
+        let index = ArtifactIndex::load(dir)?;
+        let manifests: Arc<Vec<NetManifest>> = Arc::new(
+            index
+                .nets
+                .iter()
+                .map(|n| NetManifest::load(dir, n))
+                .collect::<Result<Vec<_>>>()
+                .context("loading manifests")?,
+        );
+        let (job_tx, job_rx) = channel::<JobMsg>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (done_tx, done_rx) = channel::<DoneMsg>();
+        let cache: Arc<Mutex<HashMap<EvalJob, f64>>> = Arc::new(Mutex::new(HashMap::new()));
+        let stats = Arc::new(Stats::default());
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let job_rx = Arc::clone(&job_rx);
+            let done_tx = done_tx.clone();
+            let manifests = Arc::clone(&manifests);
+            let cache = Arc::clone(&cache);
+            let stats = Arc::clone(&stats);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("qbound-worker-{wid}"))
+                    .spawn(move || worker_loop(job_rx, done_tx, manifests, cache, stats))
+                    .context("spawning worker")?,
+            );
+        }
+        Ok(Coordinator {
+            job_tx,
+            done_rx,
+            workers,
+            cache,
+            stats,
+            next_id: 0,
+            n_workers,
+        })
+    }
+
+    /// Convenience: coordinator over the default artifacts dir.
+    pub fn from_artifacts(n_workers: usize) -> Result<Coordinator> {
+        Coordinator::new(&crate::util::artifacts_dir()?, n_workers)
+    }
+
+    /// Evaluate a burst of jobs; results are positionally aligned with
+    /// `jobs`. Duplicate jobs and cache hits cost nothing.
+    pub fn eval_batch(&mut self, jobs: &[EvalJob]) -> Result<Vec<f64>> {
+        self.stats.submitted.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        let mut results: Vec<Option<f64>> = vec![None; jobs.len()];
+
+        // Cache pass + in-burst dedup.
+        let mut pending: HashMap<EvalJob, Vec<usize>> = HashMap::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            for (i, job) in jobs.iter().enumerate() {
+                if let Some(&v) = cache.get(job) {
+                    self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    results[i] = Some(v);
+                } else {
+                    let slot = pending.entry(job.clone()).or_default();
+                    if !slot.is_empty() {
+                        self.stats.deduped.fetch_add(1, Ordering::Relaxed);
+                    }
+                    slot.push(i);
+                }
+            }
+        }
+
+        // Dispatch unique misses.
+        let mut inflight: HashMap<u64, EvalJob> = HashMap::new();
+        for job in pending.keys() {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.job_tx.send((id, job.clone())).context("job queue closed")?;
+            inflight.insert(id, job.clone());
+        }
+
+        // Collect.
+        while !inflight.is_empty() {
+            let (id, res) = self
+                .done_rx
+                .recv_timeout(Duration::from_secs(600))
+                .context("worker pool stalled (>600s)")?;
+            let job = match inflight.remove(&id) {
+                Some(j) => j,
+                None => continue, // stale completion from an aborted burst
+            };
+            let v = res.map_err(|e| anyhow::anyhow!("eval {job:?}: {e}"))?;
+            for &i in &pending[&job] {
+                results[i] = Some(v);
+            }
+        }
+        Ok(results.into_iter().map(|r| r.expect("all slots filled")).collect())
+    }
+
+    /// Evaluate one job.
+    pub fn eval_one(&mut self, job: EvalJob) -> Result<f64> {
+        Ok(self.eval_batch(std::slice::from_ref(&job))?[0])
+    }
+
+    /// Replay a timed request stream (serve mode). `arrivals` carries
+    /// (offset-from-start, job); returns per-request (queueing+service)
+    /// latency, in arrival order. Wall-clock faithful: requests are not
+    /// dispatched before their arrival offset.
+    pub fn run_stream(&mut self, arrivals: &[(Duration, EvalJob)]) -> Result<Vec<Duration>> {
+        let start = Instant::now();
+        let mut latencies: Vec<Option<Duration>> = vec![None; arrivals.len()];
+        let mut inflight: HashMap<u64, (usize, Instant)> = HashMap::new();
+        let mut next = 0usize;
+        while next < arrivals.len() || !inflight.is_empty() {
+            // Dispatch everything whose arrival time has passed.
+            while next < arrivals.len() && start.elapsed() >= arrivals[next].0 {
+                let id = self.next_id;
+                self.next_id += 1;
+                // Serve mode bypasses the memo cache: every request pays
+                // for real inference (cache would trivialize the bench).
+                self.job_tx.send((id, arrivals[next].1.clone())).context("queue closed")?;
+                inflight.insert(id, (next, Instant::now()));
+                next += 1;
+            }
+            // Wait for either the next arrival or a completion.
+            let wait = if next < arrivals.len() {
+                arrivals[next].0.saturating_sub(start.elapsed()).min(Duration::from_millis(50))
+            } else {
+                Duration::from_millis(50)
+            };
+            match self.done_rx.recv_timeout(wait.max(Duration::from_millis(1))) {
+                Ok((id, res)) => {
+                    if let Some((idx, t0)) = inflight.remove(&id) {
+                        res.map_err(|e| anyhow::anyhow!("serve job failed: {e}"))?;
+                        latencies[idx] = Some(t0.elapsed());
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(e) => anyhow::bail!("worker pool died: {e}"),
+            }
+        }
+        Ok(latencies.into_iter().map(|l| l.expect("completed")).collect())
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            submitted: self.stats.submitted.load(Ordering::Relaxed),
+            cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+            deduped: self.stats.deduped.load(Ordering::Relaxed),
+            executed: self.stats.executed.load(Ordering::Relaxed),
+            errors: self.stats.errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total busy time across workers (utilization numerator).
+    pub fn busy_time(&self) -> Duration {
+        Duration::from_nanos(self.stats.busy_ns.load(Ordering::Relaxed))
+    }
+
+    /// Number of memoized results.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Closing the channel ends the worker loops.
+        let (dead_tx, _) = channel();
+        drop(std::mem::replace(&mut self.job_tx, dead_tx));
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    job_rx: Arc<Mutex<Receiver<JobMsg>>>,
+    done_tx: Sender<DoneMsg>,
+    manifests: Arc<Vec<NetManifest>>,
+    cache: Arc<Mutex<HashMap<EvalJob, f64>>>,
+    stats: Arc<Stats>,
+) {
+    // Session + evaluators are created lazily: a worker that never sees a
+    // googlenet job never compiles googlenet.
+    let session = match Session::cpu() {
+        Ok(s) => s,
+        Err(e) => {
+            log::error!("worker failed to create PJRT client: {e}");
+            return;
+        }
+    };
+    let mut evaluators: HashMap<String, Evaluator> = HashMap::new();
+    loop {
+        let msg = { job_rx.lock().unwrap().recv() };
+        let (id, job) = match msg {
+            Ok(m) => m,
+            Err(_) => return, // coordinator dropped
+        };
+        let t0 = Instant::now();
+        let res = run_job(&session, &mut evaluators, &manifests, &job);
+        stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        stats.executed.fetch_add(1, Ordering::Relaxed);
+        if let Ok(v) = res {
+            cache.lock().unwrap().insert(job.clone(), v);
+        } else {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if done_tx.send((id, res.map_err(|e| format!("{e:#}")))).is_err() {
+            return;
+        }
+    }
+}
+
+fn run_job(
+    session: &Session,
+    evaluators: &mut HashMap<String, Evaluator>,
+    manifests: &[NetManifest],
+    job: &EvalJob,
+) -> Result<f64> {
+    if !evaluators.contains_key(&job.net) {
+        let m = manifests
+            .iter()
+            .find(|m| m.name == job.net)
+            .ok_or_else(|| anyhow::anyhow!("unknown net {:?}", job.net))?;
+        let t0 = Instant::now();
+        let ev = Evaluator::new(session, m)?;
+        log::debug!("worker compiled {} in {:?}", job.net, t0.elapsed());
+        evaluators.insert(job.net.clone(), ev);
+    }
+    let ev = evaluators.get_mut(&job.net).unwrap();
+    ev.accuracy(session, &job.cfg, job.n_images)
+}

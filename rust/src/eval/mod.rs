@@ -1,0 +1,194 @@
+//! Batched top-1 evaluation with config-keyed memoization.
+//!
+//! An [`Evaluator`] owns an [`Engine`] plus the network's eval dataset and
+//! answers "what is top-1 accuracy under precision config C?" — the single
+//! query every experiment in the paper is built from. Results are memoized
+//! by (config, n_images): sweeps and the greedy search revisit
+//! configurations constantly (the fp32 baseline alone is consulted once
+//! per tolerance level), and a cache hit must cost ~ns, not a forward pass.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::nets::NetManifest;
+use crate::runtime::{Engine, Session, Variant};
+use crate::search::space::PrecisionConfig;
+use crate::tensor::ntf;
+
+/// The eval split shipped in `<net>.dataset.ntf`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub image_elems: usize,
+    pub n: usize,
+}
+
+impl Dataset {
+    pub fn load(manifest: &NetManifest) -> Result<Dataset> {
+        let mut m = ntf::read_file(&manifest.dataset_path())?;
+        let images =
+            m.remove("images").ok_or_else(|| anyhow::anyhow!("dataset missing images"))?;
+        let labels =
+            m.remove("labels").ok_or_else(|| anyhow::anyhow!("dataset missing labels"))?;
+        let n = images.dims[0];
+        let image_elems: usize = images.dims[1..].iter().product();
+        let want: usize = manifest.input_shape.iter().product();
+        if image_elems != want {
+            bail!("dataset image elems {image_elems} != manifest {want}");
+        }
+        if labels.dims != vec![n] {
+            bail!("labels shape {:?} != [{n}]", labels.dims);
+        }
+        Ok(Dataset {
+            images: images.as_f32()?.to_vec(),
+            labels: labels.as_i32()?.to_vec(),
+            image_elems,
+            n,
+        })
+    }
+
+    /// Borrow the image block for batch `b` of size `batch`.
+    pub fn batch_images(&self, b: usize, batch: usize) -> &[f32] {
+        let start = b * batch * self.image_elems;
+        &self.images[start..start + batch * self.image_elems]
+    }
+
+    pub fn batch_labels(&self, b: usize, batch: usize) -> &[i32] {
+        &self.labels[b * batch..(b + 1) * batch]
+    }
+}
+
+/// Top-1 accuracy: fraction of rows whose argmax equals the label.
+pub fn top1(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut correct = 0usize;
+    for (row, &label) in labels.iter().enumerate() {
+        let r = &logits[row * classes..(row + 1) * classes];
+        let mut best = 0usize;
+        for (i, v) in r.iter().enumerate() {
+            if *v > r[best] {
+                best = i;
+            }
+        }
+        if best as i32 == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len() as f64
+}
+
+/// Accuracy evaluator for one network on one thread.
+pub struct Evaluator {
+    pub engine: Engine,
+    pub dataset: Dataset,
+    cache: HashMap<(PrecisionConfig, usize), f64>,
+    /// Device-resident eval batches (uploaded once; §Perf optimization —
+    /// disable with QBOUND_NO_PRELOAD=1 for A/B benchmarking).
+    image_bufs: Vec<xla::PjRtBuffer>,
+    /// Counters for cache instrumentation.
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Evaluator {
+    pub fn new(session: &Session, manifest: &NetManifest) -> Result<Evaluator> {
+        let engine = Engine::load(session, manifest, Variant::Standard)?;
+        let dataset = Dataset::load(manifest)?;
+        let mut image_bufs = Vec::new();
+        if std::env::var_os("QBOUND_NO_PRELOAD").is_none() {
+            let batch = engine.batch;
+            for b in 0..dataset.n / batch {
+                image_bufs.push(engine.upload_images(session, dataset.batch_images(b, batch))?);
+            }
+        }
+        Ok(Evaluator { engine, dataset, cache: HashMap::new(), image_bufs, hits: 0, misses: 0 })
+    }
+
+    /// Number of images available.
+    pub fn n_images(&self) -> usize {
+        self.dataset.n
+    }
+
+    /// Top-1 accuracy of `cfg` over the first `n_images` (rounded down to
+    /// whole batches; `0` means the full eval set). Memoized.
+    pub fn accuracy(&mut self, session: &Session, cfg: &PrecisionConfig, n_images: usize) -> Result<f64> {
+        let n = if n_images == 0 { self.dataset.n } else { n_images.min(self.dataset.n) };
+        let batch = self.engine.batch;
+        let n_batches = n / batch;
+        if n_batches == 0 {
+            bail!("n_images {n} < batch {batch}");
+        }
+        let key = (cfg.clone(), n_batches);
+        if let Some(&acc) = self.cache.get(&key) {
+            self.hits += 1;
+            return Ok(acc);
+        }
+        self.misses += 1;
+        let wq = cfg.wire_wq();
+        let dq = cfg.wire_dq();
+        let classes = self.engine.num_classes();
+        let mut correct = 0.0f64;
+        for b in 0..n_batches {
+            let logits = if b < self.image_bufs.len() {
+                self.engine.infer_prepared(session, &self.image_bufs[b], &wq, &dq, None)?
+            } else {
+                self.engine.infer(session, self.dataset.batch_images(b, batch), &wq, &dq, None)?
+            };
+            correct += top1(&logits, self.dataset.batch_labels(b, batch), classes)
+                * batch as f64;
+        }
+        let acc = correct / (n_batches * batch) as f64;
+        self.cache.insert(key, acc);
+        Ok(acc)
+    }
+
+    /// Relative accuracy loss vs the fp32 baseline (paper's "error"):
+    /// `(base - acc) / base`.
+    pub fn relative_error(
+        &mut self,
+        session: &Session,
+        cfg: &PrecisionConfig,
+        n_images: usize,
+    ) -> Result<f64> {
+        let base = self.accuracy(session, &PrecisionConfig::fp32(cfg.n_layers()), n_images)?;
+        let acc = self.accuracy(session, cfg, n_images)?;
+        Ok((base - acc) / base)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_basic() {
+        // 3 rows, 4 classes
+        let logits = vec![
+            0.1, 0.9, 0.0, 0.0, // -> 1
+            5.0, 1.0, 2.0, 3.0, // -> 0
+            0.0, 0.0, 1.0, 2.0, // -> 3
+        ];
+        let acc = top1(&logits, &[1, 0, 2], 4);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top1_ties_take_first() {
+        let logits = vec![1.0, 1.0, 1.0];
+        assert_eq!(top1(&logits, &[0], 3), 1.0);
+        assert_eq!(top1(&logits, &[1], 3), 0.0);
+    }
+
+    #[test]
+    fn top1_perfect_and_zero() {
+        let logits = vec![1.0, 0.0, 0.0, 1.0]; // rows -> 0, 1
+        assert_eq!(top1(&logits, &[0, 1], 2), 1.0);
+        assert_eq!(top1(&logits, &[1, 0], 2), 0.0);
+    }
+}

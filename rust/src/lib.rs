@@ -1,0 +1,47 @@
+//! # qbound — per-layer reduced-precision CNN framework
+//!
+//! Reproduction of Judd et al., *"Reduced-Precision Strategies for Bounded
+//! Memory in Deep Neural Nets"* (2015), as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **L1** — a Pallas fixed-point quantization kernel (build path,
+//!   `python/compile/kernels/`),
+//! * **L2** — JAX forward graphs for the paper's five CNNs with per-layer
+//!   precision as *runtime operands* (`python/compile/`), AOT-lowered to
+//!   HLO text,
+//! * **L3** — this crate: the coordinator that loads the compiled
+//!   executables through PJRT (`xla` crate) and drives the paper's
+//!   characterization sweeps, traffic model, and precision search.
+//!
+//! Python never runs on the request path; after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`quant`] | the Q(I.F) fixed-point format and host-side quantizer |
+//! | [`nets`] | network manifests (layers, params, counts) |
+//! | [`traffic`] | the paper's Fig-4 memory-access model |
+//! | [`runtime`] | PJRT engine: load HLO text, execute with resident weights |
+//! | [`eval`] | batched top-1 evaluation with config-keyed memoization |
+//! | [`coordinator`] | worker-pool evaluation service (one engine/thread) |
+//! | [`search`] | uniform/per-layer sweeps, greedy descent, Pareto, Table 2 |
+//! | [`report`] | tables, ASCII charts, CSV/markdown emitters |
+//! | [`tensor`], [`util`], [`cli`], [`prng`], [`testkit`], [`benchkit`] | substrates |
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod eval;
+pub mod nets;
+pub mod prng;
+pub mod quant;
+pub mod report;
+pub mod repro;
+pub mod runtime;
+pub mod search;
+pub mod tensor;
+pub mod testkit;
+pub mod traffic;
+pub mod util;

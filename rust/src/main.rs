@@ -1,0 +1,75 @@
+//! qbound CLI — the L3 entrypoint.
+//!
+//! Subcommands:
+//!   info                     artifact inventory + per-net summary
+//!   eval                     accuracy of one precision config
+//!   sweep-uniform            Fig-2-style uniform sweep
+//!   sweep-layer              Fig-3-style per-layer sweep
+//!   search                   §2.5 greedy descent + Table-2 rows
+//!   traffic                  Fig-4 traffic model
+//!   repro <exp>              regenerate a paper table/figure (or `all`)
+//!   serve                    replay a Poisson request stream (E2E driver)
+
+use anyhow::Result;
+use qbound::cli::CmdSpec;
+use qbound::util;
+
+mod commands;
+
+fn main() {
+    util::init_logging();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "qbound — per-layer reduced-precision CNN framework (Judd et al. 2015 reproduction)
+
+USAGE: qbound <COMMAND> [OPTIONS]
+
+COMMANDS:
+  info           artifact inventory: nets, baselines, layer/weight counts
+  eval           evaluate one precision configuration
+  sweep-uniform  uniform-representation sweep (paper Fig 2)
+  sweep-layer    one-layer-at-a-time sweep (paper Fig 3)
+  search         greedy precision search (paper §2.5) + Table-2 rows
+  traffic        memory-traffic model (paper Fig 4)
+  repro          regenerate paper experiments: table1 fig1 fig2 fig3 fig4 fig5 table2 all
+  serve          serve a timed classification request stream (E2E driver)
+
+Run `qbound <COMMAND> --help` for options.
+"
+    .to_string()
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "info" => commands::info::run(rest),
+        "eval" => commands::eval::run(rest),
+        "sweep-uniform" => commands::sweeps::run_uniform(rest),
+        "sweep-layer" => commands::sweeps::run_layer(rest),
+        "search" => commands::search_cmd::run(rest),
+        "traffic" => commands::traffic_cmd::run(rest),
+        "repro" => commands::repro_cmd::run(rest),
+        "serve" => commands::serve::run(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n\n{}", usage()),
+    }
+}
+
+#[allow(dead_code)]
+fn unused_cmdspec_keepalive() -> CmdSpec {
+    // referenced so the import stays obviously intentional
+    CmdSpec::new("", "")
+}

@@ -1,0 +1,352 @@
+//! Network manifests — the metadata contract between the python build path
+//! and the rust runtime.
+//!
+//! `python/compile/aot.py` writes one `<net>.manifest.json` per network
+//! describing its layers (with the element/weight/MAC counts that feed the
+//! paper's Fig-4 traffic model), the ordered parameter list matching the
+//! executable's input signature, baseline accuracy, and artifact file
+//! names. This module parses and validates those manifests.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Per-layer metadata (the paper's "layer" granularity, Appendix A).
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    /// "conv" | "fc" | "inception"
+    pub kind: String,
+    /// Elements read by this layer per image (its input tensor).
+    pub in_elems: u64,
+    /// Elements written by this layer per image (its output tensor).
+    pub out_elems: u64,
+    /// Weight elements (kernels + biases) of the layer.
+    pub weight_elems: u64,
+    /// Multiply-accumulates per image.
+    pub macs: u64,
+    /// Stage names inside the layer (conv, relu, pool, norm, ...).
+    pub stages: Vec<String>,
+}
+
+/// One entry of the flat parameter list (executable input order).
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The Fig-1 stage-granularity executable variant (AlexNet layer 2).
+#[derive(Clone, Debug)]
+pub struct StageVariant {
+    pub hlo: String,
+    pub group_index: usize,
+    pub n_stages: usize,
+    pub stage_names: Vec<String>,
+}
+
+/// Parsed, validated manifest of one network.
+#[derive(Clone, Debug)]
+pub struct NetManifest {
+    pub name: String,
+    pub dataset: String,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub batch: usize,
+    pub n_eval: usize,
+    pub baseline_top1: f64,
+    pub layers: Vec<LayerMeta>,
+    pub params: Vec<ParamMeta>,
+    pub hlo_file: String,
+    pub weights_file: String,
+    pub dataset_file: String,
+    pub stage_variant: Option<StageVariant>,
+    /// Directory the manifest was loaded from (for resolving files).
+    pub dir: PathBuf,
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("manifest missing string {key:?}"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    j.get(key).and_then(|v| v.as_u64()).ok_or_else(|| anyhow::anyhow!("manifest missing {key:?}"))
+}
+
+impl NetManifest {
+    /// Load and validate `<dir>/<net>.manifest.json`.
+    pub fn load(dir: &Path, net: &str) -> Result<NetManifest> {
+        let path = dir.join(format!("{net}.manifest.json"));
+        let text = crate::util::read_to_string(&path)?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j, dir).with_context(|| format!("validating {}", path.display()))
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<NetManifest> {
+        let name = req_str(j, "name")?;
+        let layers = j
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing layers"))?
+            .iter()
+            .map(|l| {
+                Ok(LayerMeta {
+                    name: req_str(l, "name")?,
+                    kind: req_str(l, "kind")?,
+                    in_elems: req_u64(l, "in_elems")?,
+                    out_elems: req_u64(l, "out_elems")?,
+                    weight_elems: req_u64(l, "weight_elems")?,
+                    macs: req_u64(l, "macs")?,
+                    stages: l
+                        .get("stages")
+                        .and_then(|s| s.as_arr())
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(|st| st.get("name").and_then(|n| n.as_str()))
+                                .map(|s| s.to_string())
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if layers.is_empty() {
+            bail!("network {name} has no layers");
+        }
+        let params = j
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamMeta {
+                    name: req_str(p, "name")?,
+                    shape: p
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow::anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let files = j.get("files").ok_or_else(|| anyhow::anyhow!("missing files"))?;
+        let stage_variant = match j.get("stage_variant") {
+            Some(sv) if !sv.is_null() => Some(StageVariant {
+                hlo: req_str(sv, "hlo")?,
+                group_index: req_u64(sv, "group_index")? as usize,
+                n_stages: req_u64(sv, "n_stages")? as usize,
+                stage_names: sv
+                    .get("stage_names")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                    .unwrap_or_default(),
+            }),
+            _ => None,
+        };
+        let m = NetManifest {
+            name,
+            dataset: req_str(j, "dataset")?,
+            num_classes: req_u64(j, "num_classes")? as usize,
+            input_shape: j
+                .get("input_shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("missing input_shape"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            batch: req_u64(j, "batch")? as usize,
+            n_eval: req_u64(j, "n_eval")? as usize,
+            baseline_top1: j
+                .get("baseline_top1")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("missing baseline_top1"))?,
+            layers,
+            params,
+            hlo_file: req_str(files, "hlo")?,
+            weights_file: req_str(files, "weights")?,
+            dataset_file: req_str(files, "dataset")?,
+            stage_variant,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.num_classes == 0 {
+            bail!("zero batch or classes");
+        }
+        if self.input_shape.len() != 3 {
+            bail!("input_shape must be rank-3 (H, W, C)");
+        }
+        // Layer-0 input must equal the image element count.
+        let img: u64 = self.input_shape.iter().product::<usize>() as u64;
+        if self.layers[0].in_elems != img {
+            bail!("layer 0 in_elems {} != image elems {img}", self.layers[0].in_elems);
+        }
+        // Chain consistency: layer l input == layer l-1 output.
+        for w in self.layers.windows(2) {
+            if w[1].in_elems != w[0].out_elems {
+                bail!("layer chain broken: {} out {} vs {} in {}",
+                    w[0].name, w[0].out_elems, w[1].name, w[1].in_elems);
+            }
+        }
+        // Weight totals must match the parameter list.
+        let param_total: u64 = self.params.iter().map(|p| p.elems() as u64).sum();
+        let layer_total: u64 = self.layers.iter().map(|l| l.weight_elems).sum();
+        if param_total != layer_total {
+            bail!("params total {param_total} != layer weights total {layer_total}");
+        }
+        Ok(())
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn hlo_path(&self) -> PathBuf {
+        self.dir.join(&self.hlo_file)
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights_file)
+    }
+
+    pub fn dataset_path(&self) -> PathBuf {
+        self.dir.join(&self.dataset_file)
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_elems).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+}
+
+/// The artifact index (`index.json`): build metadata + net list.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    pub nets: Vec<String>,
+    pub batch: usize,
+    pub quick: bool,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> Result<ArtifactIndex> {
+        let text = crate::util::read_to_string(&dir.join("index.json"))?;
+        let j = Json::parse(&text)?;
+        Ok(ArtifactIndex {
+            nets: j
+                .get("nets")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("index missing nets"))?
+                .iter()
+                .filter_map(|n| n.get("name").and_then(|s| s.as_str()).map(String::from))
+                .collect(),
+            batch: req_u64(&j, "batch")? as usize,
+            quick: j.get("quick").and_then(|v| v.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+/// Extra index accessors that don't warrant full struct fields.
+pub struct ArtifactIndexExt;
+
+impl ArtifactIndexExt {
+    /// Element count of the standalone kernel artifacts (`kernel_n`).
+    pub fn kernel_n(dir: &Path) -> Result<usize> {
+        let text = crate::util::read_to_string(&dir.join("index.json"))?;
+        let j = Json::parse(&text)?;
+        j.get("kernel_n")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("index.json lacks kernel_n — rebuild artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_json() -> String {
+        r#"{
+          "name": "tiny", "dataset": "synmnist", "num_classes": 10,
+          "input_shape": [4, 4, 1], "batch": 8, "n_eval": 64,
+          "baseline_top1": 0.9,
+          "layers": [
+            {"name": "L1", "kind": "conv", "in_elems": 16, "out_elems": 8,
+             "weight_elems": 20, "macs": 100, "stages": [{"name": "conv"}]},
+            {"name": "L2", "kind": "fc", "in_elems": 8, "out_elems": 10,
+             "weight_elems": 90, "macs": 80, "stages": [{"name": "fc"}]}
+          ],
+          "params": [
+            {"name": "L1.conv.w", "shape": [20]},
+            {"name": "L2.fc.w", "shape": [9, 10]}
+          ],
+          "files": {"hlo": "t.hlo.txt", "weights": "t.w.ntf", "dataset": "t.d.ntf"},
+          "stage_variant": null
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let j = Json::parse(&minimal_json()).unwrap();
+        let m = NetManifest::from_json(&j, Path::new("/tmp")).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.n_layers(), 2);
+        assert_eq!(m.total_weights(), 110);
+        assert_eq!(m.params[1].elems(), 90);
+        assert!(m.stage_variant.is_none());
+        assert_eq!(m.hlo_path(), PathBuf::from("/tmp/t.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_broken_layer_chain() {
+        let bad = minimal_json().replace("\"in_elems\": 8", "\"in_elems\": 9");
+        let j = Json::parse(&bad).unwrap();
+        assert!(NetManifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_weight_mismatch() {
+        let bad = minimal_json().replace("\"shape\": [20]", "\"shape\": [21]");
+        let j = Json::parse(&bad).unwrap();
+        assert!(NetManifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_input_elems() {
+        let bad = minimal_json().replace("\"in_elems\": 16", "\"in_elems\": 15");
+        let j = Json::parse(&bad).unwrap();
+        assert!(NetManifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn stage_variant_parses() {
+        let with_sv = minimal_json().replace(
+            "\"stage_variant\": null",
+            r#""stage_variant": {"hlo": "s.hlo.txt", "group_index": 1,
+                "n_stages": 4, "stage_names": ["conv","relu","pool","norm"]}"#,
+        );
+        let j = Json::parse(&with_sv).unwrap();
+        let m = NetManifest::from_json(&j, Path::new("/tmp")).unwrap();
+        let sv = m.stage_variant.unwrap();
+        assert_eq!(sv.n_stages, 4);
+        assert_eq!(sv.stage_names[3], "norm");
+    }
+}

@@ -1,0 +1,112 @@
+//! Quantization-error metrics: SQNR, max-abs error, saturation rate.
+//!
+//! Used by the reports and by examples to characterize how hard a format
+//! squeezes a tensor — complementary to the accuracy-level results.
+
+use super::QFormat;
+
+/// Error statistics of quantizing `xs` with `fmt`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantError {
+    /// Signal-to-quantization-noise ratio in dB (f64 accumulation).
+    pub sqnr_db: f64,
+    /// max |x - q(x)|
+    pub max_abs: f32,
+    /// mean |x - q(x)|
+    pub mean_abs: f64,
+    /// Fraction of elements that hit the saturation bounds.
+    pub sat_rate: f64,
+}
+
+/// Compute [`QuantError`] of `fmt` over `xs`.
+pub fn quant_error(fmt: QFormat, xs: &[f32]) -> QuantError {
+    if xs.is_empty() {
+        return QuantError { sqnr_db: f64::INFINITY, max_abs: 0.0, mean_abs: 0.0, sat_rate: 0.0 };
+    }
+    let (lo, hi) = if fmt.is_fp32() { (f32::NEG_INFINITY, f32::INFINITY) } else { fmt.range() };
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    let mut max_abs = 0.0f32;
+    let mut sum_abs = 0.0f64;
+    let mut sat = 0usize;
+    for &x in xs {
+        let q = fmt.quantize(x);
+        let e = x - q;
+        sig += (x as f64) * (x as f64);
+        noise += (e as f64) * (e as f64);
+        let a = e.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+        sum_abs += a as f64;
+        if q <= lo || q >= hi {
+            sat += 1;
+        }
+    }
+    let sqnr_db = if noise == 0.0 { f64::INFINITY } else { 10.0 * (sig / noise).log10() };
+    QuantError {
+        sqnr_db,
+        max_abs,
+        mean_abs: sum_abs / xs.len() as f64,
+        sat_rate: sat as f64 / xs.len() as f64,
+    }
+}
+
+/// The classic "6 dB per bit" rule of thumb for a full-scale uniform
+/// signal — used as a sanity anchor in tests and docs.
+pub fn ideal_sqnr_db(bits: u32) -> f64 {
+    6.020_599_913 * bits as f64 + 1.76
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn exact_representation_has_infinite_sqnr() {
+        let fmt = QFormat::new(4, 2);
+        let xs = [0.25f32, -1.5, 3.0, 0.0];
+        let e = quant_error(fmt, &xs);
+        assert_eq!(e.sqnr_db, f64::INFINITY);
+        assert_eq!(e.max_abs, 0.0);
+        assert_eq!(e.sat_rate, 0.0);
+    }
+
+    #[test]
+    fn saturation_detected() {
+        let fmt = QFormat::new(2, 0); // range [-2, 1]
+        let xs = [10.0f32, -10.0, 0.0, 1.0];
+        let e = quant_error(fmt, &xs);
+        // 10 -> 1 (hi), -10 -> -2 (lo), 1.0 -> 1 (== hi, counted)
+        assert!(e.sat_rate >= 0.5, "sat {}", e.sat_rate);
+        assert_eq!(e.max_abs, 9.0);
+    }
+
+    #[test]
+    fn sqnr_improves_with_bits() {
+        let mut rng = Xoshiro256pp::new(9);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.uniform_f32(-0.99, 0.99)).collect();
+        let e4 = quant_error(QFormat::new(1, 3), &xs);
+        let e8 = quant_error(QFormat::new(1, 7), &xs);
+        let e12 = quant_error(QFormat::new(1, 11), &xs);
+        assert!(e8.sqnr_db > e4.sqnr_db + 18.0, "{} vs {}", e8.sqnr_db, e4.sqnr_db);
+        assert!(e12.sqnr_db > e8.sqnr_db + 18.0);
+        // ~6 dB/bit anchor (loose band: signal isn't exactly full-scale)
+        assert!((e8.sqnr_db - ideal_sqnr_db(8)).abs() < 8.0, "sqnr {}", e8.sqnr_db);
+    }
+
+    #[test]
+    fn fp32_sentinel_no_error() {
+        let xs = [1.1f32, -2.2, 3.3];
+        let e = quant_error(QFormat::FP32, &xs);
+        assert_eq!(e.max_abs, 0.0);
+        assert_eq!(e.sat_rate, 0.0);
+    }
+
+    #[test]
+    fn empty_slice_is_clean() {
+        let e = quant_error(QFormat::new(4, 4), &[]);
+        assert_eq!(e.mean_abs, 0.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! The Q(I.F) fixed-point format and the host-side quantizer.
+//!
+//! Semantics are locked bit-for-bit against the L1 Pallas kernel and the
+//! jnp oracle (`python/compile/kernels/ref.py`): round-to-nearest-even on
+//! `x * 2^F`, multiply back by `2^-F`, saturate to `[-2^(I-1), 2^(I-1) -
+//! 2^-F]`, all in fp32. `artifacts/golden_quant.ntf` carries python-
+//! generated vectors that the integration tests replay against this
+//! module.
+//!
+//! `I` counts integer bits *including* the sign bit; `F` counts fractional
+//! bits (paper §2.1). [`QFormat::FP32`] is the pass-through sentinel
+//! (encoded as `I = -1` on the wire, matching the kernels).
+
+use std::fmt;
+
+pub mod metrics;
+
+/// A fixed-point representation: I integer bits (incl. sign) + F fraction bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QFormat {
+    pub ibits: i8,
+    pub fbits: i8,
+}
+
+impl QFormat {
+    /// The fp32 pass-through sentinel (no quantization).
+    pub const FP32: QFormat = QFormat { ibits: -1, fbits: 0 };
+
+    pub const fn new(ibits: i8, fbits: i8) -> Self {
+        Self { ibits, fbits }
+    }
+
+    pub fn is_fp32(&self) -> bool {
+        self.ibits < 0
+    }
+
+    /// Total representation length in bits (paper: N = I + F); 32 for fp32.
+    pub fn bits(&self) -> u32 {
+        if self.is_fp32() {
+            32
+        } else {
+            (self.ibits + self.fbits) as u32
+        }
+    }
+
+    /// Smallest representable increment, 2^-F.
+    pub fn step(&self) -> f32 {
+        (-(self.fbits as f64)).exp2() as f32
+    }
+
+    /// Saturation bounds (lo, hi) = (-2^(I-1), 2^(I-1) - 2^-F).
+    pub fn range(&self) -> (f32, f32) {
+        let hi_pow = ((self.ibits as f64) - 1.0).exp2();
+        ((-hi_pow) as f32, (hi_pow - (-(self.fbits as f64)).exp2()) as f32)
+    }
+
+    /// Quantize one fp32 value (round-to-nearest-even + saturate).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        if self.is_fp32() {
+            return x;
+        }
+        let scale = (self.fbits as f32).exp2();
+        let inv = (-(self.fbits as f32)).exp2();
+        let (lo, hi) = self.range();
+        ((x * scale).round_ties_even() * inv).clamp(lo, hi)
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        if self.is_fp32() {
+            return;
+        }
+        let scale = (self.fbits as f32).exp2();
+        let inv = (-(self.fbits as f32)).exp2();
+        let (lo, hi) = self.range();
+        for x in xs {
+            *x = ((*x * scale).round_ties_even() * inv).clamp(lo, hi);
+        }
+    }
+
+    /// Quantize into a new vector.
+    pub fn quantize_vec(&self, xs: &[f32]) -> Vec<f32> {
+        let mut v = xs.to_vec();
+        self.quantize_slice(&mut v);
+        v
+    }
+
+    /// Number of representable grid points (2^(I+F)); None for fp32.
+    pub fn levels(&self) -> Option<u64> {
+        if self.is_fp32() {
+            None
+        } else {
+            Some(1u64 << (self.ibits as u32 + self.fbits as u32))
+        }
+    }
+
+    /// Wire encoding used by the HLO executables: (I, F) as f32, I<0 = fp32.
+    pub fn wire(&self) -> [f32; 2] {
+        [self.ibits as f32, self.fbits as f32]
+    }
+
+    /// Parse the paper's "I.F" notation ("1.8", "12.2", or "fp32").
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("fp32") || s == "-" {
+            return Ok(Self::FP32);
+        }
+        let (i, f) = s
+            .split_once('.')
+            .ok_or_else(|| anyhow::anyhow!("bad QFormat {s:?} (want I.F or fp32)"))?;
+        let ibits: i8 = i.parse().map_err(|e| anyhow::anyhow!("bad I in {s:?}: {e}"))?;
+        let fbits: i8 = f.parse().map_err(|e| anyhow::anyhow!("bad F in {s:?}: {e}"))?;
+        anyhow::ensure!(ibits >= 0 && fbits >= 0, "negative field in {s:?}");
+        anyhow::ensure!(ibits + fbits > 0, "zero-width format {s:?}");
+        Ok(Self { ibits, fbits })
+    }
+}
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_fp32() {
+            write!(f, "fp32")
+        } else {
+            write!(f, "{}.{}", self.ibits, self.fbits)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_and_step() {
+        let q = QFormat::new(4, 2); // lo -8, hi 8 - 0.25
+        assert_eq!(q.range(), (-8.0, 7.75));
+        assert_eq!(q.step(), 0.25);
+        assert_eq!(q.bits(), 6);
+        assert_eq!(q.levels(), Some(64));
+    }
+
+    #[test]
+    fn quantize_rounds_to_nearest_even() {
+        let q = QFormat::new(8, 0);
+        assert_eq!(q.quantize(0.5), 0.0); // ties to even
+        assert_eq!(q.quantize(1.5), 2.0);
+        assert_eq!(q.quantize(2.5), 2.0);
+        assert_eq!(q.quantize(-0.5), 0.0);
+        assert_eq!(q.quantize(-1.5), -2.0);
+        assert_eq!(q.quantize(0.6), 1.0);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let q = QFormat::new(4, 2);
+        assert_eq!(q.quantize(100.0), 7.75);
+        assert_eq!(q.quantize(-100.0), -8.0);
+        assert_eq!(q.quantize(f32::INFINITY), 7.75);
+        assert_eq!(q.quantize(f32::NEG_INFINITY), -8.0);
+    }
+
+    #[test]
+    fn fp32_sentinel_is_identity() {
+        let q = QFormat::FP32;
+        for x in [0.1f32, -123.456, 1e20, f32::MIN_POSITIVE] {
+            assert_eq!(q.quantize(x), x);
+        }
+        assert_eq!(q.bits(), 32);
+        assert!(q.levels().is_none());
+    }
+
+    #[test]
+    fn i_zero_formats_are_pure_fractions() {
+        let q = QFormat::new(0, 3); // lo -0.5, hi 0.5 - 0.125
+        assert_eq!(q.range(), (-0.5, 0.375));
+        assert_eq!(q.quantize(0.4), 0.375);
+        assert_eq!(q.quantize(-0.7), -0.5);
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let q = QFormat::new(6, 4);
+        for x in [-31.97f32, 0.33, 2.0, 17.1234] {
+            let once = q.quantize(x);
+            assert_eq!(q.quantize(once), once);
+        }
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        let q = QFormat::new(5, 3);
+        let xs: Vec<f32> = (-40..40).map(|i| i as f32 * 0.37).collect();
+        let mut ys = xs.clone();
+        q.quantize_slice(&mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(q.quantize(*x), *y);
+        }
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["1.8", "12.2", "0.4", "16.0"] {
+            let q = QFormat::parse(s).unwrap();
+            assert_eq!(q.to_string(), s);
+        }
+        assert_eq!(QFormat::parse("fp32").unwrap(), QFormat::FP32);
+        assert_eq!(QFormat::FP32.to_string(), "fp32");
+        assert!(QFormat::parse("x.y").is_err());
+        assert!(QFormat::parse("0.0").is_err());
+        assert!(QFormat::parse("8").is_err());
+    }
+
+    #[test]
+    fn wire_encoding() {
+        assert_eq!(QFormat::new(12, 2).wire(), [12.0, 2.0]);
+        assert_eq!(QFormat::FP32.wire(), [-1.0, 0.0]);
+    }
+}

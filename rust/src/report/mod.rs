@@ -1,0 +1,238 @@
+//! Report emitters: aligned text tables, ASCII line charts, CSV and
+//! markdown fragments — everything `qbound repro` writes into `reports/`.
+
+use std::fmt::Write as _;
+
+/// An aligned text/markdown table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Monospace text rendering.
+    pub fn text(&self) -> String {
+        let w = self.widths();
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(s, "== {} ==", self.title);
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(s, "{}", line(&self.headers, &w));
+        let _ = writeln!(s, "{}", w.iter().map(|n| "-".repeat(*n)).collect::<Vec<_>>().join("  "));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", line(r, &w));
+        }
+        s
+    }
+
+    /// GitHub-flavoured markdown rendering.
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(s, "### {}\n", self.title);
+        }
+        let _ = writeln!(s, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(s, "|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    /// CSV rendering (quotes cells containing separators).
+    pub fn csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        s
+    }
+}
+
+/// An ASCII line chart for sweep/scatter series (the textual stand-in for
+/// the paper's figures).
+pub struct Chart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub width: usize,
+    pub height: usize,
+    series: Vec<(char, Vec<(f64, f64)>)>,
+}
+
+impl Chart {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Chart {
+        Chart {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            width: 72,
+            height: 18,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series(&mut self, marker: char, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push((marker, points));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let all: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+        if all.is_empty() {
+            return format!("== {} == (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (marker, pts) in &self.series {
+            for &(x, y) in pts {
+                let cx = (((x - x0) / (x1 - x0)) * (self.width - 1) as f64).round() as usize;
+                let cy = (((y - y0) / (y1 - y0)) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                grid[row][cx.min(self.width - 1)] = *marker;
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==  (y: {})", self.title, self.y_label);
+        let _ = writeln!(s, "{:>8.3} ┐", y1);
+        for row in &grid {
+            let _ = writeln!(s, "         │{}", row.iter().collect::<String>());
+        }
+        let _ = writeln!(s, "{:>8.3} └{}", y0, "─".repeat(self.width));
+        let _ = writeln!(s, "          {:<10}{:^52}{:>10.3}", format!("{x0:.3}"), self.x_label, x1);
+        s
+    }
+}
+
+/// Percentage with one decimal: `0.7158` → `"71.6%"`.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Fixed-point ratio with two decimals: `0.28`.
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo", &["net", "top-1"]);
+        t.row(vec!["lenet".into(), "99.0%".into()]);
+        t.row(vec!["googlenet-long-name".into(), "40.6%".into()]);
+        t
+    }
+
+    #[test]
+    fn text_alignment() {
+        let txt = sample().text();
+        let lines: Vec<&str> = txt.lines().collect();
+        assert!(lines[1].starts_with("net"));
+        assert!(lines[3].starts_with("lenet "));
+        // columns align: "top-1" header starts at same column in all rows
+        let col = lines[1].find("top-1").unwrap();
+        assert_eq!(&lines[3][col..col + 5], "99.0%");
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().markdown();
+        assert!(md.contains("| net | top-1 |"));
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        Table::new("", &["a", "b"]).row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn chart_renders_extremes() {
+        let mut c = Chart::new("t", "bits", "acc");
+        c.series('*', vec![(0.0, 0.0), (8.0, 1.0), (4.0, 0.5)]);
+        let r = c.render();
+        assert!(r.contains('*'));
+        assert!(r.contains("1.000"));
+        assert!(r.contains("0.000"));
+    }
+
+    #[test]
+    fn chart_empty_safe() {
+        let c = Chart::new("t", "x", "y");
+        assert!(c.render().contains("no data"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(pct(0.7158), "71.6%");
+        assert_eq!(ratio(0.283), "0.28");
+    }
+}

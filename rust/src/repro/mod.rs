@@ -1,0 +1,616 @@
+//! Paper-experiment reproduction harnesses — one function per table/figure.
+//!
+//! Every harness prints a textual rendering (table + ASCII chart) and
+//! writes machine-readable CSV/markdown into the report directory. The
+//! mapping to the paper (DESIGN.md §5):
+//!
+//! | fn | paper artifact |
+//! |---|---|
+//! | [`table1`] | Table 1 — networks + fp32 baselines (re-measured through the rust runtime) |
+//! | [`fig1`]   | Fig 1 — AlexNet layer-2 stage-granularity sweep |
+//! | [`fig2`]   | Fig 2 — uniform representation sweeps (3 params × 5 nets) |
+//! | [`fig3`]   | Fig 3 — per-layer sweeps (3 params × every layer) |
+//! | [`fig4`]   | Fig 4 — traffic model, single vs batch |
+//! | [`fig5_table2`] | Fig 5 scatter + Table 2 min-traffic configs |
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, EvalJob};
+use crate::eval::Dataset;
+use crate::nets::{ArtifactIndex, NetManifest};
+use crate::quant::QFormat;
+use crate::report::{pct, ratio, Chart, Table};
+use crate::runtime::{Session, Variant};
+use crate::search::greedy::{self, GreedyOptions};
+use crate::search::space::{DescentOptions, PrecisionConfig};
+use crate::search::{pareto, perlayer, stages, table2, uniform, Param};
+use crate::traffic::{self, Mode};
+use crate::util;
+
+/// Shared context for the repro harnesses.
+pub struct ReproCtx {
+    pub artifacts: PathBuf,
+    pub out_dir: PathBuf,
+    pub coord: Coordinator,
+    pub index: ArtifactIndex,
+    pub manifests: Vec<NetManifest>,
+    /// Images per accuracy evaluation (0 = full eval split).
+    pub n_images: usize,
+}
+
+impl ReproCtx {
+    pub fn new(out_dir: &Path, workers: usize, n_images: usize) -> Result<ReproCtx> {
+        let artifacts = util::artifacts_dir()?;
+        let index = ArtifactIndex::load(&artifacts)?;
+        let manifests = index
+            .nets
+            .iter()
+            .map(|n| NetManifest::load(&artifacts, n))
+            .collect::<Result<Vec<_>>>()?;
+        let coord = Coordinator::new(&artifacts, workers)?;
+        std::fs::create_dir_all(out_dir)?;
+        Ok(ReproCtx {
+            artifacts,
+            out_dir: out_dir.to_path_buf(),
+            coord,
+            index,
+            manifests,
+            n_images,
+        })
+    }
+
+    pub fn manifest(&self, net: &str) -> Result<&NetManifest> {
+        self.manifests
+            .iter()
+            .find(|m| m.name == net)
+            .ok_or_else(|| anyhow::anyhow!("no manifest for {net:?}"))
+    }
+
+    fn write(&self, name: &str, contents: &str) -> Result<()> {
+        util::write_file(&self.out_dir.join(name), contents.as_bytes())
+    }
+}
+
+/// The paper's §2.5 per-net data-fraction policy: for the complex nets,
+/// data F is PINNED to "a value achieving less than 0.1% error in
+/// Figure 3 (right column)" and only data I + weight F are searched;
+/// LeNet/Convnet tune F too.
+///
+/// The paper's absolute pins were 0/0/2 — its ImageNet networks carry
+/// large-dynamic-range activations where the integer part dominates. Our
+/// scaled nets normalize inputs to [0,1] (and AlexNet's LRN shrinks
+/// activations further), shifting the need toward fraction bits; the pins
+/// below are this repo's own measured Fig-3 values, same methodology
+/// (see EXPERIMENTS.md §Fig5/Table2 for the deviation note).
+pub fn data_f_policy(net: &str) -> Option<i8> {
+    match net {
+        "alexnet" => Some(4),
+        "nin" => Some(4),
+        "googlenet" => Some(5),
+        _ => None,
+    }
+}
+
+/// Human layer summary, e.g. "2 CONV + 2 FC" / "2 CONV + 9 IM".
+fn layer_summary(m: &NetManifest) -> String {
+    let count = |k: &str| m.layers.iter().filter(|l| l.kind == k).count();
+    let (c, f, i) = (count("conv"), count("fc"), count("inception"));
+    let mut parts = Vec::new();
+    if c > 0 {
+        parts.push(format!("{c} CONV"));
+    }
+    if f > 0 {
+        parts.push(format!("{f} FC"));
+    }
+    if i > 0 {
+        parts.push(format!("{i} IM"));
+    }
+    parts.join(" + ")
+}
+
+// ---------------------------------------------------------------------------
+// Table 1
+// ---------------------------------------------------------------------------
+
+/// Table 1: networks studied + baseline top-1, re-measured end-to-end
+/// through the PJRT runtime (runtime-parity check vs the python-recorded
+/// value in the manifest).
+pub fn table1(ctx: &mut ReproCtx) -> Result<String> {
+    let mut t = Table::new(
+        "Table 1 — networks studied (baseline = fp32)",
+        &["network", "dataset", "layers", "params", "MACs/img", "top-1 (py)", "top-1 (rust)", "Δ"],
+    );
+    for m in ctx.manifests.clone() {
+        let measured = ctx.coord.eval_one(EvalJob {
+            net: m.name.clone(),
+            cfg: PrecisionConfig::fp32(m.n_layers()),
+            n_images: 0, // full split: this is the headline parity check
+        })?;
+        t.row(vec![
+            m.name.clone(),
+            m.dataset.clone(),
+            layer_summary(&m),
+            util::human_count(m.total_weights() as f64),
+            util::human_count(m.total_macs() as f64),
+            format!("{:.4}", m.baseline_top1),
+            format!("{measured:.4}"),
+            format!("{:+.4}", measured - m.baseline_top1),
+        ]);
+    }
+    let text = t.text();
+    println!("{text}");
+    ctx.write("table1.md", &t.markdown())?;
+    ctx.write("table1.csv", &t.csv())?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1
+// ---------------------------------------------------------------------------
+
+/// Fig 1: accuracy vs data bits for each stage inside AlexNet layer 2
+/// (conv/relu/pool/norm quantized one at a time). Demonstrates stages
+/// within a layer share tolerance — the per-layer granularity argument.
+pub fn fig1(ctx: &mut ReproCtx) -> Result<String> {
+    let m = ctx.manifest("alexnet")?.clone();
+    let sv = m
+        .stage_variant
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("alexnet manifest lacks stage variant"))?;
+    let session = Session::cpu()?;
+    let engine = session.load_engine(&m, Variant::Stages)?;
+    let dataset = Dataset::load(&m)?;
+
+    let mut chart = Chart::new(
+        "Fig 1 — AlexNet layer-2 stage tolerance (accuracy vs data integer bits)",
+        "data integer bits (F=2)",
+        "relative accuracy",
+    );
+    let mut t = Table::new(
+        "Fig 1 — per-stage minimum bits (rel. accuracy ≥ 99%)",
+        &["stage", "min bits", "series (bits: rel-acc)"],
+    );
+    let markers = ['c', 'r', 'p', 'n', 'x', 'y'];
+    let mut out = String::new();
+    for (si, stage_name) in sv.stage_names.iter().enumerate() {
+        let pts = stages::sweep_stage(
+            &session,
+            &m,
+            &engine,
+            &dataset,
+            si,
+            (1, 12),
+            2,
+            ctx.n_images,
+        )?;
+        chart.series(
+            markers[si % markers.len()],
+            pts.iter().map(|p| (p.bits as f64, p.relative)).collect(),
+        );
+        let min_bits = uniform::min_bits_within(&pts, 0.01);
+        t.row(vec![
+            stage_name.clone(),
+            min_bits.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            pts.iter()
+                .map(|p| format!("{}:{:.3}", p.bits, p.relative))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    out.push_str(&chart.render());
+    out.push_str(&t.text());
+    println!("{out}");
+    ctx.write("fig1.md", &t.markdown())?;
+    ctx.write("fig1.csv", &t.csv())?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2
+// ---------------------------------------------------------------------------
+
+/// Fig 2: uniform sweeps — (a) weight fraction bits, (b) data integer
+/// bits, (c) data fraction bits — across all networks.
+pub fn fig2(ctx: &mut ReproCtx) -> Result<String> {
+    let specs: [(Param, (i8, i8), &str); 3] = [
+        (Param::WeightF, (1, 12), "fig2a"),
+        (Param::DataI, (1, 14), "fig2b"),
+        (Param::DataF, (0, 8), "fig2c"),
+    ];
+    let markers = ['l', 'c', 'a', 'n', 'g'];
+    let mut out = String::new();
+    let manifests = ctx.manifests.clone();
+    for (param, range, tag) in specs {
+        let mut chart = Chart::new(
+            &format!("Fig 2 ({tag}) — uniform {}", param.label()),
+            param.label(),
+            "relative accuracy",
+        );
+        let mut csv = Table::new("", &["net", "bits", "accuracy", "relative"]);
+        let mut summary = Table::new(
+            &format!("{tag} — minimum uniform {} within tolerance", param.label()),
+            &["net", "min bits @1%", "min bits @0.1%"],
+        );
+        for (ni, m) in manifests.iter().enumerate() {
+            let pts = uniform::sweep(
+                &mut ctx.coord,
+                &m.name,
+                m.n_layers(),
+                param,
+                range,
+                ctx.n_images,
+            )?;
+            chart.series(markers[ni % markers.len()], pts.iter().map(|p| (p.bits as f64, p.relative)).collect());
+            for p in &pts {
+                csv.row(vec![
+                    m.name.clone(),
+                    p.bits.to_string(),
+                    format!("{:.4}", p.accuracy),
+                    format!("{:.4}", p.relative),
+                ]);
+            }
+            summary.row(vec![
+                m.name.clone(),
+                uniform::min_bits_within(&pts, 0.01).map(|b| b.to_string()).unwrap_or("-".into()),
+                uniform::min_bits_within(&pts, 0.001).map(|b| b.to_string()).unwrap_or("-".into()),
+            ]);
+        }
+        out.push_str(&chart.render());
+        out.push_str(&summary.text());
+        out.push('\n');
+        ctx.write(&format!("{tag}.csv"), &csv.csv())?;
+        ctx.write(&format!("{tag}.md"), &summary.markdown())?;
+    }
+    println!("{out}");
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3
+// ---------------------------------------------------------------------------
+
+/// Fig 3: per-layer sweeps — every (layer, param) pair swept in isolation,
+/// the paper's key "tolerance varies WITHIN networks" result.
+pub fn fig3(ctx: &mut ReproCtx) -> Result<String> {
+    let params = [Param::WeightF, Param::DataI, Param::DataF];
+    let ranges = [(1i8, 10i8), (1, 12), (0, 6)];
+    let mut out = String::new();
+    let manifests = ctx.manifests.clone();
+    for m in &manifests {
+        let mut per_net = Table::new(
+            &format!("Fig 3 — {}: per-layer minimum bits (rel. acc ≥ 99%)", m.name),
+            &["layer", "kind", "weight F", "data I", "data F"],
+        );
+        let mut csv = Table::new("", &["param", "layer", "bits", "accuracy", "relative"]);
+        let mut mins: Vec<Vec<Option<i8>>> = Vec::new();
+        for (pi, &param) in params.iter().enumerate() {
+            let matrix = perlayer::sweep_all_layers(
+                &mut ctx.coord,
+                &m.name,
+                m.n_layers(),
+                &[param],
+                ranges[pi],
+                ctx.n_images,
+            )?;
+            for (layer, series) in matrix[0].iter().enumerate() {
+                for p in series {
+                    csv.row(vec![
+                        format!("{param:?}"),
+                        m.layers[layer].name.clone(),
+                        p.bits.to_string(),
+                        format!("{:.4}", p.accuracy),
+                        format!("{:.4}", p.relative),
+                    ]);
+                }
+            }
+            mins.push(perlayer::min_bits_per_layer(&matrix[0], 0.01));
+        }
+        for l in 0..m.n_layers() {
+            per_net.row(vec![
+                m.layers[l].name.clone(),
+                m.layers[l].kind.clone(),
+                mins[0][l].map(|b| b.to_string()).unwrap_or("-".into()),
+                mins[1][l].map(|b| b.to_string()).unwrap_or("-".into()),
+                mins[2][l].map(|b| b.to_string()).unwrap_or("-".into()),
+            ]);
+        }
+        out.push_str(&per_net.text());
+        out.push('\n');
+        ctx.write(&format!("fig3_{}.csv", m.name), &csv.csv())?;
+        ctx.write(&format!("fig3_{}.md", m.name), &per_net.markdown())?;
+    }
+    println!("{out}");
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4
+// ---------------------------------------------------------------------------
+
+/// Fig 4: per-layer access counts, single-image vs batch use cases.
+pub fn fig4(ctx: &mut ReproCtx) -> Result<String> {
+    let mut out = String::new();
+    for m in &ctx.manifests {
+        let batch = Mode::Batch(m.batch);
+        let mut t = Table::new(
+            &format!("Fig 4 — {}: accesses per image (batch = {})", m.name, m.batch),
+            &["layer", "kind", "weights (single)", "weights (batch)", "data"],
+        );
+        let single = traffic::accesses_per_image(m, Mode::Single);
+        let batched = traffic::accesses_per_image(m, batch);
+        for (s, b) in single.iter().zip(&batched) {
+            t.row(vec![
+                s.name.clone(),
+                m.layers.iter().find(|l| l.name == s.name).map(|l| l.kind.clone()).unwrap_or_default(),
+                util::human_count(s.weight_accesses),
+                util::human_count(b.weight_accesses),
+                util::human_count(s.data_accesses),
+            ]);
+        }
+        t.row(vec![
+            "TOTAL".into(),
+            "".into(),
+            util::human_count(single.iter().map(|l| l.weight_accesses).sum::<f64>()),
+            util::human_count(batched.iter().map(|l| l.weight_accesses).sum::<f64>()),
+            util::human_count(single.iter().map(|l| l.data_accesses).sum::<f64>()),
+        ]);
+        out.push_str(&t.text());
+        out.push('\n');
+        ctx.write(&format!("fig4_{}.csv", m.name), &t.csv())?;
+        ctx.write(&format!("fig4_{}.md", m.name), &t.markdown())?;
+    }
+    println!("{out}");
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 + Table 2
+// ---------------------------------------------------------------------------
+
+/// Result bundle of the design-space exploration for one network.
+pub struct DseResult {
+    pub net: String,
+    pub descent: greedy::DescentResult,
+    pub rows: Vec<Option<table2::ToleranceRow>>,
+}
+
+/// Run the §2.5 exploration for one network and derive its Table-2 rows.
+pub fn explore_net(ctx: &mut ReproCtx, net: &str) -> Result<DseResult> {
+    let m = ctx.manifest(net)?.clone();
+    let fixed_f = data_f_policy(net);
+    let opts = GreedyOptions {
+        n_images: ctx.n_images,
+        descent: DescentOptions {
+            tune_data_f: fixed_f.is_none(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    // Start tolerance: the paper's 0.1 % — floored at the eval-subset
+    // noise level (one image flip = 1/n of absolute accuracy; below that
+    // the criterion is unattainable and the start balloons to max width).
+    let n_eff = if ctx.n_images == 0 { m.n_eval } else { ctx.n_images.min(m.n_eval) };
+    let start_tol = (0.001f64).max(2.0 / n_eff as f64 / m.baseline_top1.max(0.1));
+    let start = greedy::find_uniform_start(&mut ctx.coord, &m, start_tol, fixed_f, ctx.n_images)
+        .context("finding uniform start")?;
+    log::info!("{net}: descent start {}", start);
+    let descent = greedy::descend(&mut ctx.coord, &m, start, &opts)?;
+    let rows = table2::select(&descent.visited, &table2::TOLERANCES);
+    Ok(DseResult { net: net.to_string(), descent, rows })
+}
+
+/// Fig 5 scatter + Table 2 rows for every network, plus the paper's
+/// headline aggregate (average traffic reduction at 1 % tolerance).
+pub fn fig5_table2(ctx: &mut ReproCtx) -> Result<String> {
+    let mut out = String::new();
+    let mut headline = Vec::new();
+    let nets: Vec<String> = ctx.index.nets.clone();
+    let mut t2 = Table::new(
+        "Table 2 — minimum-traffic mixed configs per tolerance",
+        &["net", "tol", "data bits per layer", "weight F per layer", "top-1", "rel err", "TR(32b)", "TR(16b)"],
+    );
+    for net in &nets {
+        let m = ctx.manifest(net)?.clone();
+        let dse = explore_net(ctx, net)?;
+
+        // Fig-5 scatter: uniform grid ('u'), explored mixed ('.'), frontier ('#').
+        let mut chart = Chart::new(
+            &format!("Fig 5 — {net}: traffic vs accuracy"),
+            "traffic ratio vs 32-bit",
+            "top-1 accuracy",
+        );
+        let uniform_pts = uniform_grid_points(ctx, &m)?;
+        let mixed: Vec<(f64, f64)> =
+            dse.descent.explored.iter().map(|v| (v.traffic_ratio, v.accuracy)).collect();
+        let front_idx = pareto::frontier(&mixed);
+        chart.series('u', uniform_pts.clone());
+        chart.series('.', mixed.clone());
+        chart.series('#', front_idx.iter().map(|&i| mixed[i]).collect());
+        out.push_str(&chart.render());
+
+        let mut csv = Table::new("", &["kind", "traffic_ratio", "accuracy", "config"]);
+        for (tr, acc) in &uniform_pts {
+            csv.row(vec!["uniform".into(), format!("{tr:.4}"), format!("{acc:.4}"), String::new()]);
+        }
+        for v in &dse.descent.explored {
+            csv.row(vec![
+                "mixed".into(),
+                format!("{:.4}", v.traffic_ratio),
+                format!("{:.4}", v.accuracy),
+                v.cfg.notation(),
+            ]);
+        }
+        ctx.write(&format!("fig5_{net}.csv"), &csv.csv())?;
+
+        for row in dse.rows.iter().flatten() {
+            let data_bits = if data_f_policy(net).is_some() {
+                table2::notation_total(&row.cfg)
+            } else {
+                table2::notation_if(&row.cfg)
+            };
+            t2.row(vec![
+                net.clone(),
+                format!("{:.0}%", row.tol * 100.0),
+                data_bits,
+                table2::notation_weights(&row.cfg),
+                pct(row.accuracy),
+                format!("{:.3}", row.rel_err),
+                ratio(row.traffic_ratio),
+                ratio(traffic::traffic_ratio_vs16(&m, Mode::Batch(m.batch), &row.cfg)),
+            ]);
+            if (row.tol - 0.01).abs() < 1e-9 {
+                headline.push((net.clone(), row.traffic_ratio));
+            }
+        }
+    }
+    out.push_str(&t2.text());
+    let avg_tr: f64 =
+        headline.iter().map(|(_, tr)| tr).sum::<f64>() / headline.len().max(1) as f64;
+    let min_tr = headline.iter().map(|(_, tr)| *tr).fold(f64::INFINITY, f64::min);
+    let headline_txt = format!(
+        "\nHEADLINE (paper: 74% avg / up to 92% reduction @1% tol):\n  \
+         measured: avg reduction {:.0}%  best net {:.0}%  ({} nets)\n",
+        (1.0 - avg_tr) * 100.0,
+        (1.0 - min_tr) * 100.0,
+        headline.len()
+    );
+    out.push_str(&headline_txt);
+    println!("{out}");
+    ctx.write("table2.md", &t2.markdown())?;
+    ctx.write("table2.csv", &t2.csv())?;
+    ctx.write("headline.txt", &headline_txt)?;
+    Ok(out)
+}
+
+/// The Fig-5 "uniform" comparison series: a small grid of uniform configs.
+fn uniform_grid_points(ctx: &mut ReproCtx, m: &NetManifest) -> Result<Vec<(f64, f64)>> {
+    let nl = m.n_layers();
+    let df = data_f_policy(&m.name).unwrap_or(1);
+    let mut jobs = Vec::new();
+    let mut cfgs = Vec::new();
+    for wf in [2i8, 4, 6, 8, 10] {
+        for di in [4i8, 6, 8, 10, 12] {
+            let cfg = PrecisionConfig::uniform(nl, QFormat::new(1, wf), QFormat::new(di, df));
+            jobs.push(EvalJob { net: m.name.clone(), cfg: cfg.clone(), n_images: ctx.n_images });
+            cfgs.push(cfg);
+        }
+    }
+    let accs = ctx.coord.eval_batch(&jobs)?;
+    Ok(cfgs
+        .iter()
+        .zip(&accs)
+        .map(|(cfg, &acc)| (traffic::traffic_ratio(m, Mode::Batch(m.batch), cfg), acc))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (design choices DESIGN.md calls out)
+// ---------------------------------------------------------------------------
+
+/// Ablation 1: evaluation-subset sensitivity — how much do the sweep
+/// accuracies drift with the number of images per evaluation? Justifies
+/// the default `--n-images 256`.
+pub fn ablation_eval_subset(ctx: &mut ReproCtx) -> Result<String> {
+    let mut t = Table::new(
+        "Ablation — accuracy vs evaluation-subset size",
+        &["net", "config", "n=64", "n=128", "n=256", "n=512", "full", "max drift vs full"],
+    );
+    let sizes = [64usize, 128, 256, 512, 0];
+    let manifests = ctx.manifests.clone();
+    for m in &manifests {
+        let nl = m.n_layers();
+        let cfgs = [
+            ("fp32", PrecisionConfig::fp32(nl)),
+            ("1.8/10.2", PrecisionConfig::uniform(nl, QFormat::new(1, 8), QFormat::new(10, 2))),
+        ];
+        for (label, cfg) in cfgs {
+            let jobs: Vec<EvalJob> = sizes
+                .iter()
+                .map(|&n| EvalJob { net: m.name.clone(), cfg: cfg.clone(), n_images: n })
+                .collect();
+            let accs = ctx.coord.eval_batch(&jobs)?;
+            let full = *accs.last().unwrap();
+            let drift = accs[..accs.len() - 1]
+                .iter()
+                .map(|a| (a - full).abs())
+                .fold(0.0f64, f64::max);
+            t.row(vec![
+                m.name.clone(),
+                label.into(),
+                format!("{:.4}", accs[0]),
+                format!("{:.4}", accs[1]),
+                format!("{:.4}", accs[2]),
+                format!("{:.4}", accs[3]),
+                format!("{full:.4}"),
+                format!("{drift:.4}"),
+            ]);
+        }
+    }
+    let text = t.text();
+    println!("{text}");
+    ctx.write("ablation_eval_subset.md", &t.markdown())?;
+    ctx.write("ablation_eval_subset.csv", &t.csv())?;
+    Ok(text)
+}
+
+/// Ablation 2: descent choice policy — the paper's best-accuracy rule vs
+/// a traffic-saved-per-error-lost rule, compared at the Table-2 selection.
+pub fn ablation_policy(ctx: &mut ReproCtx, net: &str) -> Result<String> {
+    use crate::search::greedy::ChoicePolicy;
+    let m = ctx.manifest(net)?.clone();
+    let fixed_f = data_f_policy(net);
+    let start =
+        greedy::find_uniform_start(&mut ctx.coord, &m, 0.001, fixed_f, ctx.n_images)?;
+    let mut t = Table::new(
+        &format!("Ablation — descent policy on {net}"),
+        &["policy", "steps", "TR @1%", "TR @5%", "TR @10%"],
+    );
+    for (label, policy) in [
+        ("best-accuracy (paper)", ChoicePolicy::BestAccuracy),
+        ("traffic-per-error", ChoicePolicy::TrafficPerError),
+    ] {
+        let opts = GreedyOptions {
+            n_images: ctx.n_images,
+            descent: DescentOptions { tune_data_f: fixed_f.is_none(), ..Default::default() },
+            policy,
+            ..Default::default()
+        };
+        let res = greedy::descend(&mut ctx.coord, &m, start.clone(), &opts)?;
+        let rows = table2::select(&res.visited, &[0.01, 0.05, 0.10]);
+        let tr = |i: usize| {
+            rows[i]
+                .as_ref()
+                .map(|r| format!("{:.3}", r.traffic_ratio))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(vec![label.into(), res.visited.len().to_string(), tr(0), tr(1), tr(2)]);
+    }
+    let text = t.text();
+    println!("{text}");
+    ctx.write(&format!("ablation_policy_{net}.md"), &t.markdown())?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------------
+
+/// Run everything in paper order.
+pub fn all(ctx: &mut ReproCtx) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&table1(ctx)?);
+    out.push_str(&fig2(ctx)?);
+    out.push_str(&fig1(ctx)?);
+    out.push_str(&fig3(ctx)?);
+    out.push_str(&fig4(ctx)?);
+    out.push_str(&fig5_table2(ctx)?);
+    let stats = ctx.coord.stats();
+    let foot = format!(
+        "\ncoordinator: {} jobs submitted, {} cache hits, {} deduped, {} executed\n",
+        stats.submitted, stats.cache_hits, stats.deduped, stats.executed
+    );
+    out.push_str(&foot);
+    print!("{foot}");
+    ctx.write("repro_all.txt", &out)?;
+    Ok(out)
+}

@@ -1,0 +1,87 @@
+//! Standalone L1-kernel executables: the compiled Pallas quantizer outside
+//! any network, for device-vs-host parity checks, kernel benchmarking, and
+//! the stochastic-rounding study (paper §4 future work).
+
+use anyhow::{bail, Result};
+
+use super::Session;
+use crate::quant::QFormat;
+
+/// Rounding mode of the standalone kernel artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round-to-nearest-even (the paper's mode).
+    Nearest,
+    /// Stochastic rounding (extension; needs a noise operand).
+    Stochastic,
+}
+
+/// A compiled standalone quantize kernel over `n` fp32 elements.
+pub struct KernelEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub rounding: Rounding,
+}
+
+impl KernelEngine {
+    /// Load `kernel_rne.hlo.txt` / `kernel_sr.hlo.txt` from `dir`.
+    pub fn load(session: &Session, dir: &std::path::Path, rounding: Rounding) -> Result<Self> {
+        let file = match rounding {
+            Rounding::Nearest => "kernel_rne.hlo.txt",
+            Rounding::Stochastic => "kernel_sr.hlo.txt",
+        };
+        let path = dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = session
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {file}: {e:?}"))?;
+        // Element count from the artifact index.
+        let index = crate::nets::ArtifactIndexExt::kernel_n(dir)?;
+        Ok(KernelEngine { exe, n: index, rounding })
+    }
+
+    /// Quantize `x` on device. `u` is the noise operand for
+    /// [`Rounding::Stochastic`] (uniform [0,1), same length as `x`).
+    pub fn quantize(
+        &self,
+        session: &Session,
+        x: &[f32],
+        fmt: QFormat,
+        u: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        if x.len() != self.n {
+            bail!("kernel expects {} elems, got {}", self.n, x.len());
+        }
+        let client = &session.client;
+        let xb = client
+            .buffer_from_host_buffer(x, &[self.n], None)
+            .map_err(|e| anyhow::anyhow!("upload x: {e:?}"))?;
+        let cfg = fmt.wire();
+        let cb = client
+            .buffer_from_host_buffer(&cfg, &[2], None)
+            .map_err(|e| anyhow::anyhow!("upload cfg: {e:?}"))?;
+        let mut args = vec![&xb, &cb];
+        let ub;
+        match (self.rounding, u) {
+            (Rounding::Stochastic, Some(u)) => {
+                if u.len() != self.n {
+                    bail!("noise must be {} elems", self.n);
+                }
+                ub = client
+                    .buffer_from_host_buffer(u, &[self.n], None)
+                    .map_err(|e| anyhow::anyhow!("upload u: {e:?}"))?;
+                args.push(&ub);
+            }
+            (Rounding::Stochastic, None) => bail!("stochastic kernel needs noise"),
+            (Rounding::Nearest, Some(_)) => bail!("nearest kernel takes no noise"),
+            (Rounding::Nearest, None) => {}
+        }
+        let out = self.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let q = lit.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        q.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it from rust.
+//!
+//! One [`Engine`] wraps one compiled executable (one network, fixed batch).
+//! The executable's input signature is `params…, images, wq, dq[, sq]` —
+//! see `python/compile/aot.py`. Engines keep the trained weights
+//! **device-resident** (`PjRtBuffer`s created once at load), so a per-call
+//! execute only uploads the image batch (and the 2·L-float precision
+//! configs): this is the L3 hot path.
+//!
+//! Interchange is HLO *text* (never serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod kernel;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nets::NetManifest;
+use crate::tensor::ntf;
+
+/// Which executable variant of a network to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// The standard per-layer-precision executable.
+    Standard,
+    /// The Fig-1 stage-granularity executable (extra `sq` input).
+    Stages,
+}
+
+/// A PJRT CPU session: the client plus host-side weight storage.
+///
+/// `PjRtClient` is `Rc`-based (not `Send`); coordinator workers each own a
+/// `Session` on their own thread.
+pub struct Session {
+    pub client: xla::PjRtClient,
+}
+
+impl Session {
+    pub fn cpu() -> Result<Session> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Session { client })
+    }
+
+    /// Load + compile an engine for `manifest`.
+    pub fn load_engine(&self, manifest: &NetManifest, variant: Variant) -> Result<Engine> {
+        Engine::load(self, manifest, variant)
+    }
+}
+
+/// One compiled network executable with device-resident weights.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    pub manifest: NetManifest,
+    pub variant: Variant,
+    pub batch: usize,
+    n_layers: usize,
+    n_stages: usize,
+    /// Cumulative executions (for utilization metrics).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    pub fn load(session: &Session, manifest: &NetManifest, variant: Variant) -> Result<Engine> {
+        let hlo_path = match variant {
+            Variant::Standard => manifest.hlo_path(),
+            Variant::Stages => {
+                let sv = manifest
+                    .stage_variant
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("{} has no stage variant", manifest.name))?;
+                manifest.dir.join(&sv.hlo)
+            }
+        };
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = session
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", manifest.name))?;
+
+        // Upload weights once; they stay device-resident for the engine's life.
+        let weights = ntf::read_file(&manifest.weights_path())?;
+        let mut weight_buffers = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let t = weights
+                .get(&p.name)
+                .ok_or_else(|| anyhow::anyhow!("weights file missing {:?}", p.name))?;
+            if t.dims != p.shape {
+                bail!("{}: shape {:?} != manifest {:?}", p.name, t.dims, p.shape);
+            }
+            let buf = session
+                .client
+                .buffer_from_host_buffer(t.as_f32()?, &p.shape, None)
+                .map_err(|e| anyhow::anyhow!("uploading {}: {e:?}", p.name))?;
+            weight_buffers.push(buf);
+        }
+
+        let n_stages = manifest.stage_variant.as_ref().map(|s| s.n_stages).unwrap_or(0);
+        Ok(Engine {
+            exe,
+            weight_buffers,
+            batch: manifest.batch,
+            n_layers: manifest.n_layers(),
+            n_stages,
+            manifest: manifest.clone(),
+            variant,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Upload one image batch to a device buffer for reuse across many
+    /// executions (the eval hot path re-reads the same eval split for
+    /// every configuration — see EXPERIMENTS.md §Perf).
+    pub fn upload_images(&self, session: &Session, images: &[f32]) -> Result<xla::PjRtBuffer> {
+        let img_elems: usize = self.manifest.input_shape.iter().product::<usize>() * self.batch;
+        if images.len() != img_elems {
+            bail!("images len {} != batch image elems {img_elems}", images.len());
+        }
+        let mut img_dims = vec![self.batch];
+        img_dims.extend_from_slice(&self.manifest.input_shape);
+        session
+            .client
+            .buffer_from_host_buffer(images, &img_dims, None)
+            .map_err(|e| anyhow::anyhow!("upload images: {e:?}"))
+    }
+
+    /// Execute one batch. `images` is (batch, H, W, C) row-major; `wq`/`dq`
+    /// are flattened (L, 2) wire configs; `sq` only for [`Variant::Stages`].
+    ///
+    /// Returns logits, row-major (batch, num_classes).
+    pub fn infer(
+        &self,
+        session: &Session,
+        images: &[f32],
+        wq: &[f32],
+        dq: &[f32],
+        sq: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let img_buf = self.upload_images(session, images)?;
+        self.infer_prepared(session, &img_buf, wq, dq, sq)
+    }
+
+    /// [`Engine::infer`] with a pre-uploaded (device-resident) image batch.
+    pub fn infer_prepared(
+        &self,
+        session: &Session,
+        img_buf: &xla::PjRtBuffer,
+        wq: &[f32],
+        dq: &[f32],
+        sq: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        if wq.len() != 2 * self.n_layers || dq.len() != 2 * self.n_layers {
+            bail!("wq/dq must be 2*{} floats", self.n_layers);
+        }
+        let client = &session.client;
+        let wq_buf = client
+            .buffer_from_host_buffer(wq, &[self.n_layers, 2], None)
+            .map_err(|e| anyhow::anyhow!("upload wq: {e:?}"))?;
+        let dq_buf = client
+            .buffer_from_host_buffer(dq, &[self.n_layers, 2], None)
+            .map_err(|e| anyhow::anyhow!("upload dq: {e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_buffers.iter().collect();
+        args.push(img_buf);
+        args.push(&wq_buf);
+        args.push(&dq_buf);
+
+        let sq_buf;
+        match (self.variant, sq) {
+            (Variant::Stages, Some(sq)) => {
+                if sq.len() != 2 * self.n_stages {
+                    bail!("sq must be 2*{} floats", self.n_stages);
+                }
+                sq_buf = client
+                    .buffer_from_host_buffer(sq, &[self.n_stages, 2], None)
+                    .map_err(|e| anyhow::anyhow!("upload sq: {e:?}"))?;
+                args.push(&sq_buf);
+            }
+            (Variant::Stages, None) => bail!("stage variant needs sq"),
+            (Variant::Standard, Some(_)) => bail!("standard variant takes no sq"),
+            (Variant::Standard, None) => {}
+        }
+
+        let result = self.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        self.executions.set(self.executions.get() + 1);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // Lowered with return_tuple=True → 1-tuple of logits.
+        let logits = lit.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let v = logits.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        let want = self.batch * self.manifest.num_classes;
+        if v.len() != want {
+            bail!("logits len {} != {}", v.len(), want);
+        }
+        Ok(v)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.manifest.num_classes
+    }
+}

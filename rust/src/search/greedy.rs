@@ -1,0 +1,236 @@
+//! The paper's §2.5 "slowest gradient descent" design-space explorer.
+//!
+//! 1. Initialize all layers to a uniform precision with < 0.1 % relative
+//!    error (found from the Fig-2 uniform sweeps).
+//! 2. Create delta configurations by reducing each tunable field (per
+//!    layer: data I, data F, weight F) by one bit.
+//! 3. Move to the delta with the best accuracy; repeat.
+//!
+//! Every iteration's deltas are evaluated as one coordinator burst (the
+//! paper calls the search "time consuming" — here it fans out over the
+//! worker pool). The full visited trajectory is kept: it *is* the Fig-5
+//! scatter, and Table 2 selects from it.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, EvalJob};
+use crate::nets::NetManifest;
+use crate::quant::QFormat;
+use crate::search::space::{DescentOptions, PrecisionConfig};
+use crate::search::{uniform, Param};
+use crate::traffic::{self, Mode};
+
+/// Which delta the descent commits to each iteration (ablation axis — the
+/// paper uses [`ChoicePolicy::BestAccuracy`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChoicePolicy {
+    /// The paper's §2.5 rule: the delta with the best accuracy.
+    BestAccuracy,
+    /// Ablation: the delta with the best traffic-saved per accuracy-lost
+    /// ratio ("cheapest bits first").
+    TrafficPerError,
+}
+
+/// Options for one descent run.
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyOptions {
+    /// Images per accuracy evaluation (0 = full eval split).
+    pub n_images: usize,
+    /// Neighbour-generation floors/toggles.
+    pub descent: DescentOptions,
+    /// Stop once relative error exceeds this (maps past the paper's 10 %
+    /// band so the Fig-5 drop-off is visible).
+    pub stop_rel_err: f64,
+    /// Hard iteration cap.
+    pub max_iters: usize,
+    /// Traffic mode for the recorded ratios (paper uses batch).
+    pub mode: Mode,
+    /// Per-iteration selection rule.
+    pub policy: ChoicePolicy,
+}
+
+impl Default for GreedyOptions {
+    fn default() -> Self {
+        Self {
+            n_images: 0,
+            descent: DescentOptions::default(),
+            stop_rel_err: 0.20,
+            max_iters: 400,
+            mode: Mode::Batch(64),
+            policy: ChoicePolicy::BestAccuracy,
+        }
+    }
+}
+
+/// One visited configuration of the descent (a Fig-5 scatter point).
+#[derive(Clone, Debug)]
+pub struct Visited {
+    pub step: usize,
+    /// Which delta produced it ("d3.I-1", "start", …).
+    pub move_label: String,
+    pub cfg: PrecisionConfig,
+    pub accuracy: f64,
+    pub rel_err: f64,
+    pub traffic_ratio: f64,
+}
+
+/// Full result of a descent run.
+#[derive(Clone, Debug)]
+pub struct DescentResult {
+    pub baseline: f64,
+    pub visited: Vec<Visited>,
+    /// All candidate evaluations (including non-chosen deltas) — these are
+    /// Fig-5 "mixed" points too.
+    pub explored: Vec<Visited>,
+}
+
+/// Find the uniform starting configuration (paper step 1): the narrowest
+/// uniform (weight-F, data-I, data-F) whose fields are each within `tol`
+/// in isolation, then widened together until the combined config is
+/// within `tol` as well.
+pub fn find_uniform_start(
+    coord: &mut Coordinator,
+    m: &NetManifest,
+    tol: f64,
+    fixed_data_f: Option<i8>,
+    n_images: usize,
+) -> Result<PrecisionConfig> {
+    let nl = m.n_layers();
+    let wf_pts = uniform::sweep(coord, &m.name, nl, Param::WeightF, (1, 12), n_images)?;
+    let di_pts = uniform::sweep(coord, &m.name, nl, Param::DataI, (1, 14), n_images)?;
+    // Fallbacks (sweep never within tol — i.e. tol below the eval noise
+    // floor) stay moderate; the combined-effect safeguard below widens
+    // further only if the *joint* config is actually off.
+    let wf = uniform::min_bits_within(&wf_pts, tol).unwrap_or(10);
+    let di = uniform::min_bits_within(&di_pts, tol).unwrap_or(12);
+    let df = match fixed_data_f {
+        Some(f) => f,
+        None => {
+            let df_pts = uniform::sweep(coord, &m.name, nl, Param::DataF, (0, 8), n_images)?;
+            uniform::min_bits_within(&df_pts, tol).unwrap_or(8)
+        }
+    };
+    let mut cfg =
+        PrecisionConfig::uniform(nl, QFormat::new(1, wf), QFormat::new(di, df));
+    // Combined-effect safeguard: widen uniformly until within tol.
+    let base = coord.eval_one(EvalJob {
+        net: m.name.clone(),
+        cfg: PrecisionConfig::fp32(nl),
+        n_images,
+    })?;
+    for _ in 0..8 {
+        let acc = coord.eval_one(EvalJob { net: m.name.clone(), cfg: cfg.clone(), n_images })?;
+        if base <= 0.0 || (base - acc) / base <= tol {
+            break;
+        }
+        for l in 0..nl {
+            cfg.wq[l].fbits = (cfg.wq[l].fbits + 1).min(14);
+            cfg.dq[l].ibits = (cfg.dq[l].ibits + 1).min(15);
+        }
+    }
+    Ok(cfg)
+}
+
+/// Run the descent from `start`.
+pub fn descend(
+    coord: &mut Coordinator,
+    m: &NetManifest,
+    start: PrecisionConfig,
+    opts: &GreedyOptions,
+) -> Result<DescentResult> {
+    let nl = m.n_layers();
+    let baseline = coord.eval_one(EvalJob {
+        net: m.name.clone(),
+        cfg: PrecisionConfig::fp32(nl),
+        n_images: opts.n_images,
+    })?;
+    let mk = |step: usize, label: String, cfg: PrecisionConfig, acc: f64| Visited {
+        step,
+        move_label: label,
+        rel_err: if baseline > 0.0 { (baseline - acc) / baseline } else { 1.0 },
+        traffic_ratio: traffic::traffic_ratio(m, opts.mode, &cfg),
+        cfg,
+        accuracy: acc,
+    };
+
+    let start_acc =
+        coord.eval_one(EvalJob { net: m.name.clone(), cfg: start.clone(), n_images: opts.n_images })?;
+    let mut visited = vec![mk(0, "start".into(), start.clone(), start_acc)];
+    let mut explored = visited.clone();
+    let mut cur = start;
+
+    for step in 1..=opts.max_iters {
+        let neighbours = cur.descent_neighbours(&opts.descent);
+        if neighbours.is_empty() {
+            log::debug!("{}: no neighbours at step {step}", m.name);
+            break;
+        }
+        let jobs: Vec<EvalJob> = neighbours
+            .iter()
+            .map(|(_, cfg)| EvalJob {
+                net: m.name.clone(),
+                cfg: cfg.clone(),
+                n_images: opts.n_images,
+            })
+            .collect();
+        let accs = coord.eval_batch(&jobs)?;
+
+        // Selection per policy; accuracy ties always break toward lower
+        // traffic (cheaper config).
+        let cur_acc = visited.last().unwrap().accuracy;
+        let cur_tr = visited.last().unwrap().traffic_ratio;
+        let score = |i: usize| -> f64 {
+            let tr = traffic::traffic_ratio(m, opts.mode, &neighbours[i].1);
+            match opts.policy {
+                ChoicePolicy::BestAccuracy => accs[i],
+                ChoicePolicy::TrafficPerError => {
+                    let saved = (cur_tr - tr).max(0.0);
+                    let lost = (cur_acc - accs[i]).max(0.0);
+                    saved / (lost + 1e-4)
+                }
+            }
+        };
+        let mut best: Option<usize> = None;
+        for (i, &acc) in accs.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(j) => {
+                    score(i) > score(j)
+                        || (score(i) == score(j)
+                            && (acc > accs[j]
+                                || traffic::traffic_ratio(m, opts.mode, &neighbours[i].1)
+                                    < traffic::traffic_ratio(m, opts.mode, &neighbours[j].1)))
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        for (i, &acc) in accs.iter().enumerate() {
+            explored.push(mk(step, neighbours[i].0.clone(), neighbours[i].1.clone(), acc));
+        }
+        let bi = best.unwrap();
+        let chosen = mk(step, neighbours[bi].0.clone(), neighbours[bi].1.clone(), accs[bi]);
+        let stop = chosen.rel_err > opts.stop_rel_err;
+        cur = chosen.cfg.clone();
+        visited.push(chosen);
+        if stop {
+            log::debug!("{}: rel err exceeded {} at step {step}", m.name, opts.stop_rel_err);
+            break;
+        }
+    }
+    Ok(DescentResult { baseline, visited, explored })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_sane() {
+        let o = GreedyOptions::default();
+        assert!(o.stop_rel_err > 0.1);
+        assert!(o.max_iters >= 100);
+        assert_eq!(o.mode.batch(), 64);
+    }
+}

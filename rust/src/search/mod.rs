@@ -1,0 +1,52 @@
+//! Precision-search machinery: the paper's characterization sweeps (§2.2,
+//! §2.3), the slowest-gradient-descent explorer (§2.5), Pareto-frontier
+//! extraction (Fig 5) and the Table-2 selection rule.
+
+pub mod greedy;
+pub mod pareto;
+pub mod perlayer;
+pub mod space;
+pub mod stages;
+pub mod table2;
+pub mod uniform;
+
+use crate::search::space::PrecisionConfig;
+
+/// One measured point of any sweep: a config, the bits value that was
+/// swept, and the resulting accuracy.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub bits: i8,
+    pub cfg: PrecisionConfig,
+    pub accuracy: f64,
+    /// Accuracy relative to the fp32 baseline (paper's Fig 2/3 y-axis).
+    pub relative: f64,
+}
+
+/// Which representation field a sweep varies (paper's three columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Param {
+    /// Weight fraction bits (integer part pinned to 1 — the sign bit).
+    WeightF,
+    /// Data integer bits (fraction pinned to a safe value).
+    DataI,
+    /// Data fraction bits (integer pinned to a safe value).
+    DataF,
+}
+
+impl Param {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Param::WeightF => "weight fraction bits",
+            Param::DataI => "data integer bits",
+            Param::DataF => "data fraction bits",
+        }
+    }
+}
+
+/// Safe pin values used for the non-swept field, chosen from Fig-2-style
+/// headroom: data I=14 / F=8 introduce no measurable error on any of the
+/// five networks.
+pub const SAFE_DATA_I: i8 = 14;
+pub const SAFE_DATA_F: i8 = 8;
+pub const SAFE_WEIGHT_F: i8 = 12;

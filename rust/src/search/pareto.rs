@@ -1,0 +1,105 @@
+//! Pareto-frontier extraction in the (traffic ↓, accuracy ↑) plane —
+//! the "best" category of the paper's Fig 5.
+
+/// Indices of the non-dominated points among `(traffic, accuracy)` pairs.
+///
+/// A point dominates another if it has ≤ traffic AND ≥ accuracy with at
+/// least one strict. Returned indices are sorted by traffic ascending;
+/// duplicate (traffic, accuracy) pairs keep their first occurrence.
+pub fn frontier(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // Sort by traffic asc, accuracy desc so a single sweep suffices.
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .partial_cmp(&points[b].0)
+            .unwrap()
+            .then(points[b].1.partial_cmp(&points[a].1).unwrap())
+            .then(a.cmp(&b))
+    });
+    let mut out = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    let mut last_traffic = f64::NEG_INFINITY;
+    for &i in &idx {
+        let (t, a) = points[i];
+        if a > best_acc {
+            // strictly better accuracy than anything cheaper → frontier
+            out.push(i);
+            best_acc = a;
+            last_traffic = t;
+        } else if a == best_acc && t == last_traffic {
+            // exact duplicate of the frontier point — skip
+        }
+    }
+    out
+}
+
+/// True if `p` is dominated by any point in `points`.
+pub fn dominated(p: (f64, f64), points: &[(f64, f64)]) -> bool {
+    points.iter().any(|&(t, a)| {
+        (t <= p.0 && a >= p.1) && (t < p.0 || a > p.1)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_frontier() {
+        // (traffic, acc)
+        let pts = vec![(1.0, 0.5), (0.5, 0.4), (0.8, 0.45), (0.3, 0.2), (0.9, 0.3)];
+        let f = frontier(&pts);
+        // sorted by traffic: 0.3/0.2, 0.5/0.4, 0.8/0.45, 1.0/0.5 — all rising
+        assert_eq!(f, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn dominated_points_excluded() {
+        let pts = vec![(0.5, 0.9), (0.6, 0.8), (0.7, 0.95)];
+        let f = frontier(&pts);
+        assert!(f.contains(&0));
+        assert!(f.contains(&2));
+        assert!(!f.contains(&1)); // worse than 0 in both dims
+    }
+
+    #[test]
+    fn equal_points_kept_once() {
+        let pts = vec![(0.5, 0.9), (0.5, 0.9), (0.4, 0.9)];
+        let f = frontier(&pts);
+        // 0.4/0.9 dominates both 0.5/0.9
+        assert_eq!(f, vec![2]);
+    }
+
+    #[test]
+    fn dominated_predicate() {
+        let pts = vec![(0.5, 0.9)];
+        assert!(dominated((0.6, 0.8), &pts));
+        assert!(dominated((0.5, 0.8), &pts));
+        assert!(!dominated((0.5, 0.9), &pts)); // equal is not dominated
+        assert!(!dominated((0.4, 0.1), &pts)); // cheaper
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(frontier(&[]).is_empty());
+        assert_eq!(frontier(&[(1.0, 1.0)]), vec![0]);
+    }
+
+    #[test]
+    fn frontier_is_monotone() {
+        // property-style: random cloud, frontier accuracy must rise with traffic
+        let mut rng = crate::prng::Xoshiro256pp::new(21);
+        let pts: Vec<(f64, f64)> =
+            (0..200).map(|_| (rng.uniform(), rng.uniform())).collect();
+        let f = frontier(&pts);
+        for w in f.windows(2) {
+            assert!(pts[w[0]].0 <= pts[w[1]].0);
+            assert!(pts[w[0]].1 < pts[w[1]].1);
+        }
+        // no frontier point dominated by any cloud point
+        for &i in &f {
+            assert!(!dominated(pts[i], &pts));
+        }
+    }
+}

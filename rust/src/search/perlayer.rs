@@ -1,0 +1,138 @@
+//! Per-layer sweeps (paper §2.3, Fig 3): quantize ONE layer's weights or
+//! data while every other layer stays at fp32 — the paper's key
+//! characterization showing tolerance varies *within* a network.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, EvalJob};
+use crate::quant::QFormat;
+use crate::search::space::PrecisionConfig;
+use crate::search::{Param, SweepPoint, SAFE_DATA_F, SAFE_DATA_I};
+
+/// Config with only layer `layer`'s `param` quantized at `bits`.
+pub fn single_layer_cfg(n_layers: usize, layer: usize, param: Param, bits: i8) -> PrecisionConfig {
+    let mut cfg = PrecisionConfig::fp32(n_layers);
+    match param {
+        Param::WeightF => cfg.wq[layer] = QFormat::new(1, bits),
+        Param::DataI => cfg.dq[layer] = QFormat::new(bits, SAFE_DATA_F),
+        Param::DataF => cfg.dq[layer] = QFormat::new(SAFE_DATA_I, bits),
+    }
+    cfg
+}
+
+/// Sweep one (layer, param) pair over `bit_range`.
+pub fn sweep_layer(
+    coord: &mut Coordinator,
+    net: &str,
+    n_layers: usize,
+    layer: usize,
+    param: Param,
+    bit_range: (i8, i8),
+    n_images: usize,
+) -> Result<Vec<SweepPoint>> {
+    let bits: Vec<i8> = (bit_range.0..=bit_range.1).collect();
+    let mut jobs: Vec<EvalJob> = bits
+        .iter()
+        .map(|&b| EvalJob {
+            net: net.to_string(),
+            cfg: single_layer_cfg(n_layers, layer, param, b),
+            n_images,
+        })
+        .collect();
+    jobs.push(EvalJob { net: net.to_string(), cfg: PrecisionConfig::fp32(n_layers), n_images });
+    let accs = coord.eval_batch(&jobs)?;
+    let base = *accs.last().unwrap();
+    Ok(bits
+        .iter()
+        .zip(&accs)
+        .map(|(&b, &acc)| SweepPoint {
+            bits: b,
+            cfg: single_layer_cfg(n_layers, layer, param, b),
+            accuracy: acc,
+            relative: if base > 0.0 { acc / base } else { 0.0 },
+        })
+        .collect())
+}
+
+/// The full Fig-3 matrix for one network: `result[param][layer]` is the
+/// sweep series. Submitted as one giant burst for maximal pool overlap.
+pub fn sweep_all_layers(
+    coord: &mut Coordinator,
+    net: &str,
+    n_layers: usize,
+    params: &[Param],
+    bit_range: (i8, i8),
+    n_images: usize,
+) -> Result<Vec<Vec<Vec<SweepPoint>>>> {
+    let bits: Vec<i8> = (bit_range.0..=bit_range.1).collect();
+    let mut jobs: Vec<EvalJob> = Vec::new();
+    for &param in params {
+        for layer in 0..n_layers {
+            for &b in &bits {
+                jobs.push(EvalJob {
+                    net: net.to_string(),
+                    cfg: single_layer_cfg(n_layers, layer, param, b),
+                    n_images,
+                });
+            }
+        }
+    }
+    jobs.push(EvalJob { net: net.to_string(), cfg: PrecisionConfig::fp32(n_layers), n_images });
+    let accs = coord.eval_batch(&jobs)?;
+    let base = *accs.last().unwrap();
+
+    let mut out = Vec::with_capacity(params.len());
+    let mut k = 0usize;
+    for &param in params {
+        let mut per_layer = Vec::with_capacity(n_layers);
+        for layer in 0..n_layers {
+            let series = bits
+                .iter()
+                .map(|&b| {
+                    let acc = accs[k];
+                    k += 1;
+                    SweepPoint {
+                        bits: b,
+                        cfg: single_layer_cfg(n_layers, layer, param, b),
+                        accuracy: acc,
+                        relative: if base > 0.0 { acc / base } else { 0.0 },
+                    }
+                })
+                .collect();
+            per_layer.push(series);
+        }
+        out.push(per_layer);
+    }
+    Ok(out)
+}
+
+/// Per-layer minimum bits within tolerance — the per-layer variance
+/// summary quoted in the paper's abstract ("14 bits worst case, 2 best").
+pub fn min_bits_per_layer(matrix: &[Vec<SweepPoint>], tol: f64) -> Vec<Option<i8>> {
+    matrix.iter().map(|series| super::uniform::min_bits_within(series, tol)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_layer_cfg_touches_one_layer() {
+        let c = single_layer_cfg(4, 2, Param::DataI, 7);
+        for l in 0..4 {
+            assert!(c.wq[l].is_fp32());
+            if l == 2 {
+                assert_eq!(c.dq[l], QFormat::new(7, SAFE_DATA_F));
+            } else {
+                assert!(c.dq[l].is_fp32());
+            }
+        }
+    }
+
+    #[test]
+    fn weight_param_pins_sign_bit() {
+        let c = single_layer_cfg(3, 0, Param::WeightF, 4);
+        assert_eq!(c.wq[0], QFormat::new(1, 4));
+        assert!(c.dq[0].is_fp32());
+    }
+}

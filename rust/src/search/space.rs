@@ -1,0 +1,194 @@
+//! The precision-configuration space: one (I, F) per layer for weights and
+//! for data (paper §2.5).
+
+use std::fmt;
+
+use crate::quant::QFormat;
+
+/// A full per-layer precision assignment for one network.
+///
+/// `wq[l]` applies to layer *l*'s weights, `dq[l]` to its output data (the
+/// network input is quantized with `dq[0]`, matching the L2 graph).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PrecisionConfig {
+    pub wq: Vec<QFormat>,
+    pub dq: Vec<QFormat>,
+}
+
+impl PrecisionConfig {
+    /// All-fp32 baseline.
+    pub fn fp32(n_layers: usize) -> Self {
+        Self { wq: vec![QFormat::FP32; n_layers], dq: vec![QFormat::FP32; n_layers] }
+    }
+
+    /// Same format everywhere ("uniform" in the paper's Fig-5 taxonomy).
+    pub fn uniform(n_layers: usize, wq: QFormat, dq: QFormat) -> Self {
+        Self { wq: vec![wq; n_layers], dq: vec![dq; n_layers] }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.wq.len()
+    }
+
+    /// Wire encoding for the executable: flattened (L, 2) row-major f32.
+    pub fn wire_wq(&self) -> Vec<f32> {
+        self.wq.iter().flat_map(|q| q.wire()).collect()
+    }
+
+    pub fn wire_dq(&self) -> Vec<f32> {
+        self.dq.iter().flat_map(|q| q.wire()).collect()
+    }
+
+    /// Is any layer quantized at all?
+    pub fn any_quantized(&self) -> bool {
+        self.wq.iter().chain(&self.dq).any(|q| !q.is_fp32())
+    }
+
+    /// The paper's Table-2 notation: weights as `I.F` per layer joined
+    /// with `-`, data likewise (reported separately).
+    pub fn notation(&self) -> String {
+        format!(
+            "w[{}] d[{}]",
+            self.wq.iter().map(|q| q.to_string()).collect::<Vec<_>>().join("-"),
+            self.dq.iter().map(|q| q.to_string()).collect::<Vec<_>>().join("-"),
+        )
+    }
+
+    /// All "delta" neighbours per the paper's slowest-gradient-descent:
+    /// each tunable field (per-layer data I, data F, weight F — and weight
+    /// I if `tune_weight_i`) reduced by one, subject to floors.
+    ///
+    /// Fields already at their floor produce no neighbour. The returned
+    /// label describes the move, e.g. `"d3.I-1"`.
+    pub fn descent_neighbours(&self, opts: &DescentOptions) -> Vec<(String, PrecisionConfig)> {
+        let mut out = Vec::new();
+        for l in 0..self.n_layers() {
+            // data integer bits
+            if self.dq[l].ibits > opts.min_data_i {
+                let mut c = self.clone();
+                c.dq[l].ibits -= 1;
+                out.push((format!("d{l}.I-1"), c));
+            }
+            // data fraction bits
+            if opts.tune_data_f && self.dq[l].fbits > opts.min_data_f {
+                let mut c = self.clone();
+                c.dq[l].fbits -= 1;
+                out.push((format!("d{l}.F-1"), c));
+            }
+            // weight fraction bits
+            if self.wq[l].fbits > opts.min_weight_f {
+                let mut c = self.clone();
+                c.wq[l].fbits -= 1;
+                out.push((format!("w{l}.F-1"), c));
+            }
+            if opts.tune_weight_i && self.wq[l].ibits > opts.min_weight_i {
+                let mut c = self.clone();
+                c.wq[l].ibits -= 1;
+                out.push((format!("w{l}.I-1"), c));
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for PrecisionConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.notation())
+    }
+}
+
+/// Floors and toggles for [`PrecisionConfig::descent_neighbours`].
+///
+/// Defaults mirror the paper: weights keep I=1 fixed (sign bit only) and
+/// vary F; data varies I always and F only for the simple networks
+/// (LeNet, Convnet) — the complex nets fix data F (§2.5).
+#[derive(Clone, Copy, Debug)]
+pub struct DescentOptions {
+    pub tune_data_f: bool,
+    pub tune_weight_i: bool,
+    pub min_data_i: i8,
+    pub min_data_f: i8,
+    pub min_weight_f: i8,
+    pub min_weight_i: i8,
+}
+
+impl Default for DescentOptions {
+    fn default() -> Self {
+        Self {
+            tune_data_f: true,
+            tune_weight_i: false,
+            min_data_i: 1,
+            min_data_f: 0,
+            min_weight_f: 1,
+            min_weight_i: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_baseline_is_unquantized() {
+        let c = PrecisionConfig::fp32(4);
+        assert!(!c.any_quantized());
+        assert_eq!(c.n_layers(), 4);
+        assert_eq!(c.wire_dq(), vec![-1.0, 0.0, -1.0, 0.0, -1.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn uniform_wire_layout() {
+        let c = PrecisionConfig::uniform(2, QFormat::new(1, 8), QFormat::new(12, 2));
+        assert_eq!(c.wire_wq(), vec![1.0, 8.0, 1.0, 8.0]);
+        assert_eq!(c.wire_dq(), vec![12.0, 2.0, 12.0, 2.0]);
+        assert!(c.any_quantized());
+    }
+
+    #[test]
+    fn neighbours_respect_floors() {
+        let c = PrecisionConfig::uniform(2, QFormat::new(1, 1), QFormat::new(1, 0));
+        // data I at floor (1), data F at floor (0), weight F at floor (1)
+        let n = c.descent_neighbours(&DescentOptions::default());
+        assert!(n.is_empty(), "{n:?}");
+    }
+
+    #[test]
+    fn neighbours_count_and_labels() {
+        let c = PrecisionConfig::uniform(3, QFormat::new(1, 8), QFormat::new(10, 2));
+        let n = c.descent_neighbours(&DescentOptions::default());
+        // per layer: d.I, d.F, w.F => 9 neighbours
+        assert_eq!(n.len(), 9);
+        assert!(n.iter().any(|(lbl, _)| lbl == "d1.F-1"));
+        // every neighbour differs from the base in exactly one field by one bit
+        for (_, cand) in &n {
+            let mut diffs = 0;
+            for l in 0..3 {
+                diffs += (cand.dq[l].ibits != c.dq[l].ibits) as u32;
+                diffs += (cand.dq[l].fbits != c.dq[l].fbits) as u32;
+                diffs += (cand.wq[l].ibits != c.wq[l].ibits) as u32;
+                diffs += (cand.wq[l].fbits != c.wq[l].fbits) as u32;
+            }
+            assert_eq!(diffs, 1);
+        }
+    }
+
+    #[test]
+    fn fixed_data_f_mode() {
+        let c = PrecisionConfig::uniform(2, QFormat::new(1, 8), QFormat::new(10, 0));
+        let opts = DescentOptions { tune_data_f: false, ..Default::default() };
+        let n = c.descent_neighbours(&opts);
+        assert!(n.iter().all(|(lbl, _)| !lbl.contains(".F-1") || lbl.starts_with('w')));
+        assert_eq!(n.len(), 4); // d.I and w.F per layer
+    }
+
+    #[test]
+    fn config_hashable_and_ordered() {
+        use std::collections::HashSet;
+        let a = PrecisionConfig::uniform(2, QFormat::new(1, 4), QFormat::new(8, 0));
+        let b = a.clone();
+        let mut set = HashSet::new();
+        set.insert(a);
+        assert!(set.contains(&b));
+    }
+}

@@ -1,0 +1,102 @@
+//! Stage-granularity sweep (paper Fig 1): vary the data precision of the
+//! individual computational stages *inside* one layer (AlexNet layer 2:
+//! conv2 / relu2 / pool2 / norm2) to show stages within a layer share a
+//! tolerance — the justification for per-layer (not per-stage) assignment.
+//!
+//! Uses the dedicated `alexnet_stages` executable (extra `sq` operand);
+//! runs on a caller-provided [`Session`] rather than the coordinator since
+//! only this experiment needs the variant.
+
+use anyhow::Result;
+
+use crate::eval::{top1, Dataset};
+use crate::nets::NetManifest;
+use crate::quant::QFormat;
+use crate::runtime::{Engine, Session, Variant};
+use crate::search::space::PrecisionConfig;
+use crate::search::SweepPoint;
+
+/// Sweep stage `stage` of the manifest's stage-variant group over data
+/// integer bits `bit_range` (fraction pinned to `fbits`). All other
+/// stages, all layers, and all weights stay fp32.
+pub fn sweep_stage(
+    session: &Session,
+    m: &NetManifest,
+    engine: &Engine,
+    dataset: &Dataset,
+    stage: usize,
+    bit_range: (i8, i8),
+    fbits: i8,
+    n_images: usize,
+) -> Result<Vec<SweepPoint>> {
+    let sv = m
+        .stage_variant
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("{} has no stage variant", m.name))?;
+    anyhow::ensure!(stage < sv.n_stages, "stage {stage} out of {}", sv.n_stages);
+    let nl = m.n_layers();
+    let fp32 = PrecisionConfig::fp32(nl);
+    let wq = fp32.wire_wq();
+    let dq = fp32.wire_dq();
+
+    let baseline = run_with_sq(session, engine, dataset, &wq, &dq, &sentinel_sq(sv.n_stages), n_images)?;
+
+    let mut out = Vec::new();
+    for bits in bit_range.0..=bit_range.1 {
+        let mut sq = sentinel_sq(sv.n_stages);
+        sq[stage * 2] = bits as f32;
+        sq[stage * 2 + 1] = fbits as f32;
+        let acc = run_with_sq(session, engine, dataset, &wq, &dq, &sq, n_images)?;
+        let mut cfg = fp32.clone();
+        // annotate the config with the stage format on the group's layer
+        cfg.dq[sv.group_index] = QFormat::new(bits, fbits);
+        out.push(SweepPoint {
+            bits,
+            cfg,
+            accuracy: acc,
+            relative: if baseline > 0.0 { acc / baseline } else { 0.0 },
+        });
+    }
+    Ok(out)
+}
+
+fn sentinel_sq(n_stages: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n_stages * 2];
+    for s in 0..n_stages {
+        v[s * 2] = -1.0;
+    }
+    v
+}
+
+fn run_with_sq(
+    session: &Session,
+    engine: &Engine,
+    dataset: &Dataset,
+    wq: &[f32],
+    dq: &[f32],
+    sq: &[f32],
+    n_images: usize,
+) -> Result<f64> {
+    anyhow::ensure!(engine.variant == Variant::Stages, "need the stage-variant engine");
+    let batch = engine.batch;
+    let n = if n_images == 0 { dataset.n } else { n_images.min(dataset.n) };
+    let n_batches = (n / batch).max(1);
+    let classes = engine.num_classes();
+    let mut correct = 0.0;
+    for b in 0..n_batches {
+        let logits = engine.infer(session, dataset.batch_images(b, batch), wq, dq, Some(sq))?;
+        correct += top1(&logits, dataset.batch_labels(b, batch), classes) * batch as f64;
+    }
+    Ok(correct / (n_batches * batch) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentinel_layout() {
+        let s = sentinel_sq(3);
+        assert_eq!(s, vec![-1.0, 0.0, -1.0, 0.0, -1.0, 0.0]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Table-2 selection: minimum-traffic mixed configuration per error
+//! tolerance, with the paper's notation.
+
+use crate::search::greedy::Visited;
+use crate::search::space::PrecisionConfig;
+
+/// The paper's tolerance levels (relative error vs baseline accuracy).
+pub const TOLERANCES: [f64; 4] = [0.01, 0.02, 0.05, 0.10];
+
+/// One Table-2 row.
+#[derive(Clone, Debug)]
+pub struct ToleranceRow {
+    pub tol: f64,
+    pub cfg: PrecisionConfig,
+    pub accuracy: f64,
+    pub rel_err: f64,
+    /// TR — traffic ratio vs the 32-bit baseline.
+    pub traffic_ratio: f64,
+}
+
+/// For each tolerance, the minimum-traffic visited config whose relative
+/// error is within tolerance. `None` when nothing qualifies (shouldn't
+/// happen — the fp32-adjacent start always qualifies).
+pub fn select(visited: &[Visited], tolerances: &[f64]) -> Vec<Option<ToleranceRow>> {
+    tolerances
+        .iter()
+        .map(|&tol| {
+            visited
+                .iter()
+                .filter(|v| v.rel_err <= tol)
+                .min_by(|a, b| a.traffic_ratio.partial_cmp(&b.traffic_ratio).unwrap())
+                .map(|v| ToleranceRow {
+                    tol,
+                    cfg: v.cfg.clone(),
+                    accuracy: v.accuracy,
+                    rel_err: v.rel_err,
+                    traffic_ratio: v.traffic_ratio,
+                })
+        })
+        .collect()
+}
+
+/// Paper notation for the data formats: `I.F` per layer joined with `-`
+/// (LeNet/Convnet style, both fields tuned).
+pub fn notation_if(cfg: &PrecisionConfig) -> String {
+    cfg.dq.iter().map(|q| format!("{}.{}", q.ibits, q.fbits)).collect::<Vec<_>>().join("-")
+}
+
+/// Paper notation when data F is fixed: total data bits `I+F` per layer
+/// (AlexNet/NiN/GoogLeNet style).
+pub fn notation_total(cfg: &PrecisionConfig) -> String {
+    cfg.dq
+        .iter()
+        .map(|q| format!("{}", q.ibits as i32 + q.fbits as i32))
+        .collect::<Vec<_>>()
+        .join("-")
+}
+
+/// Weight-format notation (F per layer; I is pinned to 1).
+pub fn notation_weights(cfg: &PrecisionConfig) -> String {
+    cfg.wq.iter().map(|q| format!("{}", q.fbits)).collect::<Vec<_>>().join("-")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QFormat;
+
+    fn v(rel_err: f64, tr: f64) -> Visited {
+        Visited {
+            step: 0,
+            move_label: "t".into(),
+            cfg: PrecisionConfig::uniform(2, QFormat::new(1, 4), QFormat::new(8, 1)),
+            accuracy: 1.0 - rel_err,
+            rel_err,
+            traffic_ratio: tr,
+        }
+    }
+
+    #[test]
+    fn selects_min_traffic_within_tol() {
+        let visited = vec![v(0.001, 0.5), v(0.009, 0.3), v(0.03, 0.2), v(0.2, 0.1)];
+        let rows = select(&visited, &TOLERANCES);
+        assert!((rows[0].as_ref().unwrap().traffic_ratio - 0.3).abs() < 1e-12); // 1%
+        assert!((rows[1].as_ref().unwrap().traffic_ratio - 0.3).abs() < 1e-12); // 2%
+        assert!((rows[2].as_ref().unwrap().traffic_ratio - 0.2).abs() < 1e-12); // 5%
+        assert!((rows[3].as_ref().unwrap().traffic_ratio - 0.2).abs() < 1e-12); // 10%
+    }
+
+    #[test]
+    fn none_when_nothing_qualifies() {
+        let visited = vec![v(0.5, 0.5)];
+        let rows = select(&visited, &[0.01]);
+        assert!(rows[0].is_none());
+    }
+
+    #[test]
+    fn notations() {
+        let mut cfg = PrecisionConfig::uniform(3, QFormat::new(1, 4), QFormat::new(8, 1));
+        cfg.dq[2] = QFormat::new(5, 0);
+        assert_eq!(notation_if(&cfg), "8.1-8.1-5.0");
+        assert_eq!(notation_total(&cfg), "9-9-5");
+        assert_eq!(notation_weights(&cfg), "4-4-4");
+    }
+}

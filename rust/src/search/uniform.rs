@@ -1,0 +1,129 @@
+//! Uniform-representation sweeps (paper §2.2, Fig 2).
+//!
+//! All layers share one format; one field is swept while the others are
+//! pinned safe. Jobs for the whole bit range are submitted to the
+//! coordinator as one burst, so they fan out over the worker pool.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, EvalJob};
+use crate::quant::QFormat;
+use crate::search::space::PrecisionConfig;
+use crate::search::{Param, SweepPoint, SAFE_DATA_F, SAFE_DATA_I};
+
+/// Build the uniform config that sweeps `param = bits`.
+pub fn uniform_cfg(n_layers: usize, param: Param, bits: i8) -> PrecisionConfig {
+    match param {
+        Param::WeightF => PrecisionConfig::uniform(
+            n_layers,
+            QFormat::new(1, bits),
+            // data untouched: fp32 — isolates the weight effect, §2.2
+            QFormat::FP32,
+        ),
+        Param::DataI => PrecisionConfig::uniform(
+            n_layers,
+            QFormat::FP32,
+            QFormat::new(bits, SAFE_DATA_F),
+        ),
+        Param::DataF => PrecisionConfig::uniform(
+            n_layers,
+            QFormat::FP32,
+            QFormat::new(SAFE_DATA_I, bits),
+        ),
+    }
+}
+
+/// Sweep `param` over `bit_range` (inclusive) for `net`.
+pub fn sweep(
+    coord: &mut Coordinator,
+    net: &str,
+    n_layers: usize,
+    param: Param,
+    bit_range: (i8, i8),
+    n_images: usize,
+) -> Result<Vec<SweepPoint>> {
+    let bits: Vec<i8> = (bit_range.0..=bit_range.1).collect();
+    let mut jobs: Vec<EvalJob> = bits
+        .iter()
+        .map(|&b| EvalJob {
+            net: net.to_string(),
+            cfg: uniform_cfg(n_layers, param, b),
+            n_images,
+        })
+        .collect();
+    // Baseline rides along in the same burst.
+    jobs.push(EvalJob { net: net.to_string(), cfg: PrecisionConfig::fp32(n_layers), n_images });
+    let accs = coord.eval_batch(&jobs)?;
+    let base = *accs.last().unwrap();
+    Ok(bits
+        .iter()
+        .zip(&accs)
+        .map(|(&b, &acc)| SweepPoint {
+            bits: b,
+            cfg: uniform_cfg(n_layers, param, b),
+            accuracy: acc,
+            relative: if base > 0.0 { acc / base } else { 0.0 },
+        })
+        .collect())
+}
+
+/// Smallest bits value in `points` whose relative accuracy is within
+/// `tol` of baseline (None if none qualify). Scans from the narrow end:
+/// tolerance curves are noisy, so we require the qualifying point AND all
+/// wider settings to stay within tolerance ("stable knee").
+pub fn min_bits_within(points: &[SweepPoint], tol: f64) -> Option<i8> {
+    let mut sorted: Vec<&SweepPoint> = points.iter().collect();
+    sorted.sort_by_key(|p| p.bits);
+    for i in 0..sorted.len() {
+        if sorted[i..].iter().all(|p| p.relative >= 1.0 - tol) {
+            return Some(sorted[i].bits);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cfg_shapes() {
+        let c = uniform_cfg(3, Param::WeightF, 5);
+        assert_eq!(c.wq[0], QFormat::new(1, 5));
+        assert!(c.dq[0].is_fp32());
+        let c = uniform_cfg(3, Param::DataI, 9);
+        assert_eq!(c.dq[2], QFormat::new(9, SAFE_DATA_F));
+        assert!(c.wq[1].is_fp32());
+        let c = uniform_cfg(2, Param::DataF, 1);
+        assert_eq!(c.dq[0], QFormat::new(SAFE_DATA_I, 1));
+    }
+
+    fn pt(bits: i8, rel: f64) -> SweepPoint {
+        SweepPoint {
+            bits,
+            cfg: PrecisionConfig::fp32(1),
+            accuracy: rel,
+            relative: rel,
+        }
+    }
+
+    #[test]
+    fn min_bits_finds_stable_knee() {
+        let pts = vec![pt(2, 0.2), pt(3, 0.991), pt(4, 0.999), pt(5, 1.0)];
+        assert_eq!(min_bits_within(&pts, 0.01), Some(3));
+        assert_eq!(min_bits_within(&pts, 0.001), Some(4));
+    }
+
+    #[test]
+    fn min_bits_requires_stability_above() {
+        // dip at 4 bits disqualifies 3 even though 3 itself is fine
+        let pts = vec![pt(3, 0.995), pt(4, 0.9), pt(5, 1.0)];
+        assert_eq!(min_bits_within(&pts, 0.01), Some(5));
+    }
+
+    #[test]
+    fn min_bits_none_when_all_bad() {
+        let pts = vec![pt(2, 0.1), pt(3, 0.2)];
+        assert_eq!(min_bits_within(&pts, 0.01), None);
+    }
+}

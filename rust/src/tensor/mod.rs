@@ -1,0 +1,180 @@
+//! Dense named tensors and the NTF container format.
+//!
+//! The rust side only needs host-resident dense tensors for marshalling
+//! into PJRT literals/buffers and for the traffic model — no autodiff, no
+//! broadcasting. Two dtypes (f32, i32) cover the whole artifact surface.
+
+pub mod ntf;
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`Tensor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn id(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Result<Self> {
+        match id {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            _ => bail!("unknown dtype id {id}"),
+        }
+    }
+}
+
+/// Tensor payload (one vector per dtype; both 4-byte elements).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-resident dense tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn from_f32(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elems, got {}", dims, data.len());
+        }
+        Ok(Self { dims, data: Data::F32(data) })
+    }
+
+    pub fn from_i32(dims: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elems, got {}", dims, data.len());
+        }
+        Ok(Self { dims, data: Data::I32(data) })
+    }
+
+    pub fn zeros_f32(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Self { dims, data: Data::F32(vec![0.0; n]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Row-major slice of the leading axis: rows [start, start+count).
+    pub fn slice_rows(&self, start: usize, count: usize) -> Result<Tensor> {
+        if self.dims.is_empty() {
+            bail!("cannot row-slice a scalar");
+        }
+        let rows = self.dims[0];
+        if start + count > rows {
+            bail!("row slice {start}+{count} out of {rows}");
+        }
+        let stride: usize = self.dims[1..].iter().product();
+        let mut dims = self.dims.clone();
+        dims[0] = count;
+        Ok(match &self.data {
+            Data::F32(v) => Tensor {
+                dims,
+                data: Data::F32(v[start * stride..(start + count) * stride].to_vec()),
+            },
+            Data::I32(v) => Tensor {
+                dims,
+                data: Data::I32(v[start * stride..(start + count) * stride].to_vec()),
+            },
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape_check() {
+        let t = Tensor::from_f32(vec![2, 3], vec![0.0; 6]).unwrap();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(Tensor::from_f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [DType::F32, DType::I32] {
+            assert_eq!(DType::from_id(d.id()).unwrap(), d);
+        }
+        assert!(DType::from_id(9).is_err());
+    }
+
+    #[test]
+    fn slice_rows_basic() {
+        let t = Tensor::from_f32(vec![4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let s = t.slice_rows(1, 2).unwrap();
+        assert_eq!(s.dims, vec![2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn slice_rows_bounds() {
+        let t = Tensor::from_i32(vec![3], vec![1, 2, 3]).unwrap();
+        assert!(t.slice_rows(2, 2).is_err());
+        assert_eq!(t.slice_rows(2, 1).unwrap().as_i32().unwrap(), &[3]);
+    }
+
+    #[test]
+    fn wrong_dtype_access_errors() {
+        let t = Tensor::from_i32(vec![1], vec![7]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[7]);
+    }
+}

@@ -1,0 +1,247 @@
+//! NTF — named-tensor file format (rust reader/writer).
+//!
+//! Byte-level layout is defined in `python/compile/ntf.py` (the writer of
+//! the shipped artifacts); the two implementations are locked together by
+//! round-trip tests on both sides. Little-endian throughout:
+//!
+//! ```text
+//! magic  b"NTF1"
+//! u32    entry count
+//! entry* { u16 name_len; name; u8 dtype; u8 ndim; u64*ndim dims; raw f32/i32 }
+//! u32    CRC32 (IEEE) of all preceding bytes
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Data, DType, Tensor};
+
+const MAGIC: &[u8; 4] = b"NTF1";
+
+// ---- crc32 (IEEE 802.3, reflected) — table-driven ---------------------------
+
+fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 of `data` (zlib.crc32-compatible).
+pub fn crc32(data: &[u8]) -> u32 {
+    // const-fn tables aren't worth the MSRV dance; compute once.
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(crc32_table);
+    let mut c = !0u32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---- read -------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated NTF at byte {} (want {n} more)", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Parse NTF bytes into an ordered name → tensor map.
+pub fn read_bytes(raw: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    if raw.len() < 12 {
+        bail!("NTF too short ({} bytes)", raw.len());
+    }
+    if &raw[..4] != MAGIC {
+        bail!("bad NTF magic {:?}", &raw[..4]);
+    }
+    let stored = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+    let computed = crc32(&raw[..raw.len() - 4]);
+    if stored != computed {
+        bail!("NTF CRC mismatch: stored {stored:#x} computed {computed:#x}");
+    }
+    let body = &raw[..raw.len() - 4];
+    let mut r = Reader { buf: body, pos: 4 };
+    let count = r.u32()?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = r.u16()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .context("tensor name not utf-8")?
+            .to_string();
+        let dtype = DType::from_id(r.u8()?)?;
+        let ndim = r.u8()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(r.u64()? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let bytes = r.take(n * 4)?;
+        let data = match dtype {
+            DType::F32 => Data::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::I32 => Data::I32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+        };
+        if out.insert(name.clone(), Tensor { dims, data }).is_some() {
+            bail!("duplicate tensor name {name:?}");
+        }
+    }
+    if r.pos != body.len() {
+        bail!("{} trailing bytes after last entry", body.len() - r.pos);
+    }
+    Ok(out)
+}
+
+/// Read an NTF file.
+pub fn read_file(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_bytes(&raw).with_context(|| format!("parsing {}", path.display()))
+}
+
+// ---- write ------------------------------------------------------------------
+
+/// Serialize tensors to NTF bytes (iteration order = map order).
+pub fn write_bytes(tensors: &BTreeMap<String, Tensor>) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            bail!("tensor name too long");
+        }
+        buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.push(t.dtype().id());
+        buf.push(t.dims.len() as u8);
+        for &d in &t.dims {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match &t.data {
+            Data::F32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    Ok(buf)
+}
+
+/// Write an NTF file.
+pub fn write_file(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let bytes = write_bytes(tensors)?;
+    crate::util::write_file(path, &bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "w".to_string(),
+            Tensor::from_f32(vec![2, 2], vec![1.5, -2.25, 0.0, 3.0e7]).unwrap(),
+        );
+        m.insert("labels".to_string(), Tensor::from_i32(vec![3], vec![0, -5, 19]).unwrap());
+        m.insert("scalarish".to_string(), Tensor::from_f32(vec![1], vec![42.0]).unwrap());
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample();
+        let bytes = write_bytes(&m).unwrap();
+        let back = read_bytes(&bytes).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let m = sample();
+        let mut bytes = write_bytes(&m).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(read_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let m = sample();
+        let mut bytes = write_bytes(&m).unwrap();
+        bytes[0] = b'X';
+        assert!(read_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let m = sample();
+        let bytes = write_bytes(&m).unwrap();
+        for cut in [5, bytes.len() / 2, bytes.len() - 1] {
+            assert!(read_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // zlib.crc32(b"123456789") == 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn empty_container_roundtrips() {
+        let m = BTreeMap::new();
+        let bytes = write_bytes(&m).unwrap();
+        assert_eq!(read_bytes(&bytes).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Property-testing harness (substrate — `proptest` is unavailable offline).
+//!
+//! A small QuickCheck-style runner: generators draw from [`Xoshiro256pp`],
+//! failures are minimized by a bounded shrink loop, and every failure
+//! report includes the seed so runs reproduce exactly.
+//!
+//! ```ignore
+//! forall(cases(512), gen_f32(-100.0, 100.0), |&x| {
+//!     let q = quantize(x, fmt);
+//!     prop(q <= fmt.hi(), "saturates above")
+//! });
+//! ```
+
+use crate::prng::Xoshiro256pp;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrinks: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: Q_SEED, max_shrinks: 512 }
+    }
+}
+
+/// Default property-test seed (override per-run via [`Config::seed`]).
+const Q_SEED: u64 = 0x51b0_07e5_7a11_0c1d;
+
+/// Shorthand: default config with `n` cases.
+pub fn cases(n: usize) -> Config {
+    Config { cases: n, ..Config::default() }
+}
+
+/// A value generator: produces a case and can propose shrunk variants.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value;
+    /// Candidate "smaller" values, tried in order during shrinking.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Outcome of a single property check.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    Pass,
+    Fail(String),
+}
+
+/// Assert helper: `prop(cond, "message")`.
+pub fn prop(cond: bool, msg: &str) -> Outcome {
+    if cond {
+        Outcome::Pass
+    } else {
+        Outcome::Fail(msg.to_string())
+    }
+}
+
+/// Combine outcomes: first failure wins.
+pub fn all(outcomes: impl IntoIterator<Item = Outcome>) -> Outcome {
+    for o in outcomes {
+        if let Outcome::Fail(_) = o {
+            return o;
+        }
+    }
+    Outcome::Pass
+}
+
+/// Run `check` against `cfg.cases` generated values; panic (with seed and
+/// shrunk counterexample) on failure. Returns the number of passed cases.
+pub fn forall<G: Gen>(cfg: Config, gen: G, check: impl Fn(&G::Value) -> Outcome) -> usize {
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let v = gen.generate(&mut rng);
+        if let Outcome::Fail(msg) = check(&v) {
+            // shrink
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrinks;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    budget -= 1;
+                    if let Outcome::Fail(m) = check(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  value: {:?}\n  reason: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+    cfg.cases
+}
+
+// ---- stock generators --------------------------------------------------------
+
+/// Uniform f32 in [lo, hi) plus occasional special values.
+pub struct GenF32 {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+pub fn gen_f32(lo: f32, hi: f32) -> GenF32 {
+    GenF32 { lo, hi }
+}
+
+impl Gen for GenF32 {
+    type Value = f32;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> f32 {
+        // 1-in-16 cases draw from a pool of boundary-ish values.
+        if rng.below(16) == 0 {
+            let pool = [0.0f32, -0.0, 0.5, -0.5, 1.0, -1.0, 0.25, 1.5, -2.5, self.lo, self.hi];
+            pool[rng.below(pool.len() as u64) as usize]
+        } else {
+            rng.uniform_f32(self.lo, self.hi)
+        }
+    }
+
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *v != 0.0 {
+            out.push(0.0);
+            out.push(v / 2.0);
+            out.push(v.trunc());
+        }
+        out.retain(|c| c != v);
+        out
+    }
+}
+
+/// Uniform i64 in [lo, hi].
+pub struct GenI64 {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+pub fn gen_i64(lo: i64, hi: i64) -> GenI64 {
+    GenI64 { lo, hi }
+}
+
+impl Gen for GenI64 {
+    type Value = i64;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> i64 {
+        rng.range_i64(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *v != 0 && self.lo <= 0 && self.hi >= 0 {
+            out.push(0);
+        }
+        out.push(v / 2);
+        out.retain(|c| c != v && *c >= self.lo && *c <= self.hi);
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct GenPair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for GenPair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Vec of values from an element generator, length in [min_len, max_len].
+pub struct GenVec<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+pub fn gen_vec<G: Gen>(elem: G, min_len: usize, max_len: usize) -> GenVec<G> {
+    GenVec { elem, min_len, max_len }
+}
+
+impl<G: Gen> Gen for GenVec<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value {
+        let len = self.min_len + rng.below((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            let mut tail = v.clone();
+            tail.remove(0);
+            out.push(tail);
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let n = forall(cases(128), gen_f32(-10.0, 10.0), |&x| prop(x.abs() <= 10.0, "bound"));
+        assert_eq!(n, 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(cases(64), gen_i64(0, 100), |&x| prop(x < 90, "x must stay below 90"));
+    }
+
+    #[test]
+    fn shrinking_reaches_small_counterexample() {
+        // Capture panic message and assert the counterexample shrank to <= 52.
+        let result = std::panic::catch_unwind(|| {
+            forall(cases(64), gen_i64(0, 1000), |&x| prop(x < 50, "ge 50"));
+        });
+        let msg = match result {
+            Err(e) => e.downcast::<String>().map(|b| *b).unwrap_or_default(),
+            Ok(_) => panic!("should have failed"),
+        };
+        // shrinker halves toward 0; smallest failing value is 50..=99 range
+        let val: i64 = msg
+            .split("value: ")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .expect("parse counterexample");
+        assert!((50..100).contains(&val), "shrunk value {val}");
+    }
+
+    #[test]
+    fn pair_and_vec_generators_compose() {
+        forall(
+            cases(64),
+            GenPair(gen_i64(1, 8), gen_vec(gen_f32(-1.0, 1.0), 0, 16)),
+            |(n, v)| all([prop(*n >= 1, "n"), prop(v.len() <= 16, "len")]),
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        use std::cell::RefCell;
+        let seen_a = RefCell::new(Vec::new());
+        forall(Config { cases: 16, seed: 7, max_shrinks: 0 }, gen_i64(0, 1000), |&x| {
+            seen_a.borrow_mut().push(x);
+            Outcome::Pass
+        });
+        let seen_b = RefCell::new(Vec::new());
+        forall(Config { cases: 16, seed: 7, max_shrinks: 0 }, gen_i64(0, 1000), |&x| {
+            seen_b.borrow_mut().push(x);
+            Outcome::Pass
+        });
+        assert_eq!(seen_a.into_inner(), seen_b.into_inner());
+    }
+}

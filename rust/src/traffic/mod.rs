@@ -1,0 +1,211 @@
+//! The paper's memory-traffic model (§2.4, Fig 4; the TR column of Table 2).
+//!
+//! Counting rules (exactly the paper's):
+//!   * every datum a layer touches moves to/from memory ONCE per layer
+//!     execution (infinite on-chip reuse buffering assumed);
+//!   * per layer l: reads its input (`in_elems`), writes its output
+//!     (`out_elems`), reads its weights (`weight_elems`);
+//!   * single-image mode: weights are re-read for every image;
+//!   * batch mode (batch B): weights are read once per *batch*, i.e.
+//!     amortized 1/B per image.
+//!
+//! Bit-weighted traffic multiplies each access class by its representation
+//! length: layer l's input data uses layer l-1's data format (layer 0's
+//! input uses `dq[0]`), its output uses `dq[l]`, weights use `wq[l]`.
+
+use crate::nets::NetManifest;
+use crate::quant::QFormat;
+use crate::search::space::PrecisionConfig;
+
+/// Classification use case (paper Fig 4 shows both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// One image at a time — weights dominate for FC-heavy nets.
+    Single,
+    /// Batched classification; weights amortized over the batch.
+    Batch(usize),
+}
+
+impl Mode {
+    pub fn batch(self) -> usize {
+        match self {
+            Mode::Single => 1,
+            Mode::Batch(b) => b,
+        }
+    }
+}
+
+/// Per-layer access counts, per image (f64 because of 1/B amortization).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerTraffic {
+    pub name: String,
+    pub weight_accesses: f64,
+    pub data_accesses: f64, // input reads + output writes
+}
+
+/// Access counts for a whole network under `mode`, per image.
+pub fn accesses_per_image(m: &NetManifest, mode: Mode) -> Vec<LayerTraffic> {
+    let b = mode.batch() as f64;
+    m.layers
+        .iter()
+        .map(|l| LayerTraffic {
+            name: l.name.clone(),
+            weight_accesses: l.weight_elems as f64 / b,
+            data_accesses: (l.in_elems + l.out_elems) as f64,
+        })
+        .collect()
+}
+
+/// Total accesses per image (weights + data), the Fig-4 y-axis.
+pub fn total_accesses(m: &NetManifest, mode: Mode) -> f64 {
+    accesses_per_image(m, mode).iter().map(|t| t.weight_accesses + t.data_accesses).sum()
+}
+
+/// Bit-weighted traffic per image under `cfg` (bits moved, not accesses).
+pub fn traffic_bits(m: &NetManifest, mode: Mode, cfg: &PrecisionConfig) -> f64 {
+    assert_eq!(cfg.n_layers(), m.n_layers(), "config/manifest layer mismatch");
+    let b = mode.batch() as f64;
+    let mut total = 0.0;
+    for (l, layer) in m.layers.iter().enumerate() {
+        let in_fmt: QFormat = if l == 0 { cfg.dq[0] } else { cfg.dq[l - 1] };
+        let out_fmt = cfg.dq[l];
+        let w_fmt = cfg.wq[l];
+        total += layer.weight_elems as f64 * w_fmt.bits() as f64 / b;
+        total += layer.in_elems as f64 * in_fmt.bits() as f64;
+        total += layer.out_elems as f64 * out_fmt.bits() as f64;
+    }
+    total
+}
+
+/// Traffic ratio vs the all-fp32 baseline — the paper's TR column.
+pub fn traffic_ratio(m: &NetManifest, mode: Mode, cfg: &PrecisionConfig) -> f64 {
+    let base = traffic_bits(m, mode, &PrecisionConfig::fp32(m.n_layers()));
+    traffic_bits(m, mode, cfg) / base
+}
+
+/// Traffic ratio vs a uniform 16-bit fixed-point baseline (paper §2.5
+/// "Compared to a 16-bit fixed-point baseline...").
+pub fn traffic_ratio_vs16(m: &NetManifest, mode: Mode, cfg: &PrecisionConfig) -> f64 {
+    let base16 = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 15), QFormat::new(14, 2));
+    traffic_bits(m, mode, cfg) / traffic_bits(m, mode, &base16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{LayerMeta, NetManifest, ParamMeta};
+    use std::path::PathBuf;
+
+    pub(crate) fn toy_manifest() -> NetManifest {
+        NetManifest {
+            name: "toy".into(),
+            dataset: "synmnist".into(),
+            num_classes: 10,
+            input_shape: vec![4, 4, 1],
+            batch: 8,
+            n_eval: 64,
+            baseline_top1: 0.9,
+            layers: vec![
+                LayerMeta {
+                    name: "L1".into(),
+                    kind: "conv".into(),
+                    in_elems: 16,
+                    out_elems: 8,
+                    weight_elems: 20,
+                    macs: 100,
+                    stages: vec!["conv".into()],
+                },
+                LayerMeta {
+                    name: "L2".into(),
+                    kind: "fc".into(),
+                    in_elems: 8,
+                    out_elems: 10,
+                    weight_elems: 90,
+                    macs: 80,
+                    stages: vec!["fc".into()],
+                },
+            ],
+            params: vec![
+                ParamMeta { name: "w1".into(), shape: vec![20] },
+                ParamMeta { name: "w2".into(), shape: vec![90] },
+            ],
+            hlo_file: "x".into(),
+            weights_file: "x".into(),
+            dataset_file: "x".into(),
+            stage_variant: None,
+            dir: PathBuf::from("/tmp"),
+        }
+    }
+
+    #[test]
+    fn single_image_counts() {
+        let m = toy_manifest();
+        let t = accesses_per_image(&m, Mode::Single);
+        assert_eq!(t[0].weight_accesses, 20.0);
+        assert_eq!(t[0].data_accesses, 24.0);
+        assert_eq!(t[1].weight_accesses, 90.0);
+        assert_eq!(total_accesses(&m, Mode::Single), 20.0 + 24.0 + 90.0 + 18.0);
+    }
+
+    #[test]
+    fn batch_amortizes_weights_only() {
+        let m = toy_manifest();
+        let t = accesses_per_image(&m, Mode::Batch(10));
+        assert_eq!(t[0].weight_accesses, 2.0);
+        assert_eq!(t[0].data_accesses, 24.0); // data not amortized
+    }
+
+    #[test]
+    fn fp32_ratio_is_one() {
+        let m = toy_manifest();
+        let cfg = PrecisionConfig::fp32(2);
+        assert!((traffic_ratio(&m, Mode::Batch(8), &cfg) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bit_weighting_matches_hand_count() {
+        let m = toy_manifest();
+        // w: 1.7 (8 bits), d: 6.2 (8 bits) everywhere => ratio = 8/32
+        let cfg = PrecisionConfig::uniform(2, QFormat::new(1, 7), QFormat::new(6, 2));
+        let r = traffic_ratio(&m, Mode::Single, &cfg);
+        assert!((r - 0.25).abs() < 1e-12, "r {r}");
+    }
+
+    #[test]
+    fn mixed_config_uses_producer_format_for_input() {
+        let m = toy_manifest();
+        // L1 data 16-bit, L2 data 8-bit. L2's input (8 elems) must be
+        // priced at L1's 16 bits.
+        let mut cfg = PrecisionConfig::fp32(2);
+        cfg.dq[0] = QFormat::new(14, 2); // 16 bits
+        cfg.dq[1] = QFormat::new(6, 2); // 8 bits
+        let bits = traffic_bits(&m, Mode::Single, &cfg);
+        let expect = 20.0 * 32.0          // L1 weights fp32
+            + 16.0 * 16.0                 // L1 input at dq[0]
+            + 8.0 * 16.0                  // L1 output at dq[0]
+            + 90.0 * 32.0                 // L2 weights
+            + 8.0 * 16.0                  // L2 input at dq[0] (producer)
+            + 10.0 * 8.0; // L2 output at dq[1]
+        assert!((bits - expect).abs() < 1e-9, "bits {bits} expect {expect}");
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        let m = toy_manifest();
+        let narrow = PrecisionConfig::uniform(2, QFormat::new(1, 3), QFormat::new(4, 0));
+        let wide = PrecisionConfig::uniform(2, QFormat::new(1, 11), QFormat::new(10, 2));
+        assert!(
+            traffic_bits(&m, Mode::Batch(8), &narrow) < traffic_bits(&m, Mode::Batch(8), &wide)
+        );
+    }
+
+    #[test]
+    fn ratio_vs16_halves_vs32() {
+        let m = toy_manifest();
+        let cfg16 = PrecisionConfig::uniform(2, QFormat::new(1, 15), QFormat::new(14, 2));
+        let r = traffic_ratio_vs16(&m, Mode::Batch(8), &cfg16);
+        assert!((r - 1.0).abs() < 1e-12);
+        let r32 = traffic_ratio(&m, Mode::Batch(8), &cfg16);
+        assert!((r32 - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,206 @@
+//! Shared utilities: logger, timers, human formatting, fs helpers.
+
+pub mod json;
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+// ---- logging ----------------------------------------------------------------
+
+/// Minimal stderr logger for the `log` facade (env_logger is unavailable
+/// offline). Level from `QBOUND_LOG` (error|warn|info|debug|trace; default
+/// info).
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+static LOGGER_INIT: AtomicBool = AtomicBool::new(false);
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:<5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Called by the CLI and test setups.
+pub fn init_logging() {
+    if LOGGER_INIT.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("QBOUND_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+// ---- timing -------------------------------------------------------------------
+
+/// Simple stopwatch for coarse phase timing.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+// ---- human formatting -----------------------------------------------------------
+
+/// "1.23 M", "456.7 k", "12" — engineering notation for counts.
+pub fn human_count(n: f64) -> String {
+    let a = n.abs();
+    if a >= 1e9 {
+        format!("{:.2} G", n / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2} M", n / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1} k", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+/// "3.21 MiB" style byte counts.
+pub fn human_bytes(n: f64) -> String {
+    let a = n.abs();
+    if a >= (1u64 << 30) as f64 {
+        format!("{:.2} GiB", n / (1u64 << 30) as f64)
+    } else if a >= (1u64 << 20) as f64 {
+        format!("{:.2} MiB", n / (1u64 << 20) as f64)
+    } else if a >= 1024.0 {
+        format!("{:.1} KiB", n / 1024.0)
+    } else {
+        format!("{n:.0} B")
+    }
+}
+
+/// "1.23 s", "45.6 ms", "789 µs".
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{:.0} µs", s * 1e6)
+    }
+}
+
+// ---- fs helpers ----------------------------------------------------------------
+
+/// Read a file to string with a path-annotated error.
+pub fn read_to_string(path: &std::path::Path) -> anyhow::Result<String> {
+    std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))
+}
+
+/// Write a file, creating parent directories.
+pub fn write_file(path: &std::path::Path, contents: &[u8]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, contents).map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+/// Locate the artifacts directory: $QBOUND_ARTIFACTS, ./artifacts, or
+/// walking up from the current directory (so tests/examples work from any
+/// cwd inside the repo).
+pub fn artifacts_dir() -> anyhow::Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("QBOUND_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("index.json").exists() {
+            return Ok(p);
+        }
+        anyhow::bail!("QBOUND_ARTIFACTS={} has no index.json", p.display());
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("index.json").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "artifacts/index.json not found — run `make artifacts` (or set QBOUND_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_count_ranges() {
+        assert_eq!(human_count(12.0), "12");
+        assert_eq!(human_count(1536.0), "1.5 k");
+        assert_eq!(human_count(2_300_000.0), "2.30 M");
+        assert_eq!(human_count(5.1e9), "5.10 G");
+    }
+
+    #[test]
+    fn human_bytes_ranges() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2048.0), "2.0 KiB");
+        assert_eq!(human_bytes(3.0 * 1048576.0), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_duration_ranges() {
+        assert_eq!(human_duration(Duration::from_secs(2)), "2.00 s");
+        assert_eq!(human_duration(Duration::from_millis(12)), "12.0 ms");
+        assert_eq!(human_duration(Duration::from_micros(45)), "45 µs");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn logging_init_idempotent() {
+        init_logging();
+        init_logging();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,113 @@
+//! Coordinator integration: dedup, cross-burst caching, multi-worker
+//! correctness, order preservation, stream replay.
+
+use std::time::Duration;
+
+use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::util;
+
+fn coord(workers: usize) -> Coordinator {
+    Coordinator::new(&util::artifacts_dir().expect("make artifacts"), workers).unwrap()
+}
+
+fn job(f: i8, n: usize) -> EvalJob {
+    EvalJob {
+        net: "lenet".into(),
+        cfg: PrecisionConfig::uniform(4, QFormat::new(1, f), QFormat::new(9, 2)),
+        n_images: n,
+    }
+}
+
+#[test]
+fn identical_jobs_deduped_within_burst() {
+    let mut c = coord(1);
+    let jobs = vec![job(8, 128); 8];
+    let res = c.eval_batch(&jobs).unwrap();
+    assert!(res.windows(2).all(|w| w[0] == w[1]));
+    let s = c.stats();
+    assert_eq!(s.submitted, 8);
+    assert_eq!(s.executed, 1, "dedup failed: {s:?}");
+    assert_eq!(s.deduped, 7);
+}
+
+#[test]
+fn cache_hits_across_bursts() {
+    let mut c = coord(1);
+    let a = c.eval_one(job(7, 128)).unwrap();
+    let before = c.stats().executed;
+    let b = c.eval_one(job(7, 128)).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(c.stats().executed, before, "second burst must be pure cache");
+    assert!(c.stats().cache_hits >= 1);
+}
+
+#[test]
+fn multi_worker_results_match_single_worker() {
+    let mut c1 = coord(1);
+    let mut c2 = coord(2);
+    let jobs: Vec<EvalJob> = (2..10).map(|f| job(f, 128)).collect();
+    let r1 = c1.eval_batch(&jobs).unwrap();
+    let r2 = c2.eval_batch(&jobs).unwrap();
+    assert_eq!(r1, r2, "determinism across worker counts");
+}
+
+#[test]
+fn results_positionally_aligned() {
+    let mut c = coord(2);
+    // interleave two distinct configs; alignment must hold
+    let jobs: Vec<EvalJob> = (0..10).map(|i| job(if i % 2 == 0 { 3 } else { 9 }, 128)).collect();
+    let res = c.eval_batch(&jobs).unwrap();
+    let a = res[0];
+    let b = res[1];
+    assert_ne!(a, b, "3-bit and 9-bit weights should differ on lenet");
+    for (i, r) in res.iter().enumerate() {
+        assert_eq!(*r, if i % 2 == 0 { a } else { b });
+    }
+}
+
+#[test]
+fn unknown_network_is_an_error_not_a_hang() {
+    let mut c = coord(1);
+    let bad = EvalJob {
+        net: "resnet152".into(),
+        cfg: PrecisionConfig::fp32(4),
+        n_images: 64,
+    };
+    let err = c.eval_batch(&[bad]).unwrap_err().to_string();
+    assert!(err.contains("resnet152"), "{err}");
+    // pool still alive afterwards
+    assert!(c.eval_one(job(8, 128)).is_ok());
+}
+
+#[test]
+fn mismatched_config_width_is_an_error() {
+    let mut c = coord(1);
+    let bad = EvalJob {
+        net: "lenet".into(),
+        cfg: PrecisionConfig::fp32(7), // lenet has 4 layers
+        n_images: 64,
+    };
+    assert!(c.eval_batch(&[bad]).is_err());
+}
+
+#[test]
+fn run_stream_completes_all_and_reports_latency() {
+    let mut c = coord(2);
+    // warm engine so stream latencies are service latencies
+    c.eval_one(job(8, 64)).unwrap();
+    let arrivals: Vec<(Duration, EvalJob)> = (0..6)
+        .map(|i| (Duration::from_millis(20 * i as u64), job(2 + i as i8, 64)))
+        .collect();
+    let lat = c.run_stream(&arrivals).unwrap();
+    assert_eq!(lat.len(), 6);
+    assert!(lat.iter().all(|l| *l > Duration::ZERO && *l < Duration::from_secs(60)));
+}
+
+#[test]
+fn busy_time_accumulates() {
+    let mut c = coord(1);
+    c.eval_one(job(5, 128)).unwrap();
+    assert!(c.busy_time() > Duration::ZERO);
+}

@@ -1,0 +1,109 @@
+//! Device-vs-host parity on the COMPILED Pallas kernel: the golden-vector
+//! test locks rust to the jnp oracle; this locks rust to the actual HLO
+//! executable the runtime executes — closing the full tri-implementation
+//! loop. Plus the stochastic-rounding extension study invariants.
+
+use qbound::nets::ArtifactIndexExt;
+use qbound::prng::Xoshiro256pp;
+use qbound::quant::QFormat;
+use qbound::runtime::kernel::{KernelEngine, Rounding};
+use qbound::runtime::Session;
+use qbound::util;
+
+fn setup(rounding: Rounding) -> (Session, KernelEngine, usize) {
+    let dir = util::artifacts_dir().expect("make artifacts");
+    let session = Session::cpu().unwrap();
+    let n = ArtifactIndexExt::kernel_n(&dir).unwrap();
+    let engine = KernelEngine::load(&session, &dir, rounding).unwrap();
+    (session, engine, n)
+}
+
+fn inputs(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..n).map(|_| (rng.normal() as f32) * scale).collect()
+}
+
+#[test]
+fn compiled_kernel_matches_host_quantizer_bit_for_bit() {
+    let (session, engine, n) = setup(Rounding::Nearest);
+    for (i, f, scale) in [(8i8, 4i8, 16.0f32), (1, 7, 0.6), (12, 0, 3000.0), (4, 2, 40.0), (0, 5, 0.4)]
+    {
+        let fmt = QFormat::new(i, f);
+        let x = inputs(n, 42 + i as u64, scale);
+        let dev = engine.quantize(&session, &x, fmt, None).unwrap();
+        for (k, (&xi, &di)) in x.iter().zip(&dev).enumerate() {
+            let host = fmt.quantize(xi);
+            assert!(
+                host.to_bits() == di.to_bits() || (host == 0.0 && di == 0.0),
+                "Q{i}.{f}[{k}]: host q({xi}) = {host:e}, device {di:e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_kernel_sentinel_passthrough() {
+    let (session, engine, n) = setup(Rounding::Nearest);
+    let x = inputs(n, 7, 1e5);
+    let dev = engine.quantize(&session, &x, QFormat::FP32, None).unwrap();
+    assert_eq!(x, dev);
+}
+
+#[test]
+fn stochastic_kernel_is_unbiased_and_on_grid() {
+    let (session, engine, n) = setup(Rounding::Stochastic);
+    let fmt = QFormat::new(4, 0);
+    let x = vec![0.3f32; n];
+    let mut rng = Xoshiro256pp::new(11);
+    let u: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+    let q = engine.quantize(&session, &x, fmt, Some(&u)).unwrap();
+    // every output on the integer grid, in {0, 1}
+    assert!(q.iter().all(|&v| v == 0.0 || v == 1.0));
+    // unbiased: mean ≈ 0.3
+    let mean: f64 = q.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    assert!((mean - 0.3).abs() < 0.01, "mean {mean}");
+}
+
+#[test]
+fn stochastic_reduces_to_floor_and_ceil_bounds() {
+    let (session, engine, n) = setup(Rounding::Stochastic);
+    let fmt = QFormat::new(6, 2);
+    let x = inputs(n, 13, 5.0);
+    let u0 = vec![0.0f32; n]; // u=0 → floor... (+0 keeps exact values)
+    let q = engine.quantize(&session, &x, fmt, Some(&u0)).unwrap();
+    let step = fmt.step();
+    for (&xi, &qi) in x.iter().zip(&q) {
+        let (lo, hi) = fmt.range();
+        let expect = (xi / step).floor() * step;
+        let expect = expect.clamp(lo, hi);
+        assert!(
+            (qi - expect).abs() < 1e-6,
+            "u=0 must floor: x {xi} q {qi} expect {expect}"
+        );
+    }
+}
+
+#[test]
+fn rounding_mode_study_rne_beats_sr_on_correlated_error() {
+    // RNE error is deterministic per value; SR error has higher variance
+    // per element but is unbiased in aggregate — verify both properties.
+    let (session, rne, n) = setup(Rounding::Nearest);
+    let (session_sr, sr, _) = setup(Rounding::Stochastic);
+    let fmt = QFormat::new(3, 1);
+    let x = inputs(n, 29, 1.5);
+    let qr = rne.quantize(&session, &x, fmt, None).unwrap();
+    let mut rng = Xoshiro256pp::new(31);
+    let u: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+    // buffers must be created on the same client the executable was
+    // compiled with — use the sr engine's own session
+    let qs = sr.quantize(&session_sr, &x, fmt, Some(&u)).unwrap();
+
+    let mse = |q: &[f32]| -> f64 {
+        x.iter().zip(q).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / n as f64
+    };
+    let bias = |q: &[f32]| -> f64 {
+        x.iter().zip(q).map(|(a, b)| (b - a) as f64).sum::<f64>() / n as f64
+    };
+    assert!(mse(&qr) <= mse(&qs) + 1e-9, "RNE must minimize MSE");
+    assert!(bias(&qs).abs() < 0.01, "SR must be unbiased: {}", bias(&qs));
+}

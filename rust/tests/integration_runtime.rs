@@ -1,0 +1,193 @@
+//! Integration tests over the real artifacts: NTF/manifest loading, the
+//! golden cross-language quantizer lock, PJRT execution, and runtime
+//! accuracy parity with the python-recorded baselines.
+//!
+//! These tests require `make artifacts` to have run; they are the
+//! end-to-end proof that the three layers compose.
+
+use qbound::eval::{Dataset, Evaluator};
+use qbound::nets::{ArtifactIndex, NetManifest};
+use qbound::quant::QFormat;
+use qbound::runtime::{Session, Variant};
+use qbound::search::space::PrecisionConfig;
+use qbound::tensor::ntf;
+use qbound::util;
+
+fn artifacts() -> std::path::PathBuf {
+    util::artifacts_dir().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn index_lists_all_five_networks() {
+    let idx = ArtifactIndex::load(&artifacts()).unwrap();
+    for net in ["lenet", "convnet", "alexnet", "nin", "googlenet"] {
+        assert!(idx.nets.iter().any(|n| n == net), "missing {net}");
+    }
+    assert_eq!(idx.batch, 64);
+}
+
+#[test]
+fn manifests_parse_and_validate() {
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        assert!(m.baseline_top1 > 0.2, "{net} baseline {}", m.baseline_top1);
+        assert!(m.total_weights() > 1000);
+        assert!(m.total_macs() > 10_000);
+        assert!(m.hlo_path().exists());
+        assert!(m.weights_path().exists());
+        assert!(m.dataset_path().exists());
+    }
+}
+
+#[test]
+fn paper_layer_structure_preserved() {
+    let dir = artifacts();
+    let count = |m: &NetManifest, k: &str| m.layers.iter().filter(|l| l.kind == k).count();
+    let lenet = NetManifest::load(&dir, "lenet").unwrap();
+    assert_eq!((count(&lenet, "conv"), count(&lenet, "fc")), (2, 2));
+    let convnet = NetManifest::load(&dir, "convnet").unwrap();
+    assert_eq!((count(&convnet, "conv"), count(&convnet, "fc")), (3, 2));
+    let alexnet = NetManifest::load(&dir, "alexnet").unwrap();
+    assert_eq!((count(&alexnet, "conv"), count(&alexnet, "fc")), (5, 3));
+    let nin = NetManifest::load(&dir, "nin").unwrap();
+    assert_eq!(count(&nin, "conv"), 12);
+    let goog = NetManifest::load(&dir, "googlenet").unwrap();
+    assert_eq!((count(&goog, "conv"), count(&goog, "inception")), (2, 9));
+}
+
+#[test]
+fn golden_quant_vectors_lock_rust_quantizer_to_kernel() {
+    // python wrote x plus q(x) for a grid of (I, F) via the jnp oracle
+    // (itself bit-locked to the pallas kernel by pytest). Replay here.
+    let golden = ntf::read_file(&artifacts().join("golden_quant.ntf")).unwrap();
+    let x = golden["x"].as_f32().unwrap();
+    let mut checked = 0;
+    for (name, expect) in &golden {
+        let Some(spec) = name.strip_prefix("q_") else { continue };
+        let fmt = if spec == "sentinel" {
+            QFormat::FP32
+        } else {
+            let (i, f) = spec.split_once('_').unwrap();
+            QFormat::new(i.parse().unwrap(), f.parse().unwrap())
+        };
+        let expect = expect.as_f32().unwrap();
+        for (k, (&xi, &ei)) in x.iter().zip(expect).enumerate() {
+            let got = fmt.quantize(xi);
+            assert!(
+                got.to_bits() == ei.to_bits() || (got == 0.0 && ei == 0.0),
+                "{name}[{k}]: q({xi}) = {got:e} != python {ei:e}"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 40, "only {checked} golden formats checked");
+}
+
+#[test]
+fn dataset_loads_and_labels_in_range() {
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let d = Dataset::load(&m).unwrap();
+    assert!(d.n >= 256);
+    assert_eq!(d.images.len(), d.n * d.image_elems);
+    assert!(d.labels.iter().all(|&l| l >= 0 && (l as usize) < m.num_classes));
+    // images are normalized pixels
+    assert!(d.images.iter().all(|&p| (0.0..=1.0).contains(&p)));
+}
+
+#[test]
+fn runtime_matches_python_baseline_exactly_for_lenet() {
+    // The rust PJRT path must reproduce the python-measured fp32 top-1 on
+    // the full eval split: same HLO graph, same data, same argmax rule.
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let session = Session::cpu().unwrap();
+    let mut ev = Evaluator::new(&session, &m).unwrap();
+    let acc = ev.accuracy(&session, &PrecisionConfig::fp32(m.n_layers()), 0).unwrap();
+    assert!(
+        (acc - m.baseline_top1).abs() < 1e-6,
+        "rust {acc} vs python {}",
+        m.baseline_top1
+    );
+}
+
+#[test]
+fn quantization_affects_accuracy_monotonically_at_extremes() {
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let session = Session::cpu().unwrap();
+    let mut ev = Evaluator::new(&session, &m).unwrap();
+    let nl = m.n_layers();
+    let base = ev.accuracy(&session, &PrecisionConfig::fp32(nl), 256).unwrap();
+    // Generous format: indistinguishable from baseline.
+    let wide = PrecisionConfig::uniform(nl, QFormat::new(1, 14), QFormat::new(14, 8));
+    let acc_wide = ev.accuracy(&session, &wide, 256).unwrap();
+    assert!((acc_wide - base).abs() < 0.02, "wide {acc_wide} vs base {base}");
+    // 1-bit data: network must collapse to ~chance.
+    let tiny = PrecisionConfig::uniform(nl, QFormat::new(1, 1), QFormat::new(1, 0));
+    let acc_tiny = ev.accuracy(&session, &tiny, 256).unwrap();
+    assert!(acc_tiny < base * 0.6, "tiny {acc_tiny} vs base {base}");
+}
+
+#[test]
+fn evaluator_cache_hits_are_consistent() {
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let session = Session::cpu().unwrap();
+    let mut ev = Evaluator::new(&session, &m).unwrap();
+    let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 6), QFormat::new(9, 2));
+    let a = ev.accuracy(&session, &cfg, 128).unwrap();
+    let b = ev.accuracy(&session, &cfg, 128).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(ev.hits, 1);
+    assert_eq!(ev.misses, 1);
+}
+
+#[test]
+fn stage_variant_engine_runs_and_matches_baseline_with_sentinels() {
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "alexnet").unwrap();
+    let sv = m.stage_variant.clone().expect("alexnet stage variant");
+    assert_eq!(sv.n_stages, 4); // conv, relu, pool, norm
+    let session = Session::cpu().unwrap();
+    let engine = session.load_engine(&m, Variant::Stages).unwrap();
+    let dataset = Dataset::load(&m).unwrap();
+    let fp32 = PrecisionConfig::fp32(m.n_layers());
+    let mut sq = vec![0.0f32; sv.n_stages * 2];
+    for s in 0..sv.n_stages {
+        sq[s * 2] = -1.0;
+    }
+    let logits = engine
+        .infer(&session, dataset.batch_images(0, m.batch), &fp32.wire_wq(), &fp32.wire_dq(), Some(&sq))
+        .unwrap();
+    // All-sentinel stage config == standard fp32 path.
+    let std_engine = session.load_engine(&m, Variant::Standard).unwrap();
+    let logits_std = std_engine
+        .infer(&session, dataset.batch_images(0, m.batch), &fp32.wire_wq(), &fp32.wire_dq(), None)
+        .unwrap();
+    for (a, b) in logits.iter().zip(&logits_std) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn engine_rejects_malformed_inputs() {
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let session = Session::cpu().unwrap();
+    let engine = session.load_engine(&m, Variant::Standard).unwrap();
+    let d = Dataset::load(&m).unwrap();
+    let cfg = PrecisionConfig::fp32(m.n_layers());
+    // wrong image length
+    assert!(engine.infer(&session, &d.images[..10], &cfg.wire_wq(), &cfg.wire_dq(), None).is_err());
+    // wrong config length
+    assert!(engine
+        .infer(&session, d.batch_images(0, m.batch), &[1.0, 2.0], &cfg.wire_dq(), None)
+        .is_err());
+    // sq on standard variant
+    assert!(engine
+        .infer(&session, d.batch_images(0, m.batch), &cfg.wire_wq(), &cfg.wire_dq(), Some(&[1.0]))
+        .is_err());
+}

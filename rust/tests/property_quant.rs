@@ -1,0 +1,169 @@
+//! Property tests over the Q(I.F) quantizer (testkit harness): the
+//! invariants that make the format sound regardless of input.
+
+use qbound::quant::QFormat;
+use qbound::testkit::{all, cases, forall, gen_f32, gen_i64, prop, Gen, GenPair};
+
+/// Generator for sane (I, F) formats: I in [0, 16], F in [0, 14], I+F ≥ 1.
+struct GenFormat;
+
+impl Gen for GenFormat {
+    type Value = QFormat;
+
+    fn generate(&self, rng: &mut qbound::prng::Xoshiro256pp) -> QFormat {
+        loop {
+            let i = rng.range_i64(0, 16) as i8;
+            let f = rng.range_i64(0, 14) as i8;
+            if i + f >= 1 {
+                return QFormat::new(i, f);
+            }
+        }
+    }
+
+    fn shrink(&self, v: &QFormat) -> Vec<QFormat> {
+        let mut out = Vec::new();
+        if v.ibits > 1 {
+            out.push(QFormat::new(v.ibits - 1, v.fbits));
+        }
+        if v.fbits > 0 && v.ibits >= 1 {
+            out.push(QFormat::new(v.ibits, v.fbits - 1));
+        }
+        out
+    }
+}
+
+#[test]
+fn quantize_always_lands_in_range() {
+    forall(cases(2000), GenPair(GenFormat, gen_f32(-1e6, 1e6)), |(fmt, x)| {
+        let q = fmt.quantize(*x);
+        let (lo, hi) = fmt.range();
+        prop(q >= lo && q <= hi, &format!("q({x}) = {q} outside [{lo}, {hi}] for {fmt}"))
+    });
+}
+
+#[test]
+fn quantize_is_idempotent() {
+    forall(cases(2000), GenPair(GenFormat, gen_f32(-1e4, 1e4)), |(fmt, x)| {
+        let once = fmt.quantize(*x);
+        let twice = fmt.quantize(once);
+        prop(once.to_bits() == twice.to_bits(), &format!("{fmt}: {once} re-quantized to {twice}"))
+    });
+}
+
+#[test]
+fn quantize_is_monotone() {
+    forall(
+        cases(2000),
+        GenPair(GenFormat, GenPair(gen_f32(-100.0, 100.0), gen_f32(-100.0, 100.0))),
+        |(fmt, (a, b))| {
+            let (lo, hi) = (a.min(*b), a.max(*b));
+            prop(
+                fmt.quantize(lo) <= fmt.quantize(hi),
+                &format!("{fmt}: q({lo}) > q({hi})"),
+            )
+        },
+    );
+}
+
+#[test]
+fn quantize_error_bounded_by_half_step_inside_range() {
+    forall(cases(2000), GenPair(GenFormat, gen_f32(-30.0, 30.0)), |(fmt, x)| {
+        let (lo, hi) = fmt.range();
+        if *x < lo || *x > hi {
+            return prop(true, "");
+        }
+        let err = (fmt.quantize(*x) - x).abs();
+        prop(
+            err <= fmt.step() / 2.0 + 1e-6,
+            &format!("{fmt}: |q({x}) - {x}| = {err} > step/2 = {}", fmt.step() / 2.0),
+        )
+    });
+}
+
+#[test]
+fn quantized_values_are_exact_grid_multiples() {
+    forall(cases(2000), GenPair(GenFormat, gen_f32(-50.0, 50.0)), |(fmt, x)| {
+        let q = fmt.quantize(*x);
+        // q * 2^F must be an integer (exactly representable in f64)
+        let scaled = q as f64 * (fmt.fbits as f64).exp2();
+        prop(
+            (scaled - scaled.round()).abs() < 1e-6,
+            &format!("{fmt}: q({x}) = {q} not on the grid (scaled {scaled})"),
+        )
+    });
+}
+
+#[test]
+fn widening_fraction_never_increases_error() {
+    forall(
+        cases(1500),
+        GenPair(GenFormat, gen_f32(-10.0, 10.0)),
+        |(fmt, x)| {
+            if fmt.fbits >= 14 {
+                return prop(true, "");
+            }
+            let wider = QFormat::new(fmt.ibits, fmt.fbits + 1);
+            let (lo, hi) = fmt.range();
+            if *x < lo || *x > hi {
+                return prop(true, ""); // saturation region: range also moves
+            }
+            let e0 = (fmt.quantize(*x) - x).abs();
+            let e1 = (wider.quantize(*x) - x).abs();
+            prop(e1 <= e0 + 1e-7, &format!("{fmt}->+1F: err {e0} -> {e1} at {x}"))
+        },
+    );
+}
+
+#[test]
+fn bits_and_levels_consistent() {
+    forall(cases(500), GenFormat, |fmt| {
+        all([
+            prop(fmt.bits() == (fmt.ibits + fmt.fbits) as u32, "bits = I + F"),
+            prop(
+                fmt.levels() == Some(1u64 << fmt.bits()),
+                &format!("{fmt}: levels {:?} != 2^bits", fmt.levels()),
+            ),
+        ])
+    });
+}
+
+#[test]
+fn parse_display_roundtrip_property() {
+    forall(cases(500), GenFormat, |fmt| {
+        let s = fmt.to_string();
+        match QFormat::parse(&s) {
+            Ok(back) => prop(back == *fmt, &format!("{s} parsed to {back}")),
+            Err(e) => prop(false, &format!("{s} failed to parse: {e}")),
+        }
+    });
+}
+
+#[test]
+fn wire_roundtrip_preserves_semantics() {
+    forall(cases(800), GenPair(GenFormat, gen_f32(-20.0, 20.0)), |(fmt, x)| {
+        let w = fmt.wire();
+        // reconstruct from wire floats as the kernel does
+        let back = QFormat::new(w[0] as i8, w[1] as i8);
+        prop(
+            back.quantize(*x).to_bits() == fmt.quantize(*x).to_bits(),
+            "wire roundtrip changed semantics",
+        )
+    });
+}
+
+#[test]
+fn saturation_rate_increases_as_integer_bits_shrink() {
+    // statistical property over a fixed heavy-tailed sample
+    let mut rng = qbound::prng::Xoshiro256pp::new(5);
+    let xs: Vec<f32> = (0..4096).map(|_| (rng.normal() * 8.0) as f32).collect();
+    let sat = |i: i8| {
+        let fmt = QFormat::new(i, 4);
+        qbound::quant::metrics::quant_error(fmt, &xs).sat_rate
+    };
+    forall(cases(12), gen_i64(1, 7), |&i| {
+        prop(
+            sat(i as i8) >= sat(i as i8 + 1) - 1e-12,
+            &format!("sat({i}) < sat({})", i + 1),
+        )
+    });
+}

@@ -1,0 +1,248 @@
+//! Property tests over the pure search/traffic machinery (no PJRT):
+//! config-space invariants, Pareto laws, traffic-model arithmetic.
+
+use qbound::nets::{LayerMeta, NetManifest, ParamMeta};
+use qbound::prng::Xoshiro256pp;
+use qbound::quant::QFormat;
+use qbound::search::pareto;
+use qbound::search::space::{DescentOptions, PrecisionConfig};
+use qbound::testkit::{cases, forall, gen_i64, prop, Gen, GenPair};
+use qbound::traffic::{self, Mode};
+
+/// Generator for random-but-valid precision configs of a given width.
+struct GenConfig {
+    layers: usize,
+}
+
+impl Gen for GenConfig {
+    type Value = PrecisionConfig;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> PrecisionConfig {
+        let mut cfg = PrecisionConfig::fp32(self.layers);
+        for l in 0..self.layers {
+            if rng.below(8) != 0 {
+                cfg.wq[l] = QFormat::new(1, rng.range_i64(1, 14) as i8);
+            }
+            if rng.below(8) != 0 {
+                cfg.dq[l] = QFormat::new(rng.range_i64(1, 15) as i8, rng.range_i64(0, 8) as i8);
+            }
+        }
+        cfg
+    }
+}
+
+/// Synthetic manifest with a consistent layer chain.
+fn synth_manifest(rng: &mut Xoshiro256pp, layers: usize) -> NetManifest {
+    let mut metas = Vec::new();
+    let mut prev_out = 64 + rng.below(512);
+    let first_in = prev_out;
+    for l in 0..layers {
+        let out = 16 + rng.below(1024);
+        metas.push(LayerMeta {
+            name: format!("L{}", l + 1),
+            kind: if l < layers - 1 { "conv".into() } else { "fc".into() },
+            in_elems: prev_out,
+            out_elems: out,
+            weight_elems: 8 + rng.below(4096),
+            macs: 1000 + rng.below(1_000_000),
+            stages: vec!["conv".into()],
+        });
+        prev_out = out;
+    }
+    let total: u64 = metas.iter().map(|l| l.weight_elems).sum();
+    NetManifest {
+        name: "synth".into(),
+        dataset: "synmnist".into(),
+        num_classes: 10,
+        input_shape: vec![1, 1, first_in as usize],
+        batch: 64,
+        n_eval: 64,
+        baseline_top1: 0.9,
+        layers: metas,
+        params: vec![ParamMeta { name: "all".into(), shape: vec![total as usize] }],
+        hlo_file: "x".into(),
+        weights_file: "x".into(),
+        dataset_file: "x".into(),
+        stage_variant: None,
+        dir: std::path::PathBuf::from("/tmp"),
+    }
+}
+
+#[test]
+fn neighbours_change_exactly_one_field_by_one_bit() {
+    forall(cases(300), GenConfig { layers: 6 }, |cfg| {
+        // descent operates on fully-quantized configs; skip fp32 fields
+        let mut c = cfg.clone();
+        for l in 0..c.n_layers() {
+            if c.wq[l].is_fp32() {
+                c.wq[l] = QFormat::new(1, 8);
+            }
+            if c.dq[l].is_fp32() {
+                c.dq[l] = QFormat::new(10, 2);
+            }
+        }
+        let opts = DescentOptions::default();
+        for (label, n) in c.descent_neighbours(&opts) {
+            let mut delta = 0i32;
+            for l in 0..c.n_layers() {
+                delta += (c.wq[l].bits() as i32 - n.wq[l].bits() as i32).abs();
+                delta += (c.dq[l].bits() as i32 - n.dq[l].bits() as i32).abs();
+            }
+            if delta != 1 {
+                return prop(false, &format!("neighbour {label} changed {delta} bits"));
+            }
+        }
+        prop(true, "")
+    });
+}
+
+#[test]
+fn neighbours_never_violate_floors() {
+    forall(cases(300), GenConfig { layers: 5 }, |cfg| {
+        let mut c = cfg.clone();
+        for l in 0..c.n_layers() {
+            if c.wq[l].is_fp32() {
+                c.wq[l] = QFormat::new(1, 2);
+            }
+            if c.dq[l].is_fp32() {
+                c.dq[l] = QFormat::new(2, 1);
+            }
+        }
+        let opts = DescentOptions::default();
+        for (_, n) in c.descent_neighbours(&opts) {
+            for q in &n.dq {
+                if q.ibits < opts.min_data_i || q.fbits < opts.min_data_f {
+                    return prop(false, &format!("floor violated: {q}"));
+                }
+            }
+            for q in &n.wq {
+                if q.fbits < opts.min_weight_f {
+                    return prop(false, &format!("weight floor violated: {q}"));
+                }
+            }
+        }
+        prop(true, "")
+    });
+}
+
+#[test]
+fn traffic_ratio_bounded_and_monotone_under_bit_reduction() {
+    forall(
+        cases(200),
+        GenPair(gen_i64(2, 12), GenConfig { layers: 8 }),
+        |(seed, cfg)| {
+            let mut rng = Xoshiro256pp::new(*seed as u64);
+            let m = synth_manifest(&mut rng, 8);
+            let mode = Mode::Batch(64);
+            let r = traffic::traffic_ratio(&m, mode, cfg);
+            if !(0.0 < r && r <= 1.0 + 1e-9) {
+                return prop(false, &format!("ratio {r} out of (0, 1]"));
+            }
+            // reduce one quantized field: ratio must not increase
+            let mut c2 = cfg.clone();
+            if let Some(l) = (0..c2.n_layers()).find(|&l| !c2.dq[l].is_fp32() && c2.dq[l].ibits > 1)
+            {
+                c2.dq[l].ibits -= 1;
+                let r2 = traffic::traffic_ratio(&m, mode, &c2);
+                return prop(r2 <= r + 1e-12, &format!("ratio rose {r} -> {r2}"));
+            }
+            prop(true, "")
+        },
+    );
+}
+
+#[test]
+fn batch_mode_never_exceeds_single_mode_traffic() {
+    forall(cases(200), GenPair(gen_i64(1, 1000), GenConfig { layers: 5 }), |(seed, cfg)| {
+        let mut rng = Xoshiro256pp::new(*seed as u64);
+        let m = synth_manifest(&mut rng, 5);
+        let b = traffic::traffic_bits(&m, Mode::Batch(64), cfg);
+        let s = traffic::traffic_bits(&m, Mode::Single, cfg);
+        prop(b <= s + 1e-9, &format!("batch {b} > single {s}"))
+    });
+}
+
+#[test]
+fn pareto_frontier_laws() {
+    forall(cases(150), gen_i64(0, i64::MAX / 2), |&seed| {
+        let mut rng = Xoshiro256pp::new(seed as u64);
+        let n = 2 + rng.below(120) as usize;
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+        let f = pareto::frontier(&pts);
+        if f.is_empty() {
+            return prop(false, "frontier empty on non-empty set");
+        }
+        // 1. no frontier point is dominated
+        for &i in &f {
+            if pareto::dominated(pts[i], &pts) {
+                return prop(false, &format!("frontier point {i} dominated"));
+            }
+        }
+        // 2. every non-frontier point is dominated by some point
+        for i in 0..n {
+            if !f.contains(&i) && !pareto::dominated(pts[i], &pts) {
+                return prop(false, &format!("point {i} non-dominated but excluded"));
+            }
+        }
+        // 3. frontier sorted by traffic with strictly rising accuracy
+        for w in f.windows(2) {
+            if pts[w[0]].0 > pts[w[1]].0 || pts[w[0]].1 >= pts[w[1]].1 {
+                return prop(false, "frontier not strictly improving");
+            }
+        }
+        prop(true, "")
+    });
+}
+
+#[test]
+fn wire_encoding_roundtrips_for_any_config() {
+    forall(cases(300), GenConfig { layers: 7 }, |cfg| {
+        let wq = cfg.wire_wq();
+        let dq = cfg.wire_dq();
+        if wq.len() != 14 || dq.len() != 14 {
+            return prop(false, "wire width");
+        }
+        for (l, q) in cfg.wq.iter().enumerate() {
+            let back = if wq[2 * l] < 0.0 {
+                QFormat::FP32
+            } else {
+                QFormat::new(wq[2 * l] as i8, wq[2 * l + 1] as i8)
+            };
+            if back.bits() != q.bits() || back.is_fp32() != q.is_fp32() {
+                return prop(false, &format!("wq[{l}] roundtrip {q} -> {back}"));
+            }
+        }
+        for (l, q) in cfg.dq.iter().enumerate() {
+            let back = if dq[2 * l] < 0.0 {
+                QFormat::FP32
+            } else {
+                QFormat::new(dq[2 * l] as i8, dq[2 * l + 1] as i8)
+            };
+            if back.quantize(1.234) != q.quantize(1.234) {
+                return prop(false, &format!("dq[{l}] semantics changed"));
+            }
+        }
+        prop(true, "")
+    });
+}
+
+#[test]
+fn synth_manifest_passes_traffic_sanity() {
+    // accesses: weights amortize exactly 1/B
+    forall(cases(100), gen_i64(0, 10_000), |&seed| {
+        let mut rng = Xoshiro256pp::new(seed as u64);
+        let m = synth_manifest(&mut rng, 4);
+        let single = traffic::accesses_per_image(&m, Mode::Single);
+        let batch = traffic::accesses_per_image(&m, Mode::Batch(64));
+        for (s, b) in single.iter().zip(&batch) {
+            let expect = s.weight_accesses / 64.0;
+            if (b.weight_accesses - expect).abs() > 1e-9 {
+                return prop(false, "weight amortization wrong");
+            }
+            if s.data_accesses != b.data_accesses {
+                return prop(false, "data must not amortize");
+            }
+        }
+        prop(true, "")
+    });
+}
