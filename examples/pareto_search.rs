@@ -12,6 +12,7 @@ use qbound::search::{pareto, table2};
 
 fn main() -> Result<()> {
     qbound::util::init_logging();
+    qbound::testkit::ensure_artifacts();
     let net = std::env::args().nth(1).unwrap_or_else(|| "lenet".into());
     let n_images: usize =
         std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(256);

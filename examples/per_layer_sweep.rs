@@ -15,7 +15,7 @@ use qbound::util;
 fn main() -> Result<()> {
     util::init_logging();
     let net = std::env::args().nth(1).unwrap_or_else(|| "convnet".into());
-    let dir = util::artifacts_dir()?;
+    let dir = qbound::testkit::ensure_artifacts();
     let m = NetManifest::load(&dir, &net)?;
     let mut coord = Coordinator::new(&dir, 0)?;
     let n_images = 256;

@@ -2,8 +2,10 @@
 //! reduced-precision configuration, and report accuracy + traffic.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//! (synthesizes artifacts on first run; `make artifacts` swaps in the
+//! python-built set)
 
 use anyhow::Result;
 use qbound::coordinator::{Coordinator, EvalJob};
@@ -15,7 +17,7 @@ use qbound::util;
 
 fn main() -> Result<()> {
     util::init_logging();
-    let dir = util::artifacts_dir()?;
+    let dir = qbound::testkit::ensure_artifacts();
     let net = "lenet";
     let m = NetManifest::load(&dir, net)?;
     println!(

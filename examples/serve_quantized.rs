@@ -27,7 +27,7 @@ fn main() -> Result<()> {
     let n_req: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(48);
     let rate: f64 = std::env::args().nth(3).and_then(|s| s.parse().ok()).unwrap_or(6.0);
 
-    let dir = util::artifacts_dir()?;
+    let dir = qbound::testkit::ensure_artifacts();
     let m = NetManifest::load(&dir, &net)?;
     let nl = m.n_layers();
 
@@ -80,7 +80,9 @@ fn main() -> Result<()> {
     sorted.sort_unstable();
     let p = |q: f64| sorted[((sorted.len() - 1) as f64 * q) as usize];
 
-    println!("\nserve_quantized — {net}, {n_req} requests, Poisson rate {rate}/s, {workers} workers");
+    println!(
+        "\nserve_quantized — {net}, {n_req} requests, Poisson rate {rate}/s, {workers} workers"
+    );
     println!("  config          {cfg}");
     println!("  accuracy        {acc:.4}  (fp32 {base:.4}, rel err {:.3})", (base - acc) / base);
     println!("  traffic ratio   {tr:.3} vs fp32  ({:.0}% reduction)", (1.0 - tr) * 100.0);

@@ -16,12 +16,15 @@ use qbound::util;
 
 fn main() -> Result<()> {
     util::init_logging();
-    let dir = util::artifacts_dir()?;
+    let dir = qbound::testkit::ensure_artifacts();
     let index = ArtifactIndex::load(&dir)?;
 
     let mut t = Table::new(
         "traffic per image (accesses; batch amortizes weights)",
-        &["net", "weights", "data", "single total", "batch total", "weights share single", "weights share batch"],
+        &[
+            "net", "weights", "data", "single total", "batch total", "weights share single",
+            "weights share batch",
+        ],
     );
     for name in &index.nets {
         let m = NetManifest::load(&dir, name)?;

@@ -29,7 +29,7 @@ fn unique_cfg(counter: &mut u32) -> PrecisionConfig {
 
 fn main() {
     qbound::util::init_logging();
-    let dir = qbound::util::artifacts_dir().expect("run `make artifacts` first");
+    let dir = qbound::testkit::ensure_artifacts();
     let mut suite = BenchSuite::new("coordinator (lenet, 128-image evals)");
     let net = "lenet";
     let n_images = 128;

@@ -1,28 +1,35 @@
 //! End-to-end inference benchmarks: per-batch latency of every network
-//! through the PJRT runtime at fp32 and quantized, plus the eval-cache
-//! hit path. These are the numbers every sweep/search cost estimate in
-//! EXPERIMENTS.md §Perf is built from.
+//! through the active execution backend at fp32 and quantized, plus the
+//! eval-cache hit path. These are the numbers every sweep/search cost
+//! estimate in EXPERIMENTS.md §Perf is built from.
+//!
+//! Backend from `QBOUND_BACKEND` (default: reference) — so the same
+//! bench binary measures the interpreted path everywhere and the PJRT
+//! path on machines that have it.
 
-use qbound::benchkit::BenchSuite;
+use qbound::backend::{BackendKind, Variant};
 use qbound::coordinator::{Coordinator, EvalJob};
 use qbound::eval::{Dataset, Evaluator};
 use qbound::nets::{ArtifactIndex, NetManifest};
 use qbound::quant::QFormat;
-use qbound::runtime::{Session, Variant};
 use qbound::search::space::PrecisionConfig;
 
 fn main() {
     qbound::util::init_logging();
-    let dir = qbound::util::artifacts_dir().expect("run `make artifacts` first");
+    let dir = qbound::testkit::ensure_artifacts();
     let index = ArtifactIndex::load(&dir).unwrap();
-    let mut suite = BenchSuite::new("engine inference (per batch) + eval cache");
-    let session = Session::cpu().unwrap();
+    let kind = BackendKind::from_env().unwrap();
+    let backend = kind.create().unwrap();
+    let mut suite = qbound::benchkit::BenchSuite::new(&format!(
+        "engine inference per batch + eval cache ({})",
+        kind.label()
+    ));
 
     for net in &index.nets {
         let m = NetManifest::load(&dir, net).unwrap();
         let t0 = std::time::Instant::now();
-        let engine = session.load_engine(&m, Variant::Standard).unwrap();
-        suite.record_once(&format!("{net}: load+compile"), t0.elapsed());
+        let mut exec = backend.load(&m, Variant::Standard).unwrap();
+        suite.record_once(&format!("{net}: load"), t0.elapsed());
         let dataset = Dataset::load(&m).unwrap();
         let nl = m.n_layers();
         let images = dataset.batch_images(0, m.batch).to_vec();
@@ -36,38 +43,33 @@ fn main() {
                 &format!("{net}: infer batch {} {label}", m.batch),
                 m.batch as f64,
                 || {
-                    std::hint::black_box(
-                        engine.infer(&session, &images, &wq, &dq, None).unwrap(),
-                    );
+                    std::hint::black_box(exec.infer(&images, &wq, &dq, None).unwrap());
                 },
             );
         }
-        // §Perf A/B: per-call image upload vs device-resident batch.
-        let img_buf = engine.upload_images(&session, &images).unwrap();
+        // §Perf A/B: keyed (backend may keep the batch resident) vs plain.
         let wq = quant.wire_wq();
         let dq = quant.wire_dq();
         suite.bench_elems(
-            &format!("{net}: infer batch {} q, preloaded images", m.batch),
+            &format!("{net}: infer batch {} q, keyed images", m.batch),
             m.batch as f64,
             || {
-                std::hint::black_box(
-                    engine.infer_prepared(&session, &img_buf, &wq, &dq, None).unwrap(),
-                );
+                std::hint::black_box(exec.infer_keyed(0, &images, &wq, &dq, None).unwrap());
             },
         );
     }
 
     // Evaluator memo-cache hit path (must be ~ns — the search leans on it).
     let m = NetManifest::load(&dir, &index.nets[0]).unwrap();
-    let mut ev = Evaluator::new(&session, &m).unwrap();
+    let mut ev = Evaluator::new(backend.as_ref(), &m).unwrap();
     let cfg = PrecisionConfig::fp32(m.n_layers());
-    ev.accuracy(&session, &cfg, 0).unwrap(); // warm (miss)
+    ev.accuracy(&cfg, 0).unwrap(); // warm (miss)
     suite.bench("evaluator cache hit", || {
-        std::hint::black_box(ev.accuracy(&session, &cfg, 0).unwrap());
+        std::hint::black_box(ev.accuracy(&cfg, 0).unwrap());
     });
 
     // Coordinator dispatch overhead on a fully-cached burst.
-    let mut coord = Coordinator::new(&dir, 2).unwrap();
+    let mut coord = Coordinator::with_backend(&dir, 2, kind).unwrap();
     let jobs: Vec<EvalJob> = (0..64)
         .map(|_| EvalJob { net: index.nets[0].clone(), cfg: cfg.clone(), n_images: 128 })
         .collect();

@@ -33,7 +33,7 @@ fn main() {
     });
 
     // Traffic-model evaluation for a 12-layer manifest-shaped config.
-    let dir = qbound::util::artifacts_dir().expect("run `make artifacts` first");
+    let dir = qbound::testkit::ensure_artifacts();
     let m = qbound::nets::NetManifest::load(&dir, "nin").expect("nin manifest");
     let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 7), QFormat::new(9, 0));
     suite.bench("traffic_ratio nin (12 layers)", || {

@@ -1,0 +1,546 @@
+//! Pure-Rust synthetic artifact generation.
+//!
+//! The python build path (`make artifacts`) trains the five scaled
+//! networks under JAX and AOT-lowers them to HLO. That path needs a JAX
+//! toolchain no CI box has — so this module produces a **self-contained
+//! artifact set from Rust alone**: everything the reference backend,
+//! the coordinator, the search stack, the benches and the integration
+//! tests consume.
+//!
+//! Per network (from the [`crate::nets::arch`] registry):
+//!
+//! * He-initialized weights (`<net>.weights.ntf`),
+//! * a synthetic eval split (`<net>.dataset.ntf`) whose labels are the
+//!   network's **own fp32 top-1** ("network-as-teacher"): the fp32
+//!   baseline is exact by construction and quantization degrades it the
+//!   same way it degrades a trained net's accuracy,
+//! * a validated `<net>.manifest.json` whose layer/param metadata comes
+//!   from the same shape walk the python side uses,
+//! * a placeholder `<net>.hlo.txt` (the reference backend never reads
+//!   it; the PJRT backend needs real HLO from `make artifacts`).
+//!
+//! Candidate images are filtered for *label robustness*: a candidate is
+//! kept only if its top-1 margin clears a relative threshold and (for
+//! the small nets the test-suite stresses hardest) its label survives a
+//! set of probe quantizations. This gives the precision sweeps a
+//! realistic knee instead of a cliff.
+//!
+//! Plus one cross-implementation lock: `golden_quant.ntf`, quantization
+//! vectors computed by an **independent f64 oracle**
+//! ([`golden_quantize`]) that the `QFormat` host quantizer must match
+//! bit-for-bit.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::backend::reference::Interpreter;
+use crate::nets::arch::{self, Arch};
+use crate::prng::Xoshiro256pp;
+use crate::quant::QFormat;
+use crate::tensor::{ntf, Tensor};
+
+/// Bump when generated content changes shape (testkit keys its shared
+/// artifact cache directory on this).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Generation options.
+#[derive(Clone, Debug)]
+pub struct GenOptions {
+    pub seed: u64,
+    /// Eval images per network.
+    pub n_eval: usize,
+    /// Batch size recorded in the index/manifests.
+    pub batch: usize,
+    /// Element count of the standalone kernel artifacts.
+    pub kernel_n: usize,
+    /// Recorded in index.json (this generator always produces the
+    /// CI-scale artifact set).
+    pub quick: bool,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        Self { seed: 0x9b0d_5eed, n_eval: 256, batch: 64, kernel_n: 1024, quick: true }
+    }
+}
+
+/// The per-user cache directory where [`crate::testkit::ensure_artifacts`]
+/// synthesizes the default artifact set (`~/.cache/qbound/...`, falling
+/// back to a uid-free temp path only when `HOME` is unset).
+/// [`crate::util::artifacts_dir`] knows to look here, so no process-wide
+/// environment mutation is needed to share it.
+pub fn default_cache_dir() -> std::path::PathBuf {
+    let opts = GenOptions::default();
+    let base = match std::env::var_os("HOME") {
+        Some(h) if !h.is_empty() => std::path::PathBuf::from(h).join(".cache").join("qbound"),
+        _ => std::env::temp_dir().join("qbound-cache"),
+    };
+    base.join(format!("synth-artifacts-v{}-seed{:x}", SCHEMA_VERSION, opts.seed))
+}
+
+/// Generate the full artifact set into `dir`.
+pub fn generate(dir: &Path, opts: &GenOptions) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+    for name in arch::NET_ORDER {
+        let t0 = std::time::Instant::now();
+        gen_net(dir, opts, name).with_context(|| format!("generating {name}"))?;
+        log::info!("generated {name} artifacts in {:.2}s", t0.elapsed().as_secs_f64());
+    }
+    write_golden_quant(dir)?;
+    write_kernel_stubs(dir, opts)?;
+    write_index(dir, opts)?;
+    Ok(())
+}
+
+/// FNV-1a, for stable per-net seed derivation.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// He-normal parameter init (zeros for biases), python-compatible order.
+pub fn init_params(arch: &Arch, seed: u64) -> Result<Vec<Vec<f32>>> {
+    let specs = arch::param_specs(arch)?;
+    let mut rng = Xoshiro256pp::new(seed);
+    Ok(specs
+        .iter()
+        .map(|s| {
+            if s.fan_in == 0 {
+                vec![0.0; s.elems()]
+            } else {
+                let scale = (2.0 / s.fan_in as f64).sqrt();
+                (0..s.elems()).map(|_| (rng.normal() * scale) as f32).collect()
+            }
+        })
+        .collect())
+}
+
+/// Probe quantizations a kept image's label must survive. The small
+/// nets are the ones the integration tests sweep aggressively; the
+/// ImageNet-scale nets rely on the margin filter alone.
+fn probe_configs(net: &str) -> Vec<(QFormat, QFormat)> {
+    match net {
+        "lenet" => vec![
+            (QFormat::new(1, 6), QFormat::new(8, 3)),
+            (QFormat::new(1, 5), QFormat::new(10, 2)),
+            (QFormat::new(1, 8), QFormat::new(10, 4)),
+        ],
+        "convnet" => vec![(QFormat::new(1, 6), QFormat::new(8, 3))],
+        _ => Vec::new(),
+    }
+}
+
+/// Smooth random "blob" image in [0, 1], shared structure across
+/// channels with per-channel amplitude variation.
+fn gen_image(rng: &mut Xoshiro256pp, h: usize, w: usize, c: usize) -> Vec<f32> {
+    const BLOBS: usize = 4;
+    struct Blob {
+        cy: f32,
+        cx: f32,
+        inv2s2: f32,
+        amp: [f32; 4],
+    }
+    let mut blobs = Vec::with_capacity(BLOBS);
+    for _ in 0..BLOBS {
+        let sigma = rng.uniform_f32(1.5, h as f32 / 3.0);
+        let mut amp = [0f32; 4];
+        let base = rng.uniform_f32(-0.55, 0.55);
+        for a in amp.iter_mut().take(c.min(4)) {
+            *a = base * rng.uniform_f32(0.6, 1.4);
+        }
+        blobs.push(Blob {
+            cy: rng.uniform_f32(0.0, h as f32),
+            cx: rng.uniform_f32(0.0, w as f32),
+            inv2s2: 1.0 / (2.0 * sigma * sigma),
+            amp,
+        });
+    }
+    let mut img = vec![0f32; h * w * c];
+    for y in 0..h {
+        for x in 0..w {
+            let px = &mut img[(y * w + x) * c..][..c];
+            for (ch, v) in px.iter_mut().enumerate() {
+                let mut acc = 0.5f32;
+                for b in &blobs {
+                    let dy = y as f32 - b.cy;
+                    let dx = x as f32 - b.cx;
+                    acc += b.amp[ch.min(3)] * (-(dy * dy + dx * dx) * b.inv2s2).exp();
+                }
+                *v = acc.clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+fn argmax_margin(logits: &[f32]) -> (usize, f32) {
+    let mut best = 0usize;
+    for (i, v) in logits.iter().enumerate() {
+        if *v > logits[best] {
+            best = i;
+        }
+    }
+    let mut second = f32::NEG_INFINITY;
+    for (i, v) in logits.iter().enumerate() {
+        if i != best && *v > second {
+            second = *v;
+        }
+    }
+    (best, logits[best] - second)
+}
+
+fn rms(xs: &[f32]) -> f32 {
+    (xs.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / xs.len() as f64).sqrt() as f32
+}
+
+fn gen_net(dir: &Path, opts: &GenOptions, name: &str) -> Result<()> {
+    let arch = arch::get(name)
+        .ok_or_else(|| anyhow::anyhow!("no architecture registered for {name:?}"))?;
+    let net_seed = opts.seed ^ fnv1a(name);
+    let params = init_params(&arch, net_seed)?;
+    let specs = arch::param_specs(&arch)?;
+    let interp = Interpreter::new(arch.clone(), params)?;
+    let nl = arch.n_layers();
+
+    // Pre-quantize weights for each probe config once.
+    let probes = probe_configs(name);
+    let probe_sets: Vec<(Vec<Vec<f32>>, Vec<QFormat>)> = probes
+        .iter()
+        .map(|&(wq, dq)| (interp.quantize_params(&vec![wq; nl]), vec![dq; nl]))
+        .collect();
+
+    // Candidate filtering: margin threshold + probe-stable label.
+    let (h, w, c) = arch.input_shape;
+    let mut rng = Xoshiro256pp::new(net_seed ^ 0xda7a_da7a);
+    let mut images: Vec<f32> = Vec::with_capacity(opts.n_eval * h * w * c);
+    let mut labels: Vec<i32> = Vec::with_capacity(opts.n_eval);
+    // (margin, image, label) fallback pool if filtering is too strict.
+    let mut rejects: Vec<(f32, Vec<f32>, i32)> = Vec::new();
+    let mut attempts = 0usize;
+    while labels.len() < opts.n_eval && attempts < opts.n_eval * 10 {
+        attempts += 1;
+        let img = gen_image(&mut rng, h, w, c);
+        let logits = interp.forward_fp32(&img)?;
+        let (label, margin) = argmax_margin(&logits);
+        let strong = margin >= 0.05 * (rms(&logits) + 1e-6);
+        let stable = strong
+            && probe_sets.iter().all(|(qp, dq)| {
+                interp
+                    .forward_one(qp, &img, dq, None)
+                    .map(|l| argmax_margin(&l).0 == label)
+                    .unwrap_or(false)
+            });
+        if stable {
+            images.extend_from_slice(&img);
+            labels.push(label as i32);
+        } else {
+            rejects.push((margin, img, label as i32));
+        }
+    }
+    if labels.len() < opts.n_eval {
+        // Backfill with the highest-margin rejects; labels stay the fp32
+        // teacher labels, so the baseline remains exact.
+        rejects.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for (_, img, label) in rejects.into_iter().take(opts.n_eval - labels.len()) {
+            images.extend_from_slice(&img);
+            labels.push(label);
+        }
+        log::warn!("{name}: backfilled eval split from low-margin candidates");
+    }
+    anyhow::ensure!(labels.len() == opts.n_eval, "{name}: only {} eval images", labels.len());
+
+    // Weights NTF.
+    let mut wmap = BTreeMap::new();
+    for (spec, data) in specs.iter().zip(&interp.params) {
+        wmap.insert(spec.name.clone(), Tensor::from_f32(spec.shape.clone(), data.clone())?);
+    }
+    ntf::write_file(&dir.join(format!("{name}.weights.ntf")), &wmap)?;
+
+    // Dataset NTF.
+    let mut dmap = BTreeMap::new();
+    dmap.insert("images".to_string(), Tensor::from_f32(vec![opts.n_eval, h, w, c], images)?);
+    dmap.insert("labels".to_string(), Tensor::from_i32(vec![opts.n_eval], labels)?);
+    ntf::write_file(&dir.join(format!("{name}.dataset.ntf")), &dmap)?;
+
+    // Placeholder HLO (PJRT needs the python build path for real HLO).
+    let stub = hlo_stub(name);
+    crate::util::write_file(&dir.join(format!("{name}.hlo.txt")), stub.as_bytes())?;
+    if name == "alexnet" {
+        crate::util::write_file(&dir.join("alexnet_stages.hlo.txt"), stub.as_bytes())?;
+    }
+
+    // Manifest.
+    let manifest = render_manifest(&arch, opts, name)?;
+    crate::util::write_file(&dir.join(format!("{name}.manifest.json")), manifest.as_bytes())?;
+    Ok(())
+}
+
+fn hlo_stub(name: &str) -> String {
+    format!(
+        "// placeholder HLO for {name} — synthesized by `qbound gen-artifacts`.\n\
+         // The pure-Rust reference backend interprets the graph directly and\n\
+         // never reads this file; the PJRT backend requires real HLO text\n\
+         // produced by the python build path (`make artifacts`).\n"
+    )
+}
+
+fn render_manifest(arch: &Arch, opts: &GenOptions, name: &str) -> Result<String> {
+    let (walks, _) = arch::shape_walk(arch)?;
+    let specs = arch::param_specs(arch)?;
+    let (h, w, c) = arch.input_shape;
+    let mut s = String::with_capacity(4096);
+    s.push_str("{\n");
+    s.push_str(&format!("  \"name\": \"{name}\",\n"));
+    s.push_str(&format!("  \"dataset\": \"{}\",\n", arch.dataset));
+    s.push_str(&format!("  \"num_classes\": {},\n", arch.num_classes));
+    s.push_str(&format!("  \"input_shape\": [{h}, {w}, {c}],\n"));
+    s.push_str(&format!("  \"batch\": {},\n", opts.batch));
+    s.push_str(&format!("  \"n_eval\": {},\n", opts.n_eval));
+    // Teacher labelling makes the fp32 baseline exact by construction.
+    s.push_str("  \"baseline_top1\": 1.0,\n");
+    s.push_str("  \"layers\": [\n");
+    for (i, l) in walks.iter().enumerate() {
+        let stages: Vec<String> =
+            l.stages.iter().map(|st| format!("{{\"name\": \"{st}\"}}")).collect();
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"kind\": \"{}\", \"in_elems\": {}, \"out_elems\": {}, \
+             \"weight_elems\": {}, \"macs\": {}, \"stages\": [{}]}}{}\n",
+            l.name,
+            l.kind,
+            l.in_elems,
+            l.out_elems,
+            l.weight_elems,
+            l.macs,
+            stages.join(", "),
+            if i + 1 < walks.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"params\": [\n");
+    for (i, p) in specs.iter().enumerate() {
+        let dims: Vec<String> = p.shape.iter().map(|d| d.to_string()).collect();
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"shape\": [{}]}}{}\n",
+            p.name,
+            dims.join(", "),
+            if i + 1 < specs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"files\": {{\"hlo\": \"{name}.hlo.txt\", \"weights\": \"{name}.weights.ntf\", \
+         \"dataset\": \"{name}.dataset.ntf\"}},\n"
+    ));
+    if name == "alexnet" {
+        // Fig-1 stage granularity: layer 2 (index 1), stages conv/relu/pool/norm.
+        s.push_str(
+            "  \"stage_variant\": {\"hlo\": \"alexnet_stages.hlo.txt\", \"group_index\": 1, \
+             \"n_stages\": 4, \"stage_names\": [\"conv\", \"relu\", \"pool\", \"norm\"]}\n",
+        );
+    } else {
+        s.push_str("  \"stage_variant\": null\n");
+    }
+    s.push_str("}\n");
+    Ok(s)
+}
+
+fn write_index(dir: &Path, opts: &GenOptions) -> Result<()> {
+    let nets: Vec<String> =
+        arch::NET_ORDER.iter().map(|n| format!("    {{\"name\": \"{n}\"}}")).collect();
+    let index = format!(
+        "{{\n  \"nets\": [\n{}\n  ],\n  \"batch\": {},\n  \"quick\": {},\n  \"kernel_n\": {}\n}}\n",
+        nets.join(",\n"),
+        opts.batch,
+        opts.quick,
+        opts.kernel_n
+    );
+    crate::util::write_file(&dir.join("index.json"), index.as_bytes())
+}
+
+fn write_kernel_stubs(dir: &Path, _opts: &GenOptions) -> Result<()> {
+    for f in ["kernel_rne.hlo.txt", "kernel_sr.hlo.txt"] {
+        crate::util::write_file(&dir.join(f), hlo_stub("standalone-kernel").as_bytes())?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Golden quantization vectors (independent oracle)
+// ---------------------------------------------------------------------------
+
+/// Independent Q(I.F) oracle in f64: explicit round-half-to-even on the
+/// scaled value, saturate, return as f32. Deliberately a *different
+/// implementation path* from [`QFormat::quantize`] (which works in f32
+/// with `round_ties_even`): the golden tests assert the two agree
+/// bit-for-bit, locking the semantics from two directions the same way
+/// the python jnp-oracle/Pallas pair does.
+pub fn golden_quantize(x: f32, ibits: i32, fbits: i32) -> f32 {
+    if ibits < 0 {
+        return x;
+    }
+    let scale = (fbits as f64).exp2();
+    let inv = (-(fbits as f64)).exp2();
+    let hi_pow = ((ibits as f64) - 1.0).exp2();
+    let lo = -hi_pow;
+    let hi = hi_pow - inv;
+    let v = x as f64 * scale;
+    let r = round_half_even(v);
+    ((r * inv).clamp(lo, hi)) as f32
+}
+
+/// Round-half-to-even on f64 without `round_ties_even` (independent path).
+fn round_half_even(v: f64) -> f64 {
+    let fl = v.floor();
+    let diff = v - fl;
+    if diff > 0.5 {
+        fl + 1.0
+    } else if diff < 0.5 {
+        fl
+    } else {
+        // exact tie: pick the even neighbour (|fl| < 2^53 whenever a tie
+        // is representable, so the cast is exact)
+        if (fl as i64) % 2 == 0 {
+            fl
+        } else {
+            fl + 1.0
+        }
+    }
+}
+
+/// The (I, F) grid covered by the golden vectors: paper-range formats
+/// (I+F ≤ 16 keeps every grid point exactly representable in f32, so
+/// the f32 and f64 paths must agree exactly).
+pub fn golden_formats() -> Vec<(i32, i32)> {
+    let mut out = Vec::new();
+    for &i in &[0, 1, 2, 3, 4, 6, 8, 12] {
+        for &f in &[0, 1, 2, 4, 7, 8, 14] {
+            if i + f >= 1 && i + f <= 16 {
+                out.push((i, f));
+            }
+        }
+    }
+    out
+}
+
+/// The golden input vector: boundary values plus deterministic noise at
+/// several scales.
+pub fn golden_inputs() -> Vec<f32> {
+    let mut xs: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        0.25,
+        -0.25,
+        0.375,
+        0.5,
+        -0.5,
+        0.75,
+        1.0,
+        -1.0,
+        1.5,
+        -1.5,
+        2.5,
+        -2.5,
+        7.75,
+        -8.0,
+        1e-8,
+        -1e-8,
+        123.456,
+        -123.456,
+        32767.5,
+        -32768.0,
+        1e6,
+        -1e6,
+        f32::MAX,
+        f32::MIN,
+    ];
+    let mut rng = Xoshiro256pp::new(0x601d);
+    for scale in [0.1f32, 1.0, 16.0, 1024.0, 60000.0] {
+        for _ in 0..96 {
+            xs.push((rng.normal() as f32) * scale);
+        }
+    }
+    xs
+}
+
+fn write_golden_quant(dir: &Path) -> Result<()> {
+    let xs = golden_inputs();
+    let mut map = BTreeMap::new();
+    map.insert("x".to_string(), Tensor::from_f32(vec![xs.len()], xs.clone())?);
+    for (i, f) in golden_formats() {
+        let q: Vec<f32> = xs.iter().map(|&x| golden_quantize(x, i, f)).collect();
+        map.insert(format!("q_{i}_{f}"), Tensor::from_f32(vec![xs.len()], q)?);
+    }
+    map.insert("q_sentinel".to_string(), Tensor::from_f32(vec![xs.len()], xs)?);
+    ntf::write_file(&dir.join("golden_quant.ntf"), &map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_formats_cover_the_grid() {
+        let fmts = golden_formats();
+        assert!(fmts.len() >= 40, "{} formats", fmts.len());
+        assert!(fmts.iter().all(|&(i, f)| i + f >= 1 && i + f <= 16));
+    }
+
+    #[test]
+    fn oracle_matches_host_quantizer_on_the_grid() {
+        let xs = golden_inputs();
+        for (i, f) in golden_formats() {
+            let fmt = QFormat::new(i as i8, f as i8);
+            for &x in &xs {
+                let a = golden_quantize(x, i, f);
+                let b = fmt.quantize(x);
+                assert!(
+                    a.to_bits() == b.to_bits() || (a == 0.0 && b == 0.0),
+                    "Q{i}.{f}: oracle {a:e} vs host {b:e} at x={x:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_sentinel_passthrough() {
+        for &x in &golden_inputs() {
+            assert_eq!(golden_quantize(x, -1, 0).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn round_half_even_reference_cases() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(-2.3), -2.0);
+        assert_eq!(round_half_even(2.7), 3.0);
+    }
+
+    #[test]
+    fn blob_images_are_normalized() {
+        let mut rng = Xoshiro256pp::new(3);
+        let img = gen_image(&mut rng, 16, 16, 3);
+        assert_eq!(img.len(), 16 * 16 * 3);
+        assert!(img.iter().all(|v| (0.0..=1.0).contains(v)));
+        // not constant
+        let (lo, hi) = img.iter().fold((1f32, 0f32), |(l, h), &v| (l.min(v), h.max(v)));
+        assert!(hi - lo > 0.05, "flat image {lo}..{hi}");
+    }
+
+    #[test]
+    fn argmax_margin_basic() {
+        let (l, m) = argmax_margin(&[0.1, 0.9, 0.3]);
+        assert_eq!(l, 1);
+        assert!((m - 0.6).abs() < 1e-6);
+    }
+}

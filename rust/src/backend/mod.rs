@@ -1,0 +1,252 @@
+//! Pluggable execution backends.
+//!
+//! Everything above the runtime — [`crate::eval`], [`crate::coordinator`],
+//! [`crate::search`] — asks one question: *"run a quantized forward batch
+//! of this network and give me the logits"*. This module turns that
+//! question into a trait pair so the answer can come from different
+//! engines:
+//!
+//! * [`Backend`] — a factory bound to one execution technology; it loads
+//!   a network (manifest + weights) into a [`NetExecutor`].
+//! * [`NetExecutor`] — one loaded network with resident weights; `infer`
+//!   runs a single batch under a wire-encoded precision config.
+//!
+//! Two implementations ship today:
+//!
+//! | kind | module | availability |
+//! |---|---|---|
+//! | [`BackendKind::Reference`] | [`reference`] | always (pure Rust) |
+//! | `BackendKind::Pjrt`       | `pjrt`        | `--features pjrt`   |
+//!
+//! The reference backend interprets the CNN forward pass directly from
+//! the architecture registry ([`crate::nets::arch`]) with bit-exact
+//! [`crate::quant::QFormat`] semantics; the PJRT backend executes the
+//! AOT-compiled HLO through the `xla` crate. Selection is explicit
+//! (`--backend` on the CLI) or via the `QBOUND_BACKEND` env var; the
+//! default is the reference backend, which works on any machine.
+//!
+//! Executors are **not** `Send` (the PJRT client is `Rc`-based);
+//! the coordinator gives each worker thread its own backend instance,
+//! created from the `Send + Copy` [`BackendKind`].
+
+pub mod reference;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use anyhow::{bail, Result};
+
+use crate::nets::NetManifest;
+use crate::quant::QFormat;
+
+/// Which executable variant of a network to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// The standard per-layer-precision executable.
+    Standard,
+    /// The Fig-1 stage-granularity executable (extra `sq` input).
+    Stages,
+}
+
+/// A network-execution technology: loads manifests into executors.
+pub trait Backend {
+    /// Human-readable backend name (for logs and reports).
+    fn name(&self) -> &'static str;
+
+    /// Load `manifest` (weights become resident) for `variant`.
+    fn load(&self, manifest: &NetManifest, variant: Variant) -> Result<Box<dyn NetExecutor>>;
+}
+
+/// One loaded network: resident weights, runs quantized forward batches.
+///
+/// `wq`/`dq` are flattened `(L, 2)` wire configs — per layer `(I, F)` as
+/// f32 with `I < 0` meaning the fp32 sentinel (see [`QFormat::wire`]);
+/// `sq` is the per-stage config required by [`Variant::Stages`].
+pub trait NetExecutor {
+    /// The manifest this executor was loaded from.
+    fn manifest(&self) -> &NetManifest;
+
+    /// Which variant was loaded.
+    fn variant(&self) -> Variant;
+
+    /// Cumulative `infer` calls (utilization metrics).
+    fn executions(&self) -> u64;
+
+    /// Execute one batch. `images` is `(batch, H, W, C)` row-major.
+    /// Returns logits, row-major `(batch, num_classes)`.
+    fn infer(&mut self, images: &[f32], wq: &[f32], dq: &[f32], sq: Option<&[f32]>)
+        -> Result<Vec<f32>>;
+
+    /// [`NetExecutor::infer`] with a stable identity for the image batch:
+    /// callers that replay the same batches many times (the eval hot
+    /// path) pass a dense `key` so backends with expensive host→device
+    /// transfers can keep the batch resident. The default ignores the
+    /// hint.
+    fn infer_keyed(
+        &mut self,
+        key: usize,
+        images: &[f32],
+        wq: &[f32],
+        dq: &[f32],
+        sq: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let _ = key;
+        self.infer(images, wq, dq, sq)
+    }
+
+    /// Batch size the network was compiled/loaded for.
+    fn batch(&self) -> usize {
+        self.manifest().batch
+    }
+
+    fn num_classes(&self) -> usize {
+        self.manifest().num_classes
+    }
+}
+
+/// Which backend to instantiate — `Send + Copy`, so it can cross into
+/// coordinator worker threads that then build their own (non-`Send`)
+/// [`Backend`] instance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust interpreted fixed-point forward pass (always available).
+    #[default]
+    Reference,
+    /// AOT-compiled HLO through PJRT (`--features pjrt`).
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI/env spelling: `reference` (aliases `ref`, `interp`)
+    /// or `pjrt` (alias `xla`).
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reference" | "ref" | "interp" => Ok(BackendKind::Reference),
+            #[cfg(feature = "pjrt")]
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" | "xla" => {
+                bail!("backend \"pjrt\" requires building with `--features pjrt`")
+            }
+            other => bail!("unknown backend {other:?} (expected: reference | pjrt)"),
+        }
+    }
+
+    /// Backend selected by `QBOUND_BACKEND`, defaulting to the reference
+    /// backend. An invalid value is an error (not a silent fallback).
+    pub fn from_env() -> Result<BackendKind> {
+        match std::env::var("QBOUND_BACKEND") {
+            Ok(s) if !s.is_empty() => BackendKind::parse(&s),
+            _ => Ok(BackendKind::default()),
+        }
+    }
+
+    /// CLI resolution: an explicit `--backend` value wins; empty falls
+    /// back to [`BackendKind::from_env`].
+    pub fn from_arg_or_env(arg: &str) -> Result<BackendKind> {
+        if arg.trim().is_empty() {
+            BackendKind::from_env()
+        } else {
+            BackendKind::parse(arg)
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Instantiate the backend. The result is thread-local (not `Send`).
+    pub fn create(self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendKind::Reference => Ok(Box::new(reference::ReferenceBackend::new())),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new()?)),
+        }
+    }
+}
+
+/// Shared request validation so every backend rejects malformed inputs
+/// identically (the integration tests lock this behaviour).
+pub(crate) fn validate_request(
+    m: &NetManifest,
+    variant: Variant,
+    n_stages: usize,
+    images: &[f32],
+    wq: &[f32],
+    dq: &[f32],
+    sq: Option<&[f32]>,
+) -> Result<()> {
+    let nl = m.n_layers();
+    if wq.len() != 2 * nl || dq.len() != 2 * nl {
+        bail!("wq/dq must be 2*{nl} floats");
+    }
+    let img_elems: usize = m.input_shape.iter().product::<usize>() * m.batch;
+    if images.len() != img_elems {
+        bail!("images len {} != batch image elems {img_elems}", images.len());
+    }
+    match (variant, sq) {
+        (Variant::Stages, Some(sq)) => {
+            if sq.len() != 2 * n_stages {
+                bail!("sq must be 2*{n_stages} floats");
+            }
+        }
+        (Variant::Stages, None) => bail!("stage variant needs sq"),
+        (Variant::Standard, Some(_)) => bail!("standard variant takes no sq"),
+        (Variant::Standard, None) => {}
+    }
+    Ok(())
+}
+
+/// Decode a flattened `(L, 2)` wire config into per-layer formats.
+pub(crate) fn wire_to_formats(wire: &[f32]) -> Vec<QFormat> {
+    wire.chunks_exact(2).map(|c| QFormat::from_wire(c[0], c[1])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_reference_spellings() {
+        for s in ["reference", "ref", "REF", "interp"] {
+            assert_eq!(BackendKind::parse(s).unwrap(), BackendKind::Reference);
+        }
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_requires_feature() {
+        let err = BackendKind::parse("pjrt").unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "{err}");
+    }
+
+    #[test]
+    fn default_is_reference() {
+        assert_eq!(BackendKind::default(), BackendKind::Reference);
+        assert_eq!(BackendKind::default().label(), "reference");
+    }
+
+    #[test]
+    fn arg_overrides_env_fallback() {
+        // explicit value parses; empty falls through to the env default
+        assert_eq!(BackendKind::from_arg_or_env("reference").unwrap(), BackendKind::Reference);
+        assert!(BackendKind::from_arg_or_env("bogus").is_err());
+        if std::env::var_os("QBOUND_BACKEND").is_none() {
+            assert_eq!(BackendKind::from_arg_or_env("").unwrap(), BackendKind::Reference);
+            assert_eq!(BackendKind::from_arg_or_env("  ").unwrap(), BackendKind::Reference);
+        }
+    }
+
+    #[test]
+    fn wire_decoding() {
+        let fmts = wire_to_formats(&[-1.0, 0.0, 3.0, 4.0]);
+        assert!(fmts[0].is_fp32());
+        assert_eq!(fmts[1], QFormat::new(3, 4));
+    }
+}

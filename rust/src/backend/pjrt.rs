@@ -1,0 +1,110 @@
+//! The PJRT execution backend (`--features pjrt`): AOT-compiled HLO
+//! executables driven through the `xla` crate.
+//!
+//! This is a thin adapter from [`crate::runtime`] (Session/Engine, the
+//! original L3 hot path) onto the [`Backend`]/[`NetExecutor`] traits.
+//! One [`PjrtBackend`] owns one PJRT CPU client; executors share it via
+//! `Rc` (the client is `Rc`-based internally and must stay on one
+//! thread — the coordinator builds one backend per worker).
+//!
+//! `infer_keyed` keeps image batches device-resident per key — the
+//! §Perf optimization the evaluator leans on (disable with
+//! `QBOUND_NO_PRELOAD=1` for A/B benchmarking).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::{validate_request, Backend, NetExecutor, Variant};
+use crate::nets::NetManifest;
+use crate::runtime::{Engine, Session};
+
+/// Factory for PJRT-backed executors (one shared CPU client).
+pub struct PjrtBackend {
+    session: Rc<Session>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { session: Rc::new(Session::cpu()?) })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&self, manifest: &NetManifest, variant: Variant) -> Result<Box<dyn NetExecutor>> {
+        let engine = Engine::load(&self.session, manifest, variant)?;
+        Ok(Box::new(PjrtExecutor {
+            session: Rc::clone(&self.session),
+            engine,
+            image_bufs: HashMap::new(),
+            preload: std::env::var_os("QBOUND_NO_PRELOAD").is_none(),
+        }))
+    }
+}
+
+/// One compiled network executable with device-resident weights.
+pub struct PjrtExecutor {
+    session: Rc<Session>,
+    engine: Engine,
+    /// Device-resident image batches, keyed by the caller's batch id.
+    image_bufs: HashMap<usize, xla::PjRtBuffer>,
+    preload: bool,
+}
+
+impl PjrtExecutor {
+    fn n_stages(&self) -> usize {
+        self.engine.manifest.stage_variant.as_ref().map(|s| s.n_stages).unwrap_or(0)
+    }
+}
+
+impl NetExecutor for PjrtExecutor {
+    fn manifest(&self) -> &NetManifest {
+        &self.engine.manifest
+    }
+
+    fn variant(&self) -> Variant {
+        self.engine.variant
+    }
+
+    fn executions(&self) -> u64 {
+        self.engine.executions.get()
+    }
+
+    fn infer(
+        &mut self,
+        images: &[f32],
+        wq: &[f32],
+        dq: &[f32],
+        sq: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let n_stages = self.n_stages();
+        validate_request(&self.engine.manifest, self.variant(), n_stages, images, wq, dq, sq)?;
+        self.engine.infer(&self.session, images, wq, dq, sq)
+    }
+
+    fn infer_keyed(
+        &mut self,
+        key: usize,
+        images: &[f32],
+        wq: &[f32],
+        dq: &[f32],
+        sq: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let n_stages = self.n_stages();
+        validate_request(&self.engine.manifest, self.variant(), n_stages, images, wq, dq, sq)?;
+        if !self.preload {
+            return self.engine.infer(&self.session, images, wq, dq, sq);
+        }
+        if !self.image_bufs.contains_key(&key) {
+            let buf = self.engine.upload_images(&self.session, images)?;
+            self.image_bufs.insert(key, buf);
+        }
+        let buf = &self.image_bufs[&key];
+        self.engine.infer_prepared(&self.session, buf, wq, dq, sq)
+    }
+}

@@ -1,0 +1,682 @@
+//! The pure-Rust **reference backend**: an interpreted fixed-point CNN
+//! forward pass.
+//!
+//! No XLA, no compiled artifacts — the network graph comes from the
+//! architecture registry ([`crate::nets::arch`]), the trained weights
+//! from the manifest's NTF file, and the quantization semantics are the
+//! host [`QFormat`] quantizer, which is bit-locked to the Pallas kernel
+//! and the jnp oracle by the golden-vector tests. That makes this
+//! backend the *semantic reference* for every other execution engine:
+//! anything a faster backend (PJRT, SIMD, GPU) computes must agree with
+//! it up to fp32 accumulation order.
+//!
+//! Quantization placement mirrors `python/compile/layers.py::apply`
+//! exactly:
+//!   * each group's parameters (weights + biases) are quantized with
+//!     that group's `wq` row,
+//!   * the network input is quantized with `dq[0]`,
+//!   * each group's *output* is quantized with its `dq` row,
+//!   * in [`Variant::Stages`] mode, the stage group's intermediate op
+//!     outputs are quantized with `sq` rows instead of the group's `dq`.
+//!
+//! All arithmetic is fp32 ("convert at layer read/write, compute in
+//! fp32" — paper §2.1).
+
+use anyhow::{bail, Result};
+
+use super::{validate_request, wire_to_formats, Backend, NetExecutor, Variant};
+use crate::nets::arch::{self, same_pad_before, Arch, Op, Padding, Shape};
+use crate::nets::NetManifest;
+use crate::quant::QFormat;
+use crate::tensor::ntf;
+
+/// Factory for [`ReferenceExecutor`]s.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load(&self, manifest: &NetManifest, variant: Variant) -> Result<Box<dyn NetExecutor>> {
+        let arch = arch::get(&manifest.name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "reference backend has no architecture registered for {:?}",
+                manifest.name
+            )
+        })?;
+        arch::check_manifest(&arch, manifest)?;
+
+        // Load weights in manifest order (== arch init order, validated
+        // above), with shape checks like the PJRT engine performs.
+        let mut weights = ntf::read_file(&manifest.weights_path())?;
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let t = weights
+                .remove(&p.name)
+                .ok_or_else(|| anyhow::anyhow!("weights file missing {:?}", p.name))?;
+            if t.dims != p.shape {
+                bail!("{}: shape {:?} != manifest {:?}", p.name, t.dims, p.shape);
+            }
+            params.push(t.as_f32()?.to_vec());
+        }
+
+        let stage_group = match variant {
+            Variant::Standard => None,
+            Variant::Stages => {
+                let sv = manifest
+                    .stage_variant
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("{} has no stage variant", manifest.name))?;
+                let ops = arch
+                    .groups
+                    .get(sv.group_index)
+                    .map(|g| g.ops.len())
+                    .unwrap_or(0);
+                if ops != sv.n_stages {
+                    bail!(
+                        "{}: stage variant declares {} stages but group {} has {} ops",
+                        manifest.name,
+                        sv.n_stages,
+                        sv.group_index,
+                        ops
+                    );
+                }
+                Some(sv.group_index)
+            }
+        };
+
+        let interp = Interpreter::new(arch, params)?;
+        Ok(Box::new(ReferenceExecutor {
+            interp,
+            manifest: manifest.clone(),
+            variant,
+            stage_group,
+            cached_wq: Vec::new(),
+            qparams: Vec::new(),
+            executions: 0,
+        }))
+    }
+}
+
+/// One loaded network on the reference backend.
+pub struct ReferenceExecutor {
+    interp: Interpreter,
+    manifest: NetManifest,
+    variant: Variant,
+    /// Group whose stages get `sq` quantization ([`Variant::Stages`]).
+    stage_group: Option<usize>,
+    /// Weight-quantization memo: formats of `qparams` (empty = not built).
+    cached_wq: Vec<QFormat>,
+    qparams: Vec<Vec<f32>>,
+    executions: u64,
+}
+
+impl ReferenceExecutor {
+    fn n_stages(&self) -> usize {
+        self.manifest.stage_variant.as_ref().map(|s| s.n_stages).unwrap_or(0)
+    }
+}
+
+impl NetExecutor for ReferenceExecutor {
+    fn manifest(&self) -> &NetManifest {
+        &self.manifest
+    }
+
+    fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    fn infer(
+        &mut self,
+        images: &[f32],
+        wq: &[f32],
+        dq: &[f32],
+        sq: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        validate_request(&self.manifest, self.variant, self.n_stages(), images, wq, dq, sq)?;
+        let wfmt = wire_to_formats(wq);
+        let dfmt = wire_to_formats(dq);
+        let sfmt = sq.map(wire_to_formats);
+
+        // Re-quantize the resident weights only when the weight config
+        // changes (an eval sweeps many batches under one config).
+        if self.cached_wq != wfmt {
+            self.qparams = self.interp.quantize_params(&wfmt);
+            self.cached_wq = wfmt;
+        }
+
+        let batch = self.manifest.batch;
+        let elems = self.interp.arch.input_elems();
+        let classes = self.manifest.num_classes;
+        let mut out = Vec::with_capacity(batch * classes);
+        for b in 0..batch {
+            let image = &images[b * elems..(b + 1) * elems];
+            let stage = match (&sfmt, self.stage_group) {
+                (Some(s), Some(g)) => Some((g, s.as_slice())),
+                _ => None,
+            };
+            let logits = self.interp.forward_one(&self.qparams, image, &dfmt, stage)?;
+            out.extend_from_slice(&logits);
+        }
+        self.executions += 1;
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The interpreter
+// ---------------------------------------------------------------------------
+
+/// An activation tensor flowing through the graph (one image).
+#[derive(Clone, Debug)]
+struct Feat {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+/// Interprets an [`Arch`] over a flat parameter list. Independent of
+/// manifests so the artifact generator can run networks it is still
+/// building artifacts for.
+pub struct Interpreter {
+    pub arch: Arch,
+    /// Flat fp32 parameter list, init order.
+    pub params: Vec<Vec<f32>>,
+    /// Parameter count consumed by each group.
+    group_counts: Vec<usize>,
+}
+
+impl Interpreter {
+    pub fn new(arch: Arch, params: Vec<Vec<f32>>) -> Result<Interpreter> {
+        let specs = arch::param_specs(&arch)?;
+        if specs.len() != params.len() {
+            bail!("{}: {} params given, arch wants {}", arch.name, params.len(), specs.len());
+        }
+        for (s, p) in specs.iter().zip(&params) {
+            if s.elems() != p.len() {
+                bail!(
+                    "{}: param {} has {} elems, spec wants {}",
+                    arch.name,
+                    s.name,
+                    p.len(),
+                    s.elems()
+                );
+            }
+        }
+        let group_counts =
+            arch.groups.iter().map(|g| g.ops.iter().map(|o| o.param_count()).sum()).collect();
+        Ok(Interpreter { arch, params, group_counts })
+    }
+
+    /// Quantize every group's parameters with its `wq` row (biases
+    /// included, matching `quantize_group_params` on the python side).
+    pub fn quantize_params(&self, wq: &[QFormat]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut idx = 0usize;
+        for (gi, &count) in self.group_counts.iter().enumerate() {
+            for _ in 0..count {
+                out.push(wq[gi].quantize_vec(&self.params[idx]));
+                idx += 1;
+            }
+        }
+        out
+    }
+
+    /// Forward one image. `qparams` must come from [`Self::quantize_params`]
+    /// (or be `&self.params` for fp32); `stage` is `(group_index, sq_formats)`
+    /// for the Fig-1 stage-granularity mode.
+    pub fn forward_one(
+        &self,
+        qparams: &[Vec<f32>],
+        image: &[f32],
+        dq: &[QFormat],
+        stage: Option<(usize, &[QFormat])>,
+    ) -> Result<Vec<f32>> {
+        let (h, w, c) = self.arch.input_shape;
+        let mut feat = Feat { shape: Shape::Hwc(h, w, c), data: image.to_vec() };
+        dq[0].quantize_slice(&mut feat.data);
+
+        let mut cursor = 0usize;
+        for (gi, g) in self.arch.groups.iter().enumerate() {
+            let stage_here = match stage {
+                Some((sg, fmts)) if sg == gi => Some(fmts),
+                _ => None,
+            };
+            for (oi, op) in g.ops.iter().enumerate() {
+                feat = apply_op(op, feat, qparams, &mut cursor)?;
+                if let Some(fmts) = stage_here {
+                    fmts[oi].quantize_slice(&mut feat.data);
+                }
+            }
+            if stage_here.is_none() {
+                dq[gi].quantize_slice(&mut feat.data);
+            }
+        }
+        if feat.shape != Shape::Flat(self.arch.num_classes) {
+            bail!("{}: output shape {:?}", self.arch.name, feat.shape);
+        }
+        Ok(feat.data)
+    }
+
+    /// Convenience: fp32 logits of one image (teacher labelling, tests).
+    pub fn forward_fp32(&self, image: &[f32]) -> Result<Vec<f32>> {
+        let nl = self.arch.n_layers();
+        self.forward_one(&self.params, image, &vec![QFormat::FP32; nl], None)
+    }
+}
+
+fn apply_op(op: &Op, x: Feat, qparams: &[Vec<f32>], cursor: &mut usize) -> Result<Feat> {
+    Ok(match (op, x.shape) {
+        (&Op::Conv { out_c, k, stride, padding, .. }, Shape::Hwc(h, w, c)) => {
+            let wgt = &qparams[*cursor];
+            let bias = &qparams[*cursor + 1];
+            *cursor += 2;
+            conv2d(&x.data, h, w, c, wgt, bias, out_c, k, stride, padding)
+        }
+        (&Op::Dense { out, .. }, Shape::Flat(n)) => {
+            let wgt = &qparams[*cursor];
+            let bias = &qparams[*cursor + 1];
+            *cursor += 2;
+            dense(&x.data, n, wgt, bias, out)
+        }
+        (Op::ReLU, _) => {
+            let mut x = x;
+            for v in &mut x.data {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            x
+        }
+        (&Op::MaxPool { k, stride }, Shape::Hwc(h, w, c)) => maxpool(&x.data, h, w, c, k, stride),
+        (&Op::AvgPool { k, stride }, Shape::Hwc(h, w, c)) => avgpool(&x.data, h, w, c, k, stride),
+        (Op::GlobalAvgPool, Shape::Hwc(h, w, c)) => {
+            let mut out = vec![0f32; c];
+            for pos in 0..h * w {
+                let row = &x.data[pos * c..(pos + 1) * c];
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o += v;
+                }
+            }
+            let inv = 1.0 / (h * w) as f32;
+            for o in &mut out {
+                *o *= inv;
+            }
+            Feat { shape: Shape::Flat(c), data: out }
+        }
+        (&Op::Lrn { n, alpha, beta }, Shape::Hwc(h, w, c)) => lrn(&x.data, h, w, c, n, alpha, beta),
+        (Op::Flatten, Shape::Hwc(h, w, c)) => {
+            Feat { shape: Shape::Flat(h * w * c), data: x.data }
+        }
+        (Op::Dropout, _) => x,
+        (op @ Op::Inception { .. }, Shape::Hwc(h, w, c)) => {
+            inception(op, &x.data, h, w, c, qparams, cursor)?
+        }
+        (op, s) => bail!("op {op:?} cannot apply to shape {s:?}"),
+    })
+}
+
+/// NHWC × HWIO convolution with bias. Inner loops are laid out so the
+/// output-channel accumulation runs over contiguous memory (both the
+/// filter's last axis and the accumulator) — the auto-vectorizable hot
+/// loop of the whole backend.
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    wgt: &[f32],
+    bias: &[f32],
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    padding: Padding,
+) -> Feat {
+    let (oh, ow) = arch::conv_out_hw(h, w, k, stride, padding);
+    let (pad_y, pad_x) = match padding {
+        Padding::Same => (same_pad_before(h, oh, k, stride), same_pad_before(w, ow, k, stride)),
+        Padding::Valid => (0, 0),
+    };
+    let mut out = vec![0f32; oh * ow * out_c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let acc = &mut out[(oy * ow + ox) * out_c..][..out_c];
+            acc.copy_from_slice(bias);
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad_y as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad_x as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xrow = &x[((iy as usize) * w + ix as usize) * c..][..c];
+                    let wbase = ((ky * k + kx) * c) * out_c;
+                    for (ic, &xv) in xrow.iter().enumerate() {
+                        if xv != 0.0 {
+                            let wrow = &wgt[wbase + ic * out_c..][..out_c];
+                            for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Feat { shape: Shape::Hwc(oh, ow, out_c), data: out }
+}
+
+fn dense(x: &[f32], n: usize, wgt: &[f32], bias: &[f32], out: usize) -> Feat {
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(wgt.len(), n * out);
+    let mut acc = bias.to_vec();
+    for (i, &xv) in x.iter().enumerate() {
+        if xv != 0.0 {
+            let wrow = &wgt[i * out..][..out];
+            for (a, &wv) in acc.iter_mut().zip(wrow) {
+                *a += xv * wv;
+            }
+        }
+    }
+    Feat { shape: Shape::Flat(out), data: acc }
+}
+
+fn maxpool(x: &[f32], h: usize, w: usize, c: usize, k: usize, stride: usize) -> Feat {
+    let (oh, ow) = arch::conv_out_hw(h, w, k, stride, Padding::Same);
+    let pad_y = same_pad_before(h, oh, k, stride);
+    let pad_x = same_pad_before(w, ow, k, stride);
+    let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let acc = &mut out[(oy * ow + ox) * c..][..c];
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad_y as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad_x as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xrow = &x[((iy as usize) * w + ix as usize) * c..][..c];
+                    for (a, &v) in acc.iter_mut().zip(xrow) {
+                        if v > *a {
+                            *a = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Feat { shape: Shape::Hwc(oh, ow, c), data: out }
+}
+
+fn avgpool(x: &[f32], h: usize, w: usize, c: usize, k: usize, stride: usize) -> Feat {
+    let (oh, ow) = arch::conv_out_hw(h, w, k, stride, Padding::Same);
+    let pad_y = same_pad_before(h, oh, k, stride);
+    let pad_x = same_pad_before(w, ow, k, stride);
+    let mut out = vec![0f32; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let acc = &mut out[(oy * ow + ox) * c..][..c];
+            let mut count = 0u32;
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad_y as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad_x as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    count += 1;
+                    let xrow = &x[((iy as usize) * w + ix as usize) * c..][..c];
+                    for (a, &v) in acc.iter_mut().zip(xrow) {
+                        *a += v;
+                    }
+                }
+            }
+            // SAME avg-pool divides by the number of *valid* cells (the
+            // L2 graph computes counts with zero-padded ones).
+            if count > 0 {
+                let inv = 1.0 / count as f32;
+                for a in acc.iter_mut() {
+                    *a *= inv;
+                }
+            }
+        }
+    }
+    Feat { shape: Shape::Hwc(oh, ow, c), data: out }
+}
+
+/// Caffe-style across-channel LRN: `x / (1 + alpha/n * sum_win x^2)^beta`.
+fn lrn(x: &[f32], h: usize, w: usize, c: usize, n: usize, alpha: f32, beta: f32) -> Feat {
+    let half = n / 2;
+    let scale = alpha / n as f32;
+    let mut out = vec![0f32; x.len()];
+    for pos in 0..h * w {
+        let xrow = &x[pos * c..][..c];
+        let orow = &mut out[pos * c..][..c];
+        for ch in 0..c {
+            let lo = ch.saturating_sub(half);
+            let hi = (ch + half).min(c - 1);
+            let mut acc = 0f32;
+            for v in &xrow[lo..=hi] {
+                acc += v * v;
+            }
+            orow[ch] = xrow[ch] / (1.0 + scale * acc).powf(beta);
+        }
+    }
+    Feat { shape: Shape::Hwc(h, w, c), data: out }
+}
+
+fn relu_inplace(f: &mut Feat) {
+    for v in &mut f.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn inception(
+    op: &Op,
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    qparams: &[Vec<f32>],
+    cursor: &mut usize,
+) -> Result<Feat> {
+    let &Op::Inception { b1, b3r, b3, b5r, b5, pp, .. } = op else {
+        bail!("not an inception op");
+    };
+    // Parameter order: b1, b3r, b3, b5r, b5, pp — each (w, b).
+    let mut takes = Vec::with_capacity(12);
+    for _ in 0..12 {
+        takes.push(&qparams[*cursor]);
+        *cursor += 1;
+    }
+    let cv = |x: &[f32], ic: usize, wi: usize, oc: usize, k: usize| -> Feat {
+        let mut f = conv2d(x, h, w, ic, takes[wi], takes[wi + 1], oc, k, 1, Padding::Same);
+        relu_inplace(&mut f);
+        f
+    };
+    let br1 = cv(x, c, 0, b1, 1);
+    let r3 = cv(x, c, 2, b3r, 1);
+    let br3 = cv(&r3.data, b3r, 4, b3, 3);
+    let r5 = cv(x, c, 6, b5r, 1);
+    let br5 = cv(&r5.data, b5r, 8, b5, 5);
+    let pooled = maxpool(x, h, w, c, 3, 1);
+    let brp = cv(&pooled.data, c, 10, pp, 1);
+
+    let out_c = b1 + b3 + b5 + pp;
+    let mut out = vec![0f32; h * w * out_c];
+    for pos in 0..h * w {
+        let dst = &mut out[pos * out_c..][..out_c];
+        dst[..b1].copy_from_slice(&br1.data[pos * b1..][..b1]);
+        dst[b1..b1 + b3].copy_from_slice(&br3.data[pos * b3..][..b3]);
+        dst[b1 + b3..b1 + b3 + b5].copy_from_slice(&br5.data[pos * b5..][..b5]);
+        dst[b1 + b3 + b5..].copy_from_slice(&brp.data[pos * pp..][..pp]);
+    }
+    Ok(Feat { shape: Shape::Hwc(h, w, out_c), data: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::arch::Shape;
+
+    fn feat(h: usize, w: usize, c: usize, data: Vec<f32>) -> Feat {
+        Feat { shape: Shape::Hwc(h, w, c), data }
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 conv with identity weight reproduces the input channel.
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2x2x1
+        let f = conv2d(&x, 2, 2, 1, &[1.0], &[0.0], 1, 1, 1, Padding::Same);
+        assert_eq!(f.data, x);
+        assert_eq!(f.shape, Shape::Hwc(2, 2, 1));
+    }
+
+    #[test]
+    fn conv2d_valid_sums_window() {
+        // 3x3 input, 2x2 kernel of ones, VALID -> 2x2 of window sums.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let f = conv2d(&x, 3, 3, 1, &[1.0; 4], &[0.5], 1, 2, 1, Padding::Valid);
+        assert_eq!(f.shape, Shape::Hwc(2, 2, 1));
+        // windows: (1+2+4+5, 2+3+5+6, 4+5+7+8, 5+6+8+9) + bias
+        assert_eq!(f.data, vec![12.5, 16.5, 24.5, 28.5]);
+    }
+
+    #[test]
+    fn conv2d_same_pads_symmetrically() {
+        // 2x2 input, 3x3 ones kernel SAME: each output sums the valid
+        // 3x3 neighbourhood.
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let f = conv2d(&x, 2, 2, 1, &[1.0; 9], &[0.0], 1, 3, 1, Padding::Same);
+        // every neighbourhood covers all four cells
+        assert_eq!(f.data, vec![10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn dense_matmul() {
+        // x = [1, 2], w = [[1, 10], [100, 1000]], b = [0.5, -0.5]
+        let f = dense(&[1.0, 2.0], 2, &[1.0, 10.0, 100.0, 1000.0], &[0.5, -0.5], 2);
+        assert_eq!(f.data, vec![201.5, 2009.5]);
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let x = vec![1.0, 3.0, 2.0, 4.0]; // 2x2x1
+        let f = maxpool(&x, 2, 2, 1, 2, 2);
+        assert_eq!(f.shape, Shape::Hwc(1, 1, 1));
+        assert_eq!(f.data, vec![4.0]);
+    }
+
+    #[test]
+    fn avgpool_ignores_padding() {
+        // 2x2 input pooled 3x3 stride 2 SAME -> 1x1; only 4 valid cells.
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let f = avgpool(&x, 2, 2, 1, 3, 2);
+        assert_eq!(f.data, vec![2.5]);
+    }
+
+    #[test]
+    fn gap_means_channels() {
+        // 1x2x2: positions [(1, 10), (3, 30)]
+        let x = feat(1, 2, 2, vec![1.0, 10.0, 3.0, 30.0]);
+        let mut cursor = 0;
+        let f = apply_op(&Op::GlobalAvgPool, x, &[], &mut cursor).unwrap();
+        assert_eq!(f.data, vec![2.0, 20.0]);
+        assert_eq!(f.shape, Shape::Flat(2));
+    }
+
+    #[test]
+    fn lrn_identity_for_tiny_activations() {
+        // alpha*x^2 << 1 -> ~identity
+        let f = lrn(&[0.01, -0.02], 1, 1, 2, 5, 1e-4, 0.75);
+        assert!((f.data[0] - 0.01).abs() < 1e-6);
+        assert!((f.data[1] + 0.02).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lrn_shrinks_large_activations() {
+        let f = lrn(&[100.0], 1, 1, 1, 5, 1e-1, 0.75);
+        assert!(f.data[0] < 100.0 * 0.9, "{}", f.data[0]);
+        assert!(f.data[0] > 0.0);
+    }
+
+    #[test]
+    fn relu_and_flatten() {
+        let x = feat(1, 1, 3, vec![-1.0, 0.5, -0.2]);
+        let mut cursor = 0;
+        let f = apply_op(&Op::ReLU, x, &[], &mut cursor).unwrap();
+        assert_eq!(f.data, vec![0.0, 0.5, 0.0]);
+        let f = apply_op(&Op::Flatten, f, &[], &mut cursor).unwrap();
+        assert_eq!(f.shape, Shape::Flat(3));
+    }
+
+    #[test]
+    fn interpreter_runs_lenet_end_to_end() {
+        let arch = arch::get("lenet").unwrap();
+        let specs = arch::param_specs(&arch).unwrap();
+        let mut rng = crate::prng::Xoshiro256pp::new(7);
+        let params: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|s| {
+                if s.fan_in == 0 {
+                    vec![0.0; s.elems()]
+                } else {
+                    let scale = (2.0 / s.fan_in as f64).sqrt();
+                    (0..s.elems()).map(|_| (rng.normal() * scale) as f32).collect()
+                }
+            })
+            .collect();
+        let interp = Interpreter::new(arch, params).unwrap();
+        let image: Vec<f32> = (0..interp.arch.input_elems())
+            .map(|_| rng.uniform_f32(0.0, 1.0))
+            .collect();
+        let logits = interp.forward_fp32(&image).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // deterministic
+        assert_eq!(logits, interp.forward_fp32(&image).unwrap());
+        // fp32 sentinel config == explicit fp32 helper
+        let nl = interp.arch.n_layers();
+        let viaq = interp
+            .forward_one(&interp.params, &image, &vec![QFormat::FP32; nl], None)
+            .unwrap();
+        assert_eq!(logits, viaq);
+    }
+
+    #[test]
+    fn quantize_params_respects_groups() {
+        let arch = arch::get("lenet").unwrap();
+        let specs = arch::param_specs(&arch).unwrap();
+        let params: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.3; s.elems()]).collect();
+        let interp = Interpreter::new(arch, params).unwrap();
+        let mut wq = vec![QFormat::FP32; 4];
+        wq[0] = QFormat::new(1, 1); // L1 rounds 0.3 -> 0.5
+        let q = interp.quantize_params(&wq);
+        assert_eq!(q[0][0], 0.5); // L1.conv.w quantized
+        assert_eq!(q[2][0], 0.3); // L2.conv.w untouched
+    }
+}

@@ -4,8 +4,16 @@
 //! (mean / median / p95 / stddev / min), throughput annotations, and an
 //! aligned text report. `cargo bench` targets build a [`BenchSuite`],
 //! register closures, and call [`BenchSuite::finish`].
+//!
+//! For machine consumption (the CI bench-smoke job archives the perf
+//! trajectory), [`BenchSuite::write_json`] emits `BENCH_<slug>.json`;
+//! [`BenchSuite::finish`] does it automatically when the
+//! `QBOUND_BENCH_JSON` env var names a directory.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Statistics over per-iteration wall-clock samples.
 #[derive(Clone, Debug)]
@@ -154,8 +162,61 @@ impl BenchSuite {
         &self.results
     }
 
-    /// Print the aligned report table; returns it as a string too.
+    /// File-system-safe slug of the suite title.
+    pub fn slug(&self) -> String {
+        let mut s: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        while s.contains("__") {
+            s = s.replace("__", "_");
+        }
+        s.trim_matches('_').to_string()
+    }
+
+    /// Write the results as `BENCH_<slug>.json` into `dir`.
+    pub fn write_json(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        let ns = |d: Duration| Json::num(d.as_nanos() as f64);
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.stats.iters as f64)),
+                    ("mean_ns", ns(r.stats.mean)),
+                    ("median_ns", ns(r.stats.median)),
+                    ("p95_ns", ns(r.stats.p95)),
+                    ("min_ns", ns(r.stats.min)),
+                    ("stddev_ns", ns(r.stats.stddev)),
+                    ("elems_per_iter", r.elems_per_iter.map(Json::num).unwrap_or(Json::Null)),
+                    ("bytes_per_iter", r.bytes_per_iter.map(Json::num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("title", Json::str(self.title.clone())),
+            ("results", Json::arr(results)),
+        ]);
+        let path = dir.join(format!("BENCH_{}.json", self.slug()));
+        crate::util::write_file(&path, doc.pretty().as_bytes())?;
+        Ok(path)
+    }
+
+    /// Print the aligned report table; returns it as a string too. When
+    /// `QBOUND_BENCH_JSON` names a directory, also writes
+    /// [`BenchSuite::write_json`] there.
     pub fn finish(&self) -> String {
+        if let Ok(dir) = std::env::var("QBOUND_BENCH_JSON") {
+            if !dir.is_empty() {
+                match self.write_json(Path::new(&dir)) {
+                    Ok(p) => eprintln!("  bench json -> {}", p.display()),
+                    Err(e) => eprintln!("  bench json failed: {e:#}"),
+                }
+            }
+        }
         let mut out = String::new();
         out.push_str(&format!("\n== {} ==\n", self.title));
         out.push_str(&format!(
@@ -222,5 +283,28 @@ mod tests {
         let mut suite = BenchSuite::new("once");
         suite.record_once("phase", Duration::from_millis(123));
         assert!(suite.finish().contains("phase"));
+    }
+
+    #[test]
+    fn slug_is_filesystem_safe() {
+        let suite = BenchSuite::new("engine inference (per batch) + eval cache");
+        assert_eq!(suite.slug(), "engine_inference_per_batch_eval_cache");
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let tmp = std::env::temp_dir().join(format!("qbound-benchjson-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let mut suite = BenchSuite::new("json smoke");
+        suite.record_once("phase", Duration::from_millis(5));
+        let path = suite.write_json(&tmp).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap().starts_with("BENCH_"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.at(&["title"]).as_str(), Some("json smoke"));
+        let rs = j.at(&["results"]).as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert!(rs[0].at(&["mean_ns"]).as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_dir_all(&tmp);
     }
 }

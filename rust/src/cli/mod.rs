@@ -32,7 +32,8 @@ impl CmdSpec {
     }
 
     pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
-        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false, required: false });
+        let default = Some(default);
+        self.opts.push(OptSpec { name, help, default, is_flag: false, required: false });
         self
     }
 
@@ -96,11 +97,9 @@ impl CmdSpec {
                     Some((k, v)) => (k.to_string(), Some(v.to_string())),
                     None => (stripped.to_string(), None),
                 };
-                let spec = self
-                    .opts
-                    .iter()
-                    .find(|o| o.name == key)
-                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.help("qbound")))?;
+                let spec = self.opts.iter().find(|o| o.name == key).ok_or_else(|| {
+                    anyhow::anyhow!("unknown option --{key}\n\n{}", self.help("qbound"))
+                })?;
                 if spec.is_flag {
                     if inline_val.is_some() {
                         bail!("--{key} is a flag and takes no value");

@@ -1,6 +1,7 @@
 //! `qbound eval` — accuracy of one precision configuration.
 
 use anyhow::Result;
+use qbound::backend::BackendKind;
 use qbound::cli::CmdSpec;
 use qbound::coordinator::{Coordinator, EvalJob};
 use qbound::nets::NetManifest;
@@ -25,7 +26,8 @@ pub fn run(args: &[String]) -> Result<()> {
             "",
         )
         .opt("n-images", "images to evaluate (0 = full split)", "0")
-        .opt("workers", "worker threads (0 = one per core)", "0");
+        .opt("workers", "worker threads (0 = one per core)", "0")
+        .opt("backend", "execution backend: reference | pjrt (default: env or reference)", "");
     let a = spec.parse(args)?;
 
     let dir = util::artifacts_dir()?;
@@ -51,7 +53,8 @@ pub fn run(args: &[String]) -> Result<()> {
         cfg.wq = per_layer(a.str("weights-per-layer"))?;
     }
 
-    let mut coord = Coordinator::new(&dir, a.usize("workers")?)?;
+    let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
+    let mut coord = Coordinator::with_backend(&dir, a.usize("workers")?, backend)?;
     let n_images = a.usize("n-images")?;
     let base = coord.eval_one(EvalJob {
         net: net.clone(),

@@ -1,0 +1,58 @@
+//! `qbound gen-artifacts` — synthesize a pure-Rust artifact set.
+//!
+//! Produces everything the reference backend, the search stack, the
+//! benches and the integration tests need — manifests, He-initialized
+//! weights, teacher-labelled eval splits, golden quantization vectors —
+//! without the python/JAX build path. See [`qbound::artifacts`].
+
+use anyhow::Result;
+use qbound::artifacts::{self, GenOptions};
+use qbound::cli::CmdSpec;
+use qbound::nets::{ArtifactIndex, NetManifest};
+use qbound::util;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("gen-artifacts", "synthesize a pure-Rust artifact set")
+        .opt("out", "output directory", "artifacts")
+        .opt("seed", "generator seed (hex or decimal; empty = built-in)", "")
+        .opt("n-eval", "eval images per network", "256");
+    let a = spec.parse(args)?;
+
+    let mut opts = GenOptions::default();
+    let seed = a.str("seed");
+    if !seed.is_empty() {
+        opts.seed = match seed.strip_prefix("0x") {
+            Some(hex) => u64::from_str_radix(hex, 16)
+                .map_err(|e| anyhow::anyhow!("--seed: {e}"))?,
+            None => seed.parse().map_err(|e| anyhow::anyhow!("--seed: {e}"))?,
+        };
+    }
+    opts.n_eval = a.usize("n-eval")?;
+    anyhow::ensure!(opts.n_eval >= opts.batch, "--n-eval must be at least {}", opts.batch);
+
+    let dir = std::path::PathBuf::from(a.str("out"));
+    let t0 = std::time::Instant::now();
+    artifacts::generate(&dir, &opts)?;
+
+    // Summarize what was written (also proves the manifests re-parse).
+    let index = ArtifactIndex::load(&dir)?;
+    println!(
+        "artifacts: {} ({} nets, batch={}, n_eval={}, {:.1}s)",
+        dir.display(),
+        index.nets.len(),
+        index.batch,
+        opts.n_eval,
+        t0.elapsed().as_secs_f64()
+    );
+    for net in &index.nets {
+        let m = NetManifest::load(&dir, net)?;
+        println!(
+            "  {:<10} {} layers  {:>8} weights  {:>8} MACs/img",
+            m.name,
+            m.n_layers(),
+            util::human_count(m.total_weights() as f64),
+            util::human_count(m.total_macs() as f64),
+        );
+    }
+    Ok(())
+}

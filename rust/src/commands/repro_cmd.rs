@@ -1,6 +1,7 @@
 //! `qbound repro` — regenerate the paper's tables and figures.
 
 use anyhow::Result;
+use qbound::backend::BackendKind;
 use qbound::cli::CmdSpec;
 use qbound::repro::{self, ReproCtx};
 
@@ -13,13 +14,15 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("net", "network for `ablation` policy study", "convnet")
         .opt("out-dir", "report directory", "reports")
         .opt("n-images", "images per evaluation (0 = full split)", "256")
-        .opt("workers", "worker threads (0 = one per core)", "0");
+        .opt("workers", "worker threads (0 = one per core)", "0")
+        .opt("backend", "execution backend: reference | pjrt (default: env or reference)", "");
     let a = spec.parse(args)?;
     let exp = a.positional(0).unwrap_or("all").to_string();
-    let mut ctx = ReproCtx::new(
+    let mut ctx = ReproCtx::with_backend(
         std::path::Path::new(a.str("out-dir")),
         a.usize("workers")?,
         a.usize("n-images")?,
+        BackendKind::from_arg_or_env(a.str("backend"))?,
     )?;
     let t0 = std::time::Instant::now();
     match exp.as_str() {

@@ -1,6 +1,7 @@
 //! `qbound search` — the §2.5 greedy descent for one network.
 
 use anyhow::Result;
+use qbound::backend::BackendKind;
 use qbound::cli::CmdSpec;
 use qbound::report::{pct, ratio, Table};
 use qbound::repro::{self, ReproCtx};
@@ -11,12 +12,14 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("net", "network name", "lenet")
         .opt("n-images", "images per evaluation (0 = full)", "256")
         .opt("workers", "worker threads (0 = one per core)", "0")
-        .opt("out-dir", "report directory", "reports");
+        .opt("out-dir", "report directory", "reports")
+        .opt("backend", "execution backend: reference | pjrt (default: env or reference)", "");
     let a = spec.parse(args)?;
-    let mut ctx = ReproCtx::new(
+    let mut ctx = ReproCtx::with_backend(
         std::path::Path::new(a.str("out-dir")),
         a.usize("workers")?,
         a.usize("n-images")?,
+        BackendKind::from_arg_or_env(a.str("backend"))?,
     )?;
     let net = a.str("net").to_string();
     let dse = repro::explore_net(&mut ctx, &net)?;

@@ -4,6 +4,7 @@
 use std::time::Duration;
 
 use anyhow::Result;
+use qbound::backend::BackendKind;
 use qbound::cli::CmdSpec;
 use qbound::coordinator::{Coordinator, EvalJob};
 use qbound::nets::NetManifest;
@@ -22,7 +23,8 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("data", "data format I.F (or fp32)", "10.2")
         .opt("batches-per-request", "eval batches per request", "1")
         .opt("workers", "worker threads (0 = one per core)", "0")
-        .opt("seed", "arrival-process seed", "42");
+        .opt("seed", "arrival-process seed", "42")
+        .opt("backend", "execution backend: reference | pjrt (default: env or reference)", "");
     let a = spec.parse(args)?;
     let dir = util::artifacts_dir()?;
     let net = a.str("net").to_string();
@@ -36,8 +38,9 @@ pub fn run(args: &[String]) -> Result<()> {
     let rate = a.f64("rate")?;
     let n_images = a.usize("batches-per-request")? * m.batch;
 
-    let mut coord = Coordinator::new(&dir, a.usize("workers")?)?;
-    // Warm the engines (compile once, off the clock) with the fp32 config.
+    let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
+    let mut coord = Coordinator::with_backend(&dir, a.usize("workers")?, backend)?;
+    // Warm the executors (load once, off the clock) with the fp32 config.
     coord.eval_one(EvalJob {
         net: net.clone(),
         cfg: PrecisionConfig::fp32(m.n_layers()),
@@ -71,7 +74,10 @@ pub fn run(args: &[String]) -> Result<()> {
     sorted.sort_unstable();
     let p = |q: f64| sorted[((sorted.len() - 1) as f64 * q) as usize];
     let tr = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &cfg);
-    println!("serve — {net} @ {} req, {} imgs/req, rate {rate}/s, {} workers", n_req, n_images, coord.n_workers);
+    println!(
+        "serve — {net} @ {} req, {} imgs/req, rate {rate}/s, {} workers",
+        n_req, n_images, coord.n_workers
+    );
     println!("  config            {cfg}");
     println!("  traffic ratio     {tr:.3} vs fp32 ({:.0}% reduction)", (1.0 - tr) * 100.0);
     println!("  wall time         {}", util::human_duration(wall));

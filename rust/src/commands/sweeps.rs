@@ -1,6 +1,7 @@
 //! `qbound sweep-uniform` / `qbound sweep-layer`.
 
 use anyhow::Result;
+use qbound::backend::BackendKind;
 use qbound::cli::CmdSpec;
 use qbound::coordinator::Coordinator;
 use qbound::nets::NetManifest;
@@ -24,13 +25,15 @@ pub fn run_uniform(args: &[String]) -> Result<()> {
         .opt("min", "minimum bits", "1")
         .opt("max", "maximum bits", "12")
         .opt("n-images", "images per evaluation (0 = full)", "0")
-        .opt("workers", "worker threads (0 = one per core)", "0");
+        .opt("workers", "worker threads (0 = one per core)", "0")
+        .opt("backend", "execution backend: reference | pjrt (default: env or reference)", "");
     let a = spec.parse(args)?;
     let dir = util::artifacts_dir()?;
     let net = a.str("net").to_string();
     let m = NetManifest::load(&dir, &net)?;
     let param = parse_param(a.str("param"))?;
-    let mut coord = Coordinator::new(&dir, a.usize("workers")?)?;
+    let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
+    let mut coord = Coordinator::with_backend(&dir, a.usize("workers")?, backend)?;
 
     let pts = uniform::sweep(
         &mut coord,
@@ -65,7 +68,8 @@ pub fn run_layer(args: &[String]) -> Result<()> {
         .opt("min", "minimum bits", "1")
         .opt("max", "maximum bits", "12")
         .opt("n-images", "images per evaluation (0 = full)", "0")
-        .opt("workers", "worker threads (0 = one per core)", "0");
+        .opt("workers", "worker threads (0 = one per core)", "0")
+        .opt("backend", "execution backend: reference | pjrt (default: env or reference)", "");
     let a = spec.parse(args)?;
     let dir = util::artifacts_dir()?;
     let net = a.str("net").to_string();
@@ -73,7 +77,8 @@ pub fn run_layer(args: &[String]) -> Result<()> {
     let param = parse_param(a.str("param"))?;
     let range = (a.i32("min")? as i8, a.i32("max")? as i8);
     let n_images = a.usize("n-images")?;
-    let mut coord = Coordinator::new(&dir, a.usize("workers")?)?;
+    let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
+    let mut coord = Coordinator::with_backend(&dir, a.usize("workers")?, backend)?;
 
     let layers: Vec<usize> = if a.str("layer") == "all" {
         (0..m.n_layers()).collect()
@@ -100,7 +105,11 @@ pub fn run_layer(args: &[String]) -> Result<()> {
             uniform::min_bits_within(series, 0.01)
                 .map(|b| b.to_string())
                 .unwrap_or("-".into()),
-            series.iter().map(|p| format!("{}:{:.3}", p.bits, p.relative)).collect::<Vec<_>>().join(" "),
+            series
+                .iter()
+                .map(|p| format!("{}:{:.3}", p.bits, p.relative))
+                .collect::<Vec<_>>()
+                .join(" "),
         ]);
     }
     print!("{}", t.text());

@@ -8,9 +8,9 @@
 //!   * deduplicates identical jobs within a burst,
 //!   * consults a global memo cache (shared across workers and bursts),
 //!   * dispatches remaining work over N worker threads — each worker owns
-//!     its own PJRT CPU client (+ per-net engines with device-resident
-//!     weights, created lazily on first use), because `PjRtClient` is
-//!     `Rc`-based and must not cross threads,
+//!     its own backend instance (+ per-net executors with resident
+//!     weights, created lazily on first use), because executors are not
+//!     `Send` (the PJRT client is `Rc`-based) and must not cross threads,
 //!   * preserves job order in the returned results.
 //!
 //! `tokio` is unavailable offline; the pool is std threads + mpsc channels
@@ -24,9 +24,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::backend::{Backend, BackendKind};
 use crate::eval::Evaluator;
 use crate::nets::{ArtifactIndex, NetManifest};
-use crate::runtime::Session;
 use crate::search::space::PrecisionConfig;
 
 /// One unit of work: evaluate top-1 accuracy of `cfg` on `net`.
@@ -61,6 +61,7 @@ pub struct Coordinator {
     stats: Arc<Stats>,
     next_id: u64,
     pub n_workers: usize,
+    pub backend: BackendKind,
 }
 
 #[derive(Default)]
@@ -73,18 +74,29 @@ struct Stats {
     busy_ns: AtomicU64,
 }
 
-/// Worker-count heuristic: one worker per available core. Each worker
-/// owns a full XLA CPU client with its own thread pool; oversubscribing
-/// cores makes bursts *slower* (measured 2.2× on a 1-core box — see
-/// EXPERIMENTS.md §Perf), so the default never exceeds the core count.
+/// Worker-count heuristic: one worker per available core. Workers run
+/// compute-bound forward passes (and a PJRT worker owns a full XLA CPU
+/// client with its own thread pool); oversubscribing cores makes bursts
+/// *slower* (measured 2.2× on a 1-core box — see EXPERIMENTS.md
+/// §Perf), so the default never exceeds the core count.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl Coordinator {
     /// Start `n_workers` workers (0 = auto, one per core) serving the
-    /// networks listed in the artifact index at `dir`.
+    /// networks listed in the artifact index at `dir`, on the backend
+    /// selected by `QBOUND_BACKEND` (default: reference).
     pub fn new(dir: &std::path::Path, n_workers: usize) -> Result<Coordinator> {
+        Coordinator::with_backend(dir, n_workers, BackendKind::from_env()?)
+    }
+
+    /// [`Coordinator::new`] with an explicit execution backend.
+    pub fn with_backend(
+        dir: &std::path::Path,
+        n_workers: usize,
+        backend: BackendKind,
+    ) -> Result<Coordinator> {
         let n_workers = if n_workers == 0 { default_workers() } else { n_workers };
         let index = ArtifactIndex::load(dir)?;
         let manifests: Arc<Vec<NetManifest>> = Arc::new(
@@ -111,7 +123,7 @@ impl Coordinator {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("qbound-worker-{wid}"))
-                    .spawn(move || worker_loop(job_rx, done_tx, manifests, cache, stats))
+                    .spawn(move || worker_loop(job_rx, done_tx, manifests, cache, stats, backend))
                     .context("spawning worker")?,
             );
         }
@@ -123,6 +135,7 @@ impl Coordinator {
             stats,
             next_id: 0,
             n_workers,
+            backend,
         })
     }
 
@@ -265,13 +278,14 @@ fn worker_loop(
     manifests: Arc<Vec<NetManifest>>,
     cache: Arc<Mutex<HashMap<EvalJob, f64>>>,
     stats: Arc<Stats>,
+    kind: BackendKind,
 ) {
-    // Session + evaluators are created lazily: a worker that never sees a
-    // googlenet job never compiles googlenet.
-    let session = match Session::cpu() {
-        Ok(s) => s,
+    // Backend + evaluators are created lazily per worker: a worker that
+    // never sees a googlenet job never loads googlenet.
+    let backend = match kind.create() {
+        Ok(b) => b,
         Err(e) => {
-            log::error!("worker failed to create PJRT client: {e}");
+            log::error!("worker failed to create {} backend: {e:#}", kind.label());
             return;
         }
     };
@@ -283,7 +297,7 @@ fn worker_loop(
             Err(_) => return, // coordinator dropped
         };
         let t0 = Instant::now();
-        let res = run_job(&session, &mut evaluators, &manifests, &job);
+        let res = run_job(backend.as_ref(), &mut evaluators, &manifests, &job);
         stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         stats.executed.fetch_add(1, Ordering::Relaxed);
         if let Ok(v) = res {
@@ -298,7 +312,7 @@ fn worker_loop(
 }
 
 fn run_job(
-    session: &Session,
+    backend: &dyn Backend,
     evaluators: &mut HashMap<String, Evaluator>,
     manifests: &[NetManifest],
     job: &EvalJob,
@@ -309,10 +323,10 @@ fn run_job(
             .find(|m| m.name == job.net)
             .ok_or_else(|| anyhow::anyhow!("unknown net {:?}", job.net))?;
         let t0 = Instant::now();
-        let ev = Evaluator::new(session, m)?;
-        log::debug!("worker compiled {} in {:?}", job.net, t0.elapsed());
+        let ev = Evaluator::new(backend, m)?;
+        log::debug!("worker loaded {} in {:?}", job.net, t0.elapsed());
         evaluators.insert(job.net.clone(), ev);
     }
     let ev = evaluators.get_mut(&job.net).unwrap();
-    ev.accuracy(session, &job.cfg, job.n_images)
+    ev.accuracy(&job.cfg, job.n_images)
 }

@@ -1,18 +1,24 @@
 //! Batched top-1 evaluation with config-keyed memoization.
 //!
-//! An [`Evaluator`] owns an [`Engine`] plus the network's eval dataset and
-//! answers "what is top-1 accuracy under precision config C?" — the single
-//! query every experiment in the paper is built from. Results are memoized
-//! by (config, n_images): sweeps and the greedy search revisit
-//! configurations constantly (the fp32 baseline alone is consulted once
-//! per tolerance level), and a cache hit must cost ~ns, not a forward pass.
+//! An [`Evaluator`] owns a loaded [`NetExecutor`] plus the network's eval
+//! dataset and answers "what is top-1 accuracy under precision config
+//! C?" — the single query every experiment in the paper is built from.
+//! Results are memoized by (config, n_images): sweeps and the greedy
+//! search revisit configurations constantly (the fp32 baseline alone is
+//! consulted once per tolerance level), and a cache hit must cost ~ns,
+//! not a forward pass.
+//!
+//! The evaluator is backend-agnostic: it drives whatever
+//! [`crate::backend::Backend`] loaded the network. Batches are replayed
+//! through [`NetExecutor::infer_keyed`] so backends with expensive
+//! host→device transfers (PJRT) can keep them resident.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use crate::backend::{Backend, NetExecutor, Variant};
 use crate::nets::NetManifest;
-use crate::runtime::{Engine, Session, Variant};
 use crate::search::space::PrecisionConfig;
 use crate::tensor::ntf;
 
@@ -81,29 +87,19 @@ pub fn top1(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
 
 /// Accuracy evaluator for one network on one thread.
 pub struct Evaluator {
-    pub engine: Engine,
+    pub exec: Box<dyn NetExecutor>,
     pub dataset: Dataset,
     cache: HashMap<(PrecisionConfig, usize), f64>,
-    /// Device-resident eval batches (uploaded once; §Perf optimization —
-    /// disable with QBOUND_NO_PRELOAD=1 for A/B benchmarking).
-    image_bufs: Vec<xla::PjRtBuffer>,
     /// Counters for cache instrumentation.
     pub hits: u64,
     pub misses: u64,
 }
 
 impl Evaluator {
-    pub fn new(session: &Session, manifest: &NetManifest) -> Result<Evaluator> {
-        let engine = Engine::load(session, manifest, Variant::Standard)?;
+    pub fn new(backend: &dyn Backend, manifest: &NetManifest) -> Result<Evaluator> {
+        let exec = backend.load(manifest, Variant::Standard)?;
         let dataset = Dataset::load(manifest)?;
-        let mut image_bufs = Vec::new();
-        if std::env::var_os("QBOUND_NO_PRELOAD").is_none() {
-            let batch = engine.batch;
-            for b in 0..dataset.n / batch {
-                image_bufs.push(engine.upload_images(session, dataset.batch_images(b, batch))?);
-            }
-        }
-        Ok(Evaluator { engine, dataset, cache: HashMap::new(), image_bufs, hits: 0, misses: 0 })
+        Ok(Evaluator { exec, dataset, cache: HashMap::new(), hits: 0, misses: 0 })
     }
 
     /// Number of images available.
@@ -113,9 +109,9 @@ impl Evaluator {
 
     /// Top-1 accuracy of `cfg` over the first `n_images` (rounded down to
     /// whole batches; `0` means the full eval set). Memoized.
-    pub fn accuracy(&mut self, session: &Session, cfg: &PrecisionConfig, n_images: usize) -> Result<f64> {
+    pub fn accuracy(&mut self, cfg: &PrecisionConfig, n_images: usize) -> Result<f64> {
         let n = if n_images == 0 { self.dataset.n } else { n_images.min(self.dataset.n) };
-        let batch = self.engine.batch;
+        let batch = self.exec.batch();
         let n_batches = n / batch;
         if n_batches == 0 {
             bail!("n_images {n} < batch {batch}");
@@ -128,16 +124,13 @@ impl Evaluator {
         self.misses += 1;
         let wq = cfg.wire_wq();
         let dq = cfg.wire_dq();
-        let classes = self.engine.num_classes();
+        let classes = self.exec.num_classes();
         let mut correct = 0.0f64;
         for b in 0..n_batches {
-            let logits = if b < self.image_bufs.len() {
-                self.engine.infer_prepared(session, &self.image_bufs[b], &wq, &dq, None)?
-            } else {
-                self.engine.infer(session, self.dataset.batch_images(b, batch), &wq, &dq, None)?
-            };
-            correct += top1(&logits, self.dataset.batch_labels(b, batch), classes)
-                * batch as f64;
+            let logits =
+                self.exec.infer_keyed(b, self.dataset.batch_images(b, batch), &wq, &dq, None)?;
+            correct +=
+                top1(&logits, self.dataset.batch_labels(b, batch), classes) * batch as f64;
         }
         let acc = correct / (n_batches * batch) as f64;
         self.cache.insert(key, acc);
@@ -146,14 +139,9 @@ impl Evaluator {
 
     /// Relative accuracy loss vs the fp32 baseline (paper's "error"):
     /// `(base - acc) / base`.
-    pub fn relative_error(
-        &mut self,
-        session: &Session,
-        cfg: &PrecisionConfig,
-        n_images: usize,
-    ) -> Result<f64> {
-        let base = self.accuracy(session, &PrecisionConfig::fp32(cfg.n_layers()), n_images)?;
-        let acc = self.accuracy(session, cfg, n_images)?;
+    pub fn relative_error(&mut self, cfg: &PrecisionConfig, n_images: usize) -> Result<f64> {
+        let base = self.accuracy(&PrecisionConfig::fp32(cfg.n_layers()), n_images)?;
+        let acc = self.accuracy(cfg, n_images)?;
         Ok((base - acc) / base)
     }
 

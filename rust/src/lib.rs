@@ -9,27 +9,37 @@
 //! * **L2** — JAX forward graphs for the paper's five CNNs with per-layer
 //!   precision as *runtime operands* (`python/compile/`), AOT-lowered to
 //!   HLO text,
-//! * **L3** — this crate: the coordinator that loads the compiled
-//!   executables through PJRT (`xla` crate) and drives the paper's
-//!   characterization sweeps, traffic model, and precision search.
+//! * **L3** — this crate: the coordinator that drives the paper's
+//!   characterization sweeps, traffic model, and precision search over a
+//!   pluggable execution backend.
 //!
-//! Python never runs on the request path; after `make artifacts` the rust
-//! binary is self-contained.
+//! Execution is backend-agnostic ([`backend`]): the default **reference
+//! backend** interprets the fixed-point forward pass in pure Rust (no
+//! native deps — this is what CI runs), while `--features pjrt` adds the
+//! PJRT backend that executes the AOT-compiled HLO. Artifacts come from
+//! the python build path (`make artifacts`) or from the pure-Rust
+//! synthesizer ([`artifacts`], `qbound gen-artifacts`).
 //!
 //! ## Module map
 //!
 //! | module | role |
 //! |---|---|
 //! | [`quant`] | the Q(I.F) fixed-point format and host-side quantizer |
-//! | [`nets`] | network manifests (layers, params, counts) |
+//! | [`nets`] | network manifests + the architecture registry ([`nets::arch`]) |
+//! | [`backend`] | `Backend`/`NetExecutor` traits, reference + PJRT impls |
+//! | [`artifacts`] | pure-Rust synthetic artifact generation + golden oracle |
 //! | [`traffic`] | the paper's Fig-4 memory-access model |
-//! | [`runtime`] | PJRT engine: load HLO text, execute with resident weights |
+//! | `runtime` | PJRT engine (behind `--features pjrt`) |
 //! | [`eval`] | batched top-1 evaluation with config-keyed memoization |
-//! | [`coordinator`] | worker-pool evaluation service (one engine/thread) |
+//! | [`coordinator`] | worker-pool evaluation service (one backend/thread) |
 //! | [`search`] | uniform/per-layer sweeps, greedy descent, Pareto, Table 2 |
 //! | [`report`] | tables, ASCII charts, CSV/markdown emitters |
 //! | [`tensor`], [`util`], [`cli`], [`prng`], [`testkit`], [`benchkit`] | substrates |
 
+#![allow(clippy::too_many_arguments, clippy::type_complexity)]
+
+pub mod artifacts;
+pub mod backend;
 pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
@@ -39,6 +49,7 @@ pub mod prng;
 pub mod quant;
 pub mod report;
 pub mod repro;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod search;
 pub mod tensor;

@@ -9,6 +9,7 @@
 //!   traffic                  Fig-4 traffic model
 //!   repro <exp>              regenerate a paper table/figure (or `all`)
 //!   serve                    replay a Poisson request stream (E2E driver)
+//!   gen-artifacts            synthesize a pure-Rust artifact set
 
 use anyhow::Result;
 use qbound::cli::CmdSpec;
@@ -39,6 +40,7 @@ COMMANDS:
   traffic        memory-traffic model (paper Fig 4)
   repro          regenerate paper experiments: table1 fig1 fig2 fig3 fig4 fig5 table2 all
   serve          serve a timed classification request stream (E2E driver)
+  gen-artifacts  synthesize a pure-Rust artifact set (no python needed)
 
 Run `qbound <COMMAND> --help` for options.
 "
@@ -60,6 +62,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "traffic" => commands::traffic_cmd::run(rest),
         "repro" => commands::repro_cmd::run(rest),
         "serve" => commands::serve::run(rest),
+        "gen-artifacts" => commands::gen_artifacts::run(rest),
         "--help" | "-h" | "help" => {
             print!("{}", usage());
             Ok(())

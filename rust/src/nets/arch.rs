@@ -1,0 +1,686 @@
+//! The five CNN architectures of the paper, as executable graph
+//! descriptions — the rust mirror of `python/compile/nets.py`.
+//!
+//! The python build path and this registry describe the **same**
+//! networks: op kinds, kernel sizes, channel widths, grouping of stages
+//! into precision "layers", parameter order. The shape/weight/MAC walk
+//! here reproduces `python/compile/layers.py::shape_walk` exactly, and
+//! [`check_manifest`] cross-validates a loaded artifact manifest against
+//! this registry — so the pure-Rust reference backend
+//! ([`crate::backend::reference`]) is guaranteed to interpret the graph
+//! the artifacts were built from, and drift between the two languages is
+//! caught at load time rather than as silent accuracy skew.
+//!
+//! Shapes use NHWC; conv filters are HWIO, exactly like the L2 JAX
+//! graphs.
+
+use anyhow::{bail, Result};
+
+use super::NetManifest;
+
+/// Padding mode of a convolution (pools are always SAME, as in L2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+/// One computational stage inside a precision layer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// 2-D convolution, NHWC × HWIO → NHWC, with bias.
+    Conv { name: &'static str, out_c: usize, k: usize, stride: usize, padding: Padding },
+    /// Fully-connected layer (expects flattened input), with bias.
+    Dense { name: &'static str, out: usize },
+    ReLU,
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    /// Caffe-style across-channel local response normalization.
+    Lrn { n: usize, alpha: f32, beta: f32 },
+    Flatten,
+    /// Identity at inference.
+    Dropout,
+    /// GoogLeNet inception module: 1x1 / 3x3(reduce) / 5x5(reduce) /
+    /// pool-proj; all six convs form one precision group.
+    Inception {
+        name: &'static str,
+        b1: usize,
+        b3r: usize,
+        b3: usize,
+        b5r: usize,
+        b5: usize,
+        pp: usize,
+    },
+}
+
+/// The standard AlexNet LRN hyper-parameters used by the L2 graphs.
+pub const LRN_DEFAULT: Op = Op::Lrn { n: 5, alpha: 1e-4, beta: 0.75 };
+
+impl Op {
+    /// The stage name recorded in manifests (matches the python op names).
+    pub fn stage_name(&self) -> &'static str {
+        match self {
+            Op::Conv { name, .. } | Op::Dense { name, .. } | Op::Inception { name, .. } => name,
+            Op::ReLU => "relu",
+            Op::MaxPool { .. } => "pool",
+            Op::AvgPool { .. } => "avgpool",
+            Op::GlobalAvgPool => "gap",
+            Op::Lrn { .. } => "norm",
+            Op::Flatten => "flatten",
+            Op::Dropout => "drop",
+        }
+    }
+
+    /// Number of flat parameter tensors this op consumes.
+    pub fn param_count(&self) -> usize {
+        match self {
+            Op::Conv { .. } | Op::Dense { .. } => 2,
+            Op::Inception { .. } => 12,
+            _ => 0,
+        }
+    }
+
+    fn inception_branches(&self) -> Vec<(&'static str, usize, InOut)> {
+        match *self {
+            Op::Inception { b1, b3r, b3, b5r, b5, pp, .. } => vec![
+                ("b1", 1, InOut::FromInput(b1)),
+                ("b3r", 1, InOut::FromInput(b3r)),
+                ("b3", 3, InOut::Fixed(b3r, b3)),
+                ("b5r", 1, InOut::FromInput(b5r)),
+                ("b5", 5, InOut::Fixed(b5r, b5)),
+                ("pp", 1, InOut::FromInput(pp)),
+            ],
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Branch channel spec helper: input channels either come from the
+/// module input or are fixed by a reduce stage.
+#[derive(Clone, Copy, Debug)]
+enum InOut {
+    FromInput(usize),
+    Fixed(usize, usize),
+}
+
+/// Activation shape flowing between ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// (height, width, channels), NHWC per image.
+    Hwc(usize, usize, usize),
+    /// Flattened vector.
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn elems(&self) -> usize {
+        match *self {
+            Shape::Hwc(h, w, c) => h * w * c,
+            Shape::Flat(n) => n,
+        }
+    }
+}
+
+/// Output spatial dims of a k×k window with stride s over (h, w).
+pub fn conv_out_hw(h: usize, w: usize, k: usize, s: usize, padding: Padding) -> (usize, usize) {
+    match padding {
+        Padding::Same => ((h + s - 1) / s, (w + s - 1) / s),
+        Padding::Valid => ((h - k) / s + 1, (w - k) / s + 1),
+    }
+}
+
+/// XLA-style SAME padding offset: total pad split low-biased.
+pub fn same_pad_before(in_dim: usize, out_dim: usize, k: usize, s: usize) -> usize {
+    let needed = ((out_dim - 1) * s + k).saturating_sub(in_dim);
+    needed / 2
+}
+
+/// Shape after applying `op` to `shape`.
+pub fn op_out_shape(op: &Op, shape: Shape) -> Result<Shape> {
+    Ok(match (op, shape) {
+        (&Op::Conv { out_c, k, stride, padding, .. }, Shape::Hwc(h, w, _)) => {
+            let (oh, ow) = conv_out_hw(h, w, k, stride, padding);
+            Shape::Hwc(oh, ow, out_c)
+        }
+        (&Op::Dense { out, .. }, Shape::Flat(_)) => Shape::Flat(out),
+        (&Op::MaxPool { k, stride } | &Op::AvgPool { k, stride }, Shape::Hwc(h, w, c)) => {
+            let (oh, ow) = conv_out_hw(h, w, k, stride, Padding::Same);
+            Shape::Hwc(oh, ow, c)
+        }
+        (Op::GlobalAvgPool, Shape::Hwc(_, _, c)) => Shape::Flat(c),
+        (Op::Flatten, Shape::Hwc(h, w, c)) => Shape::Flat(h * w * c),
+        (&Op::Inception { b1, b3, b5, pp, .. }, Shape::Hwc(h, w, _)) => {
+            Shape::Hwc(h, w, b1 + b3 + b5 + pp)
+        }
+        (Op::ReLU | Op::Lrn { .. } | Op::Dropout, s) => s,
+        (op, s) => bail!("op {op:?} cannot apply to shape {s:?}"),
+    })
+}
+
+/// (weight elems incl. bias, MACs) of `op` at input `shape` — mirrors
+/// `layers.py::_op_counts`.
+pub fn op_counts(op: &Op, shape: Shape) -> (u64, u64) {
+    match (op, shape) {
+        (&Op::Conv { out_c, k, stride, padding, .. }, Shape::Hwc(h, w, c)) => {
+            let (oh, ow) = conv_out_hw(h, w, k, stride, padding);
+            let wts = k * k * c * out_c + out_c;
+            let macs = oh * ow * out_c * k * k * c;
+            (wts as u64, macs as u64)
+        }
+        (&Op::Dense { out, .. }, s) => {
+            let fan_in = s.elems();
+            ((fan_in * out + out) as u64, (fan_in * out) as u64)
+        }
+        (op @ Op::Inception { .. }, Shape::Hwc(h, w, c)) => {
+            let mut wts = 0u64;
+            let mut macs = 0u64;
+            for (_, k, io) in op.inception_branches() {
+                let (ic, oc) = match io {
+                    InOut::FromInput(oc) => (c, oc),
+                    InOut::Fixed(ic, oc) => (ic, oc),
+                };
+                wts += (k * k * ic * oc + oc) as u64;
+                macs += (h * w * oc * k * k * ic) as u64;
+            }
+            (wts, macs)
+        }
+        _ => (0, 0),
+    }
+}
+
+/// One paper-granularity precision layer.
+#[derive(Clone, Debug)]
+pub struct LayerGroup {
+    pub name: &'static str,
+    /// "conv" | "fc" | "inception"
+    pub kind: &'static str,
+    pub ops: Vec<Op>,
+}
+
+/// A full network description.
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: &'static str,
+    pub dataset: &'static str,
+    /// (H, W, C)
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+    pub groups: Vec<LayerGroup>,
+}
+
+impl Arch {
+    pub fn input_elems(&self) -> usize {
+        let (h, w, c) = self.input_shape;
+        h * w * c
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// One entry of the flat parameter list, in initialization order.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// He-init fan-in; 0 means zero-init (biases).
+    pub fan_in: usize,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The flat parameter list of `arch` — names, shapes and init fan-in, in
+/// exactly the python `init_params` order.
+pub fn param_specs(arch: &Arch) -> Result<Vec<ParamSpec>> {
+    let mut specs = Vec::new();
+    let (h, w, c) = arch.input_shape;
+    let mut shape = Shape::Hwc(h, w, c);
+    for g in &arch.groups {
+        for op in &g.ops {
+            let prefix = format!("{}.{}", g.name, op.stage_name());
+            match (op, shape) {
+                (&Op::Conv { out_c, k, .. }, Shape::Hwc(_, _, ic)) => {
+                    specs.push(ParamSpec {
+                        name: format!("{prefix}.w"),
+                        shape: vec![k, k, ic, out_c],
+                        fan_in: k * k * ic,
+                    });
+                    specs.push(ParamSpec {
+                        name: format!("{prefix}.b"),
+                        shape: vec![out_c],
+                        fan_in: 0,
+                    });
+                }
+                (&Op::Dense { out, .. }, s) => {
+                    let fan_in = s.elems();
+                    specs.push(ParamSpec {
+                        name: format!("{prefix}.w"),
+                        shape: vec![fan_in, out],
+                        fan_in,
+                    });
+                    specs.push(ParamSpec {
+                        name: format!("{prefix}.b"),
+                        shape: vec![out],
+                        fan_in: 0,
+                    });
+                }
+                (op @ Op::Inception { .. }, Shape::Hwc(_, _, ic)) => {
+                    for (branch, k, io) in op.inception_branches() {
+                        let (bic, boc) = match io {
+                            InOut::FromInput(oc) => (ic, oc),
+                            InOut::Fixed(fic, oc) => (fic, oc),
+                        };
+                        specs.push(ParamSpec {
+                            name: format!("{prefix}.{branch}.w"),
+                            shape: vec![k, k, bic, boc],
+                            fan_in: k * k * bic,
+                        });
+                        specs.push(ParamSpec {
+                            name: format!("{prefix}.{branch}.b"),
+                            shape: vec![boc],
+                            fan_in: 0,
+                        });
+                    }
+                }
+                _ => {}
+            }
+            shape = op_out_shape(op, shape)?;
+        }
+    }
+    Ok(specs)
+}
+
+/// Per-group analytic metadata — the rust `shape_walk`.
+#[derive(Clone, Debug)]
+pub struct LayerWalk {
+    pub name: &'static str,
+    pub kind: &'static str,
+    pub in_elems: u64,
+    pub out_elems: u64,
+    pub weight_elems: u64,
+    pub macs: u64,
+    pub stages: Vec<&'static str>,
+}
+
+/// Walk the graph analytically: per-group in/out/weights/MACs/stages plus
+/// the final output shape.
+pub fn shape_walk(arch: &Arch) -> Result<(Vec<LayerWalk>, Shape)> {
+    let (h, w, c) = arch.input_shape;
+    let mut shape = Shape::Hwc(h, w, c);
+    let mut walks = Vec::with_capacity(arch.groups.len());
+    for g in &arch.groups {
+        let in_elems = shape.elems() as u64;
+        let mut wts = 0u64;
+        let mut macs = 0u64;
+        let mut stages = Vec::with_capacity(g.ops.len());
+        for op in &g.ops {
+            let (ow, om) = op_counts(op, shape);
+            wts += ow;
+            macs += om;
+            shape = op_out_shape(op, shape)?;
+            stages.push(op.stage_name());
+        }
+        walks.push(LayerWalk {
+            name: g.name,
+            kind: g.kind,
+            in_elems,
+            out_elems: shape.elems() as u64,
+            weight_elems: wts,
+            macs,
+            stages,
+        });
+    }
+    Ok((walks, shape))
+}
+
+/// Validate that `m` (a loaded artifact manifest) describes exactly the
+/// network this registry would build — names, shapes, counts, parameter
+/// list. A mismatch means the artifacts were built from a different
+/// network definition than this binary carries.
+pub fn check_manifest(arch: &Arch, m: &NetManifest) -> Result<()> {
+    let (h, w, c) = arch.input_shape;
+    if m.input_shape != vec![h, w, c] {
+        bail!("{}: manifest input shape {:?} != arch {:?}", m.name, m.input_shape, (h, w, c));
+    }
+    if m.num_classes != arch.num_classes {
+        bail!("{}: manifest classes {} != arch {}", m.name, m.num_classes, arch.num_classes);
+    }
+    let (walks, out) = shape_walk(arch)?;
+    if out != Shape::Flat(arch.num_classes) {
+        bail!("{}: arch output {out:?} != {} classes", arch.name, arch.num_classes);
+    }
+    if m.layers.len() != walks.len() {
+        bail!("{}: manifest has {} layers, arch {}", m.name, m.layers.len(), walks.len());
+    }
+    for (lm, lw) in m.layers.iter().zip(&walks) {
+        if lm.name != lw.name
+            || lm.kind != lw.kind
+            || lm.in_elems != lw.in_elems
+            || lm.out_elems != lw.out_elems
+            || lm.weight_elems != lw.weight_elems
+            || lm.macs != lw.macs
+        {
+            bail!("{}: layer {:?} disagrees with arch walk {:?}", m.name, lm, lw);
+        }
+    }
+    let specs = param_specs(arch)?;
+    if m.params.len() != specs.len() {
+        bail!("{}: manifest has {} params, arch {}", m.name, m.params.len(), specs.len());
+    }
+    for (pm, ps) in m.params.iter().zip(&specs) {
+        if pm.name != ps.name || pm.shape != ps.shape {
+            bail!("{}: param {:?} disagrees with arch spec {:?}", m.name, pm, ps);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The registry (mirrors nets.py exactly)
+// ---------------------------------------------------------------------------
+
+fn conv(name: &'static str, out_c: usize, k: usize) -> Op {
+    Op::Conv { name, out_c, k, stride: 1, padding: Padding::Same }
+}
+
+fn conv_valid(name: &'static str, out_c: usize, k: usize) -> Op {
+    Op::Conv { name, out_c, k, stride: 1, padding: Padding::Valid }
+}
+
+fn group(name: &'static str, kind: &'static str, ops: Vec<Op>) -> LayerGroup {
+    LayerGroup { name, kind, ops }
+}
+
+fn lenet() -> Arch {
+    Arch {
+        name: "lenet",
+        dataset: "synmnist",
+        input_shape: (28, 28, 1),
+        num_classes: 10,
+        groups: vec![
+            group("L1", "conv", vec![conv_valid("conv", 8, 5), Op::MaxPool { k: 2, stride: 2 }]),
+            group("L2", "conv", vec![conv_valid("conv", 16, 5), Op::MaxPool { k: 2, stride: 2 }]),
+            group("L3", "fc", vec![Op::Flatten, Op::Dense { name: "fc", out: 64 }, Op::ReLU]),
+            group("L4", "fc", vec![Op::Dense { name: "fc", out: 10 }]),
+        ],
+    }
+}
+
+fn convnet() -> Arch {
+    Arch {
+        name: "convnet",
+        dataset: "syncifar",
+        input_shape: (32, 32, 3),
+        num_classes: 10,
+        groups: vec![
+            group(
+                "L1",
+                "conv",
+                vec![conv("conv", 16, 5), Op::MaxPool { k: 3, stride: 2 }, Op::ReLU],
+            ),
+            group(
+                "L2",
+                "conv",
+                vec![conv("conv", 16, 5), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group(
+                "L3",
+                "conv",
+                vec![conv("conv", 16, 5), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group("L4", "fc", vec![Op::Flatten, Op::Dense { name: "fc", out: 32 }]),
+            group("L5", "fc", vec![Op::Dense { name: "fc", out: 10 }]),
+        ],
+    }
+}
+
+fn alexnet() -> Arch {
+    Arch {
+        name: "alexnet",
+        dataset: "synimagenet",
+        input_shape: (32, 32, 3),
+        num_classes: 20,
+        groups: vec![
+            group(
+                "L1",
+                "conv",
+                vec![conv("conv", 24, 3), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }, LRN_DEFAULT],
+            ),
+            group(
+                "L2",
+                "conv",
+                vec![conv("conv", 32, 3), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }, LRN_DEFAULT],
+            ),
+            group("L3", "conv", vec![conv("conv", 48, 3), Op::ReLU]),
+            group("L4", "conv", vec![conv("conv", 48, 3), Op::ReLU]),
+            group(
+                "L5",
+                "conv",
+                vec![conv("conv", 32, 3), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group(
+                "L6",
+                "fc",
+                vec![Op::Flatten, Op::Dense { name: "fc", out: 128 }, Op::ReLU, Op::Dropout],
+            ),
+            group("L7", "fc", vec![Op::Dense { name: "fc", out: 128 }, Op::ReLU, Op::Dropout]),
+            group("L8", "fc", vec![Op::Dense { name: "fc", out: 20 }]),
+        ],
+    }
+}
+
+fn nin() -> Arch {
+    Arch {
+        name: "nin",
+        dataset: "synimagenet",
+        input_shape: (32, 32, 3),
+        num_classes: 20,
+        groups: vec![
+            group("L1", "conv", vec![conv("conv", 32, 5), Op::ReLU]),
+            group("L2", "conv", vec![conv("cccp", 24, 1), Op::ReLU]),
+            group(
+                "L3",
+                "conv",
+                vec![conv("cccp", 16, 1), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group("L4", "conv", vec![conv("conv", 48, 5), Op::ReLU]),
+            group("L5", "conv", vec![conv("cccp", 32, 1), Op::ReLU]),
+            group(
+                "L6",
+                "conv",
+                vec![conv("cccp", 32, 1), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group("L7", "conv", vec![conv("conv", 48, 3), Op::ReLU]),
+            group("L8", "conv", vec![conv("cccp", 48, 1), Op::ReLU]),
+            group(
+                "L9",
+                "conv",
+                vec![conv("cccp", 32, 1), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }, Op::Dropout],
+            ),
+            group("L10", "conv", vec![conv("conv", 64, 3), Op::ReLU]),
+            group("L11", "conv", vec![conv("cccp", 48, 1), Op::ReLU]),
+            group("L12", "conv", vec![conv("cccp", 20, 1), Op::ReLU, Op::GlobalAvgPool]),
+        ],
+    }
+}
+
+fn inception(
+    name: &'static str,
+    b1: usize,
+    b3r: usize,
+    b3: usize,
+    b5r: usize,
+    b5: usize,
+    pp: usize,
+) -> Op {
+    Op::Inception { name, b1, b3r, b3, b5r, b5, pp }
+}
+
+fn googlenet() -> Arch {
+    Arch {
+        name: "googlenet",
+        dataset: "synimagenet",
+        input_shape: (32, 32, 3),
+        num_classes: 20,
+        groups: vec![
+            group(
+                "L1",
+                "conv",
+                vec![conv("conv", 16, 3), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group(
+                "L2",
+                "conv",
+                vec![conv("conv", 32, 3), Op::ReLU, Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group("L3", "inception", vec![inception("i3a", 8, 8, 16, 4, 8, 8)]),
+            group(
+                "L4",
+                "inception",
+                vec![inception("i3b", 16, 16, 24, 4, 8, 8), Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group("L5", "inception", vec![inception("i4a", 16, 12, 24, 4, 8, 8)]),
+            group("L6", "inception", vec![inception("i4b", 16, 12, 24, 4, 8, 8)]),
+            group("L7", "inception", vec![inception("i4c", 16, 12, 24, 4, 8, 8)]),
+            group("L8", "inception", vec![inception("i4d", 16, 12, 24, 4, 8, 8)]),
+            group(
+                "L9",
+                "inception",
+                vec![inception("i4e", 24, 16, 32, 6, 12, 12), Op::MaxPool { k: 3, stride: 2 }],
+            ),
+            group("L10", "inception", vec![inception("i5a", 24, 16, 32, 6, 12, 12)]),
+            group(
+                "L11",
+                "inception",
+                vec![
+                    inception("i5b", 24, 16, 32, 6, 12, 12),
+                    Op::GlobalAvgPool,
+                    Op::Dense { name: "fc", out: 20 },
+                ],
+            ),
+        ],
+    }
+}
+
+/// Canonical net order (reports, manifests, reproduction).
+pub const NET_ORDER: [&str; 5] = ["lenet", "convnet", "alexnet", "nin", "googlenet"];
+
+/// Look up a network architecture by name.
+pub fn get(name: &str) -> Option<Arch> {
+    match name {
+        "lenet" => Some(lenet()),
+        "convnet" => Some(convnet()),
+        "alexnet" => Some(alexnet()),
+        "nin" => Some(nin()),
+        "googlenet" => Some(googlenet()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_five_networks_resolve_and_walk() {
+        for name in NET_ORDER {
+            let arch = get(name).unwrap();
+            let (walks, out) = shape_walk(&arch).unwrap();
+            assert_eq!(out, Shape::Flat(arch.num_classes), "{name}");
+            assert_eq!(walks.len(), arch.n_layers(), "{name}");
+            // chain consistency, as the manifest validator demands
+            assert_eq!(walks[0].in_elems as usize, arch.input_elems());
+            for w in walks.windows(2) {
+                assert_eq!(w[0].out_elems, w[1].in_elems, "{name}");
+            }
+            // parameter totals equal layer weight totals
+            let specs = param_specs(&arch).unwrap();
+            let p: u64 = specs.iter().map(|s| s.elems() as u64).sum();
+            let l: u64 = walks.iter().map(|w| w.weight_elems).sum();
+            assert_eq!(p, l, "{name}");
+            assert!(p > 1000, "{name} too small: {p}");
+            assert!(walks.iter().map(|w| w.macs).sum::<u64>() > 10_000, "{name}");
+        }
+    }
+
+    #[test]
+    fn paper_layer_structure() {
+        let count = |name: &str, kind: &str| {
+            get(name).unwrap().groups.iter().filter(|g| g.kind == kind).count()
+        };
+        assert_eq!((count("lenet", "conv"), count("lenet", "fc")), (2, 2));
+        assert_eq!((count("convnet", "conv"), count("convnet", "fc")), (3, 2));
+        assert_eq!((count("alexnet", "conv"), count("alexnet", "fc")), (5, 3));
+        assert_eq!(count("nin", "conv"), 12);
+        assert_eq!((count("googlenet", "conv"), count("googlenet", "inception")), (2, 9));
+    }
+
+    #[test]
+    fn lenet_shapes_by_hand() {
+        let arch = get("lenet").unwrap();
+        let (walks, _) = shape_walk(&arch).unwrap();
+        // 28x28x1 -> conv5 VALID -> 24x24x8 -> pool2 -> 12x12x8
+        assert_eq!(walks[0].in_elems, 784);
+        assert_eq!(walks[0].out_elems, 12 * 12 * 8);
+        assert_eq!(walks[0].weight_elems, (5 * 5 * 8 + 8) as u64);
+        // conv on 12x12x8 -> 8x8x16 -> pool -> 4x4x16
+        assert_eq!(walks[1].out_elems, 4 * 4 * 16);
+        assert_eq!(walks[2].out_elems, 64);
+        assert_eq!(walks[3].out_elems, 10);
+    }
+
+    #[test]
+    fn alexnet_stage_names_match_fig1() {
+        let arch = get("alexnet").unwrap();
+        let (walks, _) = shape_walk(&arch).unwrap();
+        assert_eq!(walks[1].stages, vec!["conv", "relu", "pool", "norm"]);
+    }
+
+    #[test]
+    fn same_padding_matches_xla() {
+        // 32 -> stride 2, k 3: out 16, needed = 15*2+3-32 = 1, before = 0
+        assert_eq!(conv_out_hw(32, 32, 3, 2, Padding::Same), (16, 16));
+        assert_eq!(same_pad_before(32, 16, 3, 2), 0);
+        // stride 1, k 5: out 32, needed 4, before 2
+        assert_eq!(conv_out_hw(32, 32, 5, 1, Padding::Same), (32, 32));
+        assert_eq!(same_pad_before(32, 32, 5, 1), 2);
+        // VALID 28, k 5 -> 24
+        assert_eq!(conv_out_hw(28, 28, 5, 1, Padding::Valid), (24, 24));
+    }
+
+    #[test]
+    fn param_specs_order_and_names() {
+        let arch = get("lenet").unwrap();
+        let specs = param_specs(&arch).unwrap();
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["L1.conv.w", "L1.conv.b", "L2.conv.w", "L2.conv.b", "L3.fc.w", "L3.fc.b",
+                 "L4.fc.w", "L4.fc.b"]
+        );
+        assert_eq!(specs[0].shape, vec![5, 5, 1, 8]);
+        assert_eq!(specs[4].shape, vec![256, 64]);
+        assert_eq!(specs[5].fan_in, 0);
+    }
+
+    #[test]
+    fn inception_param_specs() {
+        let arch = get("googlenet").unwrap();
+        let specs = param_specs(&arch).unwrap();
+        // L3 module: first conv group params come first (L1, L2), then 12
+        // tensors for i3a.
+        let i3a: Vec<&ParamSpec> =
+            specs.iter().filter(|s| s.name.starts_with("L3.i3a")).collect();
+        assert_eq!(i3a.len(), 12);
+        assert_eq!(i3a[0].name, "L3.i3a.b1.w");
+        assert_eq!(i3a[0].shape, vec![1, 1, 32, 8]);
+        assert_eq!(i3a[4].name, "L3.i3a.b3.w");
+        assert_eq!(i3a[4].shape, vec![3, 3, 8, 16]);
+    }
+}

@@ -7,6 +7,8 @@
 //! executable's input signature, baseline accuracy, and artifact file
 //! names. This module parses and validates those manifests.
 
+pub mod arch;
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};

@@ -100,6 +100,16 @@ impl QFormat {
         [self.ibits as f32, self.fbits as f32]
     }
 
+    /// Decode one wire row (the inverse of [`QFormat::wire`], as the
+    /// kernels interpret it: any negative I is the fp32 sentinel).
+    pub fn from_wire(ibits: f32, fbits: f32) -> QFormat {
+        if ibits < 0.0 {
+            QFormat::FP32
+        } else {
+            QFormat::new(ibits as i8, fbits as i8)
+        }
+    }
+
     /// Parse the paper's "I.F" notation ("1.8", "12.2", or "fp32").
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         let s = s.trim();
@@ -215,5 +225,13 @@ mod tests {
     fn wire_encoding() {
         assert_eq!(QFormat::new(12, 2).wire(), [12.0, 2.0]);
         assert_eq!(QFormat::FP32.wire(), [-1.0, 0.0]);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        for q in [QFormat::new(12, 2), QFormat::new(0, 3), QFormat::FP32] {
+            let [i, f] = q.wire();
+            assert_eq!(QFormat::from_wire(i, f), q);
+        }
     }
 }

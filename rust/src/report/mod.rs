@@ -66,7 +66,8 @@ impl Table {
             let _ = writeln!(s, "### {}\n", self.title);
         }
         let _ = writeln!(s, "| {} |", self.headers.join(" | "));
-        let _ = writeln!(s, "|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        let dashes = self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|");
+        let _ = writeln!(s, "|{dashes}|");
         for r in &self.rows {
             let _ = writeln!(s, "| {} |", r.join(" | "));
         }
@@ -83,7 +84,8 @@ impl Table {
             }
         };
         let mut s = String::new();
-        let _ = writeln!(s, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        let head = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        let _ = writeln!(s, "{head}");
         for r in &self.rows {
             let _ = writeln!(s, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
         }

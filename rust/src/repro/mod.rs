@@ -17,12 +17,12 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::backend::{BackendKind, Variant};
 use crate::coordinator::{Coordinator, EvalJob};
 use crate::eval::Dataset;
 use crate::nets::{ArtifactIndex, NetManifest};
 use crate::quant::QFormat;
 use crate::report::{pct, ratio, Chart, Table};
-use crate::runtime::{Session, Variant};
 use crate::search::greedy::{self, GreedyOptions};
 use crate::search::space::{DescentOptions, PrecisionConfig};
 use crate::search::{pareto, perlayer, stages, table2, uniform, Param};
@@ -38,10 +38,24 @@ pub struct ReproCtx {
     pub manifests: Vec<NetManifest>,
     /// Images per accuracy evaluation (0 = full eval split).
     pub n_images: usize,
+    /// Execution backend for the coordinator and the Fig-1 harness.
+    pub backend: BackendKind,
 }
 
 impl ReproCtx {
+    /// Context on the `QBOUND_BACKEND`-selected backend (default:
+    /// reference).
     pub fn new(out_dir: &Path, workers: usize, n_images: usize) -> Result<ReproCtx> {
+        ReproCtx::with_backend(out_dir, workers, n_images, BackendKind::from_env()?)
+    }
+
+    /// [`ReproCtx::new`] with an explicit execution backend.
+    pub fn with_backend(
+        out_dir: &Path,
+        workers: usize,
+        n_images: usize,
+        backend: BackendKind,
+    ) -> Result<ReproCtx> {
         let artifacts = util::artifacts_dir()?;
         let index = ArtifactIndex::load(&artifacts)?;
         let manifests = index
@@ -49,7 +63,7 @@ impl ReproCtx {
             .iter()
             .map(|n| NetManifest::load(&artifacts, n))
             .collect::<Result<Vec<_>>>()?;
-        let coord = Coordinator::new(&artifacts, workers)?;
+        let coord = Coordinator::with_backend(&artifacts, workers, backend)?;
         std::fs::create_dir_all(out_dir)?;
         Ok(ReproCtx {
             artifacts,
@@ -58,6 +72,7 @@ impl ReproCtx {
             index,
             manifests,
             n_images,
+            backend,
         })
     }
 
@@ -159,8 +174,8 @@ pub fn fig1(ctx: &mut ReproCtx) -> Result<String> {
         .stage_variant
         .clone()
         .ok_or_else(|| anyhow::anyhow!("alexnet manifest lacks stage variant"))?;
-    let session = Session::cpu()?;
-    let engine = session.load_engine(&m, Variant::Stages)?;
+    let backend = ctx.backend.create()?;
+    let mut exec = backend.load(&m, Variant::Stages)?;
     let dataset = Dataset::load(&m)?;
 
     let mut chart = Chart::new(
@@ -176,9 +191,8 @@ pub fn fig1(ctx: &mut ReproCtx) -> Result<String> {
     let mut out = String::new();
     for (si, stage_name) in sv.stage_names.iter().enumerate() {
         let pts = stages::sweep_stage(
-            &session,
+            exec.as_mut(),
             &m,
-            &engine,
             &dataset,
             si,
             (1, 12),
@@ -242,7 +256,9 @@ pub fn fig2(ctx: &mut ReproCtx) -> Result<String> {
                 range,
                 ctx.n_images,
             )?;
-            chart.series(markers[ni % markers.len()], pts.iter().map(|p| (p.bits as f64, p.relative)).collect());
+            let series: Vec<(f64, f64)> =
+                pts.iter().map(|p| (p.bits as f64, p.relative)).collect();
+            chart.series(markers[ni % markers.len()], series);
             for p in &pts {
                 csv.row(vec![
                     m.name.clone(),
@@ -343,7 +359,11 @@ pub fn fig4(ctx: &mut ReproCtx) -> Result<String> {
         for (s, b) in single.iter().zip(&batched) {
             t.row(vec![
                 s.name.clone(),
-                m.layers.iter().find(|l| l.name == s.name).map(|l| l.kind.clone()).unwrap_or_default(),
+                m.layers
+                    .iter()
+                    .find(|l| l.name == s.name)
+                    .map(|l| l.kind.clone())
+                    .unwrap_or_default(),
                 util::human_count(s.weight_accesses),
                 util::human_count(b.weight_accesses),
                 util::human_count(s.data_accesses),
@@ -409,7 +429,10 @@ pub fn fig5_table2(ctx: &mut ReproCtx) -> Result<String> {
     let nets: Vec<String> = ctx.index.nets.clone();
     let mut t2 = Table::new(
         "Table 2 — minimum-traffic mixed configs per tolerance",
-        &["net", "tol", "data bits per layer", "weight F per layer", "top-1", "rel err", "TR(32b)", "TR(16b)"],
+        &[
+            "net", "tol", "data bits per layer", "weight F per layer", "top-1", "rel err",
+            "TR(32b)", "TR(16b)",
+        ],
     );
     for net in &nets {
         let m = ctx.manifest(net)?.clone();

@@ -1,4 +1,5 @@
-//! PJRT runtime: load AOT-compiled HLO text and execute it from rust.
+//! PJRT runtime (behind `--features pjrt`): load AOT-compiled HLO text
+//! and execute it from rust.
 //!
 //! One [`Engine`] wraps one compiled executable (one network, fixed batch).
 //! The executable's input signature is `params…, images, wq, dq[, sq]` —
@@ -18,14 +19,7 @@ use anyhow::{bail, Context, Result};
 use crate::nets::NetManifest;
 use crate::tensor::ntf;
 
-/// Which executable variant of a network to load.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Variant {
-    /// The standard per-layer-precision executable.
-    Standard,
-    /// The Fig-1 stage-granularity executable (extra `sq` input).
-    Stages,
-}
+pub use crate::backend::Variant;
 
 /// A PJRT CPU session: the client plus host-side weight storage.
 ///

@@ -153,8 +153,11 @@ pub fn descend(
         accuracy: acc,
     };
 
-    let start_acc =
-        coord.eval_one(EvalJob { net: m.name.clone(), cfg: start.clone(), n_images: opts.n_images })?;
+    let start_acc = coord.eval_one(EvalJob {
+        net: m.name.clone(),
+        cfg: start.clone(),
+        n_images: opts.n_images,
+    })?;
     let mut visited = vec![mk(0, "start".into(), start.clone(), start_acc)];
     let mut explored = visited.clone();
     let mut cur = start;

@@ -3,16 +3,16 @@
 //! conv2 / relu2 / pool2 / norm2) to show stages within a layer share a
 //! tolerance — the justification for per-layer (not per-stage) assignment.
 //!
-//! Uses the dedicated `alexnet_stages` executable (extra `sq` operand);
-//! runs on a caller-provided [`Session`] rather than the coordinator since
-//! only this experiment needs the variant.
+//! Uses the dedicated stage-variant executable (extra `sq` operand);
+//! runs on a caller-provided [`NetExecutor`] rather than the coordinator
+//! since only this experiment needs the variant.
 
 use anyhow::Result;
 
+use crate::backend::{NetExecutor, Variant};
 use crate::eval::{top1, Dataset};
 use crate::nets::NetManifest;
 use crate::quant::QFormat;
-use crate::runtime::{Engine, Session, Variant};
 use crate::search::space::PrecisionConfig;
 use crate::search::SweepPoint;
 
@@ -20,9 +20,8 @@ use crate::search::SweepPoint;
 /// integer bits `bit_range` (fraction pinned to `fbits`). All other
 /// stages, all layers, and all weights stay fp32.
 pub fn sweep_stage(
-    session: &Session,
+    exec: &mut dyn NetExecutor,
     m: &NetManifest,
-    engine: &Engine,
     dataset: &Dataset,
     stage: usize,
     bit_range: (i8, i8),
@@ -39,14 +38,15 @@ pub fn sweep_stage(
     let wq = fp32.wire_wq();
     let dq = fp32.wire_dq();
 
-    let baseline = run_with_sq(session, engine, dataset, &wq, &dq, &sentinel_sq(sv.n_stages), n_images)?;
+    let sentinel = sentinel_sq(sv.n_stages);
+    let baseline = run_with_sq(exec, dataset, &wq, &dq, &sentinel, n_images)?;
 
     let mut out = Vec::new();
     for bits in bit_range.0..=bit_range.1 {
         let mut sq = sentinel_sq(sv.n_stages);
         sq[stage * 2] = bits as f32;
         sq[stage * 2 + 1] = fbits as f32;
-        let acc = run_with_sq(session, engine, dataset, &wq, &dq, &sq, n_images)?;
+        let acc = run_with_sq(exec, dataset, &wq, &dq, &sq, n_images)?;
         let mut cfg = fp32.clone();
         // annotate the config with the stage format on the group's layer
         cfg.dq[sv.group_index] = QFormat::new(bits, fbits);
@@ -69,22 +69,21 @@ fn sentinel_sq(n_stages: usize) -> Vec<f32> {
 }
 
 fn run_with_sq(
-    session: &Session,
-    engine: &Engine,
+    exec: &mut dyn NetExecutor,
     dataset: &Dataset,
     wq: &[f32],
     dq: &[f32],
     sq: &[f32],
     n_images: usize,
 ) -> Result<f64> {
-    anyhow::ensure!(engine.variant == Variant::Stages, "need the stage-variant engine");
-    let batch = engine.batch;
+    anyhow::ensure!(exec.variant() == Variant::Stages, "need the stage-variant executor");
+    let batch = exec.batch();
     let n = if n_images == 0 { dataset.n } else { n_images.min(dataset.n) };
     let n_batches = (n / batch).max(1);
-    let classes = engine.num_classes();
+    let classes = exec.num_classes();
     let mut correct = 0.0;
     for b in 0..n_batches {
-        let logits = engine.infer(session, dataset.batch_images(b, batch), wq, dq, Some(sq))?;
+        let logits = exec.infer(dataset.batch_images(b, batch), wq, dq, Some(sq))?;
         correct += top1(&logits, dataset.batch_labels(b, batch), classes) * batch as f64;
     }
     Ok(correct / (n_batches * batch) as f64)

@@ -13,6 +13,46 @@
 
 use crate::prng::Xoshiro256pp;
 
+/// Locate — or synthesize — an artifact set for tests and benches.
+///
+/// Resolution order:
+///   1. whatever [`crate::util::artifacts_dir`] already finds
+///      (`QBOUND_ARTIFACTS`, an `artifacts/` dir up the tree, or a
+///      previously-populated cache);
+///   2. otherwise synthesize into the per-user cache
+///      ([`crate::artifacts::default_cache_dir`]) — which
+///      `artifacts_dir()` also resolves, so no environment mutation is
+///      needed (mutating env vars mid-process races concurrent getenv).
+///
+/// Synthesis runs at most once per process; concurrent processes race
+/// benignly on an atomic rename.
+pub fn ensure_artifacts() -> std::path::PathBuf {
+    use std::sync::OnceLock;
+    static DIR: OnceLock<std::path::PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        if let Ok(d) = crate::util::artifacts_dir() {
+            return d;
+        }
+        let opts = crate::artifacts::GenOptions::default();
+        let dest = crate::artifacts::default_cache_dir();
+        if !dest.join("index.json").exists() {
+            let tmp = dest.with_extension(format!("tmp-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&tmp);
+            crate::artifacts::generate(&tmp, &opts).expect("synthesizing test artifacts");
+            if let Err(e) = std::fs::rename(&tmp, &dest) {
+                // Lost a race with another process: fine if the winner
+                // completed; otherwise surface the error.
+                if !dest.join("index.json").exists() {
+                    panic!("installing artifacts at {}: {e}", dest.display());
+                }
+                let _ = std::fs::remove_dir_all(&tmp);
+            }
+        }
+        dest
+    })
+    .clone()
+}
+
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {

@@ -139,9 +139,10 @@ pub fn write_file(path: &std::path::Path, contents: &[u8]) -> anyhow::Result<()>
     std::fs::write(path, contents).map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
 }
 
-/// Locate the artifacts directory: $QBOUND_ARTIFACTS, ./artifacts, or
-/// walking up from the current directory (so tests/examples work from any
-/// cwd inside the repo).
+/// Locate the artifacts directory: $QBOUND_ARTIFACTS, ./artifacts (or
+/// walking up from the current directory, so tests/examples work from
+/// any cwd inside the repo), or the per-user synthetic-artifact cache
+/// populated by `testkit::ensure_artifacts`.
 pub fn artifacts_dir() -> anyhow::Result<std::path::PathBuf> {
     if let Ok(p) = std::env::var("QBOUND_ARTIFACTS") {
         let p = std::path::PathBuf::from(p);
@@ -157,11 +158,17 @@ pub fn artifacts_dir() -> anyhow::Result<std::path::PathBuf> {
             return Ok(cand);
         }
         if !dir.pop() {
-            anyhow::bail!(
-                "artifacts/index.json not found — run `make artifacts` (or set QBOUND_ARTIFACTS)"
-            );
+            break;
         }
     }
+    let cache = crate::artifacts::default_cache_dir();
+    if cache.join("index.json").exists() {
+        return Ok(cache);
+    }
+    anyhow::bail!(
+        "artifacts/index.json not found — run `qbound gen-artifacts` or `make artifacts` \
+         (or set QBOUND_ARTIFACTS)"
+    )
 }
 
 #[cfg(test)]

@@ -1,0 +1,175 @@
+//! Backend-layer integration: the trait seam every engine plugs into.
+//!
+//! Locks the behaviours the tentpole refactor introduced: backend
+//! selection, reference-backend correctness on every network, executor
+//! caching hints, arch/manifest cross-validation, and the coordinator
+//! running end-to-end on the reference backend.
+
+use qbound::backend::{Backend, BackendKind, Variant};
+use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::eval::{top1, Dataset, Evaluator};
+use qbound::nets::{arch, ArtifactIndex, NetManifest};
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::testkit;
+
+fn artifacts() -> std::path::PathBuf {
+    testkit::ensure_artifacts()
+}
+
+fn reference() -> Box<dyn Backend> {
+    BackendKind::Reference.create().unwrap()
+}
+
+#[test]
+fn backend_kind_env_default_is_reference() {
+    // (QBOUND_BACKEND is unset in the test environment)
+    if std::env::var_os("QBOUND_BACKEND").is_none() {
+        assert_eq!(BackendKind::from_env().unwrap(), BackendKind::Reference);
+    }
+    assert_eq!(reference().name(), "reference");
+}
+
+#[test]
+fn every_network_loads_and_infers_on_the_reference_backend() {
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    let backend = reference();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let mut exec = backend.load(&m, Variant::Standard).unwrap();
+        assert_eq!(exec.batch(), m.batch);
+        assert_eq!(exec.num_classes(), m.num_classes);
+        let d = Dataset::load(&m).unwrap();
+        let cfg = PrecisionConfig::fp32(m.n_layers());
+        let logits = exec
+            .infer(d.batch_images(0, m.batch), &cfg.wire_wq(), &cfg.wire_dq(), None)
+            .unwrap();
+        assert_eq!(logits.len(), m.batch * m.num_classes, "{net}");
+        assert!(logits.iter().all(|v| v.is_finite()), "{net}");
+        // Teacher labelling: the fp32 batch must be perfectly classified.
+        let acc = top1(&logits, d.batch_labels(0, m.batch), m.num_classes);
+        assert!((acc - 1.0).abs() < 1e-12, "{net}: fp32 batch top-1 {acc}");
+        assert_eq!(exec.executions(), 1);
+    }
+}
+
+#[test]
+fn arch_registry_agrees_with_generated_manifests() {
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let a = arch::get(net).expect("registered arch");
+        arch::check_manifest(&a, &m).unwrap();
+    }
+}
+
+#[test]
+fn arch_mismatch_is_detected() {
+    let dir = artifacts();
+    let mut m = NetManifest::load(&dir, "lenet").unwrap();
+    let a = arch::get("lenet").unwrap();
+    m.layers[1].macs += 1;
+    assert!(arch::check_manifest(&a, &m).is_err());
+}
+
+#[test]
+fn infer_keyed_matches_infer() {
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let backend = reference();
+    let mut exec = backend.load(&m, Variant::Standard).unwrap();
+    let d = Dataset::load(&m).unwrap();
+    let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 7), QFormat::new(9, 3));
+    let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+    let a = exec.infer(d.batch_images(0, m.batch), &wq, &dq, None).unwrap();
+    let b = exec.infer_keyed(0, d.batch_images(0, m.batch), &wq, &dq, None).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn weight_quantization_is_per_layer() {
+    // Quantizing only the LAST layer's weights must not change earlier
+    // layers' computation when data stays fp32 — checked by comparing
+    // against the fully-fp32 logits of a narrowed final layer config.
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let backend = reference();
+    let mut exec = backend.load(&m, Variant::Standard).unwrap();
+    let d = Dataset::load(&m).unwrap();
+    let nl = m.n_layers();
+    let fp32 = PrecisionConfig::fp32(nl);
+    let mut only_first = fp32.clone();
+    only_first.wq[0] = QFormat::new(1, 2);
+    let mut only_last = fp32.clone();
+    only_last.wq[nl - 1] = QFormat::new(1, 2);
+    let imgs = d.batch_images(0, m.batch);
+    let base = exec.infer(imgs, &fp32.wire_wq(), &fp32.wire_dq(), None).unwrap();
+    let first = exec.infer(imgs, &only_first.wire_wq(), &fp32.wire_dq(), None).unwrap();
+    let last = exec.infer(imgs, &only_last.wire_wq(), &fp32.wire_dq(), None).unwrap();
+    assert_ne!(base, first, "quantizing L1 weights must perturb logits");
+    assert_ne!(base, last, "quantizing L4 weights must perturb logits");
+    assert_ne!(first, last, "different layers, different perturbation");
+}
+
+#[test]
+fn evaluator_runs_on_trait_object() {
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "convnet").unwrap();
+    let backend = reference();
+    let mut ev = Evaluator::new(backend.as_ref(), &m).unwrap();
+    let base = ev.accuracy(&PrecisionConfig::fp32(m.n_layers()), 128).unwrap();
+    assert!((base - 1.0).abs() < 1e-12, "teacher baseline {base}");
+    let rel = ev
+        .relative_error(
+            &PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 6), QFormat::new(8, 3)),
+            128,
+        )
+        .unwrap();
+    // probe-stable config: no relative error on the filtered split
+    assert!(rel.abs() < 0.05, "probe config rel err {rel}");
+}
+
+#[test]
+fn coordinator_serves_reference_backend_jobs() {
+    let dir = artifacts();
+    let mut c = Coordinator::with_backend(&dir, 2, BackendKind::Reference).unwrap();
+    assert_eq!(c.backend, BackendKind::Reference);
+    let jobs: Vec<EvalJob> = (4..10)
+        .map(|f| EvalJob {
+            net: "lenet".into(),
+            cfg: PrecisionConfig::uniform(4, QFormat::new(1, f), QFormat::new(9, 2)),
+            n_images: 128,
+        })
+        .collect();
+    let accs = c.eval_batch(&jobs).unwrap();
+    assert_eq!(accs.len(), jobs.len());
+    assert!(accs.iter().all(|a| (0.0..=1.0).contains(a)));
+    // more weight bits never collapses: widest config beats narrowest
+    // by a sane margin on the teacher-labelled split
+    assert!(accs.last().unwrap() + 0.2 >= accs[0], "{accs:?}");
+}
+
+#[test]
+fn stage_quantization_affects_only_that_stage_config() {
+    // Harsh quantization of one stage must change logits vs sentinel.
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "alexnet").unwrap();
+    let sv = m.stage_variant.clone().unwrap();
+    let backend = reference();
+    let mut exec = backend.load(&m, Variant::Stages).unwrap();
+    let d = Dataset::load(&m).unwrap();
+    let fp32 = PrecisionConfig::fp32(m.n_layers());
+    let sentinel: Vec<f32> = (0..sv.n_stages).flat_map(|_| [-1.0f32, 0.0]).collect();
+    let base = exec
+        .infer(d.batch_images(0, m.batch), &fp32.wire_wq(), &fp32.wire_dq(), Some(&sentinel))
+        .unwrap();
+    let mut harsh = sentinel.clone();
+    harsh[0] = 1.0; // stage 0 (conv) data -> Q(1.1)
+    harsh[1] = 1.0;
+    let quantized = exec
+        .infer(d.batch_images(0, m.batch), &fp32.wire_wq(), &fp32.wire_dq(), Some(&harsh))
+        .unwrap();
+    assert_ne!(base, quantized);
+}

@@ -6,10 +6,10 @@ use std::time::Duration;
 use qbound::coordinator::{Coordinator, EvalJob};
 use qbound::quant::QFormat;
 use qbound::search::space::PrecisionConfig;
-use qbound::util;
+use qbound::testkit;
 
 fn coord(workers: usize) -> Coordinator {
-    Coordinator::new(&util::artifacts_dir().expect("make artifacts"), workers).unwrap()
+    Coordinator::new(&testkit::ensure_artifacts(), workers).unwrap()
 }
 
 fn job(f: i8, n: usize) -> EvalJob {

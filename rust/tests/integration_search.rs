@@ -8,13 +8,13 @@ use qbound::nets::NetManifest;
 use qbound::search::greedy::{self, GreedyOptions};
 use qbound::search::space::{DescentOptions, PrecisionConfig};
 use qbound::search::{perlayer, table2, uniform, Param};
+use qbound::testkit;
 use qbound::traffic::{self, Mode};
-use qbound::util;
 
 const N: usize = 128; // eval subset for test speed
 
 fn setup() -> (std::path::PathBuf, Coordinator) {
-    let dir = util::artifacts_dir().expect("make artifacts");
+    let dir = testkit::ensure_artifacts();
     let coord = Coordinator::new(&dir, 2).unwrap();
     (dir, coord)
 }
@@ -23,7 +23,8 @@ fn setup() -> (std::path::PathBuf, Coordinator) {
 fn uniform_weight_sweep_has_a_knee() {
     let (dir, mut coord) = setup();
     let m = NetManifest::load(&dir, "lenet").unwrap();
-    let pts = uniform::sweep(&mut coord, "lenet", m.n_layers(), Param::WeightF, (1, 10), N).unwrap();
+    let pts =
+        uniform::sweep(&mut coord, "lenet", m.n_layers(), Param::WeightF, (1, 10), N).unwrap();
     // accuracy at 10 fraction bits ~ baseline; at 1 bit far below
     let at = |b: i8| pts.iter().find(|p| p.bits == b).unwrap().relative;
     assert!(at(10) > 0.98, "rel at 10 bits {}", at(10));
@@ -144,7 +145,11 @@ fn find_uniform_start_is_accurate() {
     let m = NetManifest::load(&dir, "lenet").unwrap();
     let start = greedy::find_uniform_start(&mut coord, &m, 0.001, None, N).unwrap();
     let base = coord
-        .eval_one(EvalJob { net: "lenet".into(), cfg: PrecisionConfig::fp32(m.n_layers()), n_images: N })
+        .eval_one(EvalJob {
+            net: "lenet".into(),
+            cfg: PrecisionConfig::fp32(m.n_layers()),
+            n_images: N,
+        })
         .unwrap();
     let acc = coord
         .eval_one(EvalJob { net: "lenet".into(), cfg: start.clone(), n_images: N })

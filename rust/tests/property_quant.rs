@@ -1,6 +1,10 @@
 //! Property tests over the Q(I.F) quantizer (testkit harness): the
-//! invariants that make the format sound regardless of input.
+//! invariants that make the format sound regardless of input, plus the
+//! cross-implementation locks — the host quantizer must match both the
+//! independent f64 oracle and the `golden_quant.ntf` vectors bit-for-bit,
+//! and the fp32 sentinel must be an exact pass-through.
 
+use qbound::artifacts::golden_quantize;
 use qbound::quant::QFormat;
 use qbound::testkit::{all, cases, forall, gen_f32, gen_i64, prop, Gen, GenPair};
 
@@ -149,6 +153,77 @@ fn wire_roundtrip_preserves_semantics() {
             "wire roundtrip changed semantics",
         )
     });
+}
+
+/// Generator restricted to golden-range formats (I+F ≤ 16: every grid
+/// point is exactly representable in f32, so the f32 host path and the
+/// f64 oracle must agree bit-for-bit).
+struct GenGoldenFormat;
+
+impl Gen for GenGoldenFormat {
+    type Value = QFormat;
+
+    fn generate(&self, rng: &mut qbound::prng::Xoshiro256pp) -> QFormat {
+        loop {
+            let i = rng.range_i64(0, 16) as i8;
+            let f = rng.range_i64(0, 14) as i8;
+            if i + f >= 1 && i + f <= 16 {
+                return QFormat::new(i, f);
+            }
+        }
+    }
+}
+
+#[test]
+fn host_quantizer_matches_independent_oracle() {
+    forall(cases(4000), GenPair(GenGoldenFormat, gen_f32(-1e5, 1e5)), |(fmt, x)| {
+        let host = fmt.quantize(*x);
+        let oracle = golden_quantize(*x, fmt.ibits as i32, fmt.fbits as i32);
+        prop(
+            host.to_bits() == oracle.to_bits() || (host == 0.0 && oracle == 0.0),
+            &format!("{fmt}: host q({x:e}) = {host:e} != oracle {oracle:e}"),
+        )
+    });
+}
+
+#[test]
+fn fp32_sentinel_is_exact_passthrough() {
+    forall(cases(4000), gen_f32(-1e38, 1e38), |&x| {
+        let q = QFormat::FP32.quantize(x);
+        prop(q.to_bits() == x.to_bits(), &format!("sentinel altered {x:e} -> {q:e}"))
+    });
+    // negative zero and subnormals too
+    for x in [-0.0f32, f32::MIN_POSITIVE / 2.0, -f32::MIN_POSITIVE / 2.0] {
+        assert_eq!(QFormat::FP32.quantize(x).to_bits(), x.to_bits());
+    }
+}
+
+#[test]
+fn golden_file_vectors_replay_bit_for_bit() {
+    // The artifact set carries oracle-computed q(x) vectors; the host
+    // quantizer must replay every one exactly (same lock the python
+    // side enforces against the Pallas kernel).
+    let dir = qbound::testkit::ensure_artifacts();
+    let golden = qbound::tensor::ntf::read_file(&dir.join("golden_quant.ntf")).unwrap();
+    let x = golden["x"].as_f32().unwrap();
+    let mut formats = 0;
+    for (name, expect) in &golden {
+        let Some(spec) = name.strip_prefix("q_") else { continue };
+        if spec == "sentinel" {
+            continue; // covered by fp32_sentinel_is_exact_passthrough
+        }
+        let (i, f) = spec.split_once('_').unwrap();
+        let fmt = QFormat::new(i.parse().unwrap(), f.parse().unwrap());
+        for (&xi, &ei) in x.iter().zip(expect.as_f32().unwrap()) {
+            let got = fmt.quantize(xi);
+            assert!(
+                got.to_bits() == ei.to_bits() || (got == 0.0 && ei == 0.0),
+                "{name}: q({xi:e}) = {got:e} != {ei:e}"
+            );
+        }
+        formats += 1;
+    }
+    assert!(formats >= 40, "only {formats} formats in golden file");
 }
 
 #[test]
