@@ -1,11 +1,13 @@
 //! End-to-end inference benchmarks: per-batch latency of every network
-//! through the active execution backend at fp32 and quantized, plus the
-//! eval-cache hit path. These are the numbers every sweep/search cost
-//! estimate in EXPERIMENTS.md §Perf is built from.
+//! at fp32 and quantized on **both pure-Rust backends** (reference vs
+//! fast), plus the eval-cache hit path. The emitted `BENCH_*.json` is
+//! the per-commit record of the reference-vs-fast speedup — the perf
+//! trajectory CI archives.
 //!
-//! Backend from `QBOUND_BACKEND` (default: reference) — so the same
-//! bench binary measures the interpreted path everywhere and the PJRT
-//! path on machines that have it.
+//! The keyed-infer A/B and the coordinator section run on the backend
+//! selected by `QBOUND_BACKEND` (default: reference), so the same bench
+//! binary also measures the PJRT path on machines that have it. The
+//! fast backend's thread budget comes from `QBOUND_THREADS`.
 
 use qbound::backend::{BackendKind, Variant};
 use qbound::coordinator::{Coordinator, EvalJob};
@@ -18,40 +20,48 @@ fn main() {
     qbound::util::init_logging();
     let dir = qbound::testkit::ensure_artifacts();
     let index = ArtifactIndex::load(&dir).unwrap();
-    let kind = BackendKind::from_env().unwrap();
-    let backend = kind.create().unwrap();
-    let mut suite = qbound::benchkit::BenchSuite::new(&format!(
-        "engine inference per batch + eval cache ({})",
-        kind.label()
-    ));
+    let env_kind = BackendKind::from_env().unwrap();
+    let mut suite = qbound::benchkit::BenchSuite::new(
+        "engine inference per batch, reference vs fast + eval cache",
+    );
 
+    // Per-network, per-backend infer throughput: the reference-vs-fast
+    // comparison the acceptance gate reads from the JSON.
+    let kinds = [BackendKind::Reference, BackendKind::Fast];
     for net in &index.nets {
         let m = NetManifest::load(&dir, net).unwrap();
-        let t0 = std::time::Instant::now();
-        let mut exec = backend.load(&m, Variant::Standard).unwrap();
-        suite.record_once(&format!("{net}: load"), t0.elapsed());
         let dataset = Dataset::load(&m).unwrap();
         let nl = m.n_layers();
         let images = dataset.batch_images(0, m.batch).to_vec();
-
         let fp32 = PrecisionConfig::fp32(nl);
         let quant = PrecisionConfig::uniform(nl, QFormat::new(1, 8), QFormat::new(10, 2));
-        for (label, cfg) in [("fp32", &fp32), ("q(1.8/10.2)", &quant)] {
-            let wq = cfg.wire_wq();
-            let dq = cfg.wire_dq();
-            suite.bench_elems(
-                &format!("{net}: infer batch {} {label}", m.batch),
-                m.batch as f64,
-                || {
-                    std::hint::black_box(exec.infer(&images, &wq, &dq, None).unwrap());
-                },
-            );
+
+        for kind in kinds {
+            let backend = kind.create().unwrap();
+            let t0 = std::time::Instant::now();
+            let mut exec = backend.load(&m, Variant::Standard).unwrap();
+            suite.record_once(&format!("{net} [{}]: load", kind.label()), t0.elapsed());
+            for (label, cfg) in [("fp32", &fp32), ("q(1.8/10.2)", &quant)] {
+                let wq = cfg.wire_wq();
+                let dq = cfg.wire_dq();
+                suite.bench_elems(
+                    &format!("{net} [{}]: infer batch {} {label}", kind.label(), m.batch),
+                    m.batch as f64,
+                    || {
+                        std::hint::black_box(exec.infer(&images, &wq, &dq, None).unwrap());
+                    },
+                );
+            }
         }
-        // §Perf A/B: keyed (backend may keep the batch resident) vs plain.
+
+        // §Perf A/B: keyed (backend may keep the batch resident) vs
+        // plain, on the env-selected backend.
+        let backend = env_kind.create().unwrap();
+        let mut exec = backend.load(&m, Variant::Standard).unwrap();
         let wq = quant.wire_wq();
         let dq = quant.wire_dq();
         suite.bench_elems(
-            &format!("{net}: infer batch {} q, keyed images", m.batch),
+            &format!("{net} [{}]: infer batch {} q, keyed images", env_kind.label(), m.batch),
             m.batch as f64,
             || {
                 std::hint::black_box(exec.infer_keyed(0, &images, &wq, &dq, None).unwrap());
@@ -61,6 +71,7 @@ fn main() {
 
     // Evaluator memo-cache hit path (must be ~ns — the search leans on it).
     let m = NetManifest::load(&dir, &index.nets[0]).unwrap();
+    let backend = env_kind.create().unwrap();
     let mut ev = Evaluator::new(backend.as_ref(), &m).unwrap();
     let cfg = PrecisionConfig::fp32(m.n_layers());
     ev.accuracy(&cfg, 0).unwrap(); // warm (miss)
@@ -69,7 +80,7 @@ fn main() {
     });
 
     // Coordinator dispatch overhead on a fully-cached burst.
-    let mut coord = Coordinator::with_backend(&dir, 2, kind).unwrap();
+    let mut coord = Coordinator::with_backend(&dir, 2, env_kind).unwrap();
     let jobs: Vec<EvalJob> = (0..64)
         .map(|_| EvalJob { net: index.nets[0].clone(), cfg: cfg.clone(), n_images: 128 })
         .collect();

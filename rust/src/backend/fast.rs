@@ -1,0 +1,552 @@
+//! The **fast backend**: im2col + blocked-GEMM execution with
+//! multi-threaded batched inference.
+//!
+//! Same semantics as the reference interpreter — both executors consume
+//! the one [`LoweredPlan`](super::lowering::LoweredPlan), so quantization
+//! placement is shared by construction — but the compute path is built
+//! for throughput:
+//!
+//! * every `Op::Conv` lowers to im2col patch extraction followed by the
+//!   cache-blocked, register-tiled GEMM in [`super::gemm`] (`Op::Dense`
+//!   is the degenerate `M = 1` GEMM; 1×1 stride-1 convs skip im2col and
+//!   feed the activation matrix to the GEMM directly),
+//! * per-thread scratch arenas hold the im2col matrix, the ping-pong
+//!   activation buffers and the inception temporaries — sized once at
+//!   load from the plan's high-water marks and reused across `infer`
+//!   calls, so the steady state allocates nothing,
+//! * two-level `std::thread::scope` parallelism: images are split over
+//!   worker threads within a batch, and when the batch is narrower than
+//!   the thread budget the leftover threads split GEMM row blocks within
+//!   a layer. Thread count comes from `QBOUND_THREADS` (default:
+//!   available parallelism); results are bit-identical for every thread
+//!   count.
+//!
+//! Numeric contract: agreement with the reference backend up to fp32
+//! accumulation order (see `tests/integration_parity.rs`). The GEMM
+//! preserves the interpreter's ascending-`k` accumulation, so in
+//! practice the two backends differ at most in the sign of zeros
+//! (im2col materializes padding as `0.0` where the interpreter skips
+//! out-of-bounds taps).
+
+use anyhow::Result;
+
+use super::gemm::gemm_bias;
+use super::lowering::{self, LoweredPlan};
+use super::reference::{avgpool_into, gap_into, lrn_into, maxpool_into};
+use super::{Backend, NetExecutor, Variant};
+use crate::nets::arch::{conv_out_hw, same_pad_before, Op, Padding, Shape};
+use crate::nets::NetManifest;
+use crate::quant::QFormat;
+
+/// Worker-thread budget: `QBOUND_THREADS`, defaulting to available
+/// parallelism. `0`/garbage is an error (not a silent fallback).
+pub fn threads_from_env() -> Result<usize> {
+    match std::env::var("QBOUND_THREADS") {
+        Ok(s) if !s.trim().is_empty() => match s.trim().parse::<usize>() {
+            Ok(n) if n > 0 => Ok(n),
+            _ => anyhow::bail!("QBOUND_THREADS must be a positive integer, got {s:?}"),
+        },
+        _ => Ok(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)),
+    }
+}
+
+/// Factory for [`FastExecutor`]s.
+#[derive(Clone, Copy, Debug)]
+pub struct FastBackend {
+    threads: usize,
+}
+
+impl FastBackend {
+    /// Thread budget from the environment.
+    pub fn new() -> Result<FastBackend> {
+        Ok(FastBackend { threads: threads_from_env()? })
+    }
+
+    /// Explicit thread budget (tests, embedding).
+    pub fn with_threads(threads: usize) -> FastBackend {
+        FastBackend { threads: threads.max(1) }
+    }
+}
+
+impl Backend for FastBackend {
+    fn name(&self) -> &'static str {
+        "fast"
+    }
+
+    fn load(&self, manifest: &NetManifest, variant: Variant) -> Result<Box<dyn NetExecutor>> {
+        let net = lowering::load_network(manifest, variant)?;
+        let plan = LoweredPlan::new(&net.arch, net.stage_group)?;
+        Ok(Box::new(FastExecutor {
+            manifest: manifest.clone(),
+            variant,
+            plan,
+            params: net.params,
+            memo: lowering::WeightMemo::default(),
+            scratch: Vec::new(),
+            threads: self.threads,
+            executions: 0,
+        }))
+    }
+}
+
+/// One loaded network on the fast backend.
+pub struct FastExecutor {
+    manifest: NetManifest,
+    variant: Variant,
+    plan: LoweredPlan,
+    /// Flat fp32 parameter list, init order.
+    params: Vec<Vec<f32>>,
+    memo: lowering::WeightMemo,
+    /// One arena per image-level worker, grown on first use and reused
+    /// across `infer` calls.
+    scratch: Vec<Scratch>,
+    threads: usize,
+    executions: u64,
+}
+
+impl NetExecutor for FastExecutor {
+    fn manifest(&self) -> &NetManifest {
+        &self.manifest
+    }
+
+    fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn infer(
+        &mut self,
+        images: &[f32],
+        wq: &[f32],
+        dq: &[f32],
+        sq: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let req = lowering::decode_request(&self.manifest, self.variant, images, wq, dq, sq)?;
+        let batch = req.batch;
+        let qparams = self.memo.get(&self.plan, &self.params, &req.wfmt);
+
+        let elems = self.plan.input_elems();
+        let classes = self.plan.num_classes;
+        // Image-level workers first; leftover budget goes to GEMM row
+        // blocks inside each worker's layers.
+        let outer = self.threads.min(batch).max(1);
+        let inner = (self.threads / outer).max(1);
+        while self.scratch.len() < outer {
+            self.scratch.push(Scratch::new(&self.plan));
+        }
+
+        let mut out = vec![0f32; batch * classes];
+        let plan = &self.plan;
+        let dfmt = &req.dfmt;
+        let sfmt = req.sfmt.as_deref();
+        if outer == 1 {
+            let scr = &mut self.scratch[0];
+            for i in 0..batch {
+                forward_image(
+                    plan,
+                    qparams,
+                    &images[i * elems..(i + 1) * elems],
+                    dfmt,
+                    sfmt,
+                    scr,
+                    inner,
+                    &mut out[i * classes..(i + 1) * classes],
+                );
+            }
+        } else {
+            let per = (batch + outer - 1) / outer;
+            std::thread::scope(|s| {
+                let mut img_rest = images;
+                let mut out_rest: &mut [f32] = &mut out;
+                for scr in self.scratch[..outer].iter_mut() {
+                    let n_here = per.min(img_rest.len() / elems);
+                    if n_here == 0 {
+                        break;
+                    }
+                    let (imgs, ir) = img_rest.split_at(n_here * elems);
+                    let (rows, or) = std::mem::take(&mut out_rest).split_at_mut(n_here * classes);
+                    img_rest = ir;
+                    out_rest = or;
+                    s.spawn(move || {
+                        for i in 0..n_here {
+                            forward_image(
+                                plan,
+                                qparams,
+                                &imgs[i * elems..(i + 1) * elems],
+                                dfmt,
+                                sfmt,
+                                scr,
+                                inner,
+                                &mut rows[i * classes..(i + 1) * classes],
+                            );
+                        }
+                    });
+                }
+            });
+        }
+        self.executions += 1;
+        Ok(out)
+    }
+}
+
+/// Per-worker arena: all per-layer buffers, allocated once.
+struct Scratch {
+    /// Ping-pong activation buffers.
+    act_a: Vec<f32>,
+    act_b: Vec<f32>,
+    /// im2col patch matrix.
+    col: Vec<f32>,
+    /// Inception temporaries (reduce outputs / pooled input).
+    tmp: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(plan: &LoweredPlan) -> Scratch {
+        Scratch {
+            act_a: vec![0f32; plan.max_act_elems],
+            act_b: vec![0f32; plan.max_act_elems],
+            col: vec![0f32; plan.max_col_elems],
+            tmp: vec![0f32; plan.max_tmp_elems],
+        }
+    }
+}
+
+/// Forward one image through the lowered plan. Infallible: the plan's
+/// shape chain was validated at load time.
+fn forward_image(
+    plan: &LoweredPlan,
+    qparams: &[Vec<f32>],
+    image: &[f32],
+    dfmt: &[QFormat],
+    sfmt: Option<&[QFormat]>,
+    scr: &mut Scratch,
+    threads: usize,
+    out_row: &mut [f32],
+) {
+    let Scratch { act_a, act_b, col, tmp } = scr;
+    let (mut src, mut dst) = (&mut act_a[..], &mut act_b[..]);
+    src[..image.len()].copy_from_slice(image);
+    dfmt[0].quantize_slice(&mut src[..image.len()]);
+
+    for step in &plan.steps {
+        let in_e = step.in_shape.elems();
+        let out_e = step.out_shape.elems();
+        let base = step.param_base;
+        match (&step.op, step.in_shape) {
+            (&Op::Conv { out_c, k, stride, padding, .. }, Shape::Hwc(h, w, c)) => {
+                conv_gemm(
+                    &src[..in_e],
+                    h,
+                    w,
+                    c,
+                    &qparams[base],
+                    &qparams[base + 1],
+                    out_c,
+                    k,
+                    stride,
+                    padding,
+                    col,
+                    &mut dst[..out_e],
+                    out_c,
+                    0,
+                    threads,
+                );
+                std::mem::swap(&mut src, &mut dst);
+            }
+            (&Op::Dense { out, .. }, Shape::Flat(n)) => {
+                gemm_bias(
+                    1,
+                    out,
+                    n,
+                    &src[..n],
+                    n,
+                    &qparams[base],
+                    &qparams[base + 1],
+                    &mut dst[..out],
+                    out,
+                    threads,
+                );
+                std::mem::swap(&mut src, &mut dst);
+            }
+            (Op::ReLU, _) => relu(&mut src[..in_e]),
+            (&Op::MaxPool { k, stride }, Shape::Hwc(h, w, c)) => {
+                maxpool_into(&src[..in_e], h, w, c, k, stride, &mut dst[..out_e]);
+                std::mem::swap(&mut src, &mut dst);
+            }
+            (&Op::AvgPool { k, stride }, Shape::Hwc(h, w, c)) => {
+                avgpool_into(&src[..in_e], h, w, c, k, stride, &mut dst[..out_e]);
+                std::mem::swap(&mut src, &mut dst);
+            }
+            (Op::GlobalAvgPool, Shape::Hwc(h, w, c)) => {
+                gap_into(&src[..in_e], h, w, c, &mut dst[..c]);
+                std::mem::swap(&mut src, &mut dst);
+            }
+            (&Op::Lrn { n, alpha, beta }, Shape::Hwc(h, w, c)) => {
+                lrn_into(&src[..in_e], h, w, c, n, alpha, beta, &mut dst[..out_e]);
+                std::mem::swap(&mut src, &mut dst);
+            }
+            (Op::Flatten | Op::Dropout, _) => {}
+            (op @ Op::Inception { .. }, Shape::Hwc(h, w, c)) => {
+                inception_gemm(
+                    op,
+                    &src[..in_e],
+                    h,
+                    w,
+                    c,
+                    qparams,
+                    base,
+                    col,
+                    tmp,
+                    &mut dst[..out_e],
+                    threads,
+                );
+                std::mem::swap(&mut src, &mut dst);
+            }
+            (op, s) => unreachable!("lowered plan let op {op:?} reach shape {s:?}"),
+        }
+        if let Some(fmt) = lowering::post_format(step.post, dfmt, sfmt) {
+            fmt.quantize_slice(&mut src[..out_e]);
+        }
+    }
+    out_row.copy_from_slice(&src[..plan.num_classes]);
+}
+
+fn relu(xs: &mut [f32]) {
+    for v in xs {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU over an `m`×`n` region at column `off` of a row-stride-`ldc`
+/// buffer (inception branches live in their concat columns).
+fn relu_strided(buf: &mut [f32], m: usize, n: usize, ldc: usize, off: usize) {
+    for r in 0..m {
+        relu(&mut buf[r * ldc + off..][..n]);
+    }
+}
+
+/// NHWC conv as (im2col ·) GEMM, writing `(oh*ow, out_c)` rows into
+/// `dst` at column `dst_off` with row stride `ldc`.
+fn conv_gemm(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    wgt: &[f32],
+    bias: &[f32],
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    padding: Padding,
+    col: &mut [f32],
+    dst: &mut [f32],
+    ldc: usize,
+    dst_off: usize,
+    threads: usize,
+) {
+    let (oh, ow) = conv_out_hw(h, w, k, stride, padding);
+    let m = oh * ow;
+    if k == 1 && stride == 1 {
+        // 1×1 stride-1: the activation matrix (h*w, c) is already the
+        // patch matrix — skip im2col (the NIN cccp / inception-reduce
+        // hot case).
+        gemm_bias(m, out_c, c, x, c, wgt, bias, &mut dst[dst_off..], ldc, threads);
+        return;
+    }
+    let (pad_y, pad_x) = match padding {
+        Padding::Same => (same_pad_before(h, oh, k, stride), same_pad_before(w, ow, k, stride)),
+        Padding::Valid => (0, 0),
+    };
+    let kd = k * k * c;
+    im2col(x, h, w, c, k, stride, pad_y, pad_x, oh, ow, &mut col[..m * kd]);
+    gemm_bias(m, out_c, kd, &col[..m * kd], kd, wgt, bias, &mut dst[dst_off..], ldc, threads);
+}
+
+/// Extract `(oh*ow, k*k*c)` patch rows; out-of-bounds taps become `0.0`
+/// (HWIO weight layout makes the flattened filter exactly the GEMM `B`).
+fn im2col(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad_y: usize,
+    pad_x: usize,
+    oh: usize,
+    ow: usize,
+    col: &mut [f32],
+) {
+    let kd = k * k * c;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = &mut col[(oy * ow + ox) * kd..][..kd];
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad_y as isize;
+                let seg = &mut row[ky * k * c..][..k * c];
+                if iy < 0 || iy >= h as isize {
+                    seg.fill(0.0);
+                    continue;
+                }
+                let xrow = (iy as usize) * w;
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad_x as isize;
+                    let d = &mut seg[kx * c..][..c];
+                    if ix < 0 || ix >= w as isize {
+                        d.fill(0.0);
+                    } else {
+                        d.copy_from_slice(&x[(xrow + ix as usize) * c..][..c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// GoogLeNet inception module: each branch conv is a GEMM writing
+/// straight into its concat columns of `dst` (row stride = module
+/// `out_c`), with ReLU applied per branch exactly as the interpreter
+/// does. `tmp` holds one reduce output / pooled input at a time.
+fn inception_gemm(
+    op: &Op,
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    qparams: &[Vec<f32>],
+    base: usize,
+    col: &mut [f32],
+    tmp: &mut [f32],
+    dst: &mut [f32],
+    threads: usize,
+) {
+    let &Op::Inception { b1, b3r, b3, b5r, b5, pp, .. } = op else {
+        unreachable!("inception_gemm on {op:?}");
+    };
+    let out_c = b1 + b3 + b5 + pp;
+    let m = h * w;
+    let p = |i: usize| &qparams[base + i];
+    let same = Padding::Same;
+
+    // 1×1 branch → columns [0, b1)
+    conv_gemm(x, h, w, c, p(0), p(1), b1, 1, 1, same, col, dst, out_c, 0, threads);
+    relu_strided(dst, m, b1, out_c, 0);
+    // 3×3 branch: reduce into tmp, then 3×3 → columns [b1, b1+b3)
+    conv_gemm(x, h, w, c, p(2), p(3), b3r, 1, 1, same, col, &mut tmp[..m * b3r], b3r, 0, threads);
+    relu(&mut tmp[..m * b3r]);
+    conv_gemm(&tmp[..m * b3r], h, w, b3r, p(4), p(5), b3, 3, 1, same, col, dst, out_c, b1, threads);
+    relu_strided(dst, m, b3, out_c, b1);
+    // 5×5 branch → columns [b1+b3, b1+b3+b5)
+    conv_gemm(x, h, w, c, p(6), p(7), b5r, 1, 1, same, col, &mut tmp[..m * b5r], b5r, 0, threads);
+    relu(&mut tmp[..m * b5r]);
+    conv_gemm(
+        &tmp[..m * b5r],
+        h,
+        w,
+        b5r,
+        p(8),
+        p(9),
+        b5,
+        5,
+        1,
+        same,
+        col,
+        dst,
+        out_c,
+        b1 + b3,
+        threads,
+    );
+    relu_strided(dst, m, b5, out_c, b1 + b3);
+    // Pool branch: 3×3 stride-1 maxpool, then 1×1 → last pp columns
+    maxpool_into(x, h, w, c, 3, 1, &mut tmp[..m * c]);
+    conv_gemm(
+        &tmp[..m * c],
+        h,
+        w,
+        c,
+        p(10),
+        p(11),
+        pp,
+        1,
+        1,
+        same,
+        col,
+        dst,
+        out_c,
+        b1 + b3 + b5,
+        threads,
+    );
+    relu_strided(dst, m, pp, out_c, b1 + b3 + b5);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_identity_for_1x1() {
+        // k=3 SAME over 2x2x1: center taps equal the input.
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut col = vec![f32::NAN; 4 * 9];
+        im2col(&x, 2, 2, 1, 3, 1, 1, 1, 2, 2, &mut col);
+        // output (0,0): patch rows (-1..2)x(-1..2); center (index 4) = x[0]
+        assert_eq!(col[4], 1.0);
+        // top-left tap of output (0,0) is padding
+        assert_eq!(col[0], 0.0);
+        // output (1,1) center = x[3]
+        assert_eq!(col[3 * 9 + 4], 4.0);
+    }
+
+    #[test]
+    fn im2col_valid_no_padding() {
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect(); // 3x3x1
+        let mut col = vec![0f32; 4 * 4];
+        im2col(&x, 3, 3, 1, 2, 1, 0, 0, 2, 2, &mut col);
+        assert_eq!(&col[..4], &[1.0, 2.0, 4.0, 5.0]); // window at (0,0)
+        assert_eq!(&col[12..], &[5.0, 6.0, 8.0, 9.0]); // window at (1,1)
+    }
+
+    #[test]
+    fn conv_gemm_matches_hand_conv() {
+        // Same case as reference::conv2d_valid_sums_window.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut col = vec![0f32; 4 * 4];
+        let mut dst = vec![0f32; 4];
+        conv_gemm(
+            &x,
+            3,
+            3,
+            1,
+            &[1.0; 4],
+            &[0.5],
+            1,
+            2,
+            1,
+            Padding::Valid,
+            &mut col,
+            &mut dst,
+            1,
+            0,
+            1,
+        );
+        assert_eq!(dst, vec![12.5, 16.5, 24.5, 28.5]);
+    }
+
+    #[test]
+    fn threads_env_parses_and_rejects() {
+        // (runs with the var unset in the test env)
+        if std::env::var_os("QBOUND_THREADS").is_none() {
+            assert!(threads_from_env().unwrap() >= 1);
+        }
+        assert!(FastBackend::with_threads(0).threads >= 1);
+    }
+}

@@ -1,0 +1,365 @@
+//! Shared network lowering: the single plan every CPU executor consumes.
+//!
+//! The reference interpreter and the fast (im2col + GEMM) executor must
+//! place quantization at *exactly* the same points — the placement rules
+//! mirror `python/compile/layers.py::apply`:
+//!
+//!   * each group's parameters (weights + biases) are quantized with that
+//!     group's `wq` row,
+//!   * the network input is quantized with `dq[0]`,
+//!   * each group's *output* is quantized with its `dq` row,
+//!   * in [`Variant::Stages`][crate::backend::Variant::Stages] mode, the
+//!     stage group's intermediate op outputs are quantized with `sq` rows
+//!     instead of the group's `dq`.
+//!
+//! Rather than each backend re-implementing that walk, [`LoweredPlan`]
+//! flattens the grouped graph once at load time into a step list where
+//! every step carries its input/output shape, its slot in the flat
+//! parameter list, and a structural [`PostQuant`] rule. Executors then
+//! only have to run ops and call [`post_format`] — drift between
+//! backends in *where* quantization happens becomes impossible, and the
+//! cross-backend parity suite (`tests/integration_parity.rs`) locks the
+//! remaining numeric agreement.
+
+use anyhow::{bail, Result};
+
+use super::Variant;
+use crate::nets::arch::{self, conv_out_hw, Arch, Op, Shape};
+use crate::nets::NetManifest;
+use crate::quant::QFormat;
+use crate::tensor::ntf;
+
+/// Structural quantization rule for one step's output, resolved against
+/// the decoded `dq`/`sq` formats at infer time by [`post_format`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PostQuant {
+    /// Intermediate op inside a group: output flows through unquantized.
+    None,
+    /// Last op of group `g`: output quantized with `dq[g]`.
+    Group(usize),
+    /// Op `index` inside the stage group: output quantized with
+    /// `sq[index]`. When no `sq` is supplied (callers outside the Stages
+    /// variant), falls back to `dq[g]` if this is also the group's last
+    /// op (`group = Some(g)`).
+    Stage { index: usize, group: Option<usize> },
+}
+
+/// Resolve a step's output format from the decoded wire configs.
+pub fn post_format(
+    post: PostQuant,
+    dfmt: &[QFormat],
+    sfmt: Option<&[QFormat]>,
+) -> Option<QFormat> {
+    match post {
+        PostQuant::None => None,
+        PostQuant::Group(g) => Some(dfmt[g]),
+        PostQuant::Stage { index, group } => match sfmt {
+            Some(s) => Some(s[index]),
+            None => group.map(|g| dfmt[g]),
+        },
+    }
+}
+
+/// One executable step of the flattened graph.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub op: Op,
+    /// Precision group ("layer") this op belongs to.
+    pub group: usize,
+    /// First index of this op's tensors in the flat parameter list.
+    pub param_base: usize,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    pub post: PostQuant,
+}
+
+/// A network flattened for execution: steps, parameter layout, and the
+/// scratch-buffer high-water marks the fast backend sizes its arenas
+/// from.
+#[derive(Clone, Debug)]
+pub struct LoweredPlan {
+    pub name: &'static str,
+    pub steps: Vec<Step>,
+    /// Parameter tensors consumed by each group (weight-quant grouping).
+    pub group_param_counts: Vec<usize>,
+    pub n_layers: usize,
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+    /// Largest activation tensor (elements) at any step boundary.
+    pub max_act_elems: usize,
+    /// Largest im2col patch matrix (elements) any conv needs.
+    pub max_col_elems: usize,
+    /// Largest inception temporary (branch-reduce output / pooled input).
+    pub max_tmp_elems: usize,
+}
+
+impl LoweredPlan {
+    /// Flatten `arch`; `stage_group` is the group whose op outputs take
+    /// `sq` quantization (the Stages variant), `None` for Standard.
+    pub fn new(arch: &Arch, stage_group: Option<usize>) -> Result<LoweredPlan> {
+        let (h, w, c) = arch.input_shape;
+        let mut shape = Shape::Hwc(h, w, c);
+        let mut steps = Vec::new();
+        let mut param_base = 0usize;
+        let mut max_act = shape.elems();
+        let mut max_col = 0usize;
+        let mut max_tmp = 0usize;
+        let mut group_param_counts = Vec::with_capacity(arch.groups.len());
+
+        for (gi, g) in arch.groups.iter().enumerate() {
+            let mut group_params = 0usize;
+            for (oi, op) in g.ops.iter().enumerate() {
+                let out_shape = arch::op_out_shape(op, shape)?;
+                let last = oi + 1 == g.ops.len();
+                let post = if stage_group == Some(gi) {
+                    PostQuant::Stage { index: oi, group: if last { Some(gi) } else { None } }
+                } else if last {
+                    PostQuant::Group(gi)
+                } else {
+                    PostQuant::None
+                };
+                // Scratch high-water marks for the fast backend.
+                match (op, shape) {
+                    (&Op::Conv { k, stride, padding, .. }, Shape::Hwc(ih, iw, ic)) => {
+                        if !(k == 1 && stride == 1) {
+                            let (oh, ow) = conv_out_hw(ih, iw, k, stride, padding);
+                            max_col = max_col.max(oh * ow * k * k * ic);
+                        }
+                    }
+                    (&Op::Inception { b3r, b5r, .. }, Shape::Hwc(ih, iw, ic)) => {
+                        // 3x3 / 5x5 branches run im2col over the reduce
+                        // outputs; the pool branch needs a pooled copy of
+                        // the module input.
+                        max_col = max_col.max(ih * iw * 9 * b3r).max(ih * iw * 25 * b5r);
+                        max_tmp = max_tmp.max(ih * iw * b3r.max(b5r).max(ic));
+                    }
+                    _ => {}
+                }
+                steps.push(Step {
+                    op: op.clone(),
+                    group: gi,
+                    param_base,
+                    in_shape: shape,
+                    out_shape,
+                    post,
+                });
+                param_base += op.param_count();
+                group_params += op.param_count();
+                shape = out_shape;
+                max_act = max_act.max(shape.elems());
+            }
+            group_param_counts.push(group_params);
+        }
+        if shape != Shape::Flat(arch.num_classes) {
+            bail!("{}: lowered output shape {shape:?}", arch.name);
+        }
+        Ok(LoweredPlan {
+            name: arch.name,
+            steps,
+            group_param_counts,
+            n_layers: arch.groups.len(),
+            input_shape: arch.input_shape,
+            num_classes: arch.num_classes,
+            max_act_elems: max_act,
+            max_col_elems: max_col,
+            max_tmp_elems: max_tmp,
+        })
+    }
+
+    pub fn input_elems(&self) -> usize {
+        let (h, w, c) = self.input_shape;
+        h * w * c
+    }
+
+    /// Quantize every group's parameters with its `wq` row (biases
+    /// included, matching `quantize_group_params` on the python side).
+    pub fn quantize_params(&self, params: &[Vec<f32>], wq: &[QFormat]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(params.len());
+        let mut idx = 0usize;
+        for (gi, &count) in self.group_param_counts.iter().enumerate() {
+            for _ in 0..count {
+                out.push(wq[gi].quantize_vec(&params[idx]));
+                idx += 1;
+            }
+        }
+        out
+    }
+}
+
+/// A validated, decoded infer request — the shared front half of every
+/// CPU executor's `infer`.
+pub(crate) struct Request {
+    /// Batch derived from the image buffer length.
+    pub batch: usize,
+    pub wfmt: Vec<QFormat>,
+    pub dfmt: Vec<QFormat>,
+    pub sfmt: Option<Vec<QFormat>>,
+}
+
+/// Validate one request against `m`/`variant` and decode the wire
+/// configs (see [`super::validate_request`] for the rejection rules).
+pub(crate) fn decode_request(
+    m: &NetManifest,
+    variant: Variant,
+    images: &[f32],
+    wq: &[f32],
+    dq: &[f32],
+    sq: Option<&[f32]>,
+) -> Result<Request> {
+    let batch = super::validate_request(m, variant, m.n_stages(), images, wq, dq, sq)?;
+    Ok(Request {
+        batch,
+        wfmt: super::wire_to_formats(wq),
+        dfmt: super::wire_to_formats(dq),
+        sfmt: sq.map(|s| super::wire_to_formats(s)),
+    })
+}
+
+/// Weight-quantization memo shared by the CPU executors: resident
+/// weights are re-quantized only when the weight config changes (an
+/// eval sweeps many batches under one config).
+#[derive(Default)]
+pub(crate) struct WeightMemo {
+    cached_wq: Vec<QFormat>,
+    qparams: Vec<Vec<f32>>,
+}
+
+impl WeightMemo {
+    /// Quantized parameters for `wfmt`, recomputed only on change.
+    pub fn get(
+        &mut self,
+        plan: &LoweredPlan,
+        params: &[Vec<f32>],
+        wfmt: &[QFormat],
+    ) -> &[Vec<f32>] {
+        if self.cached_wq != wfmt {
+            self.qparams = plan.quantize_params(params, wfmt);
+            self.cached_wq = wfmt.to_vec();
+        }
+        &self.qparams
+    }
+}
+
+/// A manifest resolved against the registry with weights resident —
+/// the common front half of every CPU backend's `load`.
+pub struct LoadedNet {
+    pub arch: Arch,
+    /// Flat fp32 parameter list, init order.
+    pub params: Vec<Vec<f32>>,
+    /// Stage group index for [`Variant::Stages`], `None` for Standard.
+    pub stage_group: Option<usize>,
+}
+
+/// Resolve `manifest` against the architecture registry, cross-validate
+/// it, load + shape-check the weights, and resolve the stage group.
+pub fn load_network(manifest: &NetManifest, variant: Variant) -> Result<LoadedNet> {
+    let arch = arch::get(&manifest.name).ok_or_else(|| {
+        anyhow::anyhow!("no architecture registered for {:?}", manifest.name)
+    })?;
+    arch::check_manifest(&arch, manifest)?;
+
+    // Load weights in manifest order (== arch init order, validated
+    // above), with shape checks like the PJRT engine performs.
+    let mut weights = ntf::read_file(&manifest.weights_path())?;
+    let mut params = Vec::with_capacity(manifest.params.len());
+    for p in &manifest.params {
+        let t = weights
+            .remove(&p.name)
+            .ok_or_else(|| anyhow::anyhow!("weights file missing {:?}", p.name))?;
+        if t.dims != p.shape {
+            bail!("{}: shape {:?} != manifest {:?}", p.name, t.dims, p.shape);
+        }
+        params.push(t.as_f32()?.to_vec());
+    }
+
+    let stage_group = match variant {
+        Variant::Standard => None,
+        Variant::Stages => {
+            let sv = manifest
+                .stage_variant
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("{} has no stage variant", manifest.name))?;
+            let ops = arch.groups.get(sv.group_index).map(|g| g.ops.len()).unwrap_or(0);
+            if ops != sv.n_stages {
+                bail!(
+                    "{}: stage variant declares {} stages but group {} has {} ops",
+                    manifest.name,
+                    sv.n_stages,
+                    sv.group_index,
+                    ops
+                );
+            }
+            Some(sv.group_index)
+        }
+    };
+    Ok(LoadedNet { arch, params, stage_group })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_plan_flattens_in_group_order() {
+        let arch = arch::get("lenet").unwrap();
+        let plan = LoweredPlan::new(&arch, None).unwrap();
+        assert_eq!(plan.n_layers, 4);
+        assert_eq!(plan.steps.len(), 8); // conv,pool | conv,pool | flat,fc,relu | fc
+        assert_eq!(plan.group_param_counts, vec![2, 2, 2, 2]);
+        // Group boundaries get Group posts, intermediates None.
+        assert_eq!(plan.steps[0].post, PostQuant::None);
+        assert_eq!(plan.steps[1].post, PostQuant::Group(0));
+        assert_eq!(plan.steps.last().unwrap().post, PostQuant::Group(3));
+        // Param bases track consumed tensors.
+        assert_eq!(plan.steps[0].param_base, 0);
+        assert_eq!(plan.steps[2].param_base, 2);
+        assert_eq!(plan.input_elems(), 28 * 28);
+        assert!(plan.max_act_elems >= 24 * 24 * 8);
+        // lenet L1 conv: 24*24 outputs x 5*5*1 patch
+        assert!(plan.max_col_elems >= 24 * 24 * 25);
+    }
+
+    #[test]
+    fn stage_group_takes_stage_posts() {
+        let arch = arch::get("alexnet").unwrap();
+        let plan = LoweredPlan::new(&arch, Some(1)).unwrap();
+        let stage_steps: Vec<&Step> = plan.steps.iter().filter(|s| s.group == 1).collect();
+        assert_eq!(stage_steps.len(), 4); // conv relu pool norm
+        for (i, s) in stage_steps.iter().enumerate() {
+            let last = i + 1 == stage_steps.len();
+            assert_eq!(
+                s.post,
+                PostQuant::Stage { index: i, group: if last { Some(1) } else { None } }
+            );
+        }
+        // Other groups keep the standard rule.
+        assert_eq!(plan.steps[0].post, PostQuant::None);
+    }
+
+    #[test]
+    fn post_format_resolution() {
+        let dfmt = vec![QFormat::new(8, 2), QFormat::new(9, 3)];
+        let sfmt = vec![QFormat::new(1, 1), QFormat::new(2, 2)];
+        assert_eq!(post_format(PostQuant::None, &dfmt, Some(&sfmt)), None);
+        assert_eq!(post_format(PostQuant::Group(1), &dfmt, None), Some(QFormat::new(9, 3)));
+        assert_eq!(
+            post_format(PostQuant::Stage { index: 1, group: Some(0) }, &dfmt, Some(&sfmt)),
+            Some(QFormat::new(2, 2))
+        );
+        // No sq supplied: stage posts fall back to the group rule.
+        assert_eq!(
+            post_format(PostQuant::Stage { index: 1, group: Some(0) }, &dfmt, None),
+            Some(QFormat::new(8, 2))
+        );
+        assert_eq!(post_format(PostQuant::Stage { index: 0, group: None }, &dfmt, None), None);
+    }
+
+    #[test]
+    fn inception_scratch_sizing() {
+        let arch = arch::get("googlenet").unwrap();
+        let plan = LoweredPlan::new(&arch, None).unwrap();
+        // i3a at 8x8x32: pool branch needs an 8*8*32 pooled copy.
+        assert!(plan.max_tmp_elems >= 8 * 8 * 32);
+        assert!(plan.max_col_elems > 0);
+    }
+}

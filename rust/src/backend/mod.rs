@@ -11,24 +11,32 @@
 //! * [`NetExecutor`] — one loaded network with resident weights; `infer`
 //!   runs a single batch under a wire-encoded precision config.
 //!
-//! Two implementations ship today:
+//! Three implementations ship today:
 //!
 //! | kind | module | availability |
 //! |---|---|---|
 //! | [`BackendKind::Reference`] | [`reference`] | always (pure Rust) |
-//! | `BackendKind::Pjrt`       | `pjrt`        | `--features pjrt`   |
+//! | [`BackendKind::Fast`]      | [`fast`]      | always (pure Rust) |
+//! | `BackendKind::Pjrt`        | `pjrt`        | `--features pjrt`   |
 //!
 //! The reference backend interprets the CNN forward pass directly from
 //! the architecture registry ([`crate::nets::arch`]) with bit-exact
-//! [`crate::quant::QFormat`] semantics; the PJRT backend executes the
-//! AOT-compiled HLO through the `xla` crate. Selection is explicit
-//! (`--backend` on the CLI) or via the `QBOUND_BACKEND` env var; the
-//! default is the reference backend, which works on any machine.
+//! [`crate::quant::QFormat`] semantics — it is the semantic oracle. The
+//! fast backend runs the same lowered plan ([`lowering`]) through
+//! im2col + blocked GEMM ([`gemm`]) with multi-threaded batching
+//! (`QBOUND_THREADS`), agreeing with the reference up to fp32
+//! accumulation order. The PJRT backend executes the AOT-compiled HLO
+//! through the `xla` crate. Selection is explicit (`--backend` on the
+//! CLI) or via the `QBOUND_BACKEND` env var; the default is the
+//! reference backend, which works on any machine.
 //!
 //! Executors are **not** `Send` (the PJRT client is `Rc`-based);
 //! the coordinator gives each worker thread its own backend instance,
 //! created from the `Send + Copy` [`BackendKind`].
 
+pub mod fast;
+pub mod gemm;
+pub mod lowering;
 pub mod reference;
 
 #[cfg(feature = "pjrt")]
@@ -72,8 +80,11 @@ pub trait NetExecutor {
     /// Cumulative `infer` calls (utilization metrics).
     fn executions(&self) -> u64;
 
-    /// Execute one batch. `images` is `(batch, H, W, C)` row-major.
-    /// Returns logits, row-major `(batch, num_classes)`.
+    /// Execute one batch. `images` is `(batch, H, W, C)` row-major; the
+    /// batch is derived from `images.len()` and must not exceed
+    /// [`NetExecutor::max_batch`] (compiled-batch backends additionally
+    /// require it to equal [`NetExecutor::batch`]). Returns logits,
+    /// row-major `(batch, num_classes)`.
     fn infer(&mut self, images: &[f32], wq: &[f32], dq: &[f32], sq: Option<&[f32]>)
         -> Result<Vec<f32>>;
 
@@ -99,6 +110,15 @@ pub trait NetExecutor {
         self.manifest().batch
     }
 
+    /// Largest batch one `infer` call accepts. Compiled-batch backends
+    /// (PJRT) are pinned to [`NetExecutor::batch`]; the interpreted and
+    /// GEMM backends take any batch — the evaluator exploits this to
+    /// hand a whole eval split to one call so image-level parallelism
+    /// has work to spread.
+    fn max_batch(&self) -> usize {
+        self.batch()
+    }
+
     fn num_classes(&self) -> usize {
         self.manifest().num_classes
     }
@@ -112,24 +132,28 @@ pub enum BackendKind {
     /// Pure-Rust interpreted fixed-point forward pass (always available).
     #[default]
     Reference,
+    /// Pure-Rust im2col + blocked-GEMM executor, multi-threaded
+    /// (`QBOUND_THREADS`); always available.
+    Fast,
     /// AOT-compiled HLO through PJRT (`--features pjrt`).
     #[cfg(feature = "pjrt")]
     Pjrt,
 }
 
 impl BackendKind {
-    /// Parse a CLI/env spelling: `reference` (aliases `ref`, `interp`)
-    /// or `pjrt` (alias `xla`).
+    /// Parse a CLI/env spelling: `reference` (aliases `ref`, `interp`),
+    /// `fast` (aliases `im2col`, `gemm`), or `pjrt` (alias `xla`).
     pub fn parse(s: &str) -> Result<BackendKind> {
         match s.trim().to_ascii_lowercase().as_str() {
             "reference" | "ref" | "interp" => Ok(BackendKind::Reference),
+            "fast" | "im2col" | "gemm" => Ok(BackendKind::Fast),
             #[cfg(feature = "pjrt")]
             "pjrt" | "xla" => Ok(BackendKind::Pjrt),
             #[cfg(not(feature = "pjrt"))]
             "pjrt" | "xla" => {
                 bail!("backend \"pjrt\" requires building with `--features pjrt`")
             }
-            other => bail!("unknown backend {other:?} (expected: reference | pjrt)"),
+            other => bail!("unknown backend {other:?} (expected: reference | fast | pjrt)"),
         }
     }
 
@@ -155,6 +179,7 @@ impl BackendKind {
     pub fn label(self) -> &'static str {
         match self {
             BackendKind::Reference => "reference",
+            BackendKind::Fast => "fast",
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => "pjrt",
         }
@@ -164,6 +189,7 @@ impl BackendKind {
     pub fn create(self) -> Result<Box<dyn Backend>> {
         match self {
             BackendKind::Reference => Ok(Box::new(reference::ReferenceBackend::new())),
+            BackendKind::Fast => Ok(Box::new(fast::FastBackend::new()?)),
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new()?)),
         }
@@ -171,7 +197,9 @@ impl BackendKind {
 }
 
 /// Shared request validation so every backend rejects malformed inputs
-/// identically (the integration tests lock this behaviour).
+/// identically (the integration tests lock this behaviour). Returns the
+/// batch size derived from `images.len()`; backends with a fixed
+/// compiled batch must additionally check it against their own limit.
 pub(crate) fn validate_request(
     m: &NetManifest,
     variant: Variant,
@@ -180,14 +208,17 @@ pub(crate) fn validate_request(
     wq: &[f32],
     dq: &[f32],
     sq: Option<&[f32]>,
-) -> Result<()> {
+) -> Result<usize> {
     let nl = m.n_layers();
     if wq.len() != 2 * nl || dq.len() != 2 * nl {
         bail!("wq/dq must be 2*{nl} floats");
     }
-    let img_elems: usize = m.input_shape.iter().product::<usize>() * m.batch;
-    if images.len() != img_elems {
-        bail!("images len {} != batch image elems {img_elems}", images.len());
+    let img_elems: usize = m.input_shape.iter().product();
+    if img_elems == 0 || images.is_empty() || images.len() % img_elems != 0 {
+        bail!(
+            "images len {} is not a positive multiple of image elems {img_elems}",
+            images.len()
+        );
     }
     match (variant, sq) {
         (Variant::Stages, Some(sq)) => {
@@ -199,7 +230,7 @@ pub(crate) fn validate_request(
         (Variant::Standard, Some(_)) => bail!("standard variant takes no sq"),
         (Variant::Standard, None) => {}
     }
-    Ok(())
+    Ok(images.len() / img_elems)
 }
 
 /// Decode a flattened `(L, 2)` wire config into per-layer formats.
@@ -217,6 +248,14 @@ mod tests {
             assert_eq!(BackendKind::parse(s).unwrap(), BackendKind::Reference);
         }
         assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn parse_fast_spellings() {
+        for s in ["fast", "FAST", "im2col", "gemm"] {
+            assert_eq!(BackendKind::parse(s).unwrap(), BackendKind::Fast);
+        }
+        assert_eq!(BackendKind::Fast.label(), "fast");
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -57,8 +57,15 @@ pub struct PjrtExecutor {
 }
 
 impl PjrtExecutor {
-    fn n_stages(&self) -> usize {
-        self.engine.manifest.stage_variant.as_ref().map(|s| s.n_stages).unwrap_or(0)
+    /// The executable is AOT-compiled for one batch size; unlike the
+    /// interpreted backends, a request must match it exactly.
+    fn check_batch(&self, batch: usize) -> Result<()> {
+        let want = self.engine.manifest.batch;
+        anyhow::ensure!(
+            batch == want,
+            "pjrt executable is compiled for batch {want}, got {batch}"
+        );
+        Ok(())
     }
 }
 
@@ -82,8 +89,10 @@ impl NetExecutor for PjrtExecutor {
         dq: &[f32],
         sq: Option<&[f32]>,
     ) -> Result<Vec<f32>> {
-        let n_stages = self.n_stages();
-        validate_request(&self.engine.manifest, self.variant(), n_stages, images, wq, dq, sq)?;
+        let n_stages = self.engine.manifest.n_stages();
+        let batch =
+            validate_request(&self.engine.manifest, self.variant(), n_stages, images, wq, dq, sq)?;
+        self.check_batch(batch)?;
         self.engine.infer(&self.session, images, wq, dq, sq)
     }
 
@@ -95,8 +104,10 @@ impl NetExecutor for PjrtExecutor {
         dq: &[f32],
         sq: Option<&[f32]>,
     ) -> Result<Vec<f32>> {
-        let n_stages = self.n_stages();
-        validate_request(&self.engine.manifest, self.variant(), n_stages, images, wq, dq, sq)?;
+        let n_stages = self.engine.manifest.n_stages();
+        let batch =
+            validate_request(&self.engine.manifest, self.variant(), n_stages, images, wq, dq, sq)?;
+        self.check_batch(batch)?;
         if !self.preload {
             return self.engine.infer(&self.session, images, wq, dq, sq);
         }

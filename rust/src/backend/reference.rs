@@ -10,25 +10,22 @@
 //! anything a faster backend (PJRT, SIMD, GPU) computes must agree with
 //! it up to fp32 accumulation order.
 //!
-//! Quantization placement mirrors `python/compile/layers.py::apply`
-//! exactly:
-//!   * each group's parameters (weights + biases) are quantized with
-//!     that group's `wq` row,
-//!   * the network input is quantized with `dq[0]`,
-//!   * each group's *output* is quantized with its `dq` row,
-//!   * in [`Variant::Stages`] mode, the stage group's intermediate op
-//!     outputs are quantized with `sq` rows instead of the group's `dq`.
+//! Quantization placement comes from the shared lowering
+//! ([`super::lowering`], mirroring `python/compile/layers.py::apply`):
+//! both this interpreter and the fast backend walk one
+//! [`LoweredPlan`], so *where* quantization happens cannot drift
+//! between them.
 //!
 //! All arithmetic is fp32 ("convert at layer read/write, compute in
 //! fp32" — paper §2.1).
 
 use anyhow::{bail, Result};
 
-use super::{validate_request, wire_to_formats, Backend, NetExecutor, Variant};
+use super::lowering::{self, LoweredPlan};
+use super::{Backend, NetExecutor, Variant};
 use crate::nets::arch::{self, same_pad_before, Arch, Op, Padding, Shape};
 use crate::nets::NetManifest;
 use crate::quant::QFormat;
-use crate::tensor::ntf;
 
 /// Factory for [`ReferenceExecutor`]s.
 #[derive(Clone, Copy, Debug, Default)]
@@ -46,61 +43,13 @@ impl Backend for ReferenceBackend {
     }
 
     fn load(&self, manifest: &NetManifest, variant: Variant) -> Result<Box<dyn NetExecutor>> {
-        let arch = arch::get(&manifest.name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "reference backend has no architecture registered for {:?}",
-                manifest.name
-            )
-        })?;
-        arch::check_manifest(&arch, manifest)?;
-
-        // Load weights in manifest order (== arch init order, validated
-        // above), with shape checks like the PJRT engine performs.
-        let mut weights = ntf::read_file(&manifest.weights_path())?;
-        let mut params = Vec::with_capacity(manifest.params.len());
-        for p in &manifest.params {
-            let t = weights
-                .remove(&p.name)
-                .ok_or_else(|| anyhow::anyhow!("weights file missing {:?}", p.name))?;
-            if t.dims != p.shape {
-                bail!("{}: shape {:?} != manifest {:?}", p.name, t.dims, p.shape);
-            }
-            params.push(t.as_f32()?.to_vec());
-        }
-
-        let stage_group = match variant {
-            Variant::Standard => None,
-            Variant::Stages => {
-                let sv = manifest
-                    .stage_variant
-                    .as_ref()
-                    .ok_or_else(|| anyhow::anyhow!("{} has no stage variant", manifest.name))?;
-                let ops = arch
-                    .groups
-                    .get(sv.group_index)
-                    .map(|g| g.ops.len())
-                    .unwrap_or(0);
-                if ops != sv.n_stages {
-                    bail!(
-                        "{}: stage variant declares {} stages but group {} has {} ops",
-                        manifest.name,
-                        sv.n_stages,
-                        sv.group_index,
-                        ops
-                    );
-                }
-                Some(sv.group_index)
-            }
-        };
-
-        let interp = Interpreter::new(arch, params)?;
+        let net = lowering::load_network(manifest, variant)?;
+        let interp = Interpreter::with_stage(net.arch, net.params, net.stage_group)?;
         Ok(Box::new(ReferenceExecutor {
             interp,
             manifest: manifest.clone(),
             variant,
-            stage_group,
-            cached_wq: Vec::new(),
-            qparams: Vec::new(),
+            memo: lowering::WeightMemo::default(),
             executions: 0,
         }))
     }
@@ -111,18 +60,8 @@ pub struct ReferenceExecutor {
     interp: Interpreter,
     manifest: NetManifest,
     variant: Variant,
-    /// Group whose stages get `sq` quantization ([`Variant::Stages`]).
-    stage_group: Option<usize>,
-    /// Weight-quantization memo: formats of `qparams` (empty = not built).
-    cached_wq: Vec<QFormat>,
-    qparams: Vec<Vec<f32>>,
+    memo: lowering::WeightMemo,
     executions: u64,
-}
-
-impl ReferenceExecutor {
-    fn n_stages(&self) -> usize {
-        self.manifest.stage_variant.as_ref().map(|s| s.n_stages).unwrap_or(0)
-    }
 }
 
 impl NetExecutor for ReferenceExecutor {
@@ -138,6 +77,10 @@ impl NetExecutor for ReferenceExecutor {
         self.executions
     }
 
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
     fn infer(
         &mut self,
         images: &[f32],
@@ -145,29 +88,16 @@ impl NetExecutor for ReferenceExecutor {
         dq: &[f32],
         sq: Option<&[f32]>,
     ) -> Result<Vec<f32>> {
-        validate_request(&self.manifest, self.variant, self.n_stages(), images, wq, dq, sq)?;
-        let wfmt = wire_to_formats(wq);
-        let dfmt = wire_to_formats(dq);
-        let sfmt = sq.map(wire_to_formats);
+        let req = lowering::decode_request(&self.manifest, self.variant, images, wq, dq, sq)?;
+        let qparams = self.memo.get(self.interp.plan(), &self.interp.params, &req.wfmt);
 
-        // Re-quantize the resident weights only when the weight config
-        // changes (an eval sweeps many batches under one config).
-        if self.cached_wq != wfmt {
-            self.qparams = self.interp.quantize_params(&wfmt);
-            self.cached_wq = wfmt;
-        }
-
-        let batch = self.manifest.batch;
         let elems = self.interp.arch.input_elems();
         let classes = self.manifest.num_classes;
-        let mut out = Vec::with_capacity(batch * classes);
-        for b in 0..batch {
+        let mut out = Vec::with_capacity(req.batch * classes);
+        for b in 0..req.batch {
             let image = &images[b * elems..(b + 1) * elems];
-            let stage = match (&sfmt, self.stage_group) {
-                (Some(s), Some(g)) => Some((g, s.as_slice())),
-                _ => None,
-            };
-            let logits = self.interp.forward_one(&self.qparams, image, &dfmt, stage)?;
+            let logits =
+                self.interp.forward_one(qparams, image, &req.dfmt, req.sfmt.as_deref())?;
             out.extend_from_slice(&logits);
         }
         self.executions += 1;
@@ -188,17 +118,28 @@ struct Feat {
 
 /// Interprets an [`Arch`] over a flat parameter list. Independent of
 /// manifests so the artifact generator can run networks it is still
-/// building artifacts for.
+/// building artifacts for. Executes the shared [`LoweredPlan`] — the
+/// same step list the fast backend runs.
 pub struct Interpreter {
     pub arch: Arch,
     /// Flat fp32 parameter list, init order.
     pub params: Vec<Vec<f32>>,
-    /// Parameter count consumed by each group.
-    group_counts: Vec<usize>,
+    plan: LoweredPlan,
 }
 
 impl Interpreter {
+    /// Standard-variant interpreter.
     pub fn new(arch: Arch, params: Vec<Vec<f32>>) -> Result<Interpreter> {
+        Interpreter::with_stage(arch, params, None)
+    }
+
+    /// Interpreter whose plan routes `sq` quantization to `stage_group`
+    /// ([`Variant::Stages`]).
+    pub fn with_stage(
+        arch: Arch,
+        params: Vec<Vec<f32>>,
+        stage_group: Option<usize>,
+    ) -> Result<Interpreter> {
         let specs = arch::param_specs(&arch)?;
         if specs.len() != params.len() {
             bail!("{}: {} params given, arch wants {}", arch.name, params.len(), specs.len());
@@ -214,53 +155,41 @@ impl Interpreter {
                 );
             }
         }
-        let group_counts =
-            arch.groups.iter().map(|g| g.ops.iter().map(|o| o.param_count()).sum()).collect();
-        Ok(Interpreter { arch, params, group_counts })
+        let plan = LoweredPlan::new(&arch, stage_group)?;
+        Ok(Interpreter { arch, params, plan })
+    }
+
+    /// The lowered plan this interpreter executes.
+    pub fn plan(&self) -> &LoweredPlan {
+        &self.plan
     }
 
     /// Quantize every group's parameters with its `wq` row (biases
     /// included, matching `quantize_group_params` on the python side).
     pub fn quantize_params(&self, wq: &[QFormat]) -> Vec<Vec<f32>> {
-        let mut out = Vec::with_capacity(self.params.len());
-        let mut idx = 0usize;
-        for (gi, &count) in self.group_counts.iter().enumerate() {
-            for _ in 0..count {
-                out.push(wq[gi].quantize_vec(&self.params[idx]));
-                idx += 1;
-            }
-        }
-        out
+        self.plan.quantize_params(&self.params, wq)
     }
 
     /// Forward one image. `qparams` must come from [`Self::quantize_params`]
-    /// (or be `&self.params` for fp32); `stage` is `(group_index, sq_formats)`
-    /// for the Fig-1 stage-granularity mode.
+    /// (or be `&self.params` for fp32); `sfmt` carries the per-stage
+    /// formats for the Fig-1 stage-granularity mode (the plan decides
+    /// where they apply).
     pub fn forward_one(
         &self,
         qparams: &[Vec<f32>],
         image: &[f32],
         dq: &[QFormat],
-        stage: Option<(usize, &[QFormat])>,
+        sfmt: Option<&[QFormat]>,
     ) -> Result<Vec<f32>> {
         let (h, w, c) = self.arch.input_shape;
         let mut feat = Feat { shape: Shape::Hwc(h, w, c), data: image.to_vec() };
         dq[0].quantize_slice(&mut feat.data);
 
-        let mut cursor = 0usize;
-        for (gi, g) in self.arch.groups.iter().enumerate() {
-            let stage_here = match stage {
-                Some((sg, fmts)) if sg == gi => Some(fmts),
-                _ => None,
-            };
-            for (oi, op) in g.ops.iter().enumerate() {
-                feat = apply_op(op, feat, qparams, &mut cursor)?;
-                if let Some(fmts) = stage_here {
-                    fmts[oi].quantize_slice(&mut feat.data);
-                }
-            }
-            if stage_here.is_none() {
-                dq[gi].quantize_slice(&mut feat.data);
+        for step in &self.plan.steps {
+            let mut cursor = step.param_base;
+            feat = apply_op(&step.op, feat, qparams, &mut cursor)?;
+            if let Some(fmt) = lowering::post_format(step.post, dq, sfmt) {
+                fmt.quantize_slice(&mut feat.data);
             }
         }
         if feat.shape != Shape::Flat(self.arch.num_classes) {
@@ -303,16 +232,7 @@ fn apply_op(op: &Op, x: Feat, qparams: &[Vec<f32>], cursor: &mut usize) -> Resul
         (&Op::AvgPool { k, stride }, Shape::Hwc(h, w, c)) => avgpool(&x.data, h, w, c, k, stride),
         (Op::GlobalAvgPool, Shape::Hwc(h, w, c)) => {
             let mut out = vec![0f32; c];
-            for pos in 0..h * w {
-                let row = &x.data[pos * c..(pos + 1) * c];
-                for (o, &v) in out.iter_mut().zip(row) {
-                    *o += v;
-                }
-            }
-            let inv = 1.0 / (h * w) as f32;
-            for o in &mut out {
-                *o *= inv;
-            }
+            gap_into(&x.data, h, w, c, &mut out);
             Feat { shape: Shape::Flat(c), data: out }
         }
         (&Op::Lrn { n, alpha, beta }, Shape::Hwc(h, w, c)) => lrn(&x.data, h, w, c, n, alpha, beta),
@@ -367,11 +287,9 @@ fn conv2d(
                     let xrow = &x[((iy as usize) * w + ix as usize) * c..][..c];
                     let wbase = ((ky * k + kx) * c) * out_c;
                     for (ic, &xv) in xrow.iter().enumerate() {
-                        if xv != 0.0 {
-                            let wrow = &wgt[wbase + ic * out_c..][..out_c];
-                            for (a, &wv) in acc.iter_mut().zip(wrow) {
-                                *a += xv * wv;
-                            }
+                        let wrow = &wgt[wbase + ic * out_c..][..out_c];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
                         }
                     }
                 }
@@ -386,11 +304,9 @@ fn dense(x: &[f32], n: usize, wgt: &[f32], bias: &[f32], out: usize) -> Feat {
     debug_assert_eq!(wgt.len(), n * out);
     let mut acc = bias.to_vec();
     for (i, &xv) in x.iter().enumerate() {
-        if xv != 0.0 {
-            let wrow = &wgt[i * out..][..out];
-            for (a, &wv) in acc.iter_mut().zip(wrow) {
-                *a += xv * wv;
-            }
+        let wrow = &wgt[i * out..][..out];
+        for (a, &wv) in acc.iter_mut().zip(wrow) {
+            *a += xv * wv;
         }
     }
     Feat { shape: Shape::Flat(out), data: acc }
@@ -398,9 +314,41 @@ fn dense(x: &[f32], n: usize, wgt: &[f32], bias: &[f32], out: usize) -> Feat {
 
 fn maxpool(x: &[f32], h: usize, w: usize, c: usize, k: usize, stride: usize) -> Feat {
     let (oh, ow) = arch::conv_out_hw(h, w, k, stride, Padding::Same);
+    let mut out = vec![0f32; oh * ow * c];
+    maxpool_into(x, h, w, c, k, stride, &mut out);
+    Feat { shape: Shape::Hwc(oh, ow, c), data: out }
+}
+
+fn avgpool(x: &[f32], h: usize, w: usize, c: usize, k: usize, stride: usize) -> Feat {
+    let (oh, ow) = arch::conv_out_hw(h, w, k, stride, Padding::Same);
+    let mut out = vec![0f32; oh * ow * c];
+    avgpool_into(x, h, w, c, k, stride, &mut out);
+    Feat { shape: Shape::Hwc(oh, ow, c), data: out }
+}
+
+fn lrn(x: &[f32], h: usize, w: usize, c: usize, n: usize, alpha: f32, beta: f32) -> Feat {
+    let mut out = vec![0f32; x.len()];
+    lrn_into(x, h, w, c, n, alpha, beta, &mut out);
+    Feat { shape: Shape::Hwc(h, w, c), data: out }
+}
+
+// The `*_into` kernels below are the single implementation of the
+// non-GEMM ops for BOTH CPU backends — the fast executor calls them
+// with its scratch arenas, the wrappers above allocate fresh output.
+
+pub(crate) fn maxpool_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    let (oh, ow) = arch::conv_out_hw(h, w, k, stride, Padding::Same);
     let pad_y = same_pad_before(h, oh, k, stride);
     let pad_x = same_pad_before(w, ow, k, stride);
-    let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    out.fill(f32::NEG_INFINITY);
     for oy in 0..oh {
         for ox in 0..ow {
             let acc = &mut out[(oy * ow + ox) * c..][..c];
@@ -424,14 +372,21 @@ fn maxpool(x: &[f32], h: usize, w: usize, c: usize, k: usize, stride: usize) -> 
             }
         }
     }
-    Feat { shape: Shape::Hwc(oh, ow, c), data: out }
 }
 
-fn avgpool(x: &[f32], h: usize, w: usize, c: usize, k: usize, stride: usize) -> Feat {
+pub(crate) fn avgpool_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
     let (oh, ow) = arch::conv_out_hw(h, w, k, stride, Padding::Same);
     let pad_y = same_pad_before(h, oh, k, stride);
     let pad_x = same_pad_before(w, ow, k, stride);
-    let mut out = vec![0f32; oh * ow * c];
+    out.fill(0.0);
     for oy in 0..oh {
         for ox in 0..ow {
             let acc = &mut out[(oy * ow + ox) * c..][..c];
@@ -463,14 +418,35 @@ fn avgpool(x: &[f32], h: usize, w: usize, c: usize, k: usize, stride: usize) -> 
             }
         }
     }
-    Feat { shape: Shape::Hwc(oh, ow, c), data: out }
+}
+
+pub(crate) fn gap_into(x: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for pos in 0..h * w {
+        let row = &x[pos * c..(pos + 1) * c];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / (h * w) as f32;
+    for o in out {
+        *o *= inv;
+    }
 }
 
 /// Caffe-style across-channel LRN: `x / (1 + alpha/n * sum_win x^2)^beta`.
-fn lrn(x: &[f32], h: usize, w: usize, c: usize, n: usize, alpha: f32, beta: f32) -> Feat {
+pub(crate) fn lrn_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    n: usize,
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
     let half = n / 2;
     let scale = alpha / n as f32;
-    let mut out = vec![0f32; x.len()];
     for pos in 0..h * w {
         let xrow = &x[pos * c..][..c];
         let orow = &mut out[pos * c..][..c];
@@ -484,7 +460,6 @@ fn lrn(x: &[f32], h: usize, w: usize, c: usize, n: usize, alpha: f32, beta: f32)
             orow[ch] = xrow[ch] / (1.0 + scale * acc).powf(beta);
         }
     }
-    Feat { shape: Shape::Hwc(h, w, c), data: out }
 }
 
 fn relu_inplace(f: &mut Feat) {

@@ -27,7 +27,8 @@ pub fn run(args: &[String]) -> Result<()> {
         )
         .opt("n-images", "images to evaluate (0 = full split)", "0")
         .opt("workers", "worker threads (0 = one per core)", "0")
-        .opt("backend", "execution backend: reference | pjrt (default: env or reference)", "");
+        .opt("batch", "images per infer call (0 = largest the backend allows)", "0")
+        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
     let a = spec.parse(args)?;
 
     let dir = util::artifacts_dir()?;
@@ -55,6 +56,7 @@ pub fn run(args: &[String]) -> Result<()> {
 
     let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
     let mut coord = Coordinator::with_backend(&dir, a.usize("workers")?, backend)?;
+    coord.set_eval_batch(a.usize("batch")?);
     let n_images = a.usize("n-images")?;
     let base = coord.eval_one(EvalJob {
         net: net.clone(),

@@ -13,7 +13,7 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("n-images", "images per evaluation (0 = full)", "256")
         .opt("workers", "worker threads (0 = one per core)", "0")
         .opt("out-dir", "report directory", "reports")
-        .opt("backend", "execution backend: reference | pjrt (default: env or reference)", "");
+        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
     let a = spec.parse(args)?;
     let mut ctx = ReproCtx::with_backend(
         std::path::Path::new(a.str("out-dir")),

@@ -17,7 +17,7 @@
 //! with a `Mutex<Receiver>` work queue (work-stealing by contention).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -59,6 +59,8 @@ pub struct Coordinator {
     workers: Vec<std::thread::JoinHandle<()>>,
     cache: Arc<Mutex<HashMap<EvalJob, f64>>>,
     stats: Arc<Stats>,
+    /// Evaluator batch override shared with the workers (0 = auto).
+    eval_batch: Arc<AtomicUsize>,
     next_id: u64,
     pub n_workers: usize,
     pub backend: BackendKind,
@@ -112,6 +114,7 @@ impl Coordinator {
         let (done_tx, done_rx) = channel::<DoneMsg>();
         let cache: Arc<Mutex<HashMap<EvalJob, f64>>> = Arc::new(Mutex::new(HashMap::new()));
         let stats = Arc::new(Stats::default());
+        let eval_batch = Arc::new(AtomicUsize::new(0));
 
         let mut workers = Vec::with_capacity(n_workers);
         for wid in 0..n_workers {
@@ -120,10 +123,16 @@ impl Coordinator {
             let manifests = Arc::clone(&manifests);
             let cache = Arc::clone(&cache);
             let stats = Arc::clone(&stats);
+            let eval_batch = Arc::clone(&eval_batch);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("qbound-worker-{wid}"))
-                    .spawn(move || worker_loop(job_rx, done_tx, manifests, cache, stats, backend))
+                    .spawn(move || {
+                        worker_loop(
+                            job_rx, done_tx, manifests, cache, stats, eval_batch, backend,
+                            n_workers,
+                        )
+                    })
                     .context("spawning worker")?,
             );
         }
@@ -133,10 +142,21 @@ impl Coordinator {
             workers,
             cache,
             stats,
+            eval_batch,
             next_id: 0,
             n_workers,
             backend,
         })
+    }
+
+    /// Force every worker's evaluator to a fixed infer batch (0 = auto:
+    /// the largest the backend allows). Affects jobs dispatched after
+    /// the call. The memo cache is dropped: a job's evaluated image
+    /// count is `floor(n/batch)*batch`, so entries computed under a
+    /// different batch may cover a different span.
+    pub fn set_eval_batch(&self, batch: usize) {
+        self.eval_batch.store(batch, Ordering::Relaxed);
+        self.cache.lock().unwrap().clear();
     }
 
     /// Convenience: coordinator over the default artifacts dir.
@@ -272,17 +292,32 @@ impl Drop for Coordinator {
     }
 }
 
+/// Build one worker's backend. The fast backend would otherwise default
+/// to one thread *per core* in every worker — `workers × cores` compute
+/// threads for the pool — so when `QBOUND_THREADS` is unset the core
+/// budget is divided across the workers instead (an explicit setting
+/// always wins).
+fn backend_for_worker(kind: BackendKind, n_workers: usize) -> Result<Box<dyn Backend>> {
+    if kind == BackendKind::Fast && std::env::var_os("QBOUND_THREADS").is_none() {
+        let per_worker = (default_workers() / n_workers.max(1)).max(1);
+        return Ok(Box::new(crate::backend::fast::FastBackend::with_threads(per_worker)));
+    }
+    kind.create()
+}
+
 fn worker_loop(
     job_rx: Arc<Mutex<Receiver<JobMsg>>>,
     done_tx: Sender<DoneMsg>,
     manifests: Arc<Vec<NetManifest>>,
     cache: Arc<Mutex<HashMap<EvalJob, f64>>>,
     stats: Arc<Stats>,
+    eval_batch: Arc<AtomicUsize>,
     kind: BackendKind,
+    n_workers: usize,
 ) {
     // Backend + evaluators are created lazily per worker: a worker that
     // never sees a googlenet job never loads googlenet.
-    let backend = match kind.create() {
+    let backend = match backend_for_worker(kind, n_workers) {
         Ok(b) => b,
         Err(e) => {
             log::error!("worker failed to create {} backend: {e:#}", kind.label());
@@ -297,11 +332,18 @@ fn worker_loop(
             Err(_) => return, // coordinator dropped
         };
         let t0 = Instant::now();
-        let res = run_job(backend.as_ref(), &mut evaluators, &manifests, &job);
+        let batch_override = eval_batch.load(Ordering::Relaxed);
+        let res = run_job(backend.as_ref(), &mut evaluators, &manifests, &job, batch_override);
         stats.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         stats.executed.fetch_add(1, Ordering::Relaxed);
         if let Ok(v) = res {
-            cache.lock().unwrap().insert(job.clone(), v);
+            // Memoize only if the batch setting is unchanged since the
+            // job started — a result computed under a stale setting may
+            // cover a different image span (set_eval_batch clears the
+            // cache, so re-inserting would undo that).
+            if eval_batch.load(Ordering::Relaxed) == batch_override {
+                cache.lock().unwrap().insert(job.clone(), v);
+            }
         } else {
             stats.errors.fetch_add(1, Ordering::Relaxed);
         }
@@ -316,6 +358,7 @@ fn run_job(
     evaluators: &mut HashMap<String, Evaluator>,
     manifests: &[NetManifest],
     job: &EvalJob,
+    batch_override: usize,
 ) -> Result<f64> {
     if !evaluators.contains_key(&job.net) {
         let m = manifests
@@ -328,5 +371,6 @@ fn run_job(
         evaluators.insert(job.net.clone(), ev);
     }
     let ev = evaluators.get_mut(&job.net).unwrap();
+    ev.batch_override = batch_override;
     ev.accuracy(&job.cfg, job.n_images)
 }

@@ -89,6 +89,10 @@ pub fn top1(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
 pub struct Evaluator {
     pub exec: Box<dyn NetExecutor>,
     pub dataset: Dataset,
+    /// Images per `infer_keyed` call; `0` = auto (the largest batch the
+    /// executor allows — the whole requested span for the pure-Rust
+    /// backends, so their image-level parallelism has work to spread).
+    pub batch_override: usize,
     cache: HashMap<(PrecisionConfig, usize), f64>,
     /// Counters for cache instrumentation.
     pub hits: u64,
@@ -99,7 +103,14 @@ impl Evaluator {
     pub fn new(backend: &dyn Backend, manifest: &NetManifest) -> Result<Evaluator> {
         let exec = backend.load(manifest, Variant::Standard)?;
         let dataset = Dataset::load(manifest)?;
-        Ok(Evaluator { exec, dataset, cache: HashMap::new(), hits: 0, misses: 0 })
+        Ok(Evaluator {
+            exec,
+            dataset,
+            batch_override: 0,
+            cache: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        })
     }
 
     /// Number of images available.
@@ -108,15 +119,30 @@ impl Evaluator {
     }
 
     /// Top-1 accuracy of `cfg` over the first `n_images` (rounded down to
-    /// whole batches; `0` means the full eval set). Memoized.
+    /// whole batches; `0` means the full eval set). Memoized by
+    /// (config, images actually evaluated) — batch size only shapes the
+    /// calls, never the result, since every image is scored
+    /// independently.
     pub fn accuracy(&mut self, cfg: &PrecisionConfig, n_images: usize) -> Result<f64> {
         let n = if n_images == 0 { self.dataset.n } else { n_images.min(self.dataset.n) };
-        let batch = self.exec.batch();
-        let n_batches = n / batch;
-        if n_batches == 0 {
-            bail!("n_images {n} < batch {batch}");
+        // Variable-batch executors (max_batch > compiled batch) take any
+        // span down to one image; compiled-batch backends need at least
+        // one full batch.
+        let min_batch =
+            if self.exec.max_batch() > self.exec.batch() { 1 } else { self.exec.batch() };
+        if n < min_batch {
+            bail!("n_images {n} < batch {min_batch}");
         }
-        let key = (cfg.clone(), n_batches);
+        // An override is clamped into the executor's supported range in
+        // both directions (a compiled-batch backend pins it to its one
+        // legal batch rather than failing mid-eval).
+        let batch = match self.batch_override {
+            0 => n.min(self.exec.max_batch()),
+            b => b.clamp(min_batch, self.exec.max_batch()).min(n),
+        };
+        let n_batches = n / batch;
+        let n_used = n_batches * batch;
+        let key = (cfg.clone(), n_used);
         if let Some(&acc) = self.cache.get(&key) {
             self.hits += 1;
             return Ok(acc);
@@ -132,7 +158,7 @@ impl Evaluator {
             correct +=
                 top1(&logits, self.dataset.batch_labels(b, batch), classes) * batch as f64;
         }
-        let acc = correct / (n_batches * batch) as f64;
+        let acc = correct / n_used as f64;
         self.cache.insert(key, acc);
         Ok(acc)
     }

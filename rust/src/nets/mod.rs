@@ -219,6 +219,11 @@ impl NetManifest {
         self.layers.len()
     }
 
+    /// Stages in the Fig-1 stage-granularity variant (0 when absent).
+    pub fn n_stages(&self) -> usize {
+        self.stage_variant.as_ref().map(|s| s.n_stages).unwrap_or(0)
+    }
+
     pub fn hlo_path(&self) -> PathBuf {
         self.dir.join(&self.hlo_file)
     }

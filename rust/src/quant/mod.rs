@@ -66,7 +66,16 @@ impl QFormat {
         ((x * scale).round_ties_even() * inv).clamp(lo, hi)
     }
 
-    /// Quantize a slice in place.
+    /// Quantize a slice in place. Bit-identical to mapping
+    /// [`QFormat::quantize`] over the slice (a property test pins this),
+    /// but the hot path is branch-free so it auto-vectorizes:
+    /// `step`/range factors are hoisted out of the loop, the scaled
+    /// value is clamped *before* rounding (the bounds are exact grid
+    /// integers, so clamp-then-round equals round-then-clamp), and
+    /// round-to-nearest-even is the classic `|v| + 1.5·2²³` trick with
+    /// the sign restored by `copysign` — valid while the clamped value
+    /// fits in ±2²², i.e. `I + F ≤ 23`, which covers every paper-range
+    /// format; wider formats take the scalar loop.
     pub fn quantize_slice(&self, xs: &mut [f32]) {
         if self.is_fp32() {
             return;
@@ -74,8 +83,17 @@ impl QFormat {
         let scale = (self.fbits as f32).exp2();
         let inv = (-(self.fbits as f32)).exp2();
         let (lo, hi) = self.range();
-        for x in xs {
-            *x = ((*x * scale).round_ties_even() * inv).clamp(lo, hi);
+        if (self.ibits as i32) + (self.fbits as i32) <= 23 {
+            const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+            let (slo, shi) = (lo * scale, hi * scale);
+            for x in xs {
+                let v = (*x * scale).clamp(slo, shi);
+                *x = ((v.abs() + MAGIC) - MAGIC).copysign(v) * inv;
+            }
+        } else {
+            for x in xs {
+                *x = ((*x * scale).round_ties_even() * inv).clamp(lo, hi);
+            }
         }
     }
 

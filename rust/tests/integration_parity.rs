@@ -1,0 +1,203 @@
+//! Cross-backend parity: the fast (im2col + GEMM) backend must agree
+//! with the reference interpreter on every registered architecture, in
+//! both variants.
+//!
+//! Tolerance contract: backends may differ by fp32 accumulation order
+//! only. The fast GEMM preserves the interpreter's ascending-k
+//! accumulation, so in practice logits match to the bit (up to the sign
+//! of zeros where im2col materializes padding); the assertions below
+//! allow `MAX_ABS_TOL` of drift so future kernels that genuinely
+//! reorder accumulation (packed SIMD, split-k) stay admissible, and
+//! additionally require top-1 agreement on every row.
+
+use qbound::backend::fast::FastBackend;
+use qbound::backend::{Backend, BackendKind, NetExecutor, Variant};
+use qbound::eval::Dataset;
+use qbound::nets::{ArtifactIndex, NetManifest};
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::testkit;
+
+/// Documented cross-backend logit tolerance (fp32 accumulation order).
+const MAX_ABS_TOL: f32 = 1e-4;
+
+/// Images per parity batch — deliberately ≠ the manifest batch, so the
+/// variable-batch path is exercised on both backends.
+const PARITY_IMAGES: usize = 16;
+
+fn artifacts() -> std::path::PathBuf {
+    testkit::ensure_artifacts()
+}
+
+fn top1_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks(classes)
+        .map(|row| {
+            let mut best = 0;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+/// The configs every (net, variant) pair is checked under: fp32,
+/// a healthy uniform quantization, and a mixed per-layer assignment.
+fn parity_configs(nl: usize) -> Vec<(&'static str, PrecisionConfig)> {
+    let mut mixed = PrecisionConfig::fp32(nl);
+    for l in 0..nl {
+        mixed.wq[l] = if l % 2 == 0 { QFormat::new(1, 8) } else { QFormat::new(2, 7) };
+        mixed.dq[l] = if l % 3 == 0 { QFormat::new(10, 3) } else { QFormat::new(9, 4) };
+    }
+    vec![
+        ("fp32", PrecisionConfig::fp32(nl)),
+        ("uniform", PrecisionConfig::uniform(nl, QFormat::new(1, 8), QFormat::new(10, 2))),
+        ("mixed", mixed),
+    ]
+}
+
+fn assert_parity(net: &str, label: &str, classes: usize, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{net}/{label}: logit count");
+    let diff = max_abs_diff(a, b);
+    assert!(
+        diff <= MAX_ABS_TOL,
+        "{net}/{label}: max-abs logit diff {diff} > {MAX_ABS_TOL}"
+    );
+    assert_eq!(
+        top1_rows(a, classes),
+        top1_rows(b, classes),
+        "{net}/{label}: top-1 disagreement"
+    );
+}
+
+#[test]
+fn fast_matches_reference_on_every_arch_standard() {
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    let reference = BackendKind::Reference.create().unwrap();
+    let fast = BackendKind::Fast.create().unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let d = Dataset::load(&m).unwrap();
+        let mut rexec = reference.load(&m, Variant::Standard).unwrap();
+        let mut fexec = fast.load(&m, Variant::Standard).unwrap();
+        assert_eq!(fexec.max_batch(), usize::MAX, "{net}: fast must take any batch");
+        let n = PARITY_IMAGES.min(d.n);
+        let imgs = &d.images[..n * d.image_elems];
+        for (label, cfg) in parity_configs(m.n_layers()) {
+            let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+            let a = rexec.infer(imgs, &wq, &dq, None).unwrap();
+            let b = fexec.infer(imgs, &wq, &dq, None).unwrap();
+            assert_eq!(a.len(), n * m.num_classes, "{net}/{label}: variable batch");
+            assert_parity(net, label, m.num_classes, &a, &b);
+        }
+    }
+}
+
+#[test]
+fn fast_matches_reference_on_stage_variants() {
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    let reference = BackendKind::Reference.create().unwrap();
+    let fast = BackendKind::Fast.create().unwrap();
+    let mut covered = 0;
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let Some(sv) = m.stage_variant.clone() else { continue };
+        covered += 1;
+        let d = Dataset::load(&m).unwrap();
+        let mut rexec = reference.load(&m, Variant::Stages).unwrap();
+        let mut fexec = fast.load(&m, Variant::Stages).unwrap();
+        let n = PARITY_IMAGES.min(d.n);
+        let imgs = &d.images[..n * d.image_elems];
+        let sentinel: Vec<f32> = (0..sv.n_stages).flat_map(|_| [-1.0f32, 0.0]).collect();
+        let mut harsh = sentinel.clone();
+        harsh[0] = 4.0; // stage 0 data -> Q(4.4)
+        harsh[1] = 4.0;
+        for (label, cfg) in parity_configs(m.n_layers()) {
+            let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+            for (slabel, sq) in [("sentinel", &sentinel), ("harsh", &harsh)] {
+                let a = rexec.infer(imgs, &wq, &dq, Some(sq)).unwrap();
+                let b = fexec.infer(imgs, &wq, &dq, Some(sq)).unwrap();
+                assert_parity(net, &format!("{label}/{slabel}"), m.num_classes, &a, &b);
+            }
+        }
+    }
+    assert!(covered >= 1, "no stage variant in the artifact set");
+}
+
+#[test]
+fn fast_is_bit_deterministic_across_thread_counts() {
+    // Image partitioning and GEMM row-block splitting must not change a
+    // single bit — rows are independent and accumulation order is fixed.
+    let dir = artifacts();
+    for net in ["lenet", "googlenet"] {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let d = Dataset::load(&m).unwrap();
+        let cfg =
+            PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 8), QFormat::new(10, 2));
+        let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+        let n = 8.min(d.n);
+        let imgs = &d.images[..n * d.image_elems];
+        let mut base: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 5] {
+            let backend = FastBackend::with_threads(threads);
+            let mut exec = backend.load(&m, Variant::Standard).unwrap();
+            let logits = exec.infer(imgs, &wq, &dq, None).unwrap();
+            match &base {
+                None => base = Some(logits),
+                Some(want) => {
+                    assert!(
+                        want.iter().zip(&logits).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{net}: threads={threads} changed bits"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_scratch_arenas_are_reused_consistently() {
+    // Same executor, repeated calls with varying batch sizes: results
+    // must not depend on what a previous call left in the arenas.
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "convnet").unwrap();
+    let d = Dataset::load(&m).unwrap();
+    let backend = BackendKind::Fast.create().unwrap();
+    let mut exec = backend.load(&m, Variant::Standard).unwrap();
+    let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 6), QFormat::new(8, 3));
+    let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+    let one = &d.images[..d.image_elems];
+    let first = exec.infer(one, &wq, &dq, None).unwrap();
+    // big batch in between dirties every buffer
+    let big = &d.images[..32 * d.image_elems];
+    let bulk = exec.infer(big, &wq, &dq, None).unwrap();
+    let again = exec.infer(one, &wq, &dq, None).unwrap();
+    assert_eq!(first, again, "scratch reuse changed a repeated single-image result");
+    assert_eq!(&bulk[..m.num_classes], &first[..], "row 0 of the bulk batch");
+    assert_eq!(exec.executions(), 3);
+}
+
+#[test]
+fn evaluator_accuracy_agrees_across_backends() {
+    // The eval hot path (full-split batches on the fast backend vs
+    // manifest-sized batches before) must produce identical accuracy.
+    let dir = artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 7), QFormat::new(9, 3));
+    let mut accs = Vec::new();
+    for kind in [BackendKind::Reference, BackendKind::Fast] {
+        let backend = kind.create().unwrap();
+        let mut ev = qbound::eval::Evaluator::new(backend.as_ref(), &m).unwrap();
+        accs.push(ev.accuracy(&cfg, 0).unwrap());
+    }
+    assert!((accs[0] - accs[1]).abs() < 1e-12, "{accs:?}");
+}

@@ -6,7 +6,7 @@
 
 use qbound::artifacts::golden_quantize;
 use qbound::quant::QFormat;
-use qbound::testkit::{all, cases, forall, gen_f32, gen_i64, prop, Gen, GenPair};
+use qbound::testkit::{all, cases, forall, gen_f32, gen_i64, gen_vec, prop, Gen, GenPair};
 
 /// Generator for sane (I, F) formats: I in [0, 16], F in [0, 14], I+F ≥ 1.
 struct GenFormat;
@@ -153,6 +153,76 @@ fn wire_roundtrip_preserves_semantics() {
             "wire roundtrip changed semantics",
         )
     });
+}
+
+#[test]
+fn quantize_slice_matches_scalar_bit_for_bit() {
+    // The vectorized fast path (clamp-then-magic-round, I+F ≤ 23) and
+    // the wide-format fallback must both replay the scalar quantizer
+    // exactly, bit for bit — GenFormat spans I+F up to 30, so both
+    // paths are exercised.
+    forall(
+        cases(1500),
+        GenPair(GenFormat, gen_vec(gen_f32(-1e6, 1e6), 0, 48)),
+        |(fmt, xs)| {
+            let mut ys = xs.clone();
+            fmt.quantize_slice(&mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let want = fmt.quantize(*x);
+                if want.to_bits() != y.to_bits() {
+                    return prop(
+                        false,
+                        &format!("{fmt}: slice q({x:e}) = {y:e} != scalar {want:e}"),
+                    );
+                }
+            }
+            prop(true, "")
+        },
+    );
+}
+
+#[test]
+fn quantize_slice_specials_bit_for_bit() {
+    // Signed zeros, ties, saturation and non-finite inputs through both
+    // slice paths.
+    let specials = [
+        0.0f32,
+        -0.0,
+        0.5,
+        -0.5,
+        1.5,
+        2.5,
+        -2.5,
+        0.375,
+        -0.125,
+        7.75,
+        -8.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MAX,
+        f32::MIN,
+        1e-30,
+        -1e-30,
+    ];
+    for fmt in [
+        QFormat::new(1, 8),
+        QFormat::new(0, 3),
+        QFormat::new(8, 0),
+        QFormat::new(12, 2),
+        QFormat::new(16, 14), // I+F > 23: scalar fallback path
+        QFormat::FP32,
+    ] {
+        let mut ys = specials.to_vec();
+        fmt.quantize_slice(&mut ys);
+        for (x, y) in specials.iter().zip(&ys) {
+            let want = fmt.quantize(*x);
+            assert_eq!(
+                want.to_bits(),
+                y.to_bits(),
+                "{fmt}: slice q({x:e}) = {y:e} != scalar {want:e}"
+            );
+        }
+    }
 }
 
 /// Generator restricted to golden-range formats (I+F ≤ 16: every grid
