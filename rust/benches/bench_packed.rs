@@ -1,0 +1,72 @@
+//! Packed-storage benchmarks: pack/unpack bandwidth across widths vs
+//! the plain `quantize_slice` baseline, plus end-to-end infer latency
+//! under `--storage packed` vs default f32 storage on the fast backend.
+//! The archived JSON tracks the cost of making the reduced-width
+//! representation the thing that actually lives in memory.
+
+use qbound::backend::fast::FastBackend;
+use qbound::backend::{Backend, NetExecutor, Variant};
+use qbound::eval::Dataset;
+use qbound::memory::{PackedBuf, StorageMode};
+use qbound::nets::NetManifest;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+
+fn main() {
+    qbound::util::init_logging();
+    let dir = qbound::testkit::ensure_artifacts();
+    let mut suite = qbound::benchkit::BenchSuite::new("packed storage pack unpack + infer");
+
+    // Kernel bandwidth: 256k activations through pack+unpack per width,
+    // against the in-f32 quantize baseline.
+    let n = 1 << 18;
+    let mut rng = qbound::prng::Xoshiro256pp::new(11);
+    let xs: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-8.0, 8.0)).collect();
+    let bytes = (n * 4) as f64;
+    let mut base = xs.clone();
+    suite.bench_bytes("quantize_slice q(6.2) baseline", bytes, || {
+        base.copy_from_slice(&xs);
+        QFormat::new(6, 2).quantize_slice(&mut base);
+        std::hint::black_box(&base);
+    });
+    for fmt in [
+        QFormat::new(2, 2),  // 4-bit
+        QFormat::new(6, 2),  // 8-bit
+        QFormat::new(9, 3),  // 12-bit
+        QFormat::new(12, 4), // 16-bit
+        QFormat::new(12, 12), // 24-bit
+        QFormat::FP32,       // word-aligned fallback
+    ] {
+        let mut buf = PackedBuf::default();
+        let mut work = xs.clone();
+        suite.bench_bytes(&format!("pack+unpack roundtrip {fmt} ({} bits)", buf_width(fmt)), bytes, || {
+            work.copy_from_slice(&xs);
+            buf.roundtrip(fmt, &mut work);
+            std::hint::black_box(&work);
+        });
+    }
+
+    // End-to-end: fast-backend batch infer, f32 vs packed storage.
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let dataset = Dataset::load(&m).unwrap();
+    let images = dataset.batch_images(0, m.batch).to_vec();
+    let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 8), QFormat::new(10, 2));
+    let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+    for storage in [StorageMode::F32, StorageMode::Packed] {
+        let backend = FastBackend::with_options(2, storage);
+        let mut exec = backend.load(&m, Variant::Standard).unwrap();
+        suite.bench_elems(
+            &format!("lenet [fast]: infer batch {} q, storage {}", m.batch, storage.label()),
+            m.batch as f64,
+            || {
+                std::hint::black_box(exec.infer(&images, &wq, &dq, None).unwrap());
+            },
+        );
+    }
+
+    suite.finish();
+}
+
+fn buf_width(fmt: QFormat) -> u32 {
+    qbound::memory::storage_width(fmt)
+}

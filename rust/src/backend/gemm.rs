@@ -53,12 +53,52 @@ pub fn gemm_bias(
     ldc: usize,
     threads: usize,
 ) {
+    debug_assert!(b.len() >= kd * n);
+    gemm_bias_impl(m, n, kd, a, lda, BPanels::Flat(b), bias, c, ldc, threads)
+}
+
+/// `C = bias + A·B` with `B` pre-packed into NR-column panels by
+/// [`pack_b_panels`] — the per-weight-config memoized form the fast
+/// backend uses, so the panel layout is built once per config instead
+/// of the micro-kernel re-striding `B` on every `infer`.
+///
+/// Numerically identical to [`gemm_bias`] (same micro-kernels, same
+/// ascending-k accumulation; only the `B` memory layout differs), which
+/// the tests pin bit-for-bit.
+pub fn gemm_bias_packed(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[f32],
+    lda: usize,
+    bp: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    threads: usize,
+) {
+    debug_assert!(bp.len() >= ((n + NR - 1) / NR) * kd * NR);
+    gemm_bias_impl(m, n, kd, a, lda, BPanels::Packed(bp), bias, c, ldc, threads)
+}
+
+/// The one thread-splitting driver behind both public entry points.
+fn gemm_bias_impl(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[f32],
+    lda: usize,
+    b: BPanels,
+    bias: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    threads: usize,
+) {
     if m == 0 || n == 0 {
         return;
     }
     debug_assert!(lda >= kd && ldc >= n);
     debug_assert!(a.len() >= (m - 1) * lda + kd);
-    debug_assert!(b.len() >= kd * n);
     debug_assert!(bias.len() >= n);
     debug_assert!(c.len() >= (m - 1) * ldc + n);
 
@@ -85,6 +125,46 @@ pub fn gemm_bias(
     });
 }
 
+/// Repack a row-major `kd`×`n` B into NR-wide column panels: panel `p`
+/// holds columns `[p·NR, (p+1)·NR)` as `kd` contiguous NR-float rows
+/// (the ragged last panel is zero-padded). The micro-kernel then reads
+/// one contiguous NR-lane row per k step instead of striding across the
+/// full matrix width.
+pub fn pack_b_panels(b: &[f32], kd: usize, n: usize) -> Vec<f32> {
+    debug_assert!(b.len() >= kd * n);
+    let n_panels = (n + NR - 1) / NR;
+    let mut out = vec![0f32; n_panels * kd * NR];
+    for p in 0..n_panels {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        for k in 0..kd {
+            out[(p * kd + k) * NR..][..w].copy_from_slice(&b[k * n + j0..][..w]);
+        }
+    }
+    out
+}
+
+/// B operand of one blocked GEMM: row-major, or pre-packed panels.
+#[derive(Clone, Copy)]
+enum BPanels<'a> {
+    /// Row-major `kd`×`n`, stride `n`.
+    Flat(&'a [f32]),
+    /// [`pack_b_panels`] layout.
+    Packed(&'a [f32]),
+}
+
+impl<'a> BPanels<'a> {
+    /// The slice + row stride + column offset addressing panel columns
+    /// `[nb, nb+NR)` as `slice[kk * stride + off ..]`.
+    #[inline]
+    fn panel(self, nb: usize, n: usize, kd: usize) -> (&'a [f32], usize, usize) {
+        match self {
+            BPanels::Flat(b) => (b, n, nb),
+            BPanels::Packed(bp) => (&bp[(nb / NR) * kd * NR..], NR, 0),
+        }
+    }
+}
+
 /// Single-threaded blocked kernel over one row range.
 fn gemm_block(
     m: usize,
@@ -92,7 +172,7 @@ fn gemm_block(
     kd: usize,
     a: &[f32],
     lda: usize,
-    b: &[f32],
+    b: BPanels,
     bias: &[f32],
     c: &mut [f32],
     ldc: usize,
@@ -114,10 +194,11 @@ fn gemm_block(
                 let mut nb = 0usize;
                 while nb < n {
                     let nr = NR.min(n - nb);
+                    let (bs, ldb, bn0) = b.panel(nb, n, kd);
                     if mr == MR && nr == NR {
-                        micro_full(r, nb, kp, ke, kd, a, lda, b, n, c, ldc);
+                        micro_full(r, nb, kp, ke, kd, a, lda, bs, ldb, bn0, c, ldc);
                     } else {
-                        micro_edge(r, mr, nb, nr, kp, ke, a, lda, b, n, c, ldc);
+                        micro_edge(r, mr, nb, nr, kp, ke, a, lda, bs, ldb, bn0, c, ldc);
                     }
                     nb += nr;
                 }
@@ -130,6 +211,8 @@ fn gemm_block(
 }
 
 /// Full MR×NR register tile: C tile in registers, ascending-k updates.
+/// `n0` addresses the C columns; `bn0` the same columns within `b`
+/// (equal for a row-major B, 0 for a packed panel).
 #[inline]
 fn micro_full(
     r0: usize,
@@ -141,6 +224,7 @@ fn micro_full(
     lda: usize,
     b: &[f32],
     ldb: usize,
+    bn0: usize,
     c: &mut [f32],
     ldc: usize,
 ) {
@@ -150,7 +234,7 @@ fn micro_full(
         accr.copy_from_slice(&c[(r0 + i) * ldc + n0..][..NR]);
     }
     for kk in kp..ke {
-        let brow = &b[kk * ldb + n0..][..NR];
+        let brow = &b[kk * ldb + bn0..][..NR];
         for (accr, arow) in acc.iter_mut().zip(&arows) {
             let av = arow[kk];
             for (x, &bv) in accr.iter_mut().zip(brow) {
@@ -176,6 +260,7 @@ fn micro_edge(
     lda: usize,
     b: &[f32],
     ldb: usize,
+    bn0: usize,
     c: &mut [f32],
     ldc: usize,
 ) {
@@ -184,7 +269,7 @@ fn micro_edge(
         acc[i][..nr].copy_from_slice(&c[(r0 + i) * ldc + n0..][..nr]);
     }
     for kk in kp..ke {
-        let brow = &b[kk * ldb + n0..][..nr];
+        let brow = &b[kk * ldb + bn0..][..nr];
         for i in 0..mr {
             let av = a[(r0 + i) * lda + kk];
             for (x, &bv) in acc[i][..nr].iter_mut().zip(brow) {
@@ -292,5 +377,75 @@ mod tests {
         let mut c = vec![0f32; 6];
         gemm_bias(3, 2, 0, &[], 0, &[], &bias, &mut c, 2, 4);
         assert_eq!(c, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn packed_b_layout_by_hand() {
+        // kd=2, n=3 (one ragged panel): rows [1,2,3], [4,5,6]
+        let b = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bp = pack_b_panels(&b, 2, 3);
+        assert_eq!(bp.len(), 2 * NR);
+        assert_eq!(&bp[..3], &[1.0, 2.0, 3.0]);
+        assert!(bp[3..NR].iter().all(|&v| v == 0.0)); // panel padding
+        assert_eq!(&bp[NR..NR + 3], &[4.0, 5.0, 6.0]);
+        // n spanning two panels: column NR lands at the second panel's row 0
+        let n = NR + 2;
+        let wide: Vec<f32> = (0..2 * n).map(|v| v as f32).collect();
+        let wp = pack_b_panels(&wide, 2, n);
+        assert_eq!(wp.len(), 2 * 2 * NR);
+        assert_eq!(wp[2 * NR], wide[NR]); // panel 1, k=0, lane 0
+        assert_eq!(wp[3 * NR], wide[n + NR]); // panel 1, k=1, lane 0
+    }
+
+    #[test]
+    fn packed_matches_flat_bit_for_bit_across_shapes() {
+        for &(m, n, kd) in &[
+            (1usize, 1usize, 1usize),
+            (1, 10, 256),
+            (3, 5, 7),
+            (4, 16, 9),
+            (5, 17, 300),
+            (64, 24, 75),
+            (130, 33, 513),
+        ] {
+            let a = rand_vec(m * kd, 21 + m as u64);
+            let b = rand_vec(kd * n, 22 + n as u64);
+            let bias = rand_vec(n, 23 + kd as u64);
+            let bp = pack_b_panels(&b, kd, n);
+            let mut want = vec![0f32; m * n];
+            gemm_bias(m, n, kd, &a, kd, &b, &bias, &mut want, n, 1);
+            for threads in [1usize, 3] {
+                let mut c = vec![f32::NAN; m * n];
+                gemm_bias_packed(m, n, kd, &a, kd, &bp, &bias, &mut c, n, threads);
+                for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "({m},{n},{kd}) t={threads} elem {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_strided_c_leaves_gap_columns_untouched() {
+        let (m, n, kd) = (4usize, 3usize, 5usize);
+        let a = rand_vec(m * kd, 31);
+        let b = rand_vec(kd * n, 32);
+        let bias = vec![0.5; n];
+        let bp = pack_b_panels(&b, kd, n);
+        let ldc = 8;
+        let mut c = vec![-7.0f32; (m - 1) * ldc + n + 5];
+        gemm_bias_packed(m, n, kd, &a, kd, &bp, &bias, &mut c, ldc, 1);
+        let want = naive(m, n, kd, &a, &b, &bias);
+        for r in 0..m {
+            for j in 0..n {
+                assert_eq!(c[r * ldc + j], want[r * n + j]);
+            }
+            if r + 1 < m {
+                assert!(c[r * ldc + n..r * ldc + ldc].iter().all(|&v| v == -7.0));
+            }
+        }
     }
 }

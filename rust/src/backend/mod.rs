@@ -30,6 +30,13 @@
 //! CLI) or via the `QBOUND_BACKEND` env var; the default is the
 //! reference backend, which works on any machine.
 //!
+//! Both pure-Rust executors additionally honour an opt-in inter-layer
+//! **storage mode** ([`crate::memory::StorageMode`], `--storage packed`
+//! / `QBOUND_STORAGE=packed`): boundary activations round-trip through
+//! packed reduced-precision bitstreams, with numerically identical
+//! results (see `tests/integration_storage.rs` and [`crate::memory`]
+//! for the exact contract).
+//!
 //! Executors are **not** `Send` (the PJRT client is `Rc`-based);
 //! the coordinator gives each worker thread its own backend instance,
 //! created from the `Send + Copy` [`BackendKind`].
@@ -188,7 +195,7 @@ impl BackendKind {
     /// Instantiate the backend. The result is thread-local (not `Send`).
     pub fn create(self) -> Result<Box<dyn Backend>> {
         match self {
-            BackendKind::Reference => Ok(Box::new(reference::ReferenceBackend::new())),
+            BackendKind::Reference => Ok(Box::new(reference::ReferenceBackend::new()?)),
             BackendKind::Fast => Ok(Box::new(fast::FastBackend::new()?)),
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new()?)),

@@ -23,17 +23,26 @@ use anyhow::{bail, Result};
 
 use super::lowering::{self, LoweredPlan};
 use super::{Backend, NetExecutor, Variant};
+use crate::memory::{PackedBuf, StorageMode};
 use crate::nets::arch::{self, same_pad_before, Arch, Op, Padding, Shape};
 use crate::nets::NetManifest;
 use crate::quant::QFormat;
 
 /// Factory for [`ReferenceExecutor`]s.
 #[derive(Clone, Copy, Debug, Default)]
-pub struct ReferenceBackend;
+pub struct ReferenceBackend {
+    storage: StorageMode,
+}
 
 impl ReferenceBackend {
-    pub fn new() -> ReferenceBackend {
-        ReferenceBackend
+    /// Storage mode from the environment (`QBOUND_STORAGE`).
+    pub fn new() -> Result<ReferenceBackend> {
+        Ok(ReferenceBackend { storage: StorageMode::from_env()? })
+    }
+
+    /// Explicit inter-layer storage mode.
+    pub fn with_storage(storage: StorageMode) -> ReferenceBackend {
+        ReferenceBackend { storage }
     }
 }
 
@@ -50,6 +59,8 @@ impl Backend for ReferenceBackend {
             manifest: manifest.clone(),
             variant,
             memo: lowering::WeightMemo::default(),
+            storage: self.storage,
+            packed: PackedBuf::default(),
             executions: 0,
         }))
     }
@@ -61,6 +72,9 @@ pub struct ReferenceExecutor {
     manifest: NetManifest,
     variant: Variant,
     memo: lowering::WeightMemo,
+    storage: StorageMode,
+    /// Inter-layer bitstream for [`StorageMode::Packed`].
+    packed: PackedBuf,
     executions: u64,
 }
 
@@ -96,8 +110,14 @@ impl NetExecutor for ReferenceExecutor {
         let mut out = Vec::with_capacity(req.batch * classes);
         for b in 0..req.batch {
             let image = &images[b * elems..(b + 1) * elems];
-            let logits =
-                self.interp.forward_one(qparams, image, &req.dfmt, req.sfmt.as_deref())?;
+            let logits = self.interp.forward_one_stored(
+                qparams,
+                image,
+                &req.dfmt,
+                req.sfmt.as_deref(),
+                self.storage,
+                &mut self.packed,
+            )?;
             out.extend_from_slice(&logits);
         }
         self.executions += 1;
@@ -181,15 +201,39 @@ impl Interpreter {
         dq: &[QFormat],
         sfmt: Option<&[QFormat]>,
     ) -> Result<Vec<f32>> {
+        self.forward_one_stored(
+            qparams,
+            image,
+            dq,
+            sfmt,
+            StorageMode::F32,
+            &mut PackedBuf::default(),
+        )
+    }
+
+    /// [`Interpreter::forward_one`] under an explicit inter-layer
+    /// storage mode. With [`StorageMode::Packed`] every boundary
+    /// activation round-trips through `packed` — stored as a bitstream
+    /// at the boundary format's width, decoded on the next read — and
+    /// the results are numerically identical to the in-f32 path.
+    pub fn forward_one_stored(
+        &self,
+        qparams: &[Vec<f32>],
+        image: &[f32],
+        dq: &[QFormat],
+        sfmt: Option<&[QFormat]>,
+        storage: StorageMode,
+        packed: &mut PackedBuf,
+    ) -> Result<Vec<f32>> {
         let (h, w, c) = self.arch.input_shape;
         let mut feat = Feat { shape: Shape::Hwc(h, w, c), data: image.to_vec() };
-        dq[0].quantize_slice(&mut feat.data);
+        storage.store(dq[0], &mut feat.data, packed);
 
         for step in &self.plan.steps {
             let mut cursor = step.param_base;
             feat = apply_op(&step.op, feat, qparams, &mut cursor)?;
             if let Some(fmt) = lowering::post_format(step.post, dq, sfmt) {
-                fmt.quantize_slice(&mut feat.data);
+                storage.store(fmt, &mut feat.data, packed);
             }
         }
         if feat.shape != Shape::Flat(self.arch.num_classes) {

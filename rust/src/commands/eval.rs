@@ -4,6 +4,7 @@ use anyhow::Result;
 use qbound::backend::BackendKind;
 use qbound::cli::CmdSpec;
 use qbound::coordinator::{Coordinator, EvalJob};
+use qbound::memory::{FootprintModel, StorageMode};
 use qbound::nets::NetManifest;
 use qbound::quant::QFormat;
 use qbound::search::space::PrecisionConfig;
@@ -28,7 +29,12 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("n-images", "images to evaluate (0 = full split)", "0")
         .opt("workers", "worker threads (0 = one per core)", "0")
         .opt("batch", "images per infer call (0 = largest the backend allows)", "0")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
+        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "")
+        .opt(
+            "storage",
+            "inter-layer activation storage: f32 | packed (default: env or f32)",
+            "",
+        );
     let a = spec.parse(args)?;
 
     let dir = util::artifacts_dir()?;
@@ -55,6 +61,10 @@ pub fn run(args: &[String]) -> Result<()> {
     }
 
     let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
+    // Coordinator workers construct their backends from the environment,
+    // so an explicit --storage is propagated through QBOUND_STORAGE.
+    let storage = StorageMode::from_arg_or_env(a.str("storage"))?;
+    storage.set_env();
     let mut coord = Coordinator::with_backend(&dir, a.usize("workers")?, backend)?;
     coord.set_eval_batch(a.usize("batch")?);
     let n_images = a.usize("n-images")?;
@@ -65,10 +75,28 @@ pub fn run(args: &[String]) -> Result<()> {
     })?;
     let acc = coord.eval_one(EvalJob { net: net.clone(), cfg: cfg.clone(), n_images })?;
     let tr = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &cfg);
+    let fpm = FootprintModel::new(&m);
+    let (fp_base, fp) = (fpm.fp32(), fpm.footprint(&cfg));
+    // The PJRT backend executes on-device and ignores QBOUND_STORAGE;
+    // don't claim a storage mode that never ran.
+    let storage_label = match backend {
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => "f32 (pjrt backend ignores --storage)",
+        _ => storage.label(),
+    };
     println!("net:            {net}");
     println!("config:         {cfg}");
+    println!("storage:        {storage_label}");
     println!("top-1:          {acc:.4}  (baseline {base:.4})");
     println!("relative error: {:.4}", (base - acc) / base.max(1e-9));
     println!("traffic ratio:  {tr:.3} vs fp32  ({:.0}% reduction)", (1.0 - tr) * 100.0);
+    println!(
+        "footprint:      {} vs {} fp32  ({:.0}% reduction; weights {}, peak acts {})",
+        util::human_bytes(fp.total_bytes),
+        util::human_bytes(fp_base.total_bytes),
+        fpm.reduction(&cfg) * 100.0,
+        util::human_bytes(fp.weight_bytes),
+        util::human_bytes(fp.peak_act_bytes),
+    );
     Ok(())
 }

@@ -1,0 +1,109 @@
+//! `qbound footprint` — the paper's headline table: per network, the
+//! fp32 data footprint vs the best searched config's footprint at an
+//! error tolerance, as text and (optionally) JSON.
+//!
+//! "Data footprint" is weights + peak live activations in bytes
+//! ([`FootprintModel`], paper §3/Table-2 semantics), priced at the
+//! storage widths `--storage packed` actually realizes. The best config
+//! per net comes from the same §2.5 greedy search `qbound search` runs;
+//! the tolerance row is the minimum-footprint visited config within
+//! `--tol` relative error.
+
+use anyhow::Result;
+use qbound::backend::BackendKind;
+use qbound::cli::CmdSpec;
+use qbound::memory::FootprintModel;
+use qbound::nets::ArtifactIndex;
+use qbound::report::{pct, ratio, Table};
+use qbound::repro::{self, ReproCtx};
+use qbound::search::table2;
+use qbound::util::{self, json::Json};
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("footprint", "fp32 vs best-config data footprint per network")
+        .opt("net", "network name, or 'all'", "all")
+        .opt("tol", "relative-error tolerance for the best config", "0.01")
+        .opt("n-images", "images per evaluation (0 = full)", "256")
+        .opt("workers", "worker threads (0 = one per core)", "0")
+        .opt("out-dir", "report directory for footprint.{md,csv}", "reports")
+        .opt("json", "also write the table as JSON to this path", "")
+        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
+    let a = spec.parse(args)?;
+
+    let tol = a.f64("tol")?;
+    anyhow::ensure!(tol > 0.0 && tol < 1.0, "--tol must be in (0, 1)");
+    let mut ctx = ReproCtx::with_backend(
+        std::path::Path::new(a.str("out-dir")),
+        a.usize("workers")?,
+        a.usize("n-images")?,
+        BackendKind::from_arg_or_env(a.str("backend"))?,
+    )?;
+    let nets: Vec<String> = if a.str("net") == "all" {
+        ArtifactIndex::load(&ctx.artifacts)?.nets
+    } else {
+        vec![a.str("net").to_string()]
+    };
+
+    let mut t = Table::new(
+        &format!("Data footprint — fp32 vs best config @{:.0}% tolerance", tol * 100.0),
+        &[
+            "net", "fp32 bytes", "best bytes", "reduction", "weights", "peak acts", "FP", "top-1",
+            "rel err",
+        ],
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    for net in &nets {
+        let m = ctx.manifest(net)?.clone();
+        let fpm = FootprintModel::new(&m);
+        let base = fpm.fp32();
+        let dse = repro::explore_net(&mut ctx, net)?;
+        let row = table2::select(&dse.descent.visited, &[tol])
+            .pop()
+            .flatten()
+            .ok_or_else(|| anyhow::anyhow!("{net}: no config within {tol} tolerance"))?;
+        let best = fpm.footprint(&row.cfg);
+        let reduction = 1.0 - best.total_bytes / base.total_bytes;
+        t.row(vec![
+            net.clone(),
+            util::human_bytes(base.total_bytes),
+            util::human_bytes(best.total_bytes),
+            pct(reduction),
+            util::human_bytes(best.weight_bytes),
+            util::human_bytes(best.peak_act_bytes),
+            ratio(row.footprint_ratio),
+            pct(row.accuracy),
+            format!("{:.3}", row.rel_err),
+        ]);
+        entries.push(Json::obj(vec![
+            ("net", Json::str(net.clone())),
+            ("fp32_bytes", Json::num(base.total_bytes)),
+            ("best_bytes", Json::num(best.total_bytes)),
+            ("reduction", Json::num(reduction)),
+            ("weight_bytes", Json::num(best.weight_bytes)),
+            ("peak_act_bytes", Json::num(best.peak_act_bytes)),
+            ("footprint_ratio", Json::num(row.footprint_ratio)),
+            ("traffic_ratio", Json::num(row.traffic_ratio)),
+            ("config", Json::str(row.cfg.notation())),
+            ("top1", Json::num(row.accuracy)),
+            ("rel_err", Json::num(row.rel_err)),
+        ]));
+    }
+    let text = t.text();
+    print!("{text}");
+
+    let out_dir = std::path::Path::new(a.str("out-dir"));
+    util::write_file(&out_dir.join("footprint.md"), t.markdown().as_bytes())?;
+    util::write_file(&out_dir.join("footprint.csv"), t.csv().as_bytes())?;
+    if !a.str("json").is_empty() {
+        let doc = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("tol", Json::num(tol)),
+            ("n_images", Json::num(a.usize("n-images")? as f64)),
+            ("nets", Json::arr(entries)),
+        ]);
+        let path = std::path::PathBuf::from(a.str("json"));
+        util::write_file(&path, doc.pretty().as_bytes())?;
+        eprintln!("footprint json -> {}", path.display());
+    }
+    Ok(())
+}

@@ -1,6 +1,7 @@
 //! CLI subcommand implementations (thin veneers over the `qbound` library).
 
 pub mod eval;
+pub mod footprint_cmd;
 pub mod gen_artifacts;
 pub mod info;
 pub mod repro_cmd;

@@ -3,6 +3,7 @@
 use anyhow::Result;
 use qbound::backend::BackendKind;
 use qbound::cli::CmdSpec;
+use qbound::memory::StorageMode;
 use qbound::report::{pct, ratio, Table};
 use qbound::repro::{self, ReproCtx};
 use qbound::search::table2;
@@ -13,8 +14,15 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("n-images", "images per evaluation (0 = full)", "256")
         .opt("workers", "worker threads (0 = one per core)", "0")
         .opt("out-dir", "report directory", "reports")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
+        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "")
+        .opt(
+            "storage",
+            "inter-layer activation storage: f32 | packed (default: env or f32)",
+            "",
+        );
     let a = spec.parse(args)?;
+    // Workers build backends from the environment; propagate --storage.
+    StorageMode::from_arg_or_env(a.str("storage"))?.set_env();
     let mut ctx = ReproCtx::with_backend(
         std::path::Path::new(a.str("out-dir")),
         a.usize("workers")?,
@@ -31,8 +39,8 @@ pub fn run(args: &[String]) -> Result<()> {
         dse.descent.baseline
     );
     let mut t = Table::new(
-        &format!("{net} — minimum traffic per tolerance"),
-        &["tol", "data bits", "weight F", "top-1", "rel err", "TR"],
+        &format!("{net} — minimum footprint per tolerance"),
+        &["tol", "data bits", "weight F", "top-1", "rel err", "FP", "TR"],
     );
     for row in dse.rows.iter().flatten() {
         let data = if repro::data_f_policy(&net).is_some() {
@@ -46,6 +54,7 @@ pub fn run(args: &[String]) -> Result<()> {
             table2::notation_weights(&row.cfg),
             pct(row.accuracy),
             format!("{:.3}", row.rel_err),
+            ratio(row.footprint_ratio),
             ratio(row.traffic_ratio),
         ]);
     }

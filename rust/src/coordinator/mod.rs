@@ -300,7 +300,10 @@ impl Drop for Coordinator {
 fn backend_for_worker(kind: BackendKind, n_workers: usize) -> Result<Box<dyn Backend>> {
     if kind == BackendKind::Fast && std::env::var_os("QBOUND_THREADS").is_none() {
         let per_worker = (default_workers() / n_workers.max(1)).max(1);
-        return Ok(Box::new(crate::backend::fast::FastBackend::with_threads(per_worker)));
+        return Ok(Box::new(crate::backend::fast::FastBackend::with_options(
+            per_worker,
+            crate::memory::StorageMode::from_env()?,
+        )));
     }
     kind.create()
 }

@@ -28,6 +28,7 @@
 //! | [`nets`] | network manifests + the architecture registry ([`nets::arch`]) |
 //! | [`backend`] | `Backend`/`NetExecutor` traits, reference + PJRT impls |
 //! | [`artifacts`] | pure-Rust synthetic artifact generation + golden oracle |
+//! | [`memory`] | packed reduced-precision storage + data-footprint model |
 //! | [`traffic`] | the paper's Fig-4 memory-access model |
 //! | `runtime` | PJRT engine (behind `--features pjrt`) |
 //! | [`eval`] | batched top-1 evaluation with config-keyed memoization |
@@ -44,6 +45,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
 pub mod eval;
+pub mod memory;
 pub mod nets;
 pub mod prng;
 pub mod quant;

@@ -7,6 +7,7 @@
 //!   sweep-layer              Fig-3-style per-layer sweep
 //!   search                   §2.5 greedy descent + Table-2 rows
 //!   traffic                  Fig-4 traffic model
+//!   footprint                fp32 vs best-config data footprint per net
 //!   repro <exp>              regenerate a paper table/figure (or `all`)
 //!   serve                    replay a Poisson request stream (E2E driver)
 //!   gen-artifacts            synthesize a pure-Rust artifact set
@@ -38,6 +39,7 @@ COMMANDS:
   sweep-layer    one-layer-at-a-time sweep (paper Fig 3)
   search         greedy precision search (paper §2.5) + Table-2 rows
   traffic        memory-traffic model (paper Fig 4)
+  footprint      fp32 vs best-config data footprint (text + JSON)
   repro          regenerate paper experiments: table1 fig1 fig2 fig3 fig4 fig5 table2 all
   serve          serve a timed classification request stream (E2E driver)
   gen-artifacts  synthesize a pure-Rust artifact set (no python needed)
@@ -60,6 +62,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "sweep-layer" => commands::sweeps::run_layer(rest),
         "search" => commands::search_cmd::run(rest),
         "traffic" => commands::traffic_cmd::run(rest),
+        "footprint" => commands::footprint_cmd::run(rest),
         "repro" => commands::repro_cmd::run(rest),
         "serve" => commands::serve::run(rest),
         "gen-artifacts" => commands::gen_artifacts::run(rest),

@@ -1,0 +1,280 @@
+//! The data-footprint model: how many bytes a network's *resident data*
+//! occupies under a precision configuration (paper §3 / Table 2
+//! semantics — the quantity the precision search actually optimizes).
+//!
+//! Footprint ≠ traffic. The traffic model ([`crate::traffic`]) counts
+//! *accesses* per image; the footprint model counts *bytes resident in
+//! memory* while the network runs:
+//!
+//! * **weights** — every layer's parameters are resident for the whole
+//!   run: `Σ_l weight_elems(l) · width(wq[l])`;
+//! * **peak live activations** — while layer *l* executes, its input
+//!   (at the producer's format, `dq[l-1]`; the network input at
+//!   `dq[0]`) and its output (at `dq[l]`) are live simultaneously; the
+//!   activation footprint is the *maximum* over layers of that sum,
+//!   since earlier buffers can be released once consumed.
+//!
+//! Widths are the **storage** widths realized by
+//! [`PackedBuf`](super::PackedBuf) — `I + F` bits for packable
+//! formats, 32 for fp32 and formats wider than
+//! [`MAX_PACK_BITS`](super::MAX_PACK_BITS) — so inter-layer data is
+//! priced at what the packed encoding actually costs, not an idealized
+//! bit count.
+//!
+//! Scope: this is the paper's layer-granularity **data** footprint —
+//! weights plus the activations crossing layer boundaries. Executor
+//! *scratch* (the fast backend's im2col patch matrix and inception
+//! branch temporaries, the interpreter's working vectors) is excluded
+//! by design: it is backend-specific, lives in fp32 regardless of the
+//! precision config (intra-group intermediates are never quantized —
+//! see `PostQuant::None`), and is not part of the quantity the
+//! precision search trades against accuracy.
+
+use crate::nets::NetManifest;
+use crate::search::space::PrecisionConfig;
+
+use super::packed::storage_width;
+
+/// Byte costs of one layer under a configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerFootprint {
+    pub name: String,
+    /// Resident parameter bytes (weights + biases at `wq[l]`).
+    pub weight_bytes: f64,
+    /// Input activation bytes at the producer's data format.
+    pub in_bytes: f64,
+    /// Output activation bytes at `dq[l]`.
+    pub out_bytes: f64,
+}
+
+impl LayerFootprint {
+    /// Bytes live while this layer executes (weights are network-wide
+    /// and accounted separately in [`Footprint::weight_bytes`]).
+    pub fn live_act_bytes(&self) -> f64 {
+        self.in_bytes + self.out_bytes
+    }
+}
+
+/// Whole-network footprint under one configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Footprint {
+    /// All resident parameters.
+    pub weight_bytes: f64,
+    /// Peak of in+out live activations over the layers.
+    pub peak_act_bytes: f64,
+    /// Layer index at which the activation peak occurs.
+    pub peak_layer: usize,
+    /// `weight_bytes + peak_act_bytes` — the paper's data footprint.
+    pub total_bytes: f64,
+}
+
+/// Per-network footprint calculator, built once from a manifest. The
+/// fp32 baseline total is precomputed and [`FootprintModel::footprint`]
+/// allocates nothing — the greedy descent prices every candidate
+/// neighbour through [`FootprintModel::ratio`], so this sits on the
+/// search hot path.
+#[derive(Clone, Debug)]
+pub struct FootprintModel {
+    layers: Vec<(String, u64, u64, u64)>, // (name, in, out, weights)
+    fp32_total: f64,
+}
+
+impl FootprintModel {
+    pub fn new(m: &NetManifest) -> FootprintModel {
+        let layers: Vec<(String, u64, u64, u64)> = m
+            .layers
+            .iter()
+            .map(|l| (l.name.clone(), l.in_elems, l.out_elems, l.weight_elems))
+            .collect();
+        // fp32 baseline: everything 4 bytes/elem.
+        let weight_bytes: f64 = layers.iter().map(|(_, _, _, w)| *w as f64 * 4.0).sum();
+        let peak_act = layers
+            .iter()
+            .map(|(_, i, o, _)| (i + o) as f64 * 4.0)
+            .fold(0f64, f64::max);
+        FootprintModel { layers, fp32_total: weight_bytes + peak_act }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Per-layer byte breakdown under `cfg` (display paths).
+    pub fn per_layer(&self, cfg: &PrecisionConfig) -> Vec<LayerFootprint> {
+        assert_eq!(cfg.n_layers(), self.layers.len(), "config/model layer mismatch");
+        let bytes = |elems: u64, width: u32| elems as f64 * width as f64 / 8.0;
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(l, (name, in_e, out_e, w_e))| {
+                let in_fmt = if l == 0 { cfg.dq[0] } else { cfg.dq[l - 1] };
+                LayerFootprint {
+                    name: name.clone(),
+                    weight_bytes: bytes(*w_e, storage_width(cfg.wq[l])),
+                    in_bytes: bytes(*in_e, storage_width(in_fmt)),
+                    out_bytes: bytes(*out_e, storage_width(cfg.dq[l])),
+                }
+            })
+            .collect()
+    }
+
+    /// Aggregate footprint under `cfg`: total weights + peak live
+    /// activations. Allocation-free.
+    pub fn footprint(&self, cfg: &PrecisionConfig) -> Footprint {
+        assert_eq!(cfg.n_layers(), self.layers.len(), "config/model layer mismatch");
+        let bytes = |elems: u64, width: u32| elems as f64 * width as f64 / 8.0;
+        let mut weight_bytes = 0f64;
+        let (mut peak_layer, mut peak_act_bytes) = (0usize, 0f64);
+        for (l, (_, in_e, out_e, w_e)) in self.layers.iter().enumerate() {
+            weight_bytes += bytes(*w_e, storage_width(cfg.wq[l]));
+            let in_fmt = if l == 0 { cfg.dq[0] } else { cfg.dq[l - 1] };
+            let live = bytes(*in_e, storage_width(in_fmt)) + bytes(*out_e, storage_width(cfg.dq[l]));
+            if live > peak_act_bytes {
+                peak_act_bytes = live;
+                peak_layer = l;
+            }
+        }
+        Footprint {
+            weight_bytes,
+            peak_act_bytes,
+            peak_layer,
+            total_bytes: weight_bytes + peak_act_bytes,
+        }
+    }
+
+    /// The all-fp32 baseline footprint.
+    pub fn fp32(&self) -> Footprint {
+        self.footprint(&PrecisionConfig::fp32(self.layers.len()))
+    }
+
+    /// Footprint ratio vs the fp32 baseline (the search's ranking key;
+    /// `1 - ratio` is the paper's "% reduction").
+    pub fn ratio(&self, cfg: &PrecisionConfig) -> f64 {
+        self.footprint(cfg).total_bytes / self.fp32_total
+    }
+
+    /// Footprint reduction vs fp32 as a fraction in [0, 1).
+    pub fn reduction(&self, cfg: &PrecisionConfig) -> f64 {
+        1.0 - self.ratio(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{LayerMeta, ParamMeta};
+    use crate::quant::QFormat;
+    use std::path::PathBuf;
+
+    fn toy_manifest() -> NetManifest {
+        NetManifest {
+            name: "toy".into(),
+            dataset: "synmnist".into(),
+            num_classes: 10,
+            input_shape: vec![4, 4, 1],
+            batch: 8,
+            n_eval: 64,
+            baseline_top1: 0.9,
+            layers: vec![
+                LayerMeta {
+                    name: "L1".into(),
+                    kind: "conv".into(),
+                    in_elems: 16,
+                    out_elems: 8,
+                    weight_elems: 20,
+                    macs: 100,
+                    stages: vec!["conv".into()],
+                },
+                LayerMeta {
+                    name: "L2".into(),
+                    kind: "fc".into(),
+                    in_elems: 8,
+                    out_elems: 10,
+                    weight_elems: 90,
+                    macs: 80,
+                    stages: vec!["fc".into()],
+                },
+            ],
+            params: vec![
+                ParamMeta { name: "w1".into(), shape: vec![20] },
+                ParamMeta { name: "w2".into(), shape: vec![90] },
+            ],
+            hlo_file: "x".into(),
+            weights_file: "x".into(),
+            dataset_file: "x".into(),
+            stage_variant: None,
+            dir: PathBuf::from("/tmp"),
+        }
+    }
+
+    #[test]
+    fn fp32_baseline_by_hand() {
+        let fpm = FootprintModel::new(&toy_manifest());
+        let base = fpm.fp32();
+        // weights: (20 + 90) * 4 bytes
+        assert_eq!(base.weight_bytes, 110.0 * 4.0);
+        // live activations: L1 has (16+8)*4 = 96, L2 has (8+10)*4 = 72
+        assert_eq!(base.peak_act_bytes, 96.0);
+        assert_eq!(base.peak_layer, 0);
+        assert_eq!(base.total_bytes, 440.0 + 96.0);
+    }
+
+    #[test]
+    fn quantized_bytes_by_hand() {
+        let fpm = FootprintModel::new(&toy_manifest());
+        // w 1.7 (8 bits), d 6.2 (8 bits) everywhere => exactly 1/4 of fp32.
+        let cfg = PrecisionConfig::uniform(2, QFormat::new(1, 7), QFormat::new(6, 2));
+        let fp = fpm.footprint(&cfg);
+        assert_eq!(fp.weight_bytes, 110.0);
+        assert_eq!(fp.peak_act_bytes, 24.0);
+        assert!((fpm.ratio(&cfg) - 0.25).abs() < 1e-12);
+        assert!((fpm.reduction(&cfg) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn input_priced_at_producer_format() {
+        let fpm = FootprintModel::new(&toy_manifest());
+        let mut cfg = PrecisionConfig::fp32(2);
+        cfg.dq[0] = QFormat::new(14, 2); // 16 bits
+        cfg.dq[1] = QFormat::new(6, 2); // 8 bits
+        let per = fpm.per_layer(&cfg);
+        assert_eq!(per[0].in_bytes, 16.0 * 2.0); // input at dq[0]
+        assert_eq!(per[0].out_bytes, 8.0 * 2.0); // L1 out at dq[0]
+        assert_eq!(per[1].in_bytes, 8.0 * 2.0); // L2 in at dq[0] (producer)
+        assert_eq!(per[1].out_bytes, 10.0 * 1.0); // L2 out at dq[1]
+    }
+
+    #[test]
+    fn wide_formats_cost_32_bits() {
+        let fpm = FootprintModel::new(&toy_manifest());
+        // 26-bit data format has no packed encoding: priced as 32-bit.
+        let cfg = PrecisionConfig::uniform(2, QFormat::new(1, 7), QFormat::new(14, 12));
+        let per = fpm.per_layer(&cfg);
+        assert_eq!(per[0].in_bytes, 16.0 * 4.0);
+    }
+
+    #[test]
+    fn cached_baseline_matches_recomputation() {
+        let fpm = FootprintModel::new(&toy_manifest());
+        let base = fpm.fp32();
+        // ratio() divides by the precomputed fp32 total; the two must agree.
+        assert!((fpm.ratio(&PrecisionConfig::fp32(2)) - 1.0).abs() < 1e-12);
+        assert_eq!(base.total_bytes, 440.0 + 96.0);
+        // footprint() aggregates must agree with the per_layer breakdown.
+        let cfg = PrecisionConfig::uniform(2, QFormat::new(1, 7), QFormat::new(6, 2));
+        let per = fpm.per_layer(&cfg);
+        let fp = fpm.footprint(&cfg);
+        assert_eq!(fp.weight_bytes, per.iter().map(|l| l.weight_bytes).sum::<f64>());
+        let peak = per.iter().map(|l| l.live_act_bytes()).fold(0f64, f64::max);
+        assert_eq!(fp.peak_act_bytes, peak);
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        let fpm = FootprintModel::new(&toy_manifest());
+        let narrow = PrecisionConfig::uniform(2, QFormat::new(1, 3), QFormat::new(4, 0));
+        let wide = PrecisionConfig::uniform(2, QFormat::new(1, 11), QFormat::new(10, 2));
+        assert!(fpm.footprint(&narrow).total_bytes < fpm.footprint(&wide).total_bytes);
+        assert!((fpm.ratio(&PrecisionConfig::fp32(2)) - 1.0).abs() < 1e-12);
+    }
+}

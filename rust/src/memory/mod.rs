@@ -1,0 +1,138 @@
+//! The bounded-memory subsystem: packed reduced-precision storage and
+//! data-footprint accounting.
+//!
+//! The paper's title promises *bounded memory*, and its headline result
+//! is a 74%-average data-footprint reduction at <1% accuracy loss —
+//! but neither materializes if every activation still lives as an f32
+//! and nothing measures bytes. This module closes that loop:
+//!
+//! | piece | role |
+//! |---|---|
+//! | [`PackedBuf`] | a quantized tensor as a contiguous two's-complement bitstream at `I+F` bits per value ([`packed`]) |
+//! | [`FootprintModel`] | per-layer / per-network resident-byte model (weights + peak live activations) for any `PrecisionConfig` ([`footprint`]) |
+//! | [`StorageMode`] | the opt-in inter-layer storage switch both CPU executors honour (`--storage packed` / `QBOUND_STORAGE=packed`) |
+//!
+//! Under [`StorageMode::Packed`] the executors quantize→pack each
+//! activation at its layer-boundary format and unpack it again before
+//! the next op reads it, so every boundary value is carried by — and
+//! re-derived from — its reduced-width bitstream code on real forward
+//! passes; results are numerically identical to the default
+//! quantize-in-f32 path (locked by `tests/integration_storage.rs`).
+//! The mode validates the packed representation end-to-end; it does
+//! not yet shrink the executors' resident set, because the values are
+//! unpacked into the existing f32 arenas (fusing unpack into the
+//! consumers is a ROADMAP open item). The byte savings are *measured*
+//! by [`FootprintModel`]: the precision search ranks configurations by
+//! modeled footprint ([`FootprintModel::ratio`]), and `qbound
+//! footprint` reports the fp32-vs-best-config byte table.
+
+pub mod footprint;
+pub mod packed;
+
+pub use footprint::{Footprint, FootprintModel, LayerFootprint};
+pub use packed::{storage_width, PackedBuf, MAX_PACK_BITS};
+
+use anyhow::{bail, Result};
+
+/// How executors store activations *between* layers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StorageMode {
+    /// Quantize in place, keep the f32 representation (default).
+    #[default]
+    F32,
+    /// Quantize→pack into a [`PackedBuf`] bitstream at the boundary
+    /// format's width, unpack into the arena on the next read.
+    Packed,
+}
+
+impl StorageMode {
+    /// Parse a CLI/env spelling: `f32` (aliases `fp32`, `dense`) or
+    /// `packed` (alias `pack`).
+    pub fn parse(s: &str) -> Result<StorageMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "dense" => Ok(StorageMode::F32),
+            "packed" | "pack" => Ok(StorageMode::Packed),
+            other => bail!("unknown storage mode {other:?} (expected: f32 | packed)"),
+        }
+    }
+
+    /// Mode selected by `QBOUND_STORAGE`, defaulting to [`StorageMode::F32`].
+    /// An invalid value is an error (not a silent fallback).
+    pub fn from_env() -> Result<StorageMode> {
+        match std::env::var("QBOUND_STORAGE") {
+            Ok(s) if !s.is_empty() => StorageMode::parse(&s),
+            _ => Ok(StorageMode::default()),
+        }
+    }
+
+    /// CLI resolution: an explicit `--storage` value wins; empty falls
+    /// back to [`StorageMode::from_env`].
+    pub fn from_arg_or_env(arg: &str) -> Result<StorageMode> {
+        if arg.trim().is_empty() {
+            StorageMode::from_env()
+        } else {
+            StorageMode::parse(arg)
+        }
+    }
+
+    /// Propagate the mode to `QBOUND_STORAGE` so coordinator workers
+    /// (which construct their backends from the environment) inherit
+    /// it — the same pattern `QBOUND_THREADS` uses. Call before
+    /// spawning workers.
+    pub fn set_env(self) {
+        std::env::set_var("QBOUND_STORAGE", self.label());
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            StorageMode::F32 => "f32",
+            StorageMode::Packed => "packed",
+        }
+    }
+
+    /// Quantize a boundary activation under this mode: in place for f32
+    /// storage, through the packed bitstream otherwise (numerically
+    /// identical either way — two's complement just canonicalizes
+    /// `-0.0`). Both CPU executors call this at every quantization
+    /// boundary, so the dispatch lives in exactly one place.
+    #[inline]
+    pub fn store(self, fmt: crate::quant::QFormat, xs: &mut [f32], packed: &mut PackedBuf) {
+        match self {
+            StorageMode::F32 => fmt.quantize_slice(xs),
+            StorageMode::Packed => packed.roundtrip(fmt, xs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spellings() {
+        for s in ["f32", "FP32", "dense"] {
+            assert_eq!(StorageMode::parse(s).unwrap(), StorageMode::F32);
+        }
+        for s in ["packed", "PACK"] {
+            assert_eq!(StorageMode::parse(s).unwrap(), StorageMode::Packed);
+        }
+        assert!(StorageMode::parse("mmap").is_err());
+    }
+
+    #[test]
+    fn default_is_f32() {
+        assert_eq!(StorageMode::default(), StorageMode::F32);
+        assert_eq!(StorageMode::default().label(), "f32");
+        assert_eq!(StorageMode::Packed.label(), "packed");
+    }
+
+    #[test]
+    fn arg_overrides_env_fallback() {
+        assert_eq!(StorageMode::from_arg_or_env("packed").unwrap(), StorageMode::Packed);
+        assert!(StorageMode::from_arg_or_env("bogus").is_err());
+        if std::env::var_os("QBOUND_STORAGE").is_none() {
+            assert_eq!(StorageMode::from_arg_or_env("").unwrap(), StorageMode::F32);
+            assert_eq!(StorageMode::from_arg_or_env("  ").unwrap(), StorageMode::F32);
+        }
+    }
+}

@@ -1,0 +1,339 @@
+//! Packed two's-complement storage for Q(I.F) tensors.
+//!
+//! [`PackedBuf`] stores a quantized tensor as a contiguous bitstream at
+//! the format's *representation width* — `N = I + F` bits per value,
+//! two's complement — instead of one f32 per value. This is the piece
+//! the paper's "bounded memory" claim rests on: a layer's activations
+//! only cost `N` bits each if `N` bits suffices to carry them between
+//! layers (Hashemi et al., arXiv:1612.03940, make the same point for
+//! energy). The executors' `--storage packed` mode proves exactly that
+//! by round-tripping every boundary activation through this encoding;
+//! see [`PackedBuf::roundtrip`] for what is and is not yet realized.
+//!
+//! Semantics contract (locked by `tests/property_packed.rs`):
+//! `unpack(pack(x))` is bit-identical to [`QFormat::quantize_slice`]
+//! output for every format, *up to zero-sign canonicalization* — two's
+//! complement has a single zero, so a quantized `-0.0` is stored and
+//! recovered as `+0.0` (numerically equal; the parity suite shows the
+//! forward pass cannot distinguish them).
+//!
+//! Layout: values are packed LSB-first into little-endian `u64` words;
+//! a value may straddle a word boundary. Widths:
+//!
+//! * `1..=24` — the fixed-point bitstream path. The pack kernel is a
+//!   single hoisted pass (scale/clamp factors lifted out of the loop,
+//!   no per-value format dispatch); codes are
+//!   `round_ties_even(clamp(x·2^F))`, exactly the quantizer's grid.
+//! * `32` — the word-aligned fallback: the fp32 sentinel and any
+//!   format wider than 24 bits store raw quantized f32 bits (wider
+//!   codes would not round-trip through f32's 24-bit mantissa anyway).
+//!
+//! Non-finite inputs follow the quantizer (±∞ saturates); NaN has no
+//! fixed-point encoding and packs to code 0.
+
+use crate::quant::QFormat;
+
+/// Widest fixed-point bitstream width; wider formats (and fp32) take
+/// the 32-bit word-aligned fallback.
+pub const MAX_PACK_BITS: u32 = 24;
+
+/// Physical storage width of `fmt` inside a [`PackedBuf`]: `I + F` for
+/// packable fixed-point formats, 32 for fp32 and anything wider than
+/// [`MAX_PACK_BITS`].
+pub fn storage_width(fmt: QFormat) -> u32 {
+    let bits = fmt.bits();
+    if fmt.is_fp32() || bits > MAX_PACK_BITS {
+        32
+    } else {
+        bits
+    }
+}
+
+/// A tensor stored as a packed bitstream of fixed-point codes.
+///
+/// Reusable: [`PackedBuf::pack_into`] re-sizes in place, so executors
+/// keep one buffer per scratch arena and the steady state allocates
+/// nothing.
+#[derive(Clone, Debug, Default)]
+pub struct PackedBuf {
+    words: Vec<u64>,
+    len: usize,
+    width: u32,
+}
+
+impl PackedBuf {
+    /// Pack `xs` under `fmt` into a fresh buffer.
+    pub fn pack(fmt: QFormat, xs: &[f32]) -> PackedBuf {
+        let mut buf = PackedBuf::default();
+        buf.pack_into(fmt, xs);
+        buf
+    }
+
+    /// Number of stored values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bits per stored value (the [`storage_width`] of the pack format).
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Physical footprint of the payload, rounded up to whole bytes.
+    pub fn packed_bytes(&self) -> usize {
+        (self.len * self.width as usize + 7) / 8
+    }
+
+    /// Quantize `xs` with `fmt` and store the codes, replacing any
+    /// previous contents. The capacity of the backing word vector is
+    /// kept across calls.
+    pub fn pack_into(&mut self, fmt: QFormat, xs: &[f32]) {
+        let width = storage_width(fmt);
+        self.width = width;
+        self.len = xs.len();
+        let n_words = (xs.len() * width as usize + 63) / 64;
+        self.words.clear();
+        self.words.resize(n_words, 0);
+
+        if width == 32 {
+            // Word-aligned fallback, two values per u64, LSB-first. The
+            // fp32 sentinel is a raw-bit passthrough; wide fixed-point
+            // formats store quantized bits with -0.0 canonicalized to
+            // +0.0 (`+ 0.0`), keeping the zero-sign contract uniform
+            // with the two's-complement bitstream path.
+            if fmt.is_fp32() {
+                for (i, &x) in xs.iter().enumerate() {
+                    self.words[i / 2] |= (x.to_bits() as u64) << ((i % 2) * 32);
+                }
+            } else {
+                for (i, &x) in xs.iter().enumerate() {
+                    let bits = (fmt.quantize(x) + 0.0).to_bits() as u64;
+                    self.words[i / 2] |= bits << ((i % 2) * 32);
+                }
+            }
+            return;
+        }
+
+        // Fixed-point bitstream. Everything format-dependent is hoisted
+        // out of the loop; the code is round_ties_even(clamp(x*2^F)) —
+        // clamp-before-round equals round-before-clamp because the
+        // bounds are exact grid integers (same argument as the
+        // quantizer's fast path).
+        let scale = (fmt.fbits as f32).exp2();
+        let (lo, hi) = fmt.range();
+        let (slo, shi) = (lo * scale, hi * scale);
+        let mask = (1u64 << width) - 1;
+        let mut bitpos = 0usize;
+        for &x in xs {
+            let code = (x * scale).clamp(slo, shi).round_ties_even() as i32;
+            let bits = (code as u32 as u64) & mask;
+            let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
+            self.words[w] |= bits << off;
+            if off + width > 64 {
+                self.words[w + 1] |= bits >> (64 - off);
+            }
+            bitpos += width as usize;
+        }
+    }
+
+    /// Decode the stored codes into `out`. `fmt` must be the format the
+    /// buffer was packed with (same [`storage_width`]) and `out` must
+    /// have exactly [`PackedBuf::len`] elements.
+    pub fn unpack_into(&self, fmt: QFormat, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len, "unpack length mismatch");
+        assert_eq!(storage_width(fmt), self.width, "unpack format mismatch");
+
+        if self.width == 32 {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = f32::from_bits((self.words[i / 2] >> ((i % 2) * 32)) as u32);
+            }
+            return;
+        }
+
+        let width = self.width;
+        let inv = (-(fmt.fbits as f32)).exp2();
+        let shift = 64 - width;
+        let mut bitpos = 0usize;
+        for o in out.iter_mut() {
+            let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
+            let mut raw = self.words[w] >> off;
+            if off + width > 64 {
+                raw |= self.words[w + 1] << (64 - off);
+            }
+            // Sign-extend the width-bit code, then scale back by 2^-F
+            // (exact: |code| < 2^24 and inv is a power of two).
+            let code = ((raw << shift) as i64) >> shift;
+            *o = code as f32 * inv;
+            bitpos += width as usize;
+        }
+    }
+
+    /// Decode one value (tests, debugging; the bulk path is
+    /// [`PackedBuf::unpack_into`]).
+    pub fn get(&self, fmt: QFormat, i: usize) -> f32 {
+        assert!(i < self.len);
+        assert_eq!(storage_width(fmt), self.width);
+        if self.width == 32 {
+            return f32::from_bits((self.words[i / 2] >> ((i % 2) * 32)) as u32);
+        }
+        let bitpos = i * self.width as usize;
+        let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
+        let mut raw = self.words[w] >> off;
+        if off + self.width > 64 {
+            raw |= self.words[w + 1] << (64 - off);
+        }
+        let shift = 64 - self.width;
+        let code = ((raw << shift) as i64) >> shift;
+        code as f32 * (-(fmt.fbits as f32)).exp2()
+    }
+
+    /// Quantize `xs` through packed storage in place: pack, then unpack
+    /// back into the same slice. This is the inter-layer `--storage
+    /// packed` hot path: every boundary value is re-derived from its
+    /// bitstream code, so the packed encoding is exercised end-to-end
+    /// on real forward passes. Note this validates the representation
+    /// without yet shrinking the resident set — the f32 arena the
+    /// values are unpacked into stays allocated (eliminating it by
+    /// fusing unpack into the consumers is a ROADMAP item); the byte
+    /// savings themselves are what [`FootprintModel`] models.
+    ///
+    /// [`FootprintModel`]: super::FootprintModel
+    pub fn roundtrip(&mut self, fmt: QFormat, xs: &mut [f32]) {
+        self.pack_into(fmt, xs);
+        self.unpack_into(fmt, xs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::quantized_canonical;
+
+    #[test]
+    fn storage_widths() {
+        assert_eq!(storage_width(QFormat::new(4, 2)), 6);
+        assert_eq!(storage_width(QFormat::new(12, 12)), 24);
+        assert_eq!(storage_width(QFormat::new(14, 12)), 32); // > 24 bits
+        assert_eq!(storage_width(QFormat::FP32), 32);
+    }
+
+    #[test]
+    fn roundtrip_matches_quantizer() {
+        let fmt = QFormat::new(4, 3); // 7 bits: straddles word boundaries
+        let xs: Vec<f32> = (-40..40).map(|i| i as f32 * 0.29).collect();
+        let buf = PackedBuf::pack(fmt, &xs);
+        assert_eq!(buf.len(), xs.len());
+        assert_eq!(buf.width(), 7);
+        let mut out = vec![f32::NAN; xs.len()];
+        buf.unpack_into(fmt, &mut out);
+        let want = quantized_canonical(fmt, &xs);
+        for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn clamp_edges_and_negatives() {
+        let fmt = QFormat::new(3, 1); // range [-4, 3.5]
+        let xs = [-100.0f32, -4.0, -3.75, -0.25, -0.1, 0.0, 0.1, 3.5, 3.75, 1e9];
+        let buf = PackedBuf::pack(fmt, &xs);
+        let mut out = vec![0f32; xs.len()];
+        buf.unpack_into(fmt, &mut out);
+        assert_eq!(out, quantized_canonical(fmt, &xs));
+        assert_eq!(out[0], -4.0);
+        assert_eq!(out[9], 3.5);
+    }
+
+    #[test]
+    fn one_bit_format() {
+        let fmt = QFormat::new(1, 0); // codes {-1, 0}
+        let xs = [-5.0f32, -1.0, -0.4, 0.0, 0.4, 5.0];
+        let buf = PackedBuf::pack(fmt, &xs);
+        assert_eq!(buf.width(), 1);
+        assert_eq!(buf.packed_bytes(), 1);
+        let mut out = vec![0f32; xs.len()];
+        buf.unpack_into(fmt, &mut out);
+        assert_eq!(out, vec![-1.0, -1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fp32_fallback_is_bit_exact() {
+        let xs = [0.1f32, -123.456, 1e20, f32::MIN_POSITIVE, -0.0];
+        let buf = PackedBuf::pack(QFormat::FP32, &xs);
+        assert_eq!(buf.width(), 32);
+        let mut out = vec![0f32; xs.len()];
+        buf.unpack_into(QFormat::FP32, &mut out);
+        for (a, b) in xs.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits()); // raw bits, -0.0 kept
+        }
+    }
+
+    #[test]
+    fn wide_format_takes_word_aligned_fallback() {
+        let fmt = QFormat::new(14, 12); // 26 bits -> stored as f32
+        let xs = [1234.5678f32, -8000.25, 0.000244140625];
+        let buf = PackedBuf::pack(fmt, &xs);
+        assert_eq!(buf.width(), 32);
+        let mut out = vec![0f32; xs.len()];
+        buf.unpack_into(fmt, &mut out);
+        assert_eq!(out, quantized_canonical(fmt, &xs));
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        let fmt = QFormat::new(2, 3); // 5 bits
+        let buf = PackedBuf::pack(fmt, &vec![0.0; 13]);
+        assert_eq!(buf.packed_bytes(), (13 * 5 + 7) / 8); // 9 bytes
+        let f = PackedBuf::pack(QFormat::FP32, &vec![0.0; 3]);
+        assert_eq!(f.packed_bytes(), 12);
+    }
+
+    #[test]
+    fn reuse_shrinks_and_grows() {
+        let mut buf = PackedBuf::default();
+        let fmt = QFormat::new(5, 3);
+        let long: Vec<f32> = (0..100).map(|i| i as f32 * 0.11).collect();
+        buf.pack_into(fmt, &long);
+        let mut out = vec![0f32; 100];
+        buf.unpack_into(fmt, &mut out);
+        assert_eq!(out, quantized_canonical(fmt, &long));
+        // Shorter repack on the same buffer must not see stale words.
+        let short = [7.77f32, -1.23];
+        buf.pack_into(fmt, &short);
+        let mut out2 = vec![0f32; 2];
+        buf.unpack_into(fmt, &mut out2);
+        assert_eq!(out2, quantized_canonical(fmt, &short));
+    }
+
+    #[test]
+    fn roundtrip_in_place() {
+        let fmt = QFormat::new(6, 2);
+        let mut xs: Vec<f32> = (-20..20).map(|i| i as f32 * 0.77).collect();
+        let want = quantized_canonical(fmt, &xs);
+        let mut buf = PackedBuf::default();
+        buf.roundtrip(fmt, &mut xs);
+        assert_eq!(xs, want);
+        // Idempotent: a second roundtrip changes nothing.
+        let again = xs.clone();
+        buf.roundtrip(fmt, &mut xs);
+        assert_eq!(xs, again);
+    }
+
+    #[test]
+    fn negative_zero_canonicalizes() {
+        let fmt = QFormat::new(4, 0);
+        let xs = [-0.2f32, -0.0];
+        let mut v = xs.to_vec();
+        fmt.quantize_slice(&mut v);
+        assert_eq!(v[0].to_bits(), (-0.0f32).to_bits()); // quantizer keeps the sign
+        let buf = PackedBuf::pack(fmt, &xs);
+        let mut out = vec![1.0f32; 2];
+        buf.unpack_into(fmt, &mut out);
+        assert_eq!(out[0].to_bits(), 0.0f32.to_bits()); // single two's-complement zero
+        assert_eq!(out[1].to_bits(), 0.0f32.to_bits());
+    }
+}

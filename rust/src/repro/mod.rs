@@ -20,6 +20,7 @@ use anyhow::{Context, Result};
 use crate::backend::{BackendKind, Variant};
 use crate::coordinator::{Coordinator, EvalJob};
 use crate::eval::Dataset;
+use crate::memory::FootprintModel;
 use crate::nets::{ArtifactIndex, NetManifest};
 use crate::quant::QFormat;
 use crate::report::{pct, ratio, Chart, Table};
@@ -422,16 +423,20 @@ pub fn explore_net(ctx: &mut ReproCtx, net: &str) -> Result<DseResult> {
 }
 
 /// Fig 5 scatter + Table 2 rows for every network, plus the paper's
-/// headline aggregate (average traffic reduction at 1 % tolerance).
+/// headline aggregate (average data-footprint reduction at 1 %
+/// tolerance). Since the memory subsystem landed, configs are ranked —
+/// and the scatter's x-axis priced — by **modeled data footprint**
+/// ([`FootprintModel`]); the traffic ratios still ride along in the
+/// table for the paper's original TR columns.
 pub fn fig5_table2(ctx: &mut ReproCtx) -> Result<String> {
     let mut out = String::new();
     let mut headline = Vec::new();
     let nets: Vec<String> = ctx.index.nets.clone();
     let mut t2 = Table::new(
-        "Table 2 — minimum-traffic mixed configs per tolerance",
+        "Table 2 — minimum-footprint mixed configs per tolerance",
         &[
             "net", "tol", "data bits per layer", "weight F per layer", "top-1", "rel err",
-            "TR(32b)", "TR(16b)",
+            "FP(32b)", "TR(32b)", "TR(16b)",
         ],
     );
     for net in &nets {
@@ -440,26 +445,34 @@ pub fn fig5_table2(ctx: &mut ReproCtx) -> Result<String> {
 
         // Fig-5 scatter: uniform grid ('u'), explored mixed ('.'), frontier ('#').
         let mut chart = Chart::new(
-            &format!("Fig 5 — {net}: traffic vs accuracy"),
-            "traffic ratio vs 32-bit",
+            &format!("Fig 5 — {net}: data footprint vs accuracy"),
+            "footprint ratio vs fp32",
             "top-1 accuracy",
         );
         let uniform_pts = uniform_grid_points(ctx, &m)?;
         let mixed: Vec<(f64, f64)> =
-            dse.descent.explored.iter().map(|v| (v.traffic_ratio, v.accuracy)).collect();
+            dse.descent.explored.iter().map(|v| (v.footprint_ratio, v.accuracy)).collect();
         let front_idx = pareto::frontier(&mixed);
         chart.series('u', uniform_pts.clone());
         chart.series('.', mixed.clone());
         chart.series('#', front_idx.iter().map(|&i| mixed[i]).collect());
         out.push_str(&chart.render());
 
-        let mut csv = Table::new("", &["kind", "traffic_ratio", "accuracy", "config"]);
-        for (tr, acc) in &uniform_pts {
-            csv.row(vec!["uniform".into(), format!("{tr:.4}"), format!("{acc:.4}"), String::new()]);
+        let mut csv =
+            Table::new("", &["kind", "footprint_ratio", "traffic_ratio", "accuracy", "config"]);
+        for (fp, acc) in &uniform_pts {
+            csv.row(vec![
+                "uniform".into(),
+                format!("{fp:.4}"),
+                String::new(),
+                format!("{acc:.4}"),
+                String::new(),
+            ]);
         }
         for v in &dse.descent.explored {
             csv.row(vec![
                 "mixed".into(),
+                format!("{:.4}", v.footprint_ratio),
                 format!("{:.4}", v.traffic_ratio),
                 format!("{:.4}", v.accuracy),
                 v.cfg.notation(),
@@ -480,23 +493,24 @@ pub fn fig5_table2(ctx: &mut ReproCtx) -> Result<String> {
                 table2::notation_weights(&row.cfg),
                 pct(row.accuracy),
                 format!("{:.3}", row.rel_err),
+                ratio(row.footprint_ratio),
                 ratio(row.traffic_ratio),
                 ratio(traffic::traffic_ratio_vs16(&m, Mode::Batch(m.batch), &row.cfg)),
             ]);
             if (row.tol - 0.01).abs() < 1e-9 {
-                headline.push((net.clone(), row.traffic_ratio));
+                headline.push((net.clone(), row.footprint_ratio));
             }
         }
     }
     out.push_str(&t2.text());
-    let avg_tr: f64 =
-        headline.iter().map(|(_, tr)| tr).sum::<f64>() / headline.len().max(1) as f64;
-    let min_tr = headline.iter().map(|(_, tr)| *tr).fold(f64::INFINITY, f64::min);
+    let avg_fp: f64 =
+        headline.iter().map(|(_, fp)| fp).sum::<f64>() / headline.len().max(1) as f64;
+    let min_fp = headline.iter().map(|(_, fp)| *fp).fold(f64::INFINITY, f64::min);
     let headline_txt = format!(
-        "\nHEADLINE (paper: 74% avg / up to 92% reduction @1% tol):\n  \
+        "\nHEADLINE (paper: 74% avg / up to 92% data-footprint reduction @1% tol):\n  \
          measured: avg reduction {:.0}%  best net {:.0}%  ({} nets)\n",
-        (1.0 - avg_tr) * 100.0,
-        (1.0 - min_tr) * 100.0,
+        (1.0 - avg_fp) * 100.0,
+        (1.0 - min_fp) * 100.0,
         headline.len()
     );
     out.push_str(&headline_txt);
@@ -507,10 +521,12 @@ pub fn fig5_table2(ctx: &mut ReproCtx) -> Result<String> {
     Ok(out)
 }
 
-/// The Fig-5 "uniform" comparison series: a small grid of uniform configs.
+/// The Fig-5 "uniform" comparison series: a small grid of uniform
+/// configs priced by modeled footprint.
 fn uniform_grid_points(ctx: &mut ReproCtx, m: &NetManifest) -> Result<Vec<(f64, f64)>> {
     let nl = m.n_layers();
     let df = data_f_policy(&m.name).unwrap_or(1);
+    let fpm = FootprintModel::new(m);
     let mut jobs = Vec::new();
     let mut cfgs = Vec::new();
     for wf in [2i8, 4, 6, 8, 10] {
@@ -521,11 +537,7 @@ fn uniform_grid_points(ctx: &mut ReproCtx, m: &NetManifest) -> Result<Vec<(f64, 
         }
     }
     let accs = ctx.coord.eval_batch(&jobs)?;
-    Ok(cfgs
-        .iter()
-        .zip(&accs)
-        .map(|(cfg, &acc)| (traffic::traffic_ratio(m, Mode::Batch(m.batch), cfg), acc))
-        .collect())
+    Ok(cfgs.iter().zip(&accs).map(|(cfg, &acc)| (fpm.ratio(cfg), acc)).collect())
 }
 
 // ---------------------------------------------------------------------------

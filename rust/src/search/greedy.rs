@@ -14,6 +14,7 @@
 use anyhow::Result;
 
 use crate::coordinator::{Coordinator, EvalJob};
+use crate::memory::FootprintModel;
 use crate::nets::NetManifest;
 use crate::quant::QFormat;
 use crate::search::space::{DescentOptions, PrecisionConfig};
@@ -72,6 +73,9 @@ pub struct Visited {
     pub accuracy: f64,
     pub rel_err: f64,
     pub traffic_ratio: f64,
+    /// Modeled data-footprint ratio vs fp32 ([`FootprintModel::ratio`])
+    /// — the quantity Table-2 selection minimizes.
+    pub footprint_ratio: f64,
 }
 
 /// Full result of a descent run.
@@ -139,6 +143,7 @@ pub fn descend(
     opts: &GreedyOptions,
 ) -> Result<DescentResult> {
     let nl = m.n_layers();
+    let fpm = FootprintModel::new(m);
     let baseline = coord.eval_one(EvalJob {
         net: m.name.clone(),
         cfg: PrecisionConfig::fp32(nl),
@@ -149,6 +154,7 @@ pub fn descend(
         move_label: label,
         rel_err: if baseline > 0.0 { (baseline - acc) / baseline } else { 1.0 },
         traffic_ratio: traffic::traffic_ratio(m, opts.mode, &cfg),
+        footprint_ratio: fpm.ratio(&cfg),
         cfg,
         accuracy: acc,
     };
@@ -179,14 +185,14 @@ pub fn descend(
         let accs = coord.eval_batch(&jobs)?;
 
         // Selection per policy; accuracy ties always break toward lower
-        // traffic (cheaper config).
+        // modeled footprint (cheaper config).
         let cur_acc = visited.last().unwrap().accuracy;
         let cur_tr = visited.last().unwrap().traffic_ratio;
         let score = |i: usize| -> f64 {
-            let tr = traffic::traffic_ratio(m, opts.mode, &neighbours[i].1);
             match opts.policy {
                 ChoicePolicy::BestAccuracy => accs[i],
                 ChoicePolicy::TrafficPerError => {
+                    let tr = traffic::traffic_ratio(m, opts.mode, &neighbours[i].1);
                     let saved = (cur_tr - tr).max(0.0);
                     let lost = (cur_acc - accs[i]).max(0.0);
                     saved / (lost + 1e-4)
@@ -201,8 +207,7 @@ pub fn descend(
                     score(i) > score(j)
                         || (score(i) == score(j)
                             && (acc > accs[j]
-                                || traffic::traffic_ratio(m, opts.mode, &neighbours[i].1)
-                                    < traffic::traffic_ratio(m, opts.mode, &neighbours[j].1)))
+                                || fpm.ratio(&neighbours[i].1) < fpm.ratio(&neighbours[j].1)))
                 }
             };
             if better {

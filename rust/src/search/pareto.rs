@@ -1,14 +1,18 @@
-//! Pareto-frontier extraction in the (traffic ↓, accuracy ↑) plane —
-//! the "best" category of the paper's Fig 5.
+//! Pareto-frontier extraction in the (cost ↓, accuracy ↑) plane — the
+//! "best" category of the paper's Fig 5. The cost axis is whatever the
+//! caller prices configs in; since the memory subsystem landed, the
+//! repro harness and `qbound footprint` rank by **modeled data
+//! footprint** ([`crate::memory::FootprintModel::ratio`]) rather than
+//! raw bit-weighted traffic.
 
-/// Indices of the non-dominated points among `(traffic, accuracy)` pairs.
+/// Indices of the non-dominated points among `(cost, accuracy)` pairs.
 ///
-/// A point dominates another if it has ≤ traffic AND ≥ accuracy with at
-/// least one strict. Returned indices are sorted by traffic ascending;
-/// duplicate (traffic, accuracy) pairs keep their first occurrence.
+/// A point dominates another if it has ≤ cost AND ≥ accuracy with at
+/// least one strict. Returned indices are sorted by cost ascending;
+/// duplicate (cost, accuracy) pairs keep their first occurrence.
 pub fn frontier(points: &[(f64, f64)]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..points.len()).collect();
-    // Sort by traffic asc, accuracy desc so a single sweep suffices.
+    // Sort by cost asc, accuracy desc so a single sweep suffices.
     idx.sort_by(|&a, &b| {
         points[a]
             .0

@@ -1,5 +1,11 @@
-//! Table-2 selection: minimum-traffic mixed configuration per error
+//! Table-2 selection: minimum-footprint mixed configuration per error
 //! tolerance, with the paper's notation.
+//!
+//! Ranking key: the **modeled data footprint** (weights + peak live
+//! activations, [`crate::memory::FootprintModel`]) — the bytes the
+//! packed storage subsystem actually keeps resident — not the raw
+//! bit-weighted traffic count. Both the footprint and traffic ratios of
+//! the winning config are reported.
 
 use crate::search::greedy::Visited;
 use crate::search::space::PrecisionConfig;
@@ -16,11 +22,13 @@ pub struct ToleranceRow {
     pub rel_err: f64,
     /// TR — traffic ratio vs the 32-bit baseline.
     pub traffic_ratio: f64,
+    /// FP — modeled data-footprint ratio vs fp32 (the ranking key).
+    pub footprint_ratio: f64,
 }
 
-/// For each tolerance, the minimum-traffic visited config whose relative
-/// error is within tolerance. `None` when nothing qualifies (shouldn't
-/// happen — the fp32-adjacent start always qualifies).
+/// For each tolerance, the minimum-footprint visited config whose
+/// relative error is within tolerance. `None` when nothing qualifies
+/// (shouldn't happen — the fp32-adjacent start always qualifies).
 pub fn select(visited: &[Visited], tolerances: &[f64]) -> Vec<Option<ToleranceRow>> {
     tolerances
         .iter()
@@ -28,13 +36,14 @@ pub fn select(visited: &[Visited], tolerances: &[f64]) -> Vec<Option<ToleranceRo
             visited
                 .iter()
                 .filter(|v| v.rel_err <= tol)
-                .min_by(|a, b| a.traffic_ratio.partial_cmp(&b.traffic_ratio).unwrap())
+                .min_by(|a, b| a.footprint_ratio.partial_cmp(&b.footprint_ratio).unwrap())
                 .map(|v| ToleranceRow {
                     tol,
                     cfg: v.cfg.clone(),
                     accuracy: v.accuracy,
                     rel_err: v.rel_err,
                     traffic_ratio: v.traffic_ratio,
+                    footprint_ratio: v.footprint_ratio,
                 })
         })
         .collect()
@@ -66,25 +75,43 @@ mod tests {
     use super::*;
     use crate::quant::QFormat;
 
-    fn v(rel_err: f64, tr: f64) -> Visited {
+    fn v(rel_err: f64, fp: f64) -> Visited {
         Visited {
             step: 0,
             move_label: "t".into(),
             cfg: PrecisionConfig::uniform(2, QFormat::new(1, 4), QFormat::new(8, 1)),
             accuracy: 1.0 - rel_err,
             rel_err,
-            traffic_ratio: tr,
+            // traffic tracks footprint loosely in real descents; keep
+            // them distinct here so tests see which one ranks.
+            traffic_ratio: fp + 0.05,
+            footprint_ratio: fp,
         }
     }
 
     #[test]
-    fn selects_min_traffic_within_tol() {
+    fn selects_min_footprint_within_tol() {
         let visited = vec![v(0.001, 0.5), v(0.009, 0.3), v(0.03, 0.2), v(0.2, 0.1)];
         let rows = select(&visited, &TOLERANCES);
-        assert!((rows[0].as_ref().unwrap().traffic_ratio - 0.3).abs() < 1e-12); // 1%
-        assert!((rows[1].as_ref().unwrap().traffic_ratio - 0.3).abs() < 1e-12); // 2%
-        assert!((rows[2].as_ref().unwrap().traffic_ratio - 0.2).abs() < 1e-12); // 5%
-        assert!((rows[3].as_ref().unwrap().traffic_ratio - 0.2).abs() < 1e-12); // 10%
+        assert!((rows[0].as_ref().unwrap().footprint_ratio - 0.3).abs() < 1e-12); // 1%
+        assert!((rows[1].as_ref().unwrap().footprint_ratio - 0.3).abs() < 1e-12); // 2%
+        assert!((rows[2].as_ref().unwrap().footprint_ratio - 0.2).abs() < 1e-12); // 5%
+        assert!((rows[3].as_ref().unwrap().footprint_ratio - 0.2).abs() < 1e-12); // 10%
+        // the winner's traffic ratio rides along
+        assert!((rows[0].as_ref().unwrap().traffic_ratio - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranks_by_footprint_not_traffic() {
+        // b has lower footprint but higher traffic than a: b must win.
+        let mut a = v(0.001, 0.4);
+        a.traffic_ratio = 0.30;
+        let mut b = v(0.001, 0.3);
+        b.traffic_ratio = 0.45;
+        let rows = select(&[a, b], &[0.01]);
+        let row = rows[0].as_ref().unwrap();
+        assert!((row.footprint_ratio - 0.3).abs() < 1e-12);
+        assert!((row.traffic_ratio - 0.45).abs() < 1e-12);
     }
 
     #[test]

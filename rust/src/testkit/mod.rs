@@ -53,6 +53,21 @@ pub fn ensure_artifacts() -> std::path::PathBuf {
     .clone()
 }
 
+/// Reference semantics for the packed-storage contract, shared by the
+/// `memory::packed` unit tests and `tests/property_packed.rs`:
+/// [`QFormat::quantize_slice`](crate::quant::QFormat::quantize_slice)
+/// output with `-0.0` canonicalized to `+0.0` (`+ 0.0` maps `-0.0` to
+/// `+0.0` and is the identity elsewhere — two's complement has a
+/// single zero).
+pub fn quantized_canonical(fmt: crate::quant::QFormat, xs: &[f32]) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    fmt.quantize_slice(&mut v);
+    for x in &mut v {
+        *x += 0.0;
+    }
+    v
+}
+
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {

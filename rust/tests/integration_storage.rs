@@ -1,0 +1,197 @@
+//! `--storage packed` parity: on every registered architecture, both
+//! CPU executors must produce results numerically identical to the
+//! default quantize-in-f32 path when boundary activations live as
+//! packed bitstreams — zero logit difference (|a - b| = 0 admits only
+//! the sign of zero, which two's complement canonicalizes) and
+//! bit-identical top-1 on every row.
+
+use qbound::backend::fast::FastBackend;
+use qbound::backend::reference::ReferenceBackend;
+use qbound::backend::{Backend, NetExecutor, Variant};
+use qbound::eval::Dataset;
+use qbound::memory::StorageMode;
+use qbound::nets::{ArtifactIndex, NetManifest};
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::testkit;
+
+/// Images per parity batch — ≠ the manifest batch so the variable-batch
+/// path is exercised.
+const PARITY_IMAGES: usize = 16;
+
+fn artifacts() -> std::path::PathBuf {
+    testkit::ensure_artifacts()
+}
+
+fn top1_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks(classes)
+        .map(|row| {
+            let mut best = 0;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// fp32 sentinel layers, a healthy uniform config, a mixed per-layer
+/// config, and a deliberately narrow one (wide clamping, many zeros).
+fn storage_configs(nl: usize) -> Vec<(&'static str, PrecisionConfig)> {
+    let mut mixed = PrecisionConfig::fp32(nl);
+    for l in 0..nl {
+        mixed.wq[l] = if l % 2 == 0 { QFormat::new(1, 8) } else { QFormat::new(2, 7) };
+        mixed.dq[l] = if l % 3 == 0 { QFormat::new(10, 3) } else { QFormat::new(9, 4) };
+    }
+    vec![
+        ("fp32", PrecisionConfig::fp32(nl)),
+        ("uniform", PrecisionConfig::uniform(nl, QFormat::new(1, 8), QFormat::new(10, 2))),
+        ("mixed", mixed),
+        ("narrow", PrecisionConfig::uniform(nl, QFormat::new(1, 4), QFormat::new(4, 1))),
+    ]
+}
+
+fn assert_identical(net: &str, label: &str, classes: usize, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{net}/{label}: logit count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        // |x - y| == 0.0 admits -0.0 vs 0.0, nothing else.
+        assert!(
+            (x - y).abs() == 0.0,
+            "{net}/{label}: logit {i} differs: {x} vs {y}"
+        );
+    }
+    assert_eq!(top1_rows(a, classes), top1_rows(b, classes), "{net}/{label}: top-1");
+}
+
+#[test]
+fn packed_storage_is_identical_on_every_arch_both_backends() {
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let d = Dataset::load(&m).unwrap();
+        let n = PARITY_IMAGES.min(d.n);
+        let imgs = &d.images[..n * d.image_elems];
+
+        let mut rf32 =
+            ReferenceBackend::with_storage(StorageMode::F32).load(&m, Variant::Standard).unwrap();
+        let mut rpacked = ReferenceBackend::with_storage(StorageMode::Packed)
+            .load(&m, Variant::Standard)
+            .unwrap();
+        let mut ff32 = FastBackend::with_options(2, StorageMode::F32)
+            .load(&m, Variant::Standard)
+            .unwrap();
+        let mut fpacked = FastBackend::with_options(2, StorageMode::Packed)
+            .load(&m, Variant::Standard)
+            .unwrap();
+
+        for (label, cfg) in storage_configs(m.n_layers()) {
+            let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+            let want = rf32.infer(imgs, &wq, &dq, None).unwrap();
+            let rp = rpacked.infer(imgs, &wq, &dq, None).unwrap();
+            assert_identical(net, &format!("{label}/reference"), m.num_classes, &want, &rp);
+            let fwant = ff32.infer(imgs, &wq, &dq, None).unwrap();
+            let fp = fpacked.infer(imgs, &wq, &dq, None).unwrap();
+            assert_identical(net, &format!("{label}/fast"), m.num_classes, &fwant, &fp);
+        }
+    }
+}
+
+#[test]
+fn packed_storage_parity_on_stage_variants() {
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    let mut covered = 0;
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let Some(sv) = m.stage_variant.clone() else { continue };
+        covered += 1;
+        let d = Dataset::load(&m).unwrap();
+        let n = PARITY_IMAGES.min(d.n);
+        let imgs = &d.images[..n * d.image_elems];
+        let mut sq: Vec<f32> = (0..sv.n_stages).flat_map(|_| [-1.0f32, 0.0]).collect();
+        sq[0] = 4.0; // stage 0 data -> Q(4.4)
+        sq[1] = 4.0;
+        let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 8), QFormat::new(10, 2));
+        let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+        let pairs: [(Box<dyn Backend>, Box<dyn Backend>); 2] = [
+            (
+                Box::new(ReferenceBackend::with_storage(StorageMode::F32)),
+                Box::new(ReferenceBackend::with_storage(StorageMode::Packed)),
+            ),
+            (
+                Box::new(FastBackend::with_options(2, StorageMode::F32)),
+                Box::new(FastBackend::with_options(2, StorageMode::Packed)),
+            ),
+        ];
+        for (mk_f32, mk_packed) in pairs {
+            let mut a = mk_f32.load(&m, Variant::Stages).unwrap();
+            let mut b = mk_packed.load(&m, Variant::Stages).unwrap();
+            let la = a.infer(imgs, &wq, &dq, Some(&sq)).unwrap();
+            let lb = b.infer(imgs, &wq, &dq, Some(&sq)).unwrap();
+            assert_identical(net, &format!("stages/{}", mk_f32.name()), m.num_classes, &la, &lb);
+        }
+    }
+    assert!(covered >= 1, "no stage variant in the artifact set");
+}
+
+#[test]
+fn packed_fast_is_bit_deterministic_across_thread_counts() {
+    let dir = artifacts();
+    for net in ["lenet", "googlenet"] {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let d = Dataset::load(&m).unwrap();
+        let cfg =
+            PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 8), QFormat::new(10, 2));
+        let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+        let n = 8.min(d.n);
+        let imgs = &d.images[..n * d.image_elems];
+        let mut base: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 5] {
+            let backend = FastBackend::with_options(threads, StorageMode::Packed);
+            let mut exec = backend.load(&m, Variant::Standard).unwrap();
+            let logits = exec.infer(imgs, &wq, &dq, None).unwrap();
+            match &base {
+                None => base = Some(logits),
+                Some(want) => {
+                    assert!(
+                        want.iter().zip(&logits).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{net}: packed threads={threads} changed bits"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn evaluator_accuracy_identical_under_packed_storage() {
+    // The acceptance-criteria form of the contract: top-1 accuracy on a
+    // whole eval split is bit-identical between storage modes on every
+    // registered arch (both backends).
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let cfg =
+            PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 7), QFormat::new(9, 3));
+        let mut accs = Vec::new();
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(ReferenceBackend::with_storage(StorageMode::F32)),
+            Box::new(ReferenceBackend::with_storage(StorageMode::Packed)),
+            Box::new(FastBackend::with_options(2, StorageMode::F32)),
+            Box::new(FastBackend::with_options(2, StorageMode::Packed)),
+        ];
+        for backend in &backends {
+            let mut ev = qbound::eval::Evaluator::new(backend.as_ref(), &m).unwrap();
+            accs.push(ev.accuracy(&cfg, 64).unwrap());
+        }
+        assert!(
+            accs.iter().all(|a| *a == accs[0]),
+            "{net}: storage modes disagree on accuracy: {accs:?}"
+        );
+    }
+}

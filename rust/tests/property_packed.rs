@@ -1,0 +1,150 @@
+//! Property tests for the packed reduced-precision storage: pack→unpack
+//! must be bit-exact vs `QFormat::quantize_slice` for every I/F width
+//! combination — including negative values, clamp edges, exact ties and
+//! non-word-aligned lengths — up to zero-sign canonicalization (two's
+//! complement has one zero, so a quantized `-0.0` is recovered as
+//! `+0.0`; `+ 0.0` applies the same canonicalization to the reference
+//! side and is the identity on every other value).
+
+use qbound::memory::{storage_width, PackedBuf, MAX_PACK_BITS};
+use qbound::quant::QFormat;
+use qbound::testkit::{
+    cases, forall, gen_f32, gen_i64, gen_vec, prop, quantized_canonical, GenPair, Outcome,
+};
+
+fn check_roundtrip(fmt: QFormat, xs: &[f32]) -> Outcome {
+    let want = quantized_canonical(fmt, xs);
+    let buf = PackedBuf::pack(fmt, xs);
+    let mut got = vec![f32::NAN; xs.len()];
+    buf.unpack_into(fmt, &mut got);
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        if w.to_bits() != g.to_bits() {
+            return Outcome::Fail(format!(
+                "{fmt}: elem {i} ({}) packs to {g:?}, quantizer says {w:?}",
+                xs[i]
+            ));
+        }
+    }
+    prop(buf.len() == xs.len(), "len preserved")
+}
+
+/// Every packable (I, F) combination, swept exhaustively over a value
+/// set that covers the clamp edges, exact rounding ties, negatives and
+/// a non-word-aligned length.
+#[test]
+fn every_width_combo_roundtrips_edge_values() {
+    for ibits in 0..=12i8 {
+        for fbits in 0..=12i8 {
+            if ibits + fbits == 0 {
+                continue;
+            }
+            let fmt = QFormat::new(ibits, fbits);
+            let (lo, hi) = fmt.range();
+            let step = fmt.step();
+            // 13 values: in-range grid points, half-step ties, both
+            // clamp edges and beyond, negatives, zero — odd length so
+            // the bitstream never ends word-aligned.
+            let xs = [
+                0.0f32,
+                -0.0,
+                step,
+                -step,
+                step * 0.5, // exact tie
+                -step * 1.5, // exact tie
+                lo,
+                hi,
+                lo - step, // below the clamp
+                hi + step, // above the clamp
+                lo * 10.0,
+                hi * 10.0,
+                0.37,
+            ];
+            if let Outcome::Fail(msg) = check_roundtrip(fmt, &xs) {
+                panic!("{msg}");
+            }
+        }
+    }
+}
+
+/// Randomized sweep: random format, random non-word-aligned length,
+/// random values spanning several format ranges.
+#[test]
+fn random_formats_and_lengths_roundtrip() {
+    forall(
+        cases(256),
+        GenPair(
+            GenPair(gen_i64(0, 13), gen_i64(0, 13)),
+            gen_vec(gen_f32(-600.0, 600.0), 1, 67),
+        ),
+        |((ibits, fbits), xs)| {
+            let (mut i, f) = (*ibits as i8, *fbits as i8);
+            if i + f == 0 {
+                i = 1;
+            }
+            let fmt = QFormat::new(i, f);
+            check_roundtrip(fmt, xs)
+        },
+    );
+}
+
+/// Formats wider than MAX_PACK_BITS and the fp32 sentinel take the
+/// word-aligned 32-bit fallback and must still match the quantizer.
+#[test]
+fn wide_and_fp32_formats_roundtrip() {
+    let wide = QFormat::new(14, 12); // 26 bits
+    assert_eq!(storage_width(wide), 32);
+    forall(cases(128), gen_vec(gen_f32(-20000.0, 20000.0), 1, 33), |xs| {
+        check_roundtrip(wide, xs)
+    });
+    forall(cases(128), gen_vec(gen_f32(-1e9, 1e9), 1, 33), |xs| {
+        // fp32 passthrough: raw bits, including -0.0.
+        let buf = PackedBuf::pack(QFormat::FP32, xs);
+        let mut got = vec![0f32; xs.len()];
+        buf.unpack_into(QFormat::FP32, &mut got);
+        prop(
+            xs.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fp32 raw-bit roundtrip",
+        )
+    });
+}
+
+/// Packing is idempotent: packing an unpacked buffer reproduces it.
+#[test]
+fn pack_is_idempotent_on_quantized_data() {
+    forall(
+        cases(128),
+        GenPair(gen_i64(1, 10), gen_vec(gen_f32(-50.0, 50.0), 1, 50)),
+        |(fbits, xs)| {
+            let fmt = QFormat::new(3, *fbits as i8);
+            let buf = PackedBuf::pack(fmt, xs);
+            let mut once = vec![0f32; xs.len()];
+            buf.unpack_into(fmt, &mut once);
+            let buf2 = PackedBuf::pack(fmt, &once);
+            let mut twice = vec![0f32; xs.len()];
+            buf2.unpack_into(fmt, &mut twice);
+            prop(
+                once.iter().zip(&twice).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "second roundtrip must be the identity",
+            )
+        },
+    );
+}
+
+/// The physical footprint matches the bit arithmetic for every width.
+#[test]
+fn packed_bytes_match_width_arithmetic() {
+    for width_fmt in [
+        QFormat::new(1, 0),
+        QFormat::new(2, 3),
+        QFormat::new(1, 7),
+        QFormat::new(8, 8),
+        QFormat::new(12, 12),
+    ] {
+        for len in [1usize, 7, 8, 63, 64, 65, 1000] {
+            let buf = PackedBuf::pack(width_fmt, &vec![0.25; len]);
+            let bits = len * storage_width(width_fmt) as usize;
+            assert_eq!(buf.packed_bytes(), (bits + 7) / 8, "{width_fmt} len {len}");
+            assert!(storage_width(width_fmt) <= MAX_PACK_BITS || storage_width(width_fmt) == 32);
+        }
+    }
+}
