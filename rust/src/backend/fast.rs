@@ -26,14 +26,22 @@
 //!   `QBOUND_THREADS` (default: available parallelism); results are
 //!   bit-identical for every thread count.
 //!
-//! With `--storage packed` ([`StorageMode::Packed`]) every activation
-//! crossing a quantization boundary round-trips through a
-//! [`PackedBuf`](crate::memory::PackedBuf) bitstream at the boundary
-//! format's width — the value the next op reads is re-derived from the
-//! reduced-width code, with results numerically identical to the
-//! default in-f32 path (`tests/integration_storage.rs`). The f32
-//! arenas themselves stay allocated; see `crate::memory` for what the
-//! mode does and does not yet realize.
+//! With `--storage packed` ([`StorageMode::Packed`]) the executor runs
+//! the **fused** forward path: between layers only
+//! [`PackedBuf`](crate::memory::PackedBuf) bitstreams persist, at the
+//! boundary format's width. The max-sized ping-pong f32 arenas are not
+//! allocated at all — consumers decode windows of the input bitstream
+//! on the fly (im2col pulls one input row at a time, 1×1-conv/dense
+//! GEMMs stream `A` row blocks through a
+//! [`PackedCursor`](crate::memory::PackedCursor), inception stages its
+//! module input once for its four branch readers) and each step's f32
+//! output lives only until it is packed at the next boundary. Results
+//! stay numerically identical to the default in-f32 path
+//! (`tests/integration_storage.rs`), and the residency claim is
+//! measured by `tests/integration_memory.rs` under a counting
+//! allocator. The fused path trades the zero-allocation steady state of
+//! the f32 path for minimal residency: per-step working vectors are
+//! allocated fresh so the resident set really is bitstreams + windows.
 //!
 //! Numeric contract: agreement with the reference backend up to fp32
 //! accumulation order (see `tests/integration_parity.rs`). The GEMM
@@ -48,7 +56,7 @@ use super::gemm::{gemm_bias_packed, pack_b_panels};
 use super::lowering::{self, LoweredPlan};
 use super::reference::{avgpool_into, gap_into, lrn_into, maxpool_into};
 use super::{Backend, NetExecutor, Variant};
-use crate::memory::{PackedBuf, StorageMode};
+use crate::memory::{PackedBuf, PackedCursor, StorageMode};
 use crate::nets::arch::{conv_out_hw, same_pad_before, Op, Padding, Shape};
 use crate::nets::NetManifest;
 use crate::quant::QFormat;
@@ -163,7 +171,7 @@ impl NetExecutor for FastExecutor {
         let outer = self.threads.min(batch).max(1);
         let inner = (self.threads / outer).max(1);
         while self.scratch.len() < outer {
-            self.scratch.push(Scratch::new(&self.plan));
+            self.scratch.push(Scratch::new(&self.plan, self.storage));
         }
 
         let mut out = vec![0f32; batch * classes];
@@ -174,7 +182,7 @@ impl NetExecutor for FastExecutor {
         if outer == 1 {
             let scr = &mut self.scratch[0];
             for i in 0..batch {
-                forward_image(
+                dispatch_image(
                     plan,
                     qparams,
                     panels,
@@ -203,7 +211,7 @@ impl NetExecutor for FastExecutor {
                     out_rest = or;
                     s.spawn(move || {
                         for i in 0..n_here {
-                            forward_image(
+                            dispatch_image(
                                 plan,
                                 qparams,
                                 panels,
@@ -289,27 +297,38 @@ fn pack_plan_panels(plan: &LoweredPlan, qparams: &[Vec<f32>]) -> Vec<Option<Vec<
     panels
 }
 
-/// Per-worker arena: all per-layer buffers, allocated once.
+/// Per-worker arena: all per-layer buffers, allocated once. The f32
+/// ping-pong arenas exist only in [`StorageMode::F32`]; the fused
+/// packed path replaces them with the streaming decode window plus two
+/// reusable boundary bitstreams — that swap *is* the measured residency
+/// reduction.
 struct Scratch {
-    /// Ping-pong activation buffers.
+    /// Ping-pong activation buffers (f32 storage mode only).
     act_a: Vec<f32>,
     act_b: Vec<f32>,
     /// im2col patch matrix.
     col: Vec<f32>,
     /// Inception temporaries (reduce outputs / pooled input).
     tmp: Vec<f32>,
-    /// Inter-layer bitstream for [`StorageMode::Packed`].
-    packed: PackedBuf,
+    /// Streaming decode window (fused packed mode only).
+    win: Vec<f32>,
+    /// Ping-pong boundary bitstreams (fused packed mode only).
+    pk_in: PackedBuf,
+    pk_out: PackedBuf,
 }
 
 impl Scratch {
-    fn new(plan: &LoweredPlan) -> Scratch {
+    fn new(plan: &LoweredPlan, storage: StorageMode) -> Scratch {
+        let fused = storage == StorageMode::Packed;
+        let act = if fused { 0 } else { plan.max_act_elems };
         Scratch {
-            act_a: vec![0f32; plan.max_act_elems],
-            act_b: vec![0f32; plan.max_act_elems],
+            act_a: vec![0f32; act],
+            act_b: vec![0f32; act],
             col: vec![0f32; plan.max_col_elems],
             tmp: vec![0f32; plan.max_tmp_elems],
-            packed: PackedBuf::default(),
+            win: vec![0f32; if fused { plan.max_win_elems } else { 0 }],
+            pk_in: PackedBuf::default(),
+            pk_out: PackedBuf::default(),
         }
     }
 }
@@ -321,9 +340,9 @@ fn panel_at(panels: &[Option<Vec<f32>>], i: usize) -> &[f32] {
     panels[i].as_deref().expect("GEMM weight panel")
 }
 
-/// Forward one image through the lowered plan. Infallible: the plan's
-/// shape chain was validated at load time.
-fn forward_image(
+/// Run one image under the executor's storage mode: the arena-based
+/// in-f32 path, or the fused bitstream path.
+fn dispatch_image(
     plan: &LoweredPlan,
     qparams: &[Vec<f32>],
     panels: &[Option<Vec<f32>>],
@@ -335,10 +354,33 @@ fn forward_image(
     threads: usize,
     out_row: &mut [f32],
 ) {
-    let Scratch { act_a, act_b, col, tmp, packed } = scr;
+    match storage {
+        StorageMode::F32 => {
+            forward_image(plan, qparams, panels, image, dfmt, sfmt, scr, threads, out_row)
+        }
+        StorageMode::Packed => {
+            forward_image_fused(plan, qparams, panels, image, dfmt, sfmt, scr, threads, out_row)
+        }
+    }
+}
+
+/// Forward one image through the lowered plan. Infallible: the plan's
+/// shape chain was validated at load time.
+fn forward_image(
+    plan: &LoweredPlan,
+    qparams: &[Vec<f32>],
+    panels: &[Option<Vec<f32>>],
+    image: &[f32],
+    dfmt: &[QFormat],
+    sfmt: Option<&[QFormat]>,
+    scr: &mut Scratch,
+    threads: usize,
+    out_row: &mut [f32],
+) {
+    let Scratch { act_a, act_b, col, tmp, .. } = scr;
     let (mut src, mut dst) = (&mut act_a[..], &mut act_b[..]);
     src[..image.len()].copy_from_slice(image);
-    storage.store(dfmt[0], &mut src[..image.len()], packed);
+    dfmt[0].quantize_slice(&mut src[..image.len()]);
 
     for step in &plan.steps {
         let in_e = step.in_shape.elems();
@@ -418,10 +460,185 @@ fn forward_image(
             (op, s) => unreachable!("lowered plan let op {op:?} reach shape {s:?}"),
         }
         if let Some(fmt) = lowering::post_format(step.post, dfmt, sfmt) {
-            storage.store(fmt, &mut src[..out_e], packed);
+            fmt.quantize_slice(&mut src[..out_e]);
         }
     }
     out_row.copy_from_slice(&src[..plan.num_classes]);
+}
+
+/// The fused packed forward: between steps the activation is either a
+/// boundary bitstream (`pk_in`, at `cur_fmt`) or an unquantized
+/// intra-group f32 tensor (`cur`). Consumers decode what they need from
+/// the bitstream — nothing else of the input exists in f32 — and every
+/// step's output vector is freed as soon as it is packed at the next
+/// boundary. Values are identical to [`forward_image`] because
+/// pack→decode is exactly the quantizer (modulo `-0.0` → `+0.0`, which
+/// the storage-parity suite shows the forward pass cannot distinguish).
+fn forward_image_fused(
+    plan: &LoweredPlan,
+    qparams: &[Vec<f32>],
+    panels: &[Option<Vec<f32>>],
+    image: &[f32],
+    dfmt: &[QFormat],
+    sfmt: Option<&[QFormat]>,
+    scr: &mut Scratch,
+    threads: usize,
+    out_row: &mut [f32],
+) {
+    let Scratch { col, tmp, win, pk_in, pk_out, .. } = scr;
+    let (mut pk_in, mut pk_out) = (pk_in, pk_out);
+    pk_in.pack_into(dfmt[0], image);
+    let mut cur_fmt = dfmt[0];
+    // `None` = the activation lives only in `pk_in`.
+    let mut cur: Option<Vec<f32>> = None;
+
+    for step in &plan.steps {
+        let in_e = step.in_shape.elems();
+        let out_e = step.out_shape.elems();
+        let base = step.param_base;
+        match (&step.op, step.in_shape) {
+            // Shape-only: whichever representation is current passes
+            // through untouched (a packed boundary stays packed).
+            (Op::Flatten | Op::Dropout, _) => {}
+            (Op::ReLU, _) => {
+                if let Some(v) = &mut cur {
+                    relu(&mut v[..in_e]);
+                } else {
+                    // Stage-granularity boundaries can precede any op:
+                    // materialize, then proceed in f32.
+                    let mut v = vec![0f32; in_e];
+                    pk_in.unpack_into(cur_fmt, &mut v);
+                    relu(&mut v);
+                    cur = Some(v);
+                }
+            }
+            (&Op::Conv { out_c, k, stride, padding, .. }, Shape::Hwc(h, w, c)) => {
+                let mut next = vec![0f32; out_e];
+                match cur.take() {
+                    Some(v) => conv_gemm(
+                        &v[..in_e],
+                        h,
+                        w,
+                        c,
+                        panel_at(panels, base),
+                        &qparams[base + 1],
+                        out_c,
+                        k,
+                        stride,
+                        padding,
+                        col,
+                        &mut next,
+                        out_c,
+                        0,
+                        threads,
+                    ),
+                    None => conv_from_packed(
+                        pk_in,
+                        cur_fmt,
+                        h,
+                        w,
+                        c,
+                        panel_at(panels, base),
+                        &qparams[base + 1],
+                        out_c,
+                        k,
+                        stride,
+                        padding,
+                        win,
+                        col,
+                        &mut next,
+                        threads,
+                    ),
+                }
+                cur = Some(next);
+            }
+            (&Op::Dense { out, .. }, Shape::Flat(n)) => {
+                let mut next = vec![0f32; out];
+                let a: &[f32] = match &cur {
+                    Some(v) => &v[..n],
+                    None => {
+                        pk_in.unpack_into(cur_fmt, &mut win[..n]);
+                        &win[..n]
+                    }
+                };
+                gemm_bias_packed(
+                    1,
+                    out,
+                    n,
+                    a,
+                    n,
+                    panel_at(panels, base),
+                    &qparams[base + 1],
+                    &mut next,
+                    out,
+                    threads,
+                );
+                cur = Some(next);
+            }
+            (op @ Op::Inception { .. }, Shape::Hwc(h, w, c)) => {
+                let mut next = vec![0f32; out_e];
+                let x: &[f32] = match &cur {
+                    Some(v) => &v[..in_e],
+                    None => {
+                        // Four branches each re-read the module input:
+                        // stage it once in the decode window.
+                        pk_in.unpack_into(cur_fmt, &mut win[..in_e]);
+                        &win[..in_e]
+                    }
+                };
+                inception_gemm(op, x, h, w, c, qparams, panels, base, col, tmp, &mut next, threads);
+                cur = Some(next);
+            }
+            (op, in_shape) => {
+                // Pools / LRN / GAP: intra-group f32 consumers (with the
+                // stage-variant materialize fallback).
+                let v = match cur.take() {
+                    Some(v) => v,
+                    None => {
+                        let mut v = vec![0f32; in_e];
+                        pk_in.unpack_into(cur_fmt, &mut v);
+                        v
+                    }
+                };
+                let mut next = vec![0f32; out_e];
+                match (op, in_shape) {
+                    (&Op::MaxPool { k, stride }, Shape::Hwc(h, w, c)) => {
+                        maxpool_into(&v[..in_e], h, w, c, k, stride, &mut next)
+                    }
+                    (&Op::AvgPool { k, stride }, Shape::Hwc(h, w, c)) => {
+                        avgpool_into(&v[..in_e], h, w, c, k, stride, &mut next)
+                    }
+                    (Op::GlobalAvgPool, Shape::Hwc(h, w, c)) => {
+                        gap_into(&v[..in_e], h, w, c, &mut next)
+                    }
+                    (&Op::Lrn { n, alpha, beta }, Shape::Hwc(h, w, c)) => {
+                        lrn_into(&v[..in_e], h, w, c, n, alpha, beta, &mut next)
+                    }
+                    (op, s) => unreachable!("fused plan let op {op:?} reach shape {s:?}"),
+                }
+                cur = Some(next);
+            }
+        }
+        if let Some(fmt) = lowering::post_format(step.post, dfmt, sfmt) {
+            match cur.take() {
+                Some(v) => pk_out.pack_into(fmt, &v[..out_e]),
+                None => {
+                    // Boundary straight after pass-through ops:
+                    // re-quantize through f32, exactly as the in-f32
+                    // path would.
+                    let mut v = vec![0f32; out_e];
+                    pk_in.unpack_into(cur_fmt, &mut v);
+                    pk_out.pack_into(fmt, &v);
+                }
+            }
+            std::mem::swap(&mut pk_in, &mut pk_out);
+            cur_fmt = fmt;
+        }
+    }
+    match cur {
+        Some(v) => out_row.copy_from_slice(&v[..plan.num_classes]),
+        None => pk_in.unpack_into(cur_fmt, out_row),
+    }
 }
 
 fn relu(xs: &mut [f32]) {
@@ -487,6 +704,128 @@ fn conv_gemm(
         ldc,
         threads,
     );
+}
+
+/// NHWC conv reading its input straight off a boundary bitstream: the
+/// fused-consumer form of [`conv_gemm`]. 1×1 stride-1 convs stream GEMM
+/// `A` row blocks through a [`PackedCursor`]; everything else builds
+/// the im2col patch matrix from one decoded input row at a time
+/// ([`im2col_from_packed`]). Output writes are the same GEMM as the
+/// in-f32 path, so results are bit-identical to running [`conv_gemm`]
+/// over a fully unpacked input.
+fn conv_from_packed(
+    p: &PackedBuf,
+    fmt: QFormat,
+    h: usize,
+    w: usize,
+    c: usize,
+    wgt_panels: &[f32],
+    bias: &[f32],
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    padding: Padding,
+    win: &mut [f32],
+    col: &mut [f32],
+    dst: &mut [f32],
+    threads: usize,
+) {
+    let (oh, ow) = conv_out_hw(h, w, k, stride, padding);
+    let m = oh * ow;
+    if k == 1 && stride == 1 {
+        // The activation matrix (h*w, c) is the GEMM A; decode and
+        // multiply one row block at a time. Each output row's
+        // accumulation is independent and unchanged, so splitting M is
+        // bit-identical to one whole-matrix call.
+        let mut cursor = PackedCursor::new(p, fmt);
+        let mut r0 = 0usize;
+        while r0 < m {
+            let rb = lowering::FUSED_A_ROWS.min(m - r0);
+            let a = &mut win[..rb * c];
+            cursor.read_into(a);
+            gemm_bias_packed(
+                rb,
+                out_c,
+                c,
+                a,
+                c,
+                wgt_panels,
+                bias,
+                &mut dst[r0 * out_c..],
+                out_c,
+                threads,
+            );
+            r0 += rb;
+        }
+        return;
+    }
+    let (pad_y, pad_x) = match padding {
+        Padding::Same => (same_pad_before(h, oh, k, stride), same_pad_before(w, ow, k, stride)),
+        Padding::Valid => (0, 0),
+    };
+    let kd = k * k * c;
+    im2col_from_packed(
+        p,
+        fmt,
+        h,
+        w,
+        c,
+        k,
+        stride,
+        pad_y,
+        pad_x,
+        oh,
+        ow,
+        &mut win[..w * c],
+        &mut col[..m * kd],
+    );
+    gemm_bias_packed(m, out_c, kd, &col[..m * kd], kd, wgt_panels, bias, dst, out_c, threads);
+}
+
+/// im2col driven by the streaming window reader: each input row is
+/// decoded exactly once into `win_row` and scattered to every patch
+/// position that uses it; out-of-bounds taps stay at the pre-filled
+/// `0.0`. Produces the exact patch matrix [`im2col`] builds from an f32
+/// input holding the same values.
+fn im2col_from_packed(
+    p: &PackedBuf,
+    fmt: QFormat,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad_y: usize,
+    pad_x: usize,
+    oh: usize,
+    ow: usize,
+    win_row: &mut [f32],
+    col: &mut [f32],
+) {
+    let kd = k * k * c;
+    col.fill(0.0);
+    for iy in 0..h {
+        p.unpack_rows(fmt, w * c, iy, win_row);
+        // Output rows oy with a tap on input row iy: ky = iy + pad_y -
+        // oy*stride must land in [0, k).
+        let top = iy + pad_y;
+        let oy_lo = if top + 1 > k { (top + 1 - k + stride - 1) / stride } else { 0 };
+        let oy_hi = (top / stride).min(oh - 1);
+        // An inclusive range with oy_lo > oy_hi is empty (rows only
+        // feeding padding-clipped or out-of-range windows).
+        for oy in oy_lo..=oy_hi {
+            let ky = top - oy * stride;
+            for ox in 0..ow {
+                let seg = &mut col[(oy * ow + ox) * kd + ky * k * c..][..k * c];
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad_x as isize;
+                    if ix >= 0 && (ix as usize) < w {
+                        seg[kx * c..][..c].copy_from_slice(&win_row[(ix as usize) * c..][..c]);
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Patch matrices below this size aren't worth a thread spawn.
@@ -756,6 +1095,102 @@ mod tests {
             1,
         );
         assert_eq!(dst, vec![12.5, 16.5, 24.5, 28.5]);
+    }
+
+    /// Quantize + canonicalize `-0.0` — the values a bitstream carries.
+    fn quantized(fmt: QFormat, xs: &[f32]) -> Vec<f32> {
+        crate::testkit::quantized_canonical(fmt, xs)
+    }
+
+    #[test]
+    fn im2col_from_packed_matches_f32_im2col() {
+        let mut rng = crate::prng::Xoshiro256pp::new(42);
+        let fmt = QFormat::new(5, 4); // 9 bits: windows straddle words
+        for &(h, w, c, k, stride, padding) in &[
+            (7usize, 7usize, 3usize, 3usize, 1usize, Padding::Same),
+            (8, 6, 2, 5, 1, Padding::Same),
+            (9, 9, 1, 2, 2, Padding::Same),
+            (8, 8, 2, 3, 2, Padding::Same),
+            (7, 7, 2, 3, 1, Padding::Valid),
+            (10, 5, 4, 2, 2, Padding::Valid),
+        ] {
+            let raw: Vec<f32> = (0..h * w * c).map(|_| rng.uniform_f32(-4.0, 4.0)).collect();
+            let x = quantized(fmt, &raw);
+            let (oh, ow) = conv_out_hw(h, w, k, stride, padding);
+            let (pad_y, pad_x) = match padding {
+                Padding::Same => {
+                    (same_pad_before(h, oh, k, stride), same_pad_before(w, ow, k, stride))
+                }
+                Padding::Valid => (0, 0),
+            };
+            let kd = k * k * c;
+            let mut want = vec![f32::NAN; oh * ow * kd];
+            im2col(&x, h, w, c, k, stride, pad_y, pad_x, oh, ow, &mut want, 1);
+            let p = PackedBuf::pack(fmt, &x);
+            let mut win = vec![0f32; w * c];
+            let mut got = vec![f32::NAN; oh * ow * kd];
+            im2col_from_packed(
+                &p, fmt, h, w, c, k, stride, pad_y, pad_x, oh, ow, &mut win, &mut got,
+            );
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "({h},{w},{c},{k},{stride},{padding:?}) elem {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_from_packed_streams_bit_identical() {
+        let fmt = QFormat::new(6, 2);
+        let mut rng = crate::prng::Xoshiro256pp::new(7);
+        // 1x1 stride-1: the (12*12, 5) A matrix spans two cursor row
+        // blocks (144 > FUSED_A_ROWS).
+        let (h, w, c, out_c) = (12usize, 12usize, 5usize, 3usize);
+        let raw: Vec<f32> = (0..h * w * c).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+        let x = quantized(fmt, &raw);
+        let wgt: Vec<f32> = (0..c * out_c).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..out_c).map(|_| rng.uniform_f32(-0.5, 0.5)).collect();
+        let panels = pack_b_panels(&wgt, c, out_c);
+        let mut col = vec![0f32; h * w * 9 * c]; // big enough for both cases
+        let mut want = vec![f32::NAN; h * w * out_c];
+        conv_gemm(
+            &x, h, w, c, &panels, &bias, out_c, 1, 1, Padding::Same, &mut col, &mut want,
+            out_c, 0, 1,
+        );
+        let p = PackedBuf::pack(fmt, &x);
+        let mut win = vec![0f32; lowering::FUSED_A_ROWS * c];
+        let mut got = vec![f32::NAN; h * w * out_c];
+        conv_from_packed(
+            &p, fmt, h, w, c, &panels, &bias, out_c, 1, 1, Padding::Same, &mut win, &mut col,
+            &mut got, 1,
+        );
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        // k=3 SAME: streamed im2col + the identical GEMM.
+        let (k, c2, oc2) = (3usize, 2usize, 4usize);
+        let raw2: Vec<f32> = (0..h * w * c2).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+        let x2 = quantized(fmt, &raw2);
+        let wgt2: Vec<f32> =
+            (0..k * k * c2 * oc2).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let bias2 = vec![0.25f32; oc2];
+        let panels2 = pack_b_panels(&wgt2, k * k * c2, oc2);
+        let mut col2 = vec![0f32; h * w * k * k * c2];
+        let mut want2 = vec![f32::NAN; h * w * oc2];
+        conv_gemm(
+            &x2, h, w, c2, &panels2, &bias2, oc2, k, 1, Padding::Same, &mut col2, &mut want2,
+            oc2, 0, 1,
+        );
+        let p2 = PackedBuf::pack(fmt, &x2);
+        let mut win2 = vec![0f32; w * c2];
+        let mut got2 = vec![f32::NAN; h * w * oc2];
+        conv_from_packed(
+            &p2, fmt, h, w, c2, &panels2, &bias2, oc2, k, 1, Padding::Same, &mut win2,
+            &mut col2, &mut got2, 1,
+        );
+        assert!(want2.iter().zip(&got2).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -44,6 +44,12 @@ pub enum PostQuant {
     Stage { index: usize, group: Option<usize> },
 }
 
+/// Row block of the streamed GEMM `A` read in the fused packed path:
+/// 1×1 stride-1 convs and dense layers decode at most this many `A`
+/// rows from the input bitstream at a time (per-row output independence
+/// keeps the result bit-identical to a whole-matrix GEMM).
+pub const FUSED_A_ROWS: usize = 128;
+
 /// Resolve a step's output format from the decoded wire configs.
 pub fn post_format(
     post: PostQuant,
@@ -91,6 +97,17 @@ pub struct LoweredPlan {
     pub max_col_elems: usize,
     /// Largest inception temporary (branch-reduce output / pooled input).
     pub max_tmp_elems: usize,
+    /// Fused packed mode: largest streaming decode window (elements) any
+    /// step needs — one input row for im2col, one [`FUSED_A_ROWS`] block
+    /// for a streamed GEMM `A`, the whole module input for inception
+    /// (its four branches each re-read it).
+    pub max_win_elems: usize,
+    /// Fused packed mode: largest f32 working set (elements) live during
+    /// any single step — decode window (or carried intra-group input)
+    /// plus the step's output — excluding the col/tmp scratch tracked
+    /// above. [`FootprintModel`](crate::memory::FootprintModel) callers
+    /// use it to bound the transient churn of a fused forward pass.
+    pub max_fused_elems: usize,
 }
 
 impl LoweredPlan {
@@ -104,6 +121,13 @@ impl LoweredPlan {
         let mut max_act = shape.elems();
         let mut max_col = 0usize;
         let mut max_tmp = 0usize;
+        let mut max_win = 0usize;
+        let mut max_fused = 0usize;
+        // Whether the *current* step's input is a packed bitstream in
+        // fused mode: true at entry (the network input is packed at
+        // dq[0]) and after every quantized post; shape-only ops pass the
+        // bitstream through untouched.
+        let mut packed_in = true;
         let mut group_param_counts = Vec::with_capacity(arch.groups.len());
 
         for (gi, g) in arch.groups.iter().enumerate() {
@@ -135,6 +159,48 @@ impl LoweredPlan {
                     }
                     _ => {}
                 }
+                // Fused-mode working-set high-water marks. Costs mirror
+                // the fast backend's fused step execution exactly.
+                let (in_e, out_e) = (shape.elems(), out_shape.elems());
+                let (win, fused) = if packed_in {
+                    match (op, shape) {
+                        (&Op::Conv { k, stride, .. }, Shape::Hwc(_, iw, ic)) => {
+                            if k == 1 && stride == 1 {
+                                // streamed GEMM A: one row block at a time
+                                let w = FUSED_A_ROWS.min(in_e / ic) * ic;
+                                (w, w + out_e)
+                            } else {
+                                // im2col decodes one input row at a time
+                                (iw * ic, iw * ic + out_e)
+                            }
+                        }
+                        (Op::Dense { .. }, _) => (in_e, in_e + out_e),
+                        (Op::Inception { .. }, _) => (in_e, in_e + out_e),
+                        // A pass-through is free unless it carries a
+                        // quantized post on a still-packed activation —
+                        // then the runtime materializes out_e to
+                        // re-quantize through f32.
+                        (Op::Flatten | Op::Dropout, _) => {
+                            (0, if post == PostQuant::None { 0 } else { out_e })
+                        }
+                        // materialize-then-run fallback (stage-variant
+                        // boundaries can precede any op)
+                        (Op::ReLU, _) => (0, in_e),
+                        _ => (0, in_e + out_e),
+                    }
+                } else {
+                    match op {
+                        // in-place / shape-only on a carried f32 tensor
+                        Op::ReLU | Op::Flatten | Op::Dropout => (0, in_e),
+                        _ => (0, in_e + out_e),
+                    }
+                };
+                max_win = max_win.max(win);
+                max_fused = max_fused.max(fused);
+                packed_in = match post {
+                    PostQuant::None => packed_in && matches!(op, Op::Flatten | Op::Dropout),
+                    _ => true,
+                };
                 steps.push(Step {
                     op: op.clone(),
                     group: gi,
@@ -163,6 +229,8 @@ impl LoweredPlan {
             max_act_elems: max_act,
             max_col_elems: max_col,
             max_tmp_elems: max_tmp,
+            max_win_elems: max_win,
+            max_fused_elems: max_fused,
         })
     }
 
@@ -361,5 +429,39 @@ mod tests {
         // i3a at 8x8x32: pool branch needs an 8*8*32 pooled copy.
         assert!(plan.max_tmp_elems >= 8 * 8 * 32);
         assert!(plan.max_col_elems > 0);
+    }
+
+    #[test]
+    fn lenet_fused_sizing_by_hand() {
+        let arch = arch::get("lenet").unwrap();
+        let plan = LoweredPlan::new(&arch, None).unwrap();
+        // Largest decode window: the L3 fc reads its whole flattened
+        // input (Flatten keeps the bitstream packed), 4*4*16 = 256 —
+        // bigger than any conv row (28) or 1x1 block (none in lenet).
+        assert_eq!(plan.max_win_elems, 256);
+        // Largest fused working set: the L1 maxpool carries its f32
+        // conv input (24*24*8) plus its own output (12*12*8).
+        assert_eq!(plan.max_fused_elems, 24 * 24 * 8 + 12 * 12 * 8);
+        // The windows are far below the full arenas the f32 path keeps.
+        assert!(plan.max_win_elems < plan.max_act_elems / 4);
+        assert!(plan.max_fused_elems < 2 * plan.max_act_elems);
+    }
+
+    #[test]
+    fn fused_sizing_bounded_on_every_arch() {
+        for name in arch::NET_ORDER {
+            let a = arch::get(name).unwrap();
+            let plan = LoweredPlan::new(&a, None).unwrap();
+            assert!(plan.max_win_elems > 0, "{name}");
+            assert!(plan.max_win_elems <= plan.max_act_elems, "{name}");
+            // No single step's fused f32 working set reaches the two
+            // max-sized arenas of the default path — the source of the
+            // measured residency reduction.
+            assert!(plan.max_fused_elems < 2 * plan.max_act_elems, "{name}");
+        }
+        // googlenet: the widest inception input (i3b at 8x8 over 40
+        // channels) is staged whole for its four branch readers.
+        let plan = LoweredPlan::new(&arch::get("googlenet").unwrap(), None).unwrap();
+        assert!(plan.max_win_elems >= 8 * 8 * 40);
     }
 }

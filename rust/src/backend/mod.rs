@@ -32,10 +32,13 @@
 //!
 //! Both pure-Rust executors additionally honour an opt-in inter-layer
 //! **storage mode** ([`crate::memory::StorageMode`], `--storage packed`
-//! / `QBOUND_STORAGE=packed`): boundary activations round-trip through
-//! packed reduced-precision bitstreams, with numerically identical
-//! results (see `tests/integration_storage.rs` and [`crate::memory`]
-//! for the exact contract).
+//! / `QBOUND_STORAGE=packed`): between layers only packed
+//! reduced-precision bitstreams persist, decoded in streaming windows
+//! by the consuming ops, with numerically identical results (see
+//! `tests/integration_storage.rs` for the parity contract and
+//! `tests/integration_memory.rs` for the measured residency bound).
+//! The PJRT backend executes on-device and emits a one-time no-op
+//! warning when a packed storage mode is requested.
 //!
 //! Executors are **not** `Send` (the PJRT client is `Rc`-based);
 //! the coordinator gives each worker thread its own backend instance,

@@ -17,6 +17,7 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use super::{validate_request, Backend, NetExecutor, Variant};
+use crate::memory::StorageMode;
 use crate::nets::NetManifest;
 use crate::runtime::{Engine, Session};
 
@@ -27,6 +28,11 @@ pub struct PjrtBackend {
 
 impl PjrtBackend {
     pub fn new() -> Result<PjrtBackend> {
+        // PJRT executes on-device; a requested packed storage mode
+        // cannot apply to memory the host never sees. Surface that once
+        // instead of silently ignoring QBOUND_STORAGE — and keep a
+        // malformed value an error, like every other backend.
+        StorageMode::from_env()?.warn_ignored_by("pjrt");
         Ok(PjrtBackend { session: Rc::new(Session::cpu()?) })
     }
 }

@@ -60,7 +60,6 @@ impl Backend for ReferenceBackend {
             variant,
             memo: lowering::WeightMemo::default(),
             storage: self.storage,
-            packed: PackedBuf::default(),
             executions: 0,
         }))
     }
@@ -73,8 +72,6 @@ pub struct ReferenceExecutor {
     variant: Variant,
     memo: lowering::WeightMemo,
     storage: StorageMode,
-    /// Inter-layer bitstream for [`StorageMode::Packed`].
-    packed: PackedBuf,
     executions: u64,
 }
 
@@ -116,7 +113,6 @@ impl NetExecutor for ReferenceExecutor {
                 &req.dfmt,
                 req.sfmt.as_deref(),
                 self.storage,
-                &mut self.packed,
             )?;
             out.extend_from_slice(&logits);
         }
@@ -201,21 +197,16 @@ impl Interpreter {
         dq: &[QFormat],
         sfmt: Option<&[QFormat]>,
     ) -> Result<Vec<f32>> {
-        self.forward_one_stored(
-            qparams,
-            image,
-            dq,
-            sfmt,
-            StorageMode::F32,
-            &mut PackedBuf::default(),
-        )
+        self.forward_one_stored(qparams, image, dq, sfmt, StorageMode::F32)
     }
 
     /// [`Interpreter::forward_one`] under an explicit inter-layer
-    /// storage mode. With [`StorageMode::Packed`] every boundary
-    /// activation round-trips through `packed` — stored as a bitstream
-    /// at the boundary format's width, decoded on the next read — and
-    /// the results are numerically identical to the in-f32 path.
+    /// storage mode. With [`StorageMode::Packed`] only bitstreams
+    /// persist between steps: each boundary activation is dropped from
+    /// f32 the moment it is packed and materialized again only when the
+    /// next op consumes it. Results are numerically identical to the
+    /// in-f32 path (pack→decode is exactly the quantizer, modulo the
+    /// single two's-complement zero).
     pub fn forward_one_stored(
         &self,
         qparams: &[Vec<f32>],
@@ -223,23 +214,92 @@ impl Interpreter {
         dq: &[QFormat],
         sfmt: Option<&[QFormat]>,
         storage: StorageMode,
-        packed: &mut PackedBuf,
     ) -> Result<Vec<f32>> {
+        if storage == StorageMode::Packed {
+            return self.forward_one_packed(qparams, image, dq, sfmt);
+        }
         let (h, w, c) = self.arch.input_shape;
         let mut feat = Feat { shape: Shape::Hwc(h, w, c), data: image.to_vec() };
-        storage.store(dq[0], &mut feat.data, packed);
+        dq[0].quantize_slice(&mut feat.data);
 
         for step in &self.plan.steps {
             let mut cursor = step.param_base;
             feat = apply_op(&step.op, feat, qparams, &mut cursor)?;
             if let Some(fmt) = lowering::post_format(step.post, dq, sfmt) {
-                storage.store(fmt, &mut feat.data, packed);
+                fmt.quantize_slice(&mut feat.data);
             }
         }
         if feat.shape != Shape::Flat(self.arch.num_classes) {
             bail!("{}: output shape {:?}", self.arch.name, feat.shape);
         }
         Ok(feat.data)
+    }
+
+    /// The fused packed interpreter loop: `packed` holds the current
+    /// boundary bitstream (at `fmt`), `feat` a carried unquantized
+    /// intra-group tensor — never both. Shape-only ops pass the
+    /// bitstream through untouched; any other op materializes its input
+    /// right before applying (the interpreter is clarity-first — the
+    /// fast backend is the one that streams windows into its kernels).
+    fn forward_one_packed(
+        &self,
+        qparams: &[Vec<f32>],
+        image: &[f32],
+        dq: &[QFormat],
+        sfmt: Option<&[QFormat]>,
+    ) -> Result<Vec<f32>> {
+        let (h, w, c) = self.arch.input_shape;
+        let mut shape = Shape::Hwc(h, w, c);
+        let mut packed = PackedBuf::pack(dq[0], image);
+        let mut fmt = dq[0];
+        let mut feat: Option<Feat> = None;
+
+        for step in &self.plan.steps {
+            let mut cursor = step.param_base;
+            match (&step.op, feat.take()) {
+                (Op::Flatten | Op::Dropout, None) => {
+                    shape = arch::op_out_shape(&step.op, shape)?;
+                }
+                (op, carried) => {
+                    let f = match carried {
+                        Some(f) => f,
+                        None => {
+                            let mut data = vec![0f32; shape.elems()];
+                            packed.unpack_into(fmt, &mut data);
+                            Feat { shape, data }
+                        }
+                    };
+                    let out = apply_op(op, f, qparams, &mut cursor)?;
+                    shape = out.shape;
+                    feat = Some(out);
+                }
+            }
+            if let Some(pfmt) = lowering::post_format(step.post, dq, sfmt) {
+                match feat.take() {
+                    Some(f) => packed.pack_into(pfmt, &f.data),
+                    None => {
+                        // Boundary straight after pass-through ops:
+                        // re-quantize through f32 exactly as the in-f32
+                        // path would.
+                        let mut data = vec![0f32; shape.elems()];
+                        packed.unpack_into(fmt, &mut data);
+                        packed.pack_into(pfmt, &data);
+                    }
+                }
+                fmt = pfmt;
+            }
+        }
+        if shape != Shape::Flat(self.arch.num_classes) {
+            bail!("{}: output shape {:?}", self.arch.name, shape);
+        }
+        Ok(match feat {
+            Some(f) => f.data,
+            None => {
+                let mut data = vec![0f32; self.arch.num_classes];
+                packed.unpack_into(fmt, &mut data);
+                data
+            }
+        })
     }
 
     /// Convenience: fp32 logits of one image (teacher labelling, tests).

@@ -34,6 +34,11 @@ pub fn run(args: &[String]) -> Result<()> {
             "storage",
             "inter-layer activation storage: f32 | packed (default: env or f32)",
             "",
+        )
+        .opt(
+            "mem-json",
+            "write measured peak RSS + modeled footprint JSON to this path",
+            "",
         );
     let a = spec.parse(args)?;
 
@@ -73,6 +78,11 @@ pub fn run(args: &[String]) -> Result<()> {
         cfg: PrecisionConfig::fp32(nl),
         n_images,
     })?;
+    // For --mem-json, scope the peak-RSS watermark to the *target*
+    // config's evaluation — the fp32 baseline above would otherwise set
+    // a process-lifetime high-water that masks any packed-mode
+    // regression.
+    let rss_scoped = !a.str("mem-json").is_empty() && util::reset_peak_rss();
     let acc = coord.eval_one(EvalJob { net: net.clone(), cfg: cfg.clone(), n_images })?;
     let tr = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &cfg);
     let fpm = FootprintModel::new(&m);
@@ -98,5 +108,38 @@ pub fn run(args: &[String]) -> Result<()> {
         util::human_bytes(fp.weight_bytes),
         util::human_bytes(fp.peak_act_bytes),
     );
+    let peak_rss = util::peak_rss_bytes();
+    if let Some(rss) = peak_rss {
+        println!("peak rss:       {} (process VmHWM)", util::human_bytes(rss as f64));
+    }
+    // Measured-vs-modeled memory record for CI archiving: regressions
+    // in the realized bound show up next to FOOTPRINT.json per commit.
+    if !a.str("mem-json").is_empty() {
+        use qbound::util::json::Json;
+        let doc = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("net", Json::str(net.clone())),
+            ("backend", Json::str(backend.label())),
+            ("storage", Json::str(storage_label)),
+            ("config", Json::str(cfg.notation())),
+            ("n_images", Json::num(n_images as f64)),
+            (
+                "peak_rss_bytes",
+                peak_rss.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+            ),
+            // "target-eval": watermark reset before the measured config
+            // ran; "process": lifetime high-water incl. the baseline.
+            (
+                "peak_rss_scope",
+                Json::str(if rss_scoped { "target-eval" } else { "process" }),
+            ),
+            ("modeled_fp32_bytes", Json::num(fp_base.total_bytes)),
+            ("modeled_bytes", Json::num(fp.total_bytes)),
+            ("top1", Json::num(acc)),
+        ]);
+        let path = std::path::PathBuf::from(a.str("mem-json"));
+        util::write_file(&path, doc.pretty().as_bytes())?;
+        eprintln!("memory json -> {}", path.display());
+    }
     Ok(())
 }

@@ -27,7 +27,12 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("workers", "worker threads (0 = one per core)", "0")
         .opt("out-dir", "report directory for footprint.{md,csv}", "reports")
         .opt("json", "also write the table as JSON to this path", "")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
+        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "")
+        .opt(
+            "cache-dir",
+            "descent-trajectory cache directory; \"none\" disables caching",
+            "reports/dse-cache",
+        );
     let a = spec.parse(args)?;
 
     let tol = a.f64("tol")?;
@@ -52,11 +57,19 @@ pub fn run(args: &[String]) -> Result<()> {
         ],
     );
     let mut entries: Vec<Json> = Vec::new();
+    // The greedy descent dominates this command's cost; repeat
+    // invocations re-rank the persisted trajectory instead (any key
+    // change — net, backend, n-images, artifact set — recomputes).
+    let cache_dir = a.str("cache-dir").to_string();
     for net in &nets {
         let m = ctx.manifest(net)?.clone();
         let fpm = FootprintModel::new(&m);
         let base = fpm.fp32();
-        let dse = repro::explore_net(&mut ctx, net)?;
+        let dse = if cache_dir == "none" {
+            repro::explore_net(&mut ctx, net)?
+        } else {
+            repro::explore_net_cached(&mut ctx, net, std::path::Path::new(&cache_dir))?
+        };
         let row = table2::select(&dse.descent.visited, &[tol])
             .pop()
             .flatten()

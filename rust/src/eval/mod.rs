@@ -12,13 +12,28 @@
 //! [`crate::backend::Backend`] loaded the network. Batches are replayed
 //! through [`NetExecutor::infer_keyed`] so backends with expensive
 //! host→device transfers (PJRT) can keep them resident.
+//!
+//! Under packed storage ([`StorageMode::Packed`]) the evaluator spills
+//! the whole eval split to a [`PackedSplit`] bitstream at the config's
+//! input format `dq[0]` and serves every batch from it — the input set
+//! of the serve path is read from packed storage end-to-end, not just
+//! the inter-layer activations. Accuracies are unchanged: packing at
+//! `dq[0]` is exactly the quantization the executor applies to its
+//! input, and quantization is idempotent on its own grid (locked by
+//! `tests/integration_storage.rs`). The evaluator keeps the f32 master
+//! alongside the bitstream because sweeps re-pack whenever `dq[0]`
+//! changes (packing is lossy, so codes must come from the original
+//! values); a fixed-format serve deployment that wants the master gone
+//! uses [`Dataset::into_packed`] instead.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
 use crate::backend::{Backend, NetExecutor, Variant};
+use crate::memory::{PackedBuf, StorageMode};
 use crate::nets::NetManifest;
+use crate::quant::QFormat;
 use crate::search::space::PrecisionConfig;
 use crate::tensor::ntf;
 
@@ -64,6 +79,58 @@ impl Dataset {
     pub fn batch_labels(&self, b: usize, batch: usize) -> &[i32] {
         &self.labels[b * batch..(b + 1) * batch]
     }
+
+    /// Spill this split to packed storage at `fmt`, dropping the f32
+    /// image block — the bounded-memory serve configuration. Returns
+    /// the bitstream plus the (untouched) labels.
+    pub fn into_packed(self, fmt: QFormat) -> (PackedSplit, Vec<i32>) {
+        let split = PackedSplit::pack(&self, fmt);
+        (split, self.labels)
+    }
+}
+
+/// A whole eval split as a packed bitstream at one input format — the
+/// ROADMAP "spill whole eval splits" item. Packing quantizes at `fmt`,
+/// which is exactly what the executors do to the network input at
+/// `dq[0]`, so serving batches from the bitstream leaves every
+/// accuracy unchanged.
+pub struct PackedSplit {
+    buf: PackedBuf,
+    fmt: QFormat,
+    image_elems: usize,
+    n: usize,
+}
+
+impl PackedSplit {
+    /// Pack all of `d`'s images at `fmt`.
+    pub fn pack(d: &Dataset, fmt: QFormat) -> PackedSplit {
+        PackedSplit {
+            buf: PackedBuf::pack(fmt, &d.images),
+            fmt,
+            image_elems: d.image_elems,
+            n: d.n,
+        }
+    }
+
+    pub fn fmt(&self) -> QFormat {
+        self.fmt
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Physical bitstream bytes of the whole split.
+    pub fn packed_bytes(&self) -> usize {
+        self.buf.packed_bytes()
+    }
+
+    /// Decode the image block for batch `b` of size `batch` into `out`
+    /// (resized to fit).
+    pub fn unpack_batch(&self, b: usize, batch: usize, out: &mut Vec<f32>) {
+        out.resize(batch * self.image_elems, 0.0);
+        self.buf.unpack_rows(self.fmt, self.image_elems, b * batch, out);
+    }
 }
 
 /// Top-1 accuracy: fraction of rows whose argmax equals the label.
@@ -93,6 +160,13 @@ pub struct Evaluator {
     /// executor allows — the whole requested span for the pure-Rust
     /// backends, so their image-level parallelism has work to spread).
     pub batch_override: usize,
+    /// Inter-layer storage mode of the driven backend; under
+    /// [`StorageMode::Packed`] batches are served from a [`PackedSplit`]
+    /// bitstream packed at the config's `dq[0]`.
+    storage: StorageMode,
+    packed_split: Option<PackedSplit>,
+    /// Reusable decode buffer for packed-served batches.
+    batch_buf: Vec<f32>,
     cache: HashMap<(PrecisionConfig, usize), f64>,
     /// Counters for cache instrumentation.
     pub hits: u64,
@@ -100,13 +174,29 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
+    /// Evaluator with the storage mode taken from `QBOUND_STORAGE` —
+    /// the same resolution the pure-Rust backends apply, so coordinator
+    /// workers built after [`StorageMode::set_env`] serve packed inputs
+    /// whenever their executors store packed activations.
     pub fn new(backend: &dyn Backend, manifest: &NetManifest) -> Result<Evaluator> {
+        Evaluator::with_storage(backend, manifest, StorageMode::from_env()?)
+    }
+
+    /// [`Evaluator::new`] with an explicit storage mode.
+    pub fn with_storage(
+        backend: &dyn Backend,
+        manifest: &NetManifest,
+        storage: StorageMode,
+    ) -> Result<Evaluator> {
         let exec = backend.load(manifest, Variant::Standard)?;
         let dataset = Dataset::load(manifest)?;
         Ok(Evaluator {
             exec,
             dataset,
             batch_override: 0,
+            storage,
+            packed_split: None,
+            batch_buf: Vec::new(),
             cache: HashMap::new(),
             hits: 0,
             misses: 0,
@@ -151,10 +241,30 @@ impl Evaluator {
         let wq = cfg.wire_wq();
         let dq = cfg.wire_dq();
         let classes = self.exec.num_classes();
+        // Packed input serving: variable-batch executors only (the
+        // compiled-batch PJRT path keys device-resident image uploads by
+        // batch id, and re-keying config-dependent quantized images
+        // would go stale across configs; it ignores storage modes
+        // anyway, with a one-time warning), and only for genuinely
+        // quantized input formats — an fp32 `dq[0]` would spill a
+        // byte-for-byte duplicate of the split at the 32-bit fallback
+        // for zero benefit (the fp32 baseline eval hits this).
+        // Re-packing on a `dq[0]` change costs one pass over the split,
+        // noise next to the forward passes the config evaluation runs.
+        let serve_packed = self.storage == StorageMode::Packed
+            && self.exec.max_batch() > self.exec.batch()
+            && !cfg.dq[0].is_fp32();
+        if serve_packed && self.packed_split.as_ref().map(|p| p.fmt()) != Some(cfg.dq[0]) {
+            self.packed_split = Some(PackedSplit::pack(&self.dataset, cfg.dq[0]));
+        }
         let mut correct = 0.0f64;
         for b in 0..n_batches {
-            let logits =
-                self.exec.infer_keyed(b, self.dataset.batch_images(b, batch), &wq, &dq, None)?;
+            let logits = if serve_packed {
+                self.packed_split.as_ref().unwrap().unpack_batch(b, batch, &mut self.batch_buf);
+                self.exec.infer_keyed(b, &self.batch_buf, &wq, &dq, None)?
+            } else {
+                self.exec.infer_keyed(b, self.dataset.batch_images(b, batch), &wq, &dq, None)?
+            };
             correct +=
                 top1(&logits, self.dataset.batch_labels(b, batch), classes) * batch as f64;
         }
@@ -204,5 +314,32 @@ mod tests {
         let logits = vec![1.0, 0.0, 0.0, 1.0]; // rows -> 0, 1
         assert_eq!(top1(&logits, &[0, 1], 2), 1.0);
         assert_eq!(top1(&logits, &[1, 0], 2), 0.0);
+    }
+
+    #[test]
+    fn packed_split_serves_quantized_batches() {
+        let fmt = QFormat::new(4, 2); // 6-bit codes
+        let d = Dataset {
+            images: (0..24).map(|i| i as f32 * 0.3 - 3.0).collect(),
+            labels: vec![0, 1, 2, 0],
+            image_elems: 6,
+            n: 4,
+        };
+        let split = PackedSplit::pack(&d, fmt);
+        assert_eq!(split.n(), 4);
+        assert_eq!(split.fmt(), fmt);
+        assert_eq!(split.packed_bytes(), (24 * 6 + 7) / 8);
+        // Batches decode to exactly the quantized (zero-canonicalized)
+        // images — what the executor derives from raw inputs anyway.
+        let want = crate::testkit::quantized_canonical(fmt, &d.images);
+        let mut out = Vec::new();
+        split.unpack_batch(1, 2, &mut out);
+        assert_eq!(out, want[12..24]);
+        // Spilling consumes the f32 master and keeps the labels.
+        let (split2, labels) = d.into_packed(fmt);
+        assert_eq!(labels, vec![0, 1, 2, 0]);
+        let mut all = Vec::new();
+        split2.unpack_batch(0, 4, &mut all);
+        assert_eq!(all, want);
     }
 }

@@ -28,7 +28,11 @@
 //! by design: it is backend-specific, lives in fp32 regardless of the
 //! precision config (intra-group intermediates are never quantized —
 //! see `PostQuant::None`), and is not part of the quantity the
-//! precision search trades against accuracy.
+//! precision search trades against accuracy. The fused packed
+//! executors *do* realize the modeled activation bytes, and
+//! [`FootprintModel::fused_envelope`] prices the realized residual —
+//! modeled bitstreams plus the streaming f32 windows — so the memory
+//! tests can assert the measured peak against the model.
 
 use crate::nets::NetManifest;
 use crate::search::space::PrecisionConfig;
@@ -157,6 +161,19 @@ impl FootprintModel {
     pub fn reduction(&self, cfg: &PrecisionConfig) -> f64 {
         1.0 - self.ratio(cfg)
     }
+
+    /// The *realized* activation-side residency bound of the fused
+    /// packed executors: the modeled packed bitstreams (at most one
+    /// layer's in + out live at once — exactly
+    /// [`Footprint::peak_act_bytes`]) plus the backend's streaming f32
+    /// window scratch (`window_f32_elems`, the lowered plan's
+    /// `max_win_elems` high-water). `tests/integration_memory.rs`
+    /// asserts the measured resident delta of a packed run lands inside
+    /// this envelope — the step that turns FOOTPRINT.json from a model
+    /// into a measurement.
+    pub fn fused_envelope(&self, cfg: &PrecisionConfig, window_f32_elems: usize) -> f64 {
+        self.footprint(cfg).peak_act_bytes + 4.0 * window_f32_elems as f64
+    }
 }
 
 #[cfg(test)]
@@ -267,6 +284,18 @@ mod tests {
         assert_eq!(fp.weight_bytes, per.iter().map(|l| l.weight_bytes).sum::<f64>());
         let peak = per.iter().map(|l| l.live_act_bytes()).fold(0f64, f64::max);
         assert_eq!(fp.peak_act_bytes, peak);
+    }
+
+    #[test]
+    fn fused_envelope_adds_window_bytes_to_peak_acts() {
+        let fpm = FootprintModel::new(&toy_manifest());
+        let cfg = PrecisionConfig::uniform(2, QFormat::new(1, 7), QFormat::new(6, 2));
+        let fp = fpm.footprint(&cfg);
+        assert_eq!(fpm.fused_envelope(&cfg, 0), fp.peak_act_bytes);
+        assert_eq!(fpm.fused_envelope(&cfg, 100), fp.peak_act_bytes + 400.0);
+        // fp32 configs still bound: everything priced at 32 bits.
+        let base = fpm.fp32();
+        assert_eq!(fpm.fused_envelope(&PrecisionConfig::fp32(2), 0), base.peak_act_bytes);
     }
 
     #[test]

@@ -8,29 +8,33 @@
 //!
 //! | piece | role |
 //! |---|---|
-//! | [`PackedBuf`] | a quantized tensor as a contiguous two's-complement bitstream at `I+F` bits per value ([`packed`]) |
+//! | [`PackedBuf`] | a quantized tensor as a contiguous two's-complement bitstream at `I+F` bits per value, with a streaming window reader ([`PackedBuf::unpack_rows`] / [`PackedCursor`]) |
 //! | [`FootprintModel`] | per-layer / per-network resident-byte model (weights + peak live activations) for any `PrecisionConfig` ([`footprint`]) |
 //! | [`StorageMode`] | the opt-in inter-layer storage switch both CPU executors honour (`--storage packed` / `QBOUND_STORAGE=packed`) |
 //!
-//! Under [`StorageMode::Packed`] the executors quantize→pack each
-//! activation at its layer-boundary format and unpack it again before
-//! the next op reads it, so every boundary value is carried by — and
-//! re-derived from — its reduced-width bitstream code on real forward
-//! passes; results are numerically identical to the default
-//! quantize-in-f32 path (locked by `tests/integration_storage.rs`).
-//! The mode validates the packed representation end-to-end; it does
-//! not yet shrink the executors' resident set, because the values are
-//! unpacked into the existing f32 arenas (fusing unpack into the
-//! consumers is a ROADMAP open item). The byte savings are *measured*
-//! by [`FootprintModel`]: the precision search ranks configurations by
-//! modeled footprint ([`FootprintModel::ratio`]), and `qbound
-//! footprint` reports the fp32-vs-best-config byte table.
+//! Under [`StorageMode::Packed`] only bitstreams persist between
+//! layers: each boundary activation is packed at its layer-boundary
+//! format, and the consuming op decodes windows of the bitstream on
+//! the fly (im2col pulls one input row at a time, the GEMM A read one
+//! row block, see `backend/fast.rs`) instead of unpacking into a
+//! resident f32 arena. The evaluator spills whole eval splits the same
+//! way ([`crate::eval::PackedSplit`]), so the serve path's input set is
+//! packed too. Results are numerically identical to the default
+//! quantize-in-f32 path (locked by `tests/integration_storage.rs`),
+//! and the byte claim is *measured*, not just modeled:
+//! `tests/integration_memory.rs` runs both modes under a counting
+//! allocator ([`crate::testkit::MeterAlloc`]) and asserts the packed
+//! resident set lands strictly below the f32 run and within the
+//! [`FootprintModel`] envelope ([`FootprintModel::fused_envelope`]).
+//! The precision search ranks configurations by modeled footprint
+//! ([`FootprintModel::ratio`]), and `qbound footprint` reports the
+//! fp32-vs-best-config byte table.
 
 pub mod footprint;
 pub mod packed;
 
 pub use footprint::{Footprint, FootprintModel, LayerFootprint};
-pub use packed::{storage_width, PackedBuf, MAX_PACK_BITS};
+pub use packed::{storage_width, PackedBuf, PackedCursor, MAX_PACK_BITS};
 
 use anyhow::{bail, Result};
 
@@ -90,17 +94,22 @@ impl StorageMode {
         }
     }
 
-    /// Quantize a boundary activation under this mode: in place for f32
-    /// storage, through the packed bitstream otherwise (numerically
-    /// identical either way — two's complement just canonicalizes
-    /// `-0.0`). Both CPU executors call this at every quantization
-    /// boundary, so the dispatch lives in exactly one place.
-    #[inline]
-    pub fn store(self, fmt: crate::quant::QFormat, xs: &mut [f32], packed: &mut PackedBuf) {
-        match self {
-            StorageMode::F32 => fmt.quantize_slice(xs),
-            StorageMode::Packed => packed.roundtrip(fmt, xs),
+    /// One-time no-op warning for backends that execute outside host
+    /// memory and therefore cannot honour a requested storage mode (the
+    /// PJRT path: activations live in device buffers the host never
+    /// sees). Returns whether this call emitted the warning, so the
+    /// once-only behaviour is unit-testable without scraping logs.
+    pub fn warn_ignored_by(self, backend: &str) -> bool {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        static WARNED: AtomicBool = AtomicBool::new(false);
+        if self != StorageMode::Packed || WARNED.swap(true, Ordering::Relaxed) {
+            return false;
         }
+        log::warn!(
+            "the {backend} backend executes outside host memory and ignores \
+             QBOUND_STORAGE=packed; activations stay in the device's own format"
+        );
+        true
     }
 }
 
@@ -124,6 +133,16 @@ mod tests {
         assert_eq!(StorageMode::default(), StorageMode::F32);
         assert_eq!(StorageMode::default().label(), "f32");
         assert_eq!(StorageMode::Packed.label(), "packed");
+    }
+
+    #[test]
+    fn ignored_storage_warns_exactly_once() {
+        // F32 never warns; the first Packed call does; later calls are
+        // silent (process-global once).
+        assert!(!StorageMode::F32.warn_ignored_by("pjrt"));
+        assert!(StorageMode::Packed.warn_ignored_by("pjrt"));
+        assert!(!StorageMode::Packed.warn_ignored_by("pjrt"));
+        assert!(!StorageMode::F32.warn_ignored_by("pjrt"));
     }
 
     #[test]

@@ -6,9 +6,13 @@
 //! the paper's "bounded memory" claim rests on: a layer's activations
 //! only cost `N` bits each if `N` bits suffices to carry them between
 //! layers (Hashemi et al., arXiv:1612.03940, make the same point for
-//! energy). The executors' `--storage packed` mode proves exactly that
-//! by round-tripping every boundary activation through this encoding;
-//! see [`PackedBuf::roundtrip`] for what is and is not yet realized.
+//! energy). Under `--storage packed` the CPU executors keep *only*
+//! these bitstreams between layers: consumers decode what they need on
+//! the fly through the streaming window reader
+//! ([`PackedBuf::unpack_rows`] / [`PackedCursor`]) instead of unpacking
+//! into a resident f32 arena, so the reduced width is what actually
+//! lives in memory (`tests/integration_memory.rs` measures it under a
+//! counting allocator).
 //!
 //! Semantics contract (locked by `tests/property_packed.rs`):
 //! `unpack(pack(x))` is bit-identical to [`QFormat::quantize_slice`]
@@ -97,6 +101,13 @@ impl PackedBuf {
         self.len = xs.len();
         let n_words = (xs.len() * width as usize + 63) / 64;
         self.words.clear();
+        // Exact reservation: Vec's amortized doubling would otherwise
+        // leave up to 2× the needed capacity resident, which the
+        // allocation-tracking memory tests would charge against the
+        // packed envelope.
+        if self.words.capacity() < n_words {
+            self.words.reserve_exact(n_words);
+        }
         self.words.resize(n_words, 0);
 
         if width == 32 {
@@ -145,11 +156,23 @@ impl PackedBuf {
     /// have exactly [`PackedBuf::len`] elements.
     pub fn unpack_into(&self, fmt: QFormat, out: &mut [f32]) {
         assert_eq!(out.len(), self.len, "unpack length mismatch");
+        self.unpack_range_into(fmt, 0, out);
+    }
+
+    /// Streaming window decode: the `out.len()` values starting at
+    /// element `start`. This is how fused consumers read a bitstream —
+    /// one row window / GEMM A-panel block at a time — without ever
+    /// materializing the whole tensor in f32. Windows may begin and end
+    /// at any bit offset; values straddling `u64` word boundaries are
+    /// handled exactly like the bulk path.
+    pub fn unpack_range_into(&self, fmt: QFormat, start: usize, out: &mut [f32]) {
+        assert!(start + out.len() <= self.len, "window out of range");
         assert_eq!(storage_width(fmt), self.width, "unpack format mismatch");
 
         if self.width == 32 {
             for (i, o) in out.iter_mut().enumerate() {
-                *o = f32::from_bits((self.words[i / 2] >> ((i % 2) * 32)) as u32);
+                let j = start + i;
+                *o = f32::from_bits((self.words[j / 2] >> ((j % 2) * 32)) as u32);
             }
             return;
         }
@@ -157,7 +180,7 @@ impl PackedBuf {
         let width = self.width;
         let inv = (-(fmt.fbits as f32)).exp2();
         let shift = 64 - width;
-        let mut bitpos = 0usize;
+        let mut bitpos = start * width as usize;
         for o in out.iter_mut() {
             let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
             let mut raw = self.words[w] >> off;
@@ -170,6 +193,14 @@ impl PackedBuf {
             *o = code as f32 * inv;
             bitpos += width as usize;
         }
+    }
+
+    /// Row-granular window decode for HWC tensors stored row-major:
+    /// fills `out` with whole rows of `row_elems` values starting at row
+    /// `row0`. `out.len()` must be a multiple of `row_elems`.
+    pub fn unpack_rows(&self, fmt: QFormat, row_elems: usize, row0: usize, out: &mut [f32]) {
+        assert!(row_elems > 0 && out.len() % row_elems == 0, "ragged row window");
+        self.unpack_range_into(fmt, row0 * row_elems, out);
     }
 
     /// Decode one value (tests, debugging; the bulk path is
@@ -192,19 +223,44 @@ impl PackedBuf {
     }
 
     /// Quantize `xs` through packed storage in place: pack, then unpack
-    /// back into the same slice. This is the inter-layer `--storage
-    /// packed` hot path: every boundary value is re-derived from its
-    /// bitstream code, so the packed encoding is exercised end-to-end
-    /// on real forward passes. Note this validates the representation
-    /// without yet shrinking the resident set — the f32 arena the
-    /// values are unpacked into stays allocated (eliminating it by
-    /// fusing unpack into the consumers is a ROADMAP item); the byte
-    /// savings themselves are what [`FootprintModel`] models.
-    ///
-    /// [`FootprintModel`]: super::FootprintModel
+    /// back into the same slice. A validation helper and bench kernel
+    /// (`benches/bench_packed.rs` prices the encode+decode bandwidth per
+    /// width with it); the executors themselves no longer round-trip —
+    /// they keep the bitstream and decode windows on demand, see the
+    /// fused paths in `backend/{fast,reference}.rs`.
     pub fn roundtrip(&mut self, fmt: QFormat, xs: &mut [f32]) {
         self.pack_into(fmt, xs);
         self.unpack_into(fmt, xs);
+    }
+}
+
+/// A sequential reader over a [`PackedBuf`]: decodes successive windows
+/// of the bitstream without tracking element offsets at the call site.
+/// The GEMM A-panel read drives one of these — unpack a block of rows,
+/// multiply, advance — so a layer's input never exists in f32 beyond
+/// the current block.
+pub struct PackedCursor<'a> {
+    buf: &'a PackedBuf,
+    fmt: QFormat,
+    pos: usize,
+}
+
+impl<'a> PackedCursor<'a> {
+    /// Cursor at element 0. `fmt` must match the buffer's pack format.
+    pub fn new(buf: &'a PackedBuf, fmt: QFormat) -> PackedCursor<'a> {
+        assert_eq!(storage_width(fmt), buf.width(), "cursor format mismatch");
+        PackedCursor { buf, fmt, pos: 0 }
+    }
+
+    /// Elements not yet read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Decode the next `out.len()` values and advance past them.
+    pub fn read_into(&mut self, out: &mut [f32]) {
+        self.buf.unpack_range_into(self.fmt, self.pos, out);
+        self.pos += out.len();
     }
 }
 
@@ -321,6 +377,60 @@ mod tests {
         let again = xs.clone();
         buf.roundtrip(fmt, &mut xs);
         assert_eq!(xs, again);
+    }
+
+    #[test]
+    fn window_reads_match_full_unpack() {
+        let fmt = QFormat::new(4, 3); // 7 bits: every window straddles words
+        let xs: Vec<f32> = (0..61).map(|i| i as f32 * 0.43 - 12.0).collect();
+        let buf = PackedBuf::pack(fmt, &xs);
+        let mut want = vec![0f32; xs.len()];
+        buf.unpack_into(fmt, &mut want);
+        for start in [0usize, 1, 7, 8, 9, 30, 60] {
+            for len in [1usize, 2, 13] {
+                if start + len > xs.len() {
+                    continue;
+                }
+                let mut got = vec![f32::NAN; len];
+                buf.unpack_range_into(fmt, start, &mut got);
+                for (i, (a, b)) in got.iter().zip(&want[start..start + len]).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "start {start} len {len} elem {i}");
+                }
+            }
+        }
+        // Row windows over a (9 rows x 7 elems) layout, dropping the rest.
+        let mut rows = vec![0f32; 3 * 7];
+        buf.unpack_rows(fmt, 7, 2, &mut rows);
+        assert_eq!(rows, want[14..35]);
+    }
+
+    #[test]
+    fn cursor_reads_sequentially() {
+        let fmt = QFormat::new(3, 2); // 5 bits
+        let xs: Vec<f32> = (0..40).map(|i| (i as f32 - 20.0) * 0.31).collect();
+        let buf = PackedBuf::pack(fmt, &xs);
+        let mut want = vec![0f32; xs.len()];
+        buf.unpack_into(fmt, &mut want);
+        let mut cur = PackedCursor::new(&buf, fmt);
+        assert_eq!(cur.remaining(), 40);
+        let mut got = Vec::new();
+        for chunk in [1usize, 13, 13, 13] {
+            let mut w = vec![0f32; chunk];
+            cur.read_into(&mut w);
+            got.extend_from_slice(&w);
+        }
+        assert_eq!(cur.remaining(), 0);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn window_reads_on_word_aligned_fallback() {
+        let xs = [0.5f32, -1.25, 3.0, -0.0, 1e9];
+        let buf = PackedBuf::pack(QFormat::FP32, &xs);
+        let mut got = vec![0f32; 2];
+        buf.unpack_range_into(QFormat::FP32, 3, &mut got);
+        assert_eq!(got[0].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(got[1], 1e9);
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::quant::QFormat;
 use crate::report::{pct, ratio, Chart, Table};
 use crate::search::greedy::{self, GreedyOptions};
 use crate::search::space::{DescentOptions, PrecisionConfig};
-use crate::search::{pareto, perlayer, stages, table2, uniform, Param};
+use crate::search::{cache, pareto, perlayer, stages, table2, uniform, Param};
 use crate::traffic::{self, Mode};
 use crate::util;
 
@@ -420,6 +420,38 @@ pub fn explore_net(ctx: &mut ReproCtx, net: &str) -> Result<DseResult> {
     let descent = greedy::descend(&mut ctx.coord, &m, start, &opts)?;
     let rows = table2::select(&descent.visited, &table2::TOLERANCES);
     Ok(DseResult { net: net.to_string(), descent, rows })
+}
+
+/// [`explore_net`] behind the on-disk trajectory cache
+/// ([`crate::search::cache`]): a hit re-ranks the stored visited list
+/// without a single evaluation; a miss (or any key mismatch) runs the
+/// descent and refreshes the cache. The cached result's `explored` list
+/// is empty — callers that need the full Fig-5 scatter should use
+/// [`explore_net`] directly.
+pub fn explore_net_cached(ctx: &mut ReproCtx, net: &str, cache_dir: &Path) -> Result<DseResult> {
+    let m = ctx.manifest(net)?.clone();
+    let key = cache::CacheKey {
+        net: net.to_string(),
+        backend: ctx.backend.label().to_string(),
+        n_images: ctx.n_images,
+        n_layers: m.n_layers(),
+        baseline_top1: m.baseline_top1,
+    };
+    let path = cache::cache_path(cache_dir, net);
+    if let Some(descent) = cache::load(&path, &key) {
+        log::info!(
+            "{net}: descent trajectory from cache ({}, {} visited configs)",
+            path.display(),
+            descent.visited.len()
+        );
+        let rows = table2::select(&descent.visited, &table2::TOLERANCES);
+        return Ok(DseResult { net: net.to_string(), descent, rows });
+    }
+    let dse = explore_net(ctx, net)?;
+    if let Err(e) = cache::save(&path, &key, &dse.descent) {
+        log::warn!("{net}: could not persist descent cache: {e:#}");
+    }
+    Ok(dse)
 }
 
 /// Fig 5 scatter + Table 2 rows for every network, plus the paper's

@@ -1,0 +1,256 @@
+//! On-disk descent-trajectory cache.
+//!
+//! A greedy descent is the expensive half of `qbound footprint` (and of
+//! any report that re-ranks visited configurations): hundreds of
+//! accuracy evaluations per network. The *ranking* step, by contrast,
+//! is pure arithmetic over the visited list. This module persists the
+//! trajectory — visited configs with their accuracies and modeled
+//! ratios — so repeat invocations re-rank from disk without a single
+//! forward pass.
+//!
+//! Invalidation is by identity, not by age: [`CacheKey`] captures
+//! everything the trajectory depends on (network, backend, eval-subset
+//! size, layer count, and the manifest's baseline accuracy as an
+//! artifact-set fingerprint). Any mismatch — or a garbled/missing file,
+//! or a schema bump — is a miss that triggers recompute + overwrite,
+//! never an error.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::quant::QFormat;
+use crate::search::greedy::{DescentResult, Visited};
+use crate::search::space::PrecisionConfig;
+use crate::util::{self, json::Json};
+
+/// Bump when the on-disk layout changes; older files become misses.
+pub const SCHEMA: f64 = 1.0;
+
+/// Identity of one descent run. Every field change invalidates the
+/// cached trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheKey {
+    pub net: String,
+    pub backend: String,
+    /// Images per accuracy evaluation (0 = full split).
+    pub n_images: usize,
+    pub n_layers: usize,
+    /// The manifest's recorded baseline — a fingerprint of the artifact
+    /// set the accuracies were measured on.
+    pub baseline_top1: f64,
+}
+
+/// Cache file for `net` under `dir`.
+pub fn cache_path(dir: &Path, net: &str) -> PathBuf {
+    dir.join(format!("dse_{net}.json"))
+}
+
+fn fmt_json(q: QFormat) -> Json {
+    Json::arr([Json::num(q.ibits as f64), Json::num(q.fbits as f64)])
+}
+
+fn fmt_from(j: &Json) -> Option<QFormat> {
+    let a = j.as_arr()?;
+    if a.len() != 2 {
+        return None;
+    }
+    Some(QFormat::from_wire(a[0].as_f64()? as f32, a[1].as_f64()? as f32))
+}
+
+fn cfg_json(c: &PrecisionConfig) -> Json {
+    Json::obj(vec![
+        ("wq", Json::arr(c.wq.iter().map(|q| fmt_json(*q)))),
+        ("dq", Json::arr(c.dq.iter().map(|q| fmt_json(*q)))),
+    ])
+}
+
+fn cfg_from(j: &Json, n_layers: usize) -> Option<PrecisionConfig> {
+    let row = |key: &str| -> Option<Vec<QFormat>> {
+        j.get(key)?.as_arr()?.iter().map(fmt_from).collect()
+    };
+    let (wq, dq) = (row("wq")?, row("dq")?);
+    if wq.len() != n_layers || dq.len() != n_layers {
+        return None;
+    }
+    Some(PrecisionConfig { wq, dq })
+}
+
+/// Persist `res.visited` (the ranking input; the `explored` superset is
+/// Fig-5 plotting data and is not cached) under `key`.
+pub fn save(path: &Path, key: &CacheKey, res: &DescentResult) -> Result<()> {
+    let visited = res.visited.iter().map(|v| {
+        Json::obj(vec![
+            ("step", Json::num(v.step as f64)),
+            ("move", Json::str(v.move_label.clone())),
+            ("cfg", cfg_json(&v.cfg)),
+            ("accuracy", Json::num(v.accuracy)),
+            ("rel_err", Json::num(v.rel_err)),
+            ("traffic_ratio", Json::num(v.traffic_ratio)),
+            ("footprint_ratio", Json::num(v.footprint_ratio)),
+        ])
+    });
+    let doc = Json::obj(vec![
+        ("schema", Json::num(SCHEMA)),
+        ("net", Json::str(key.net.clone())),
+        ("backend", Json::str(key.backend.clone())),
+        ("n_images", Json::num(key.n_images as f64)),
+        ("n_layers", Json::num(key.n_layers as f64)),
+        ("baseline_top1", Json::num(key.baseline_top1)),
+        ("baseline", Json::num(res.baseline)),
+        ("visited", Json::arr(visited)),
+    ]);
+    util::write_file(path, doc.pretty().as_bytes())
+}
+
+/// Load the trajectory at `path` if it exists *and* matches `key`.
+/// Every failure mode — missing file, parse error, key mismatch, schema
+/// drift, truncated entries — is a silent miss.
+pub fn load(path: &Path, key: &CacheKey) -> Option<DescentResult> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.at(&["schema"]).as_f64()? != SCHEMA
+        || j.at(&["net"]).as_str()? != key.net
+        || j.at(&["backend"]).as_str()? != key.backend
+        || j.at(&["n_images"]).as_usize()? != key.n_images
+        || j.at(&["n_layers"]).as_usize()? != key.n_layers
+        || (j.at(&["baseline_top1"]).as_f64()? - key.baseline_top1).abs() > 1e-12
+    {
+        return None;
+    }
+    let baseline = j.at(&["baseline"]).as_f64()?;
+    let mut visited = Vec::new();
+    for v in j.at(&["visited"]).as_arr()? {
+        visited.push(Visited {
+            step: v.at(&["step"]).as_usize()?,
+            move_label: v.at(&["move"]).as_str()?.to_string(),
+            cfg: cfg_from(v.at(&["cfg"]), key.n_layers)?,
+            accuracy: v.at(&["accuracy"]).as_f64()?,
+            rel_err: v.at(&["rel_err"]).as_f64()?,
+            traffic_ratio: v.at(&["traffic_ratio"]).as_f64()?,
+            footprint_ratio: v.at(&["footprint_ratio"]).as_f64()?,
+        });
+    }
+    if visited.is_empty() {
+        return None;
+    }
+    Some(DescentResult { baseline, visited, explored: Vec::new() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("qbound-dse-cache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_key() -> CacheKey {
+        CacheKey {
+            net: "lenet".into(),
+            backend: "fast".into(),
+            n_images: 128,
+            n_layers: 2,
+            baseline_top1: 0.9904,
+        }
+    }
+
+    fn sample_result() -> DescentResult {
+        let mut mixed = PrecisionConfig::uniform(2, QFormat::new(1, 6), QFormat::new(9, 2));
+        mixed.dq[1] = QFormat::FP32; // exercise the sentinel round-trip
+        DescentResult {
+            baseline: 0.9904,
+            visited: vec![
+                Visited {
+                    step: 0,
+                    move_label: "start".into(),
+                    cfg: PrecisionConfig::fp32(2),
+                    accuracy: 0.9904,
+                    rel_err: 0.0,
+                    traffic_ratio: 1.0,
+                    footprint_ratio: 1.0,
+                },
+                Visited {
+                    step: 1,
+                    move_label: "d0.I-1".into(),
+                    cfg: mixed,
+                    accuracy: 0.9851,
+                    rel_err: 0.00535,
+                    traffic_ratio: 0.41,
+                    footprint_ratio: 0.37,
+                },
+            ],
+            explored: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn hit_round_trips_the_trajectory() {
+        let dir = tmp_dir("hit");
+        let (key, res) = (sample_key(), sample_result());
+        let path = cache_path(&dir, &key.net);
+        save(&path, &key, &res).unwrap();
+        let got = load(&path, &key).expect("cache hit");
+        assert_eq!(got.baseline, res.baseline);
+        assert_eq!(got.visited.len(), 2);
+        for (a, b) in got.visited.iter().zip(&res.visited) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.move_label, b.move_label);
+            assert_eq!(a.cfg, b.cfg);
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.rel_err, b.rel_err);
+            assert_eq!(a.traffic_ratio, b.traffic_ratio);
+            assert_eq!(a.footprint_ratio, b.footprint_ratio);
+        }
+        assert!(got.visited[1].cfg.dq[1].is_fp32());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn any_key_drift_invalidates() {
+        let dir = tmp_dir("inval");
+        let (key, res) = (sample_key(), sample_result());
+        let path = cache_path(&dir, &key.net);
+        save(&path, &key, &res).unwrap();
+        let mutations: [fn(&mut CacheKey); 5] = [
+            |k| k.n_images = 256,
+            |k| k.backend = "reference".into(),
+            |k| k.net = "convnet".into(),
+            |k| k.n_layers = 3,
+            |k| k.baseline_top1 = 0.9,
+        ];
+        for mutate in mutations {
+            let mut k = sample_key();
+            mutate(&mut k);
+            assert!(load(&path, &k).is_none(), "{k:?} should miss");
+        }
+        // The matching key still hits after all those misses.
+        assert!(load(&path, &key).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbled_or_missing_files_are_silent_misses() {
+        let dir = tmp_dir("garbled");
+        let key = sample_key();
+        let path = cache_path(&dir, &key.net);
+        assert!(load(&path, &key).is_none()); // missing
+        std::fs::write(&path, b"{not json").unwrap();
+        assert!(load(&path, &key).is_none()); // unparseable
+        std::fs::write(&path, b"{\"schema\": 99}").unwrap();
+        assert!(load(&path, &key).is_none()); // wrong schema
+        // Valid envelope but empty trajectory is also a miss.
+        save(&path, &key, &DescentResult {
+            baseline: 0.9904,
+            visited: Vec::new(),
+            explored: Vec::new(),
+        })
+        .unwrap();
+        assert!(load(&path, &key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -2,6 +2,7 @@
 //! §2.3), the slowest-gradient-descent explorer (§2.5), Pareto-frontier
 //! extraction (Fig 5) and the Table-2 selection rule.
 
+pub mod cache;
 pub mod greedy;
 pub mod pareto;
 pub mod perlayer;

@@ -68,6 +68,83 @@ pub fn quantized_canonical(fmt: crate::quant::QFormat, xs: &[f32]) -> Vec<f32> {
     v
 }
 
+// ---- allocation metering -----------------------------------------------------
+
+/// A counting [`GlobalAlloc`](std::alloc::GlobalAlloc) wrapper around
+/// the system allocator: tracks live and peak heap bytes so tests can
+/// *measure* the memory bound instead of modeling it. Install it as the
+/// `#[global_allocator]` of a test binary (see
+/// `tests/integration_memory.rs`); production binaries never register
+/// it, so it costs nothing outside the memory tests.
+///
+/// Counters are process-global — tests that read them must serialize
+/// (the memory test binary guards every test with one mutex) and should
+/// assert with slack for harness noise.
+pub struct MeterAlloc;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+
+static METER_LIVE: AtomicUsize = AtomicUsize::new(0);
+static METER_PEAK: AtomicUsize = AtomicUsize::new(0);
+
+fn meter_record(n: usize) {
+    let live = METER_LIVE.fetch_add(n, Relaxed) + n;
+    METER_PEAK.fetch_max(live, Relaxed);
+}
+
+unsafe impl GlobalAlloc for MeterAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            meter_record(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            meter_record(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        METER_LIVE.fetch_sub(layout.size(), Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                meter_record(new_size - layout.size());
+            } else {
+                METER_LIVE.fetch_sub(layout.size() - new_size, Relaxed);
+            }
+        }
+        p
+    }
+}
+
+impl MeterAlloc {
+    /// Currently allocated heap bytes.
+    pub fn live_bytes() -> usize {
+        METER_LIVE.load(Relaxed)
+    }
+
+    /// High-water heap bytes since the last [`MeterAlloc::reset_peak`].
+    pub fn peak_bytes() -> usize {
+        METER_PEAK.load(Relaxed)
+    }
+
+    /// Restart peak tracking from the current live level.
+    pub fn reset_peak() {
+        METER_PEAK.store(METER_LIVE.load(Relaxed), Relaxed);
+    }
+}
+
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {

@@ -123,6 +123,37 @@ pub fn human_duration(d: Duration) -> String {
     }
 }
 
+// ---- process metrics ---------------------------------------------------------
+
+/// Reset the kernel's peak-RSS watermark (`VmHWM`) to the current RSS
+/// by writing `5` to `/proc/self/clear_refs` (Linux ≥ 4.0). Returns
+/// whether the reset took, so callers can label a subsequent
+/// [`peak_rss_bytes`] reading as scoped-from-here vs process-lifetime.
+/// Without the reset, `VmHWM` includes everything the process did
+/// before the region of interest (e.g. a baseline evaluation) and a
+/// regression in the region can be invisible.
+pub fn reset_peak_rss() -> bool {
+    std::fs::write("/proc/self/clear_refs", "5\n").is_ok()
+}
+
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`, since the last [`reset_peak_rss`] if any);
+/// `None` on platforms without procfs. CI archives this next to the
+/// modeled footprint so regressions in the measured memory bound are
+/// visible per commit. Coarse by nature (page granularity, allocator
+/// retention) — the precise measurement is `testkit::MeterAlloc` in
+/// `tests/integration_memory.rs`; this is the in-production tripwire.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 // ---- fs helpers ----------------------------------------------------------------
 
 /// Read a file to string with a path-annotated error.
@@ -195,6 +226,13 @@ mod tests {
         assert_eq!(human_duration(Duration::from_secs(2)), "2.00 s");
         assert_eq!(human_duration(Duration::from_millis(12)), "12.0 ms");
         assert_eq!(human_duration(Duration::from_micros(45)), "45 µs");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn peak_rss_reads_procfs() {
+        let peak = peak_rss_bytes().expect("VmHWM on linux");
+        assert!(peak > 1024 * 1024, "implausible peak RSS {peak}");
     }
 
     #[test]

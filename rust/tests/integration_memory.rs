@@ -1,0 +1,195 @@
+//! The measured memory bound: run both storage modes of the fast
+//! backend under a counting global allocator and prove that `--storage
+//! packed` actually shrinks the process — peak live bytes strictly
+//! below the f32 run and inside the `FootprintModel` envelope — rather
+//! than just modeling the savings. This is the test infrastructure that
+//! turns FOOTPRINT.json from a model into a measurement.
+//!
+//! Meter state is process-global, so every test here serializes on one
+//! mutex and asserts with slack for harness noise. Thread-count
+//! determinism of the fused path rides along (it allocates, so it holds
+//! the same lock).
+
+use std::sync::Mutex;
+
+use qbound::backend::fast::FastBackend;
+use qbound::backend::lowering::LoweredPlan;
+use qbound::backend::reference::ReferenceBackend;
+use qbound::backend::{Backend, Variant};
+use qbound::eval::Dataset;
+use qbound::memory::{FootprintModel, PackedBuf, StorageMode};
+use qbound::nets::{arch, ArtifactIndex, NetManifest};
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::testkit::{self, MeterAlloc};
+
+#[global_allocator]
+static METER: MeterAlloc = MeterAlloc;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Images per measured infer call.
+const MEM_BATCH: usize = 4;
+/// Allowance for harness noise and allocator bookkeeping around the
+/// modeled quantities (the asserted margins are tens to hundreds of KiB).
+const SLACK: f64 = 16.0 * 1024.0;
+
+/// An 8-bit-wide everywhere config: storage widths are exactly 1 byte
+/// per value, so modeled bytes are easy to reason about.
+fn cfg8(nl: usize) -> PrecisionConfig {
+    PrecisionConfig::uniform(nl, QFormat::new(1, 7), QFormat::new(5, 3))
+}
+
+#[test]
+fn packed_peak_is_below_f32_and_inside_the_model_envelope() {
+    let _g = SERIAL.lock().unwrap();
+    let dir = testkit::ensure_artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let d = Dataset::load(&m).unwrap();
+        let n = MEM_BATCH.min(d.n);
+        let imgs = d.batch_images(0, n).to_vec();
+        drop(d);
+        let cfg = cfg8(m.n_layers());
+        let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+        let plan = LoweredPlan::new(&arch::get(net).unwrap(), None).unwrap();
+        let fpm = FootprintModel::new(&m);
+
+        // (resident after warm-up, peak of a warm infer, churn of a warm
+        // infer), all as deltas from the pre-load live level.
+        let measure = |storage: StorageMode| -> (f64, f64, f64) {
+            let base = MeterAlloc::live_bytes() as f64;
+            let backend = FastBackend::with_options(1, storage);
+            let mut exec = backend.load(&m, Variant::Standard).unwrap();
+            std::hint::black_box(exec.infer(&imgs, &wq, &dq, None).unwrap());
+            let resident = MeterAlloc::live_bytes() as f64 - base;
+            MeterAlloc::reset_peak();
+            let pre = MeterAlloc::live_bytes() as f64;
+            std::hint::black_box(exec.infer(&imgs, &wq, &dq, None).unwrap());
+            let peak = MeterAlloc::peak_bytes() as f64 - base;
+            let churn = MeterAlloc::peak_bytes() as f64 - pre;
+            (resident, peak, churn)
+        };
+        let (r_f32, p_f32, _) = measure(StorageMode::F32);
+        let (r_pk, p_pk, churn_pk) = measure(StorageMode::Packed);
+
+        // Headline: both the steady state and the in-flight peak of the
+        // packed run are strictly below the f32 run.
+        assert!(r_pk < r_f32, "{net}: packed resident {r_pk} >= f32 {r_f32}");
+        assert!(p_pk < p_f32, "{net}: packed peak {p_pk} >= f32 peak {p_f32}");
+
+        // Envelope: the f32 path's two max-sized arenas must be gone,
+        // replaced by at most the modeled packed bitstreams plus the
+        // streaming decode window (everything else — weights, panels,
+        // col/tmp scratch — is identical between the modes).
+        let arenas = 8.0 * plan.max_act_elems as f64; // 2 arenas x 4 B/elem
+        let envelope = fpm.fused_envelope(&cfg, plan.max_win_elems);
+        assert!(
+            r_pk <= r_f32 - arenas + envelope + SLACK,
+            "{net}: packed residency {r_pk} outside the model envelope \
+             (f32 {r_f32}, arenas {arenas}, envelope {envelope})"
+        );
+
+        // Transient churn of one fused infer is bounded by the plan's
+        // fused f32 high-water plus the logits block.
+        let churn_bound = 4.0 * (plan.max_fused_elems + n * m.num_classes) as f64 + SLACK;
+        assert!(
+            churn_pk <= churn_bound,
+            "{net}: fused infer churn {churn_pk} > bound {churn_bound}"
+        );
+    }
+}
+
+#[test]
+fn fused_path_is_bit_deterministic_across_thread_counts_on_every_arch() {
+    let _g = SERIAL.lock().unwrap();
+    let dir = testkit::ensure_artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let d = Dataset::load(&m).unwrap();
+        let n = 6.min(d.n);
+        let imgs = &d.images[..n * d.image_elems];
+        let cfg = cfg8(m.n_layers());
+        let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+        let mut base: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 5] {
+            let backend = FastBackend::with_options(threads, StorageMode::Packed);
+            let mut exec = backend.load(&m, Variant::Standard).unwrap();
+            let logits = exec.infer(imgs, &wq, &dq, None).unwrap();
+            match &base {
+                None => base = Some(logits),
+                Some(want) => assert!(
+                    want.iter().zip(&logits).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{net}: fused path changed bits at threads={threads}"
+                ),
+            }
+        }
+        // And the reference backend's fused loop agrees numerically.
+        let mut rexec = ReferenceBackend::with_storage(StorageMode::Packed)
+            .load(&m, Variant::Standard)
+            .unwrap();
+        let rlogits = rexec.infer(imgs, &wq, &dq, None).unwrap();
+        let want = base.unwrap();
+        for (i, (a, b)) in want.iter().zip(&rlogits).enumerate() {
+            assert!(
+                (a - b).abs() == 0.0,
+                "{net}: fused fast/reference logit {i} differs: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn eval_split_spill_shrinks_the_resident_input_set() {
+    let _g = SERIAL.lock().unwrap();
+    let dir = testkit::ensure_artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let fmt = QFormat::new(5, 3); // 8-bit input codes
+    let base = MeterAlloc::live_bytes();
+    let d = Dataset::load(&m).unwrap();
+    let with_f32 = MeterAlloc::live_bytes() - base;
+    let (n, elems) = (d.n, d.image_elems);
+    let (split, labels) = d.into_packed(fmt);
+    let with_packed = MeterAlloc::live_bytes() - base;
+    assert_eq!(split.n(), n);
+    assert_eq!(labels.len(), n);
+    // 8-bit codes: one byte per element, plus word rounding.
+    assert!(split.packed_bytes() <= n * elems + 8);
+    assert!(
+        (with_packed as f64) < with_f32 as f64 / 2.0,
+        "packed split {with_packed} not below half of f32 split {with_f32}"
+    );
+    // Served batches decode to exactly the quantized images (fresh
+    // dataset load for the reference values — outside the measurement).
+    let d2 = Dataset::load(&m).unwrap();
+    let want = qbound::testkit::quantized_canonical(fmt, &d2.images);
+    let mut out = Vec::new();
+    split.unpack_batch(1, 2, &mut out);
+    assert_eq!(out.len(), 2 * elems);
+    for (a, b) in out.iter().zip(&want[2 * elems..4 * elems]) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn packed_buffers_realize_the_modeled_layer_bytes() {
+    let _g = SERIAL.lock().unwrap();
+    let dir = testkit::ensure_artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let cfg = cfg8(m.n_layers());
+        let fpm = FootprintModel::new(&m);
+        for (l, lf) in fpm.per_layer(&cfg).iter().enumerate() {
+            let out_elems = m.layers[l].out_elems as usize;
+            let realized = PackedBuf::pack(cfg.dq[l], &vec![0.0f32; out_elems]).packed_bytes();
+            assert!(
+                (realized as f64 - lf.out_bytes).abs() < 8.0,
+                "{net} layer {l}: realized {realized} vs modeled {}",
+                lf.out_bytes
+            );
+        }
+    }
+}

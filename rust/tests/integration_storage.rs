@@ -171,7 +171,9 @@ fn packed_fast_is_bit_deterministic_across_thread_counts() {
 fn evaluator_accuracy_identical_under_packed_storage() {
     // The acceptance-criteria form of the contract: top-1 accuracy on a
     // whole eval split is bit-identical between storage modes on every
-    // registered arch (both backends).
+    // registered arch (both backends). The packed evaluators also serve
+    // their batches from the spilled PackedSplit bitstream — the input
+    // set is packed end-to-end, not just the inter-layer activations.
     let dir = artifacts();
     let idx = ArtifactIndex::load(&dir).unwrap();
     for net in &idx.nets {
@@ -179,14 +181,21 @@ fn evaluator_accuracy_identical_under_packed_storage() {
         let cfg =
             PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 7), QFormat::new(9, 3));
         let mut accs = Vec::new();
-        let backends: Vec<Box<dyn Backend>> = vec![
-            Box::new(ReferenceBackend::with_storage(StorageMode::F32)),
-            Box::new(ReferenceBackend::with_storage(StorageMode::Packed)),
-            Box::new(FastBackend::with_options(2, StorageMode::F32)),
-            Box::new(FastBackend::with_options(2, StorageMode::Packed)),
+        let backends: Vec<(Box<dyn Backend>, StorageMode)> = vec![
+            (Box::new(ReferenceBackend::with_storage(StorageMode::F32)), StorageMode::F32),
+            (
+                Box::new(ReferenceBackend::with_storage(StorageMode::Packed)),
+                StorageMode::Packed,
+            ),
+            (Box::new(FastBackend::with_options(2, StorageMode::F32)), StorageMode::F32),
+            (
+                Box::new(FastBackend::with_options(2, StorageMode::Packed)),
+                StorageMode::Packed,
+            ),
         ];
-        for backend in &backends {
-            let mut ev = qbound::eval::Evaluator::new(backend.as_ref(), &m).unwrap();
+        for (backend, storage) in &backends {
+            let mut ev =
+                qbound::eval::Evaluator::with_storage(backend.as_ref(), &m, *storage).unwrap();
             accs.push(ev.accuracy(&cfg, 64).unwrap());
         }
         assert!(

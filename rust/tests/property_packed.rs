@@ -6,7 +6,7 @@
 //! `+0.0`; `+ 0.0` applies the same canonicalization to the reference
 //! side and is the identity on every other value).
 
-use qbound::memory::{storage_width, PackedBuf, MAX_PACK_BITS};
+use qbound::memory::{storage_width, PackedBuf, PackedCursor, MAX_PACK_BITS};
 use qbound::quant::QFormat;
 use qbound::testkit::{
     cases, forall, gen_f32, gen_i64, gen_vec, prop, quantized_canonical, GenPair, Outcome,
@@ -125,6 +125,78 @@ fn pack_is_idempotent_on_quantized_data() {
             prop(
                 once.iter().zip(&twice).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "second roundtrip must be the identity",
+            )
+        },
+    );
+}
+
+/// The streaming window reader: for every packable `I+F` width, over a
+/// non-word-aligned row length, every `(row0, rows)` window of
+/// `unpack_rows` is bit-identical to the matching slice of a full
+/// `unpack` — including windows whose first value straddles a `u64`
+/// word boundary.
+#[test]
+fn every_width_window_matches_full_unpack() {
+    let row_elems = 7usize; // odd: row starts sweep all bit offsets
+    let rows = 11usize;
+    let xs: Vec<f32> = (0..row_elems * rows).map(|i| i as f32 * 0.83 - 31.0).collect();
+    for ibits in 0..=12i8 {
+        for fbits in 0..=12i8 {
+            if ibits + fbits == 0 {
+                continue;
+            }
+            let fmt = QFormat::new(ibits, fbits);
+            let buf = PackedBuf::pack(fmt, &xs);
+            let mut want = vec![0f32; xs.len()];
+            buf.unpack_into(fmt, &mut want);
+            for row0 in 0..rows {
+                for take in 1..=(rows - row0).min(3) {
+                    let mut got = vec![f32::NAN; take * row_elems];
+                    buf.unpack_rows(fmt, row_elems, row0, &mut got);
+                    let wslice = &want[row0 * row_elems..(row0 + take) * row_elems];
+                    for (i, (a, b)) in got.iter().zip(wslice).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{fmt}: window row0={row0} take={take} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A cursor consuming the stream in uneven chunks reproduces the full
+/// unpack exactly, for random formats, lengths and chunk patterns.
+#[test]
+fn cursor_chunked_reads_match_full_unpack() {
+    forall(
+        cases(256),
+        GenPair(
+            GenPair(gen_i64(0, 13), gen_i64(0, 13)),
+            GenPair(gen_vec(gen_f32(-300.0, 300.0), 1, 97), gen_i64(1, 13)),
+        ),
+        |((ibits, fbits), (xs, chunk))| {
+            let (mut i, f) = (*ibits as i8, *fbits as i8);
+            if i + f == 0 {
+                i = 1;
+            }
+            let fmt = QFormat::new(i, f);
+            let buf = PackedBuf::pack(fmt, xs);
+            let mut want = vec![0f32; xs.len()];
+            buf.unpack_into(fmt, &mut want);
+            let mut cur = PackedCursor::new(&buf, fmt);
+            let mut got = Vec::with_capacity(xs.len());
+            while cur.remaining() > 0 {
+                let take = (*chunk as usize).min(cur.remaining());
+                let mut w = vec![f32::NAN; take];
+                cur.read_into(&mut w);
+                got.extend_from_slice(&w);
+            }
+            prop(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "cursor stream must equal full unpack",
             )
         },
     );
