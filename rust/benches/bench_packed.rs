@@ -39,11 +39,15 @@ fn main() {
     ] {
         let mut buf = PackedBuf::default();
         let mut work = xs.clone();
-        suite.bench_bytes(&format!("pack+unpack roundtrip {fmt} ({} bits)", buf_width(fmt)), bytes, || {
-            work.copy_from_slice(&xs);
-            buf.roundtrip(fmt, &mut work);
-            std::hint::black_box(&work);
-        });
+        suite.bench_bytes(
+            &format!("pack+unpack roundtrip {fmt} ({} bits)", buf_width(fmt)),
+            bytes,
+            || {
+                work.copy_from_slice(&xs);
+                buf.roundtrip(fmt, &mut work);
+                std::hint::black_box(&work);
+            },
+        );
     }
 
     // End-to-end: fast-backend batch infer, f32 vs packed storage.

@@ -35,13 +35,22 @@
 //! GEMMs stream `A` row blocks through a
 //! [`PackedCursor`](crate::memory::PackedCursor), inception stages its
 //! module input once for its four branch readers) and each step's f32
-//! output lives only until it is packed at the next boundary. Results
-//! stay numerically identical to the default in-f32 path
+//! output lives only until it is packed at the next boundary. The
+//! **weights** are packed the same way: every parameter tensor is
+//! resident only as a bitstream at its group's weight width — GEMM
+//! weights in the NR-lane panel layout
+//! ([`PackedPanels`](crate::memory::PackedPanels)), decoded one `KC`
+//! strip at a time into a per-thread tile inside the GEMM
+//! ([`super::gemm::gemm_bias_bits`]), biases decoded into a small
+//! scratch window per step — so the resident weight bytes match the
+//! modeled footprint instead of staying f32. Results stay numerically
+//! identical to the default in-f32 path
 //! (`tests/integration_storage.rs`), and the residency claim is
 //! measured by `tests/integration_memory.rs` under a counting
 //! allocator. The fused path trades the zero-allocation steady state of
 //! the f32 path for minimal residency: per-step working vectors are
-//! allocated fresh so the resident set really is bitstreams + windows.
+//! allocated fresh (and weight tiles re-decoded per GEMM) so the
+//! resident set really is bitstreams + windows.
 //!
 //! Numeric contract: agreement with the reference backend up to fp32
 //! accumulation order (see `tests/integration_parity.rs`). The GEMM
@@ -52,11 +61,11 @@
 
 use anyhow::Result;
 
-use super::gemm::{gemm_bias_packed, pack_b_panels};
+use super::gemm::{gemm_bias_b, pack_b_panels, GemmB, NR};
 use super::lowering::{self, LoweredPlan};
 use super::reference::{avgpool_into, gap_into, lrn_into, maxpool_into};
 use super::{Backend, NetExecutor, Variant};
-use crate::memory::{PackedBuf, PackedCursor, StorageMode};
+use crate::memory::{PackedBuf, PackedCursor, PackedPanels, StorageMode};
 use crate::nets::arch::{conv_out_hw, same_pad_before, Op, Padding, Shape};
 use crate::nets::NetManifest;
 use crate::quant::QFormat;
@@ -111,7 +120,7 @@ impl Backend for FastBackend {
             variant,
             plan,
             params: net.params,
-            weights: FastWeights::default(),
+            weights: FastWeights::new(self.storage),
             scratch: Vec::new(),
             threads: self.threads,
             storage: self.storage,
@@ -162,7 +171,7 @@ impl NetExecutor for FastExecutor {
     ) -> Result<Vec<f32>> {
         let req = lowering::decode_request(&self.manifest, self.variant, images, wq, dq, sq)?;
         let batch = req.batch;
-        let (qparams, panels) = self.weights.get(&self.plan, &self.params, &req.wfmt);
+        let wts = self.weights.view(&self.plan, &self.params, &req.wfmt);
 
         let elems = self.plan.input_elems();
         let classes = self.plan.num_classes;
@@ -184,8 +193,7 @@ impl NetExecutor for FastExecutor {
             for i in 0..batch {
                 dispatch_image(
                     plan,
-                    qparams,
-                    panels,
+                    wts,
                     &images[i * elems..(i + 1) * elems],
                     dfmt,
                     sfmt,
@@ -213,8 +221,7 @@ impl NetExecutor for FastExecutor {
                         for i in 0..n_here {
                             dispatch_image(
                                 plan,
-                                qparams,
-                                panels,
+                                wts,
                                 &imgs[i * elems..(i + 1) * elems],
                                 dfmt,
                                 sfmt,
@@ -233,66 +240,172 @@ impl NetExecutor for FastExecutor {
     }
 }
 
-/// Weight state memoized per weight config: the quantized parameter
-/// tensors plus, for every tensor consumed as a GEMM `B`, its
-/// [`pack_b_panels`] layout. Rebuilt only when the weight config
-/// changes (an eval sweeps many batches under one config) — this is the
-/// ROADMAP "pack the B panel once per weight config" item.
-#[derive(Default)]
-struct FastWeights {
-    cached_wq: Vec<QFormat>,
-    qparams: Vec<Vec<f32>>,
-    /// Indexed like `qparams`; `None` for biases / non-GEMM tensors.
-    panels: Vec<Option<Vec<f32>>>,
+/// Weight state memoized per weight config, in the representation the
+/// executor's storage mode calls for. Rebuilt only when the weight
+/// config changes (an eval sweeps many batches under one config).
+enum FastWeights {
+    /// Default mode: quantized f32 tensors plus, for every tensor
+    /// consumed as a GEMM `B`, its [`pack_b_panels`] layout — the
+    /// ROADMAP "pack the B panel once per weight config" item.
+    F32 {
+        cached_wq: Vec<QFormat>,
+        qparams: Vec<Vec<f32>>,
+        /// Indexed like `qparams`; `None` for biases / non-GEMM tensors.
+        panels: Vec<Option<Vec<f32>>>,
+    },
+    /// `--storage packed`: every tensor resident only as a bitstream at
+    /// its group's weight width — the realized weight half of the
+    /// memory bound.
+    Packed(PackedWeights),
 }
 
 impl FastWeights {
-    fn get(
-        &mut self,
-        plan: &LoweredPlan,
-        params: &[Vec<f32>],
-        wfmt: &[QFormat],
-    ) -> (&[Vec<f32>], &[Option<Vec<f32>>]) {
-        if self.cached_wq != wfmt {
-            self.qparams = plan.quantize_params(params, wfmt);
-            self.panels = pack_plan_panels(plan, &self.qparams);
-            // The panel is now the only consumer of each GEMM weight
-            // tensor — drop the flat quantized copy so resident weight
-            // memory isn't doubled (biases keep theirs).
-            for (q, p) in self.qparams.iter_mut().zip(&self.panels) {
-                if p.is_some() {
-                    *q = Vec::new();
-                }
-            }
-            self.cached_wq = wfmt.to_vec();
+    fn new(storage: StorageMode) -> FastWeights {
+        match storage {
+            StorageMode::F32 => FastWeights::F32 {
+                cached_wq: Vec::new(),
+                qparams: Vec::new(),
+                panels: Vec::new(),
+            },
+            StorageMode::Packed => FastWeights::Packed(PackedWeights::default()),
         }
-        (&self.qparams, &self.panels)
+    }
+
+    /// The weight view for `wfmt`, rebuilt only when the config changes.
+    fn view(&mut self, plan: &LoweredPlan, params: &[Vec<f32>], wfmt: &[QFormat]) -> WView<'_> {
+        match self {
+            FastWeights::F32 { cached_wq, qparams, panels } => {
+                if cached_wq != wfmt {
+                    *qparams = plan.quantize_params(params, wfmt);
+                    *panels = pack_plan_panels(plan, qparams);
+                    // The panel is now the only consumer of each GEMM
+                    // weight tensor — drop the flat quantized copy so
+                    // resident weight memory isn't doubled (biases keep
+                    // theirs).
+                    for (q, p) in qparams.iter_mut().zip(panels.iter()) {
+                        if p.is_some() {
+                            *q = Vec::new();
+                        }
+                    }
+                    *cached_wq = wfmt.to_vec();
+                }
+                WView::F32 { qparams: &*qparams, panels: &*panels }
+            }
+            FastWeights::Packed(w) => {
+                if w.cached_wq != wfmt {
+                    w.rebuild(plan, params, wfmt);
+                }
+                WView::Packed(w)
+            }
+        }
+    }
+}
+
+/// Every parameter tensor as a bitstream at its group's weight width:
+/// GEMM weights in the [`pack_b_panels`] layout ([`PackedPanels`]),
+/// biases as plain [`PackedBuf`]s.
+#[derive(Default)]
+struct PackedWeights {
+    cached_wq: Vec<QFormat>,
+    /// Pack format of each tensor (its group's `wq` row).
+    fmts: Vec<QFormat>,
+    /// GEMM weight tensors (`None` = bias).
+    panels: Vec<Option<PackedPanels>>,
+    /// Bias tensors (`None` = GEMM weight).
+    biases: Vec<Option<PackedBuf>>,
+}
+
+impl PackedWeights {
+    fn rebuild(&mut self, plan: &LoweredPlan, params: &[Vec<f32>], wfmt: &[QFormat]) {
+        self.fmts = plan.per_tensor_formats(wfmt);
+        self.panels = vec![None; params.len()];
+        self.biases = vec![None; params.len()];
+        // Packing *is* the quantizer (pack→decode equals
+        // `quantize_slice` modulo the single two's-complement zero), so
+        // the raw fp32 tensors pack directly — no transient quantized
+        // copy is built.
+        for t in lowering::gemm_tensors(&plan.steps) {
+            let pf = pack_b_panels(&params[t.param], t.kd, t.n);
+            self.panels[t.param] = Some(PackedPanels::pack(self.fmts[t.param], &pf, t.kd, NR));
+        }
+        for (i, p) in params.iter().enumerate() {
+            if self.panels[i].is_none() {
+                self.biases[i] = Some(PackedBuf::pack(self.fmts[i], p));
+            }
+        }
+        self.cached_wq = wfmt.to_vec();
+    }
+
+    /// Resident payload bytes of the packed weight set.
+    fn resident_bytes(&self) -> usize {
+        let p: usize = self.panels.iter().flatten().map(|p| p.packed_bytes()).sum();
+        let b: usize = self.biases.iter().flatten().map(|b| b.packed_bytes()).sum();
+        p + b
+    }
+}
+
+/// Resident bytes of the packed weight set (panel bitstreams including
+/// the NR-lane zero padding, plus bias bitstreams) a fused executor
+/// memoizes for `wfmt` — the realized weight half of the memory bound,
+/// asserted against the f32 weight bytes and the
+/// [`FootprintModel`](crate::memory::FootprintModel) weight term by
+/// `tests/integration_memory.rs` and reported by `qbound eval
+/// --mem-json`.
+pub fn packed_weight_bytes(plan: &LoweredPlan, params: &[Vec<f32>], wfmt: &[QFormat]) -> usize {
+    let mut w = PackedWeights::default();
+    w.rebuild(plan, params, wfmt);
+    w.resident_bytes()
+}
+
+/// Borrowed weight state for one `infer`: resolves parameter indices to
+/// GEMM `B` operands and bias slices regardless of representation.
+#[derive(Clone, Copy)]
+enum WView<'a> {
+    F32 {
+        qparams: &'a [Vec<f32>],
+        panels: &'a [Option<Vec<f32>>],
+    },
+    Packed(&'a PackedWeights),
+}
+
+impl<'a> WView<'a> {
+    /// The GEMM `B` operand of parameter `i` (always present for
+    /// tensors the plan consumes as a GEMM `B`).
+    fn gemm_b(self, i: usize) -> GemmB<'a> {
+        match self {
+            WView::F32 { panels, .. } => {
+                GemmB::Panels(panels[i].as_deref().expect("GEMM weight panel"))
+            }
+            WView::Packed(w) => {
+                GemmB::Bits(w.panels[i].as_ref().expect("GEMM weight panel"), w.fmts[i])
+            }
+        }
+    }
+
+    /// The bias values of parameter `i`: a direct borrow in f32 mode,
+    /// decoded into `buf` (the scratch bias window) in packed mode.
+    fn bias<'b>(self, i: usize, buf: &'b mut Vec<f32>) -> &'b [f32]
+    where
+        'a: 'b,
+    {
+        match self {
+            WView::F32 { qparams, .. } => &qparams[i],
+            WView::Packed(w) => {
+                let p = w.biases[i].as_ref().expect("bias bitstream");
+                buf.resize(p.len(), 0.0);
+                p.unpack_into(w.fmts[i], buf);
+                buf
+            }
+        }
     }
 }
 
 /// Build the packed B panel for every GEMM weight tensor of the plan
-/// (conv + dense kernels, and all six convs of each inception module).
+/// (the shared [`lowering::gemm_tensors`] walk).
 fn pack_plan_panels(plan: &LoweredPlan, qparams: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
     let mut panels: Vec<Option<Vec<f32>>> = vec![None; qparams.len()];
-    for step in &plan.steps {
-        let base = step.param_base;
-        match (&step.op, step.in_shape) {
-            (&Op::Conv { out_c, k, .. }, Shape::Hwc(_, _, c)) => {
-                panels[base] = Some(pack_b_panels(&qparams[base], k * k * c, out_c));
-            }
-            (&Op::Dense { out, .. }, Shape::Flat(n)) => {
-                panels[base] = Some(pack_b_panels(&qparams[base], n, out));
-            }
-            (&Op::Inception { b1, b3r, b3, b5r, b5, pp, .. }, Shape::Hwc(_, _, c)) => {
-                // Branch order b1, b3r, b3, b5r, b5, pp; each (w, b).
-                let dims = [(c, b1), (c, b3r), (9 * b3r, b3), (c, b5r), (25 * b5r, b5), (c, pp)];
-                for (i, &(kd, n)) in dims.iter().enumerate() {
-                    let w = base + 2 * i;
-                    panels[w] = Some(pack_b_panels(&qparams[w], kd, n));
-                }
-            }
-            _ => {}
-        }
+    for t in lowering::gemm_tensors(&plan.steps) {
+        panels[t.param] = Some(pack_b_panels(&qparams[t.param], t.kd, t.n));
     }
     panels
 }
@@ -312,6 +425,9 @@ struct Scratch {
     tmp: Vec<f32>,
     /// Streaming decode window (fused packed mode only).
     win: Vec<f32>,
+    /// Bias decode window (fused packed mode only — f32 mode borrows
+    /// biases straight from the quantized tensors).
+    bias: Vec<f32>,
     /// Ping-pong boundary bitstreams (fused packed mode only).
     pk_in: PackedBuf,
     pk_out: PackedBuf,
@@ -327,25 +443,18 @@ impl Scratch {
             col: vec![0f32; plan.max_col_elems],
             tmp: vec![0f32; plan.max_tmp_elems],
             win: vec![0f32; if fused { plan.max_win_elems } else { 0 }],
+            bias: Vec::with_capacity(if fused { plan.max_bias_elems } else { 0 }),
             pk_in: PackedBuf::default(),
             pk_out: PackedBuf::default(),
         }
     }
 }
 
-/// The memoized B panel for parameter `i` (always present for tensors
-/// the plan consumes as a GEMM B).
-#[inline]
-fn panel_at(panels: &[Option<Vec<f32>>], i: usize) -> &[f32] {
-    panels[i].as_deref().expect("GEMM weight panel")
-}
-
 /// Run one image under the executor's storage mode: the arena-based
 /// in-f32 path, or the fused bitstream path.
 fn dispatch_image(
     plan: &LoweredPlan,
-    qparams: &[Vec<f32>],
-    panels: &[Option<Vec<f32>>],
+    wts: WView,
     image: &[f32],
     dfmt: &[QFormat],
     sfmt: Option<&[QFormat]>,
@@ -355,11 +464,9 @@ fn dispatch_image(
     out_row: &mut [f32],
 ) {
     match storage {
-        StorageMode::F32 => {
-            forward_image(plan, qparams, panels, image, dfmt, sfmt, scr, threads, out_row)
-        }
+        StorageMode::F32 => forward_image(plan, wts, image, dfmt, sfmt, scr, threads, out_row),
         StorageMode::Packed => {
-            forward_image_fused(plan, qparams, panels, image, dfmt, sfmt, scr, threads, out_row)
+            forward_image_fused(plan, wts, image, dfmt, sfmt, scr, threads, out_row)
         }
     }
 }
@@ -368,8 +475,7 @@ fn dispatch_image(
 /// shape chain was validated at load time.
 fn forward_image(
     plan: &LoweredPlan,
-    qparams: &[Vec<f32>],
-    panels: &[Option<Vec<f32>>],
+    wts: WView,
     image: &[f32],
     dfmt: &[QFormat],
     sfmt: Option<&[QFormat]>,
@@ -377,7 +483,7 @@ fn forward_image(
     threads: usize,
     out_row: &mut [f32],
 ) {
-    let Scratch { act_a, act_b, col, tmp, .. } = scr;
+    let Scratch { act_a, act_b, col, tmp, bias, .. } = scr;
     let (mut src, mut dst) = (&mut act_a[..], &mut act_b[..]);
     src[..image.len()].copy_from_slice(image);
     dfmt[0].quantize_slice(&mut src[..image.len()]);
@@ -388,13 +494,14 @@ fn forward_image(
         let base = step.param_base;
         match (&step.op, step.in_shape) {
             (&Op::Conv { out_c, k, stride, padding, .. }, Shape::Hwc(h, w, c)) => {
+                let bs = wts.bias(base + 1, bias);
                 conv_gemm(
                     &src[..in_e],
                     h,
                     w,
                     c,
-                    panel_at(panels, base),
-                    &qparams[base + 1],
+                    wts.gemm_b(base),
+                    bs,
                     out_c,
                     k,
                     stride,
@@ -408,14 +515,15 @@ fn forward_image(
                 std::mem::swap(&mut src, &mut dst);
             }
             (&Op::Dense { out, .. }, Shape::Flat(n)) => {
-                gemm_bias_packed(
+                let bs = wts.bias(base + 1, bias);
+                gemm_bias_b(
                     1,
                     out,
                     n,
                     &src[..n],
                     n,
-                    panel_at(panels, base),
-                    &qparams[base + 1],
+                    wts.gemm_b(base),
+                    bs,
                     &mut dst[..out],
                     out,
                     threads,
@@ -447,11 +555,11 @@ fn forward_image(
                     h,
                     w,
                     c,
-                    qparams,
-                    panels,
+                    wts,
                     base,
                     col,
                     tmp,
+                    bias,
                     &mut dst[..out_e],
                     threads,
                 );
@@ -476,8 +584,7 @@ fn forward_image(
 /// the storage-parity suite shows the forward pass cannot distinguish).
 fn forward_image_fused(
     plan: &LoweredPlan,
-    qparams: &[Vec<f32>],
-    panels: &[Option<Vec<f32>>],
+    wts: WView,
     image: &[f32],
     dfmt: &[QFormat],
     sfmt: Option<&[QFormat]>,
@@ -485,7 +592,7 @@ fn forward_image_fused(
     threads: usize,
     out_row: &mut [f32],
 ) {
-    let Scratch { col, tmp, win, pk_in, pk_out, .. } = scr;
+    let Scratch { col, tmp, win, bias, pk_in, pk_out, .. } = scr;
     let (mut pk_in, mut pk_out) = (pk_in, pk_out);
     pk_in.pack_into(dfmt[0], image);
     let mut cur_fmt = dfmt[0];
@@ -514,14 +621,15 @@ fn forward_image_fused(
             }
             (&Op::Conv { out_c, k, stride, padding, .. }, Shape::Hwc(h, w, c)) => {
                 let mut next = vec![0f32; out_e];
+                let bs = wts.bias(base + 1, bias);
                 match cur.take() {
                     Some(v) => conv_gemm(
                         &v[..in_e],
                         h,
                         w,
                         c,
-                        panel_at(panels, base),
-                        &qparams[base + 1],
+                        wts.gemm_b(base),
+                        bs,
                         out_c,
                         k,
                         stride,
@@ -538,8 +646,8 @@ fn forward_image_fused(
                         h,
                         w,
                         c,
-                        panel_at(panels, base),
-                        &qparams[base + 1],
+                        wts.gemm_b(base),
+                        bs,
                         out_c,
                         k,
                         stride,
@@ -554,6 +662,7 @@ fn forward_image_fused(
             }
             (&Op::Dense { out, .. }, Shape::Flat(n)) => {
                 let mut next = vec![0f32; out];
+                let bs = wts.bias(base + 1, bias);
                 let a: &[f32] = match &cur {
                     Some(v) => &v[..n],
                     None => {
@@ -561,18 +670,7 @@ fn forward_image_fused(
                         &win[..n]
                     }
                 };
-                gemm_bias_packed(
-                    1,
-                    out,
-                    n,
-                    a,
-                    n,
-                    panel_at(panels, base),
-                    &qparams[base + 1],
-                    &mut next,
-                    out,
-                    threads,
-                );
+                gemm_bias_b(1, out, n, a, n, wts.gemm_b(base), bs, &mut next, out, threads);
                 cur = Some(next);
             }
             (op @ Op::Inception { .. }, Shape::Hwc(h, w, c)) => {
@@ -586,7 +684,7 @@ fn forward_image_fused(
                         &win[..in_e]
                     }
                 };
-                inception_gemm(op, x, h, w, c, qparams, panels, base, col, tmp, &mut next, threads);
+                inception_gemm(op, x, h, w, c, wts, base, col, tmp, bias, &mut next, threads);
                 cur = Some(next);
             }
             (op, in_shape) => {
@@ -657,15 +755,15 @@ fn relu_strided(buf: &mut [f32], m: usize, n: usize, ldc: usize, off: usize) {
     }
 }
 
-/// NHWC conv as (im2col ·) GEMM over a pre-packed weight panel, writing
-/// `(oh*ow, out_c)` rows into `dst` at column `dst_off` with row stride
-/// `ldc`.
+/// NHWC conv as (im2col ·) GEMM over a pre-packed weight panel operand
+/// (f32 panels or a weight bitstream), writing `(oh*ow, out_c)` rows
+/// into `dst` at column `dst_off` with row stride `ldc`.
 fn conv_gemm(
     x: &[f32],
     h: usize,
     w: usize,
     c: usize,
-    wgt_panels: &[f32],
+    wgt: GemmB,
     bias: &[f32],
     out_c: usize,
     k: usize,
@@ -683,7 +781,7 @@ fn conv_gemm(
         // 1×1 stride-1: the activation matrix (h*w, c) is already the
         // patch matrix — skip im2col (the NIN cccp / inception-reduce
         // hot case).
-        gemm_bias_packed(m, out_c, c, x, c, wgt_panels, bias, &mut dst[dst_off..], ldc, threads);
+        gemm_bias_b(m, out_c, c, x, c, wgt, bias, &mut dst[dst_off..], ldc, threads);
         return;
     }
     let (pad_y, pad_x) = match padding {
@@ -692,18 +790,7 @@ fn conv_gemm(
     };
     let kd = k * k * c;
     im2col(x, h, w, c, k, stride, pad_y, pad_x, oh, ow, &mut col[..m * kd], threads);
-    gemm_bias_packed(
-        m,
-        out_c,
-        kd,
-        &col[..m * kd],
-        kd,
-        wgt_panels,
-        bias,
-        &mut dst[dst_off..],
-        ldc,
-        threads,
-    );
+    gemm_bias_b(m, out_c, kd, &col[..m * kd], kd, wgt, bias, &mut dst[dst_off..], ldc, threads);
 }
 
 /// NHWC conv reading its input straight off a boundary bitstream: the
@@ -719,7 +806,7 @@ fn conv_from_packed(
     h: usize,
     w: usize,
     c: usize,
-    wgt_panels: &[f32],
+    wgt: GemmB,
     bias: &[f32],
     out_c: usize,
     k: usize,
@@ -743,18 +830,7 @@ fn conv_from_packed(
             let rb = lowering::FUSED_A_ROWS.min(m - r0);
             let a = &mut win[..rb * c];
             cursor.read_into(a);
-            gemm_bias_packed(
-                rb,
-                out_c,
-                c,
-                a,
-                c,
-                wgt_panels,
-                bias,
-                &mut dst[r0 * out_c..],
-                out_c,
-                threads,
-            );
+            gemm_bias_b(rb, out_c, c, a, c, wgt, bias, &mut dst[r0 * out_c..], out_c, threads);
             r0 += rb;
         }
         return;
@@ -779,7 +855,7 @@ fn conv_from_packed(
         &mut win[..w * c],
         &mut col[..m * kd],
     );
-    gemm_bias_packed(m, out_c, kd, &col[..m * kd], kd, wgt_panels, bias, dst, out_c, threads);
+    gemm_bias_b(m, out_c, kd, &col[..m * kd], kd, wgt, bias, dst, out_c, threads);
 }
 
 /// im2col driven by the streaming window reader: each input row is
@@ -916,18 +992,19 @@ fn im2col_rows(
 /// GoogLeNet inception module: each branch conv is a GEMM writing
 /// straight into its concat columns of `dst` (row stride = module
 /// `out_c`), with ReLU applied per branch exactly as the interpreter
-/// does. `tmp` holds one reduce output / pooled input at a time.
+/// does. `tmp` holds one reduce output / pooled input at a time;
+/// `bias_win` stages one decoded bias at a time under packed weights.
 fn inception_gemm(
     op: &Op,
     x: &[f32],
     h: usize,
     w: usize,
     c: usize,
-    qparams: &[Vec<f32>],
-    panels: &[Option<Vec<f32>>],
+    wts: WView,
     base: usize,
     col: &mut [f32],
     tmp: &mut [f32],
+    bias_win: &mut Vec<f32>,
     dst: &mut [f32],
     threads: usize,
 ) {
@@ -936,44 +1013,32 @@ fn inception_gemm(
     };
     let out_c = b1 + b3 + b5 + pp;
     let m = h * w;
-    let p = |i: usize| panel_at(panels, base + i);
-    let bias = |i: usize| &qparams[base + i];
+    let p = |i: usize| wts.gemm_b(base + i);
     let same = Padding::Same;
 
     // 1×1 branch → columns [0, b1)
-    conv_gemm(x, h, w, c, p(0), bias(1), b1, 1, 1, same, col, dst, out_c, 0, threads);
+    let bs = wts.bias(base + 1, bias_win);
+    conv_gemm(x, h, w, c, p(0), bs, b1, 1, 1, same, col, dst, out_c, 0, threads);
     relu_strided(dst, m, b1, out_c, 0);
     // 3×3 branch: reduce into tmp, then 3×3 → columns [b1, b1+b3)
-    conv_gemm(x, h, w, c, p(2), bias(3), b3r, 1, 1, same, col, &mut tmp[..m * b3r], b3r, 0, threads);
+    let bs = wts.bias(base + 3, bias_win);
+    conv_gemm(x, h, w, c, p(2), bs, b3r, 1, 1, same, col, &mut tmp[..m * b3r], b3r, 0, threads);
     relu(&mut tmp[..m * b3r]);
-    conv_gemm(
-        &tmp[..m * b3r],
-        h,
-        w,
-        b3r,
-        p(4),
-        bias(5),
-        b3,
-        3,
-        1,
-        same,
-        col,
-        dst,
-        out_c,
-        b1,
-        threads,
-    );
+    let bs = wts.bias(base + 5, bias_win);
+    conv_gemm(&tmp[..m * b3r], h, w, b3r, p(4), bs, b3, 3, 1, same, col, dst, out_c, b1, threads);
     relu_strided(dst, m, b3, out_c, b1);
     // 5×5 branch → columns [b1+b3, b1+b3+b5)
-    conv_gemm(x, h, w, c, p(6), bias(7), b5r, 1, 1, same, col, &mut tmp[..m * b5r], b5r, 0, threads);
+    let bs = wts.bias(base + 7, bias_win);
+    conv_gemm(x, h, w, c, p(6), bs, b5r, 1, 1, same, col, &mut tmp[..m * b5r], b5r, 0, threads);
     relu(&mut tmp[..m * b5r]);
+    let bs = wts.bias(base + 9, bias_win);
     conv_gemm(
         &tmp[..m * b5r],
         h,
         w,
         b5r,
         p(8),
-        bias(9),
+        bs,
         b5,
         5,
         1,
@@ -987,13 +1052,14 @@ fn inception_gemm(
     relu_strided(dst, m, b5, out_c, b1 + b3);
     // Pool branch: 3×3 stride-1 maxpool, then 1×1 → last pp columns
     maxpool_into(x, h, w, c, 3, 1, &mut tmp[..m * c]);
+    let bs = wts.bias(base + 11, bias_win);
     conv_gemm(
         &tmp[..m * c],
         h,
         w,
         c,
         p(10),
-        bias(11),
+        bs,
         pp,
         1,
         1,
@@ -1082,7 +1148,7 @@ mod tests {
             3,
             3,
             1,
-            &panels,
+            GemmB::Panels(&panels),
             &[0.5],
             1,
             2,
@@ -1157,15 +1223,41 @@ mod tests {
         let mut col = vec![0f32; h * w * 9 * c]; // big enough for both cases
         let mut want = vec![f32::NAN; h * w * out_c];
         conv_gemm(
-            &x, h, w, c, &panels, &bias, out_c, 1, 1, Padding::Same, &mut col, &mut want,
-            out_c, 0, 1,
+            &x,
+            h,
+            w,
+            c,
+            GemmB::Panels(&panels),
+            &bias,
+            out_c,
+            1,
+            1,
+            Padding::Same,
+            &mut col,
+            &mut want,
+            out_c,
+            0,
+            1,
         );
         let p = PackedBuf::pack(fmt, &x);
         let mut win = vec![0f32; lowering::FUSED_A_ROWS * c];
         let mut got = vec![f32::NAN; h * w * out_c];
         conv_from_packed(
-            &p, fmt, h, w, c, &panels, &bias, out_c, 1, 1, Padding::Same, &mut win, &mut col,
-            &mut got, 1,
+            &p,
+            fmt,
+            h,
+            w,
+            c,
+            GemmB::Panels(&panels),
+            &bias,
+            out_c,
+            1,
+            1,
+            Padding::Same,
+            &mut win,
+            &mut col,
+            &mut got,
+            1,
         );
         assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
 
@@ -1180,17 +1272,108 @@ mod tests {
         let mut col2 = vec![0f32; h * w * k * k * c2];
         let mut want2 = vec![f32::NAN; h * w * oc2];
         conv_gemm(
-            &x2, h, w, c2, &panels2, &bias2, oc2, k, 1, Padding::Same, &mut col2, &mut want2,
-            oc2, 0, 1,
+            &x2,
+            h,
+            w,
+            c2,
+            GemmB::Panels(&panels2),
+            &bias2,
+            oc2,
+            k,
+            1,
+            Padding::Same,
+            &mut col2,
+            &mut want2,
+            oc2,
+            0,
+            1,
         );
         let p2 = PackedBuf::pack(fmt, &x2);
         let mut win2 = vec![0f32; w * c2];
         let mut got2 = vec![f32::NAN; h * w * oc2];
         conv_from_packed(
-            &p2, fmt, h, w, c2, &panels2, &bias2, oc2, k, 1, Padding::Same, &mut win2,
-            &mut col2, &mut got2, 1,
+            &p2,
+            fmt,
+            h,
+            w,
+            c2,
+            GemmB::Panels(&panels2),
+            &bias2,
+            oc2,
+            k,
+            1,
+            Padding::Same,
+            &mut win2,
+            &mut col2,
+            &mut got2,
+            1,
         );
         assert!(want2.iter().zip(&got2).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn packed_weights_partition_every_tensor_on_every_arch() {
+        // Every parameter tensor ends up as exactly one bitstream —
+        // GEMM weights as panels (kd·n true elements each), biases as
+        // plain buffers whose lengths sum to the plan's accounting.
+        for name in crate::nets::arch::NET_ORDER {
+            let a = crate::nets::arch::get(name).unwrap();
+            let plan = LoweredPlan::new(&a, None).unwrap();
+            let specs = crate::nets::arch::param_specs(&a).unwrap();
+            let params: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.1; s.elems()]).collect();
+            let wfmt = vec![QFormat::new(1, 7); plan.n_layers];
+            let mut w = PackedWeights::default();
+            w.rebuild(&plan, &params, &wfmt);
+            let mut panel_elems = 0usize;
+            let mut bias_elems = 0usize;
+            for i in 0..params.len() {
+                match (&w.panels[i], &w.biases[i]) {
+                    (Some(p), None) => {
+                        assert_eq!(p.nr(), NR, "{name} tensor {i}");
+                        assert_eq!(p.kd() * p.n_panels() * NR, p.len(), "{name} tensor {i}");
+                        panel_elems += p.len();
+                    }
+                    (None, Some(b)) => bias_elems += b.len(),
+                    _ => panic!("{name} tensor {i}: not exactly one representation"),
+                }
+            }
+            assert_eq!(panel_elems, plan.panel_param_elems, "{name}");
+            assert_eq!(bias_elems, plan.bias_param_elems, "{name}");
+        }
+    }
+
+    #[test]
+    fn packed_weights_shrink_and_decode_to_quantized_params() {
+        let arch = crate::nets::arch::get("lenet").unwrap();
+        let plan = LoweredPlan::new(&arch, None).unwrap();
+        let specs = crate::nets::arch::param_specs(&arch).unwrap();
+        let mut rng = crate::prng::Xoshiro256pp::new(11);
+        let params: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|s| (0..s.elems()).map(|_| rng.uniform_f32(-1.0, 1.0)).collect())
+            .collect();
+        let wfmt = vec![QFormat::new(1, 7); plan.n_layers]; // 8 bits
+        let mut w = PackedWeights::default();
+        w.rebuild(&plan, &params, &wfmt);
+        // 8-bit codes: exactly one byte per stored element (panels carry
+        // NR-lane padding), modulo per-tensor byte rounding.
+        let elems = plan.panel_param_elems + plan.bias_param_elems;
+        assert!(w.resident_bytes() <= elems + params.len());
+        assert!(w.resident_bytes() >= elems);
+        assert_eq!(packed_weight_bytes(&plan, &params, &wfmt), w.resident_bytes());
+        // The plan-only pricing must agree with the real packing.
+        assert_eq!(plan.packed_weight_bytes(&wfmt), w.resident_bytes());
+        // Biases decode to exactly the quantized tensors.
+        let q = plan.quantize_params(&params, &wfmt);
+        let mut buf = Vec::new();
+        for (i, b) in w.biases.iter().enumerate() {
+            if b.is_some() {
+                let got = WView::Packed(&w).bias(i, &mut buf);
+                let want = crate::testkit::quantized_canonical(wfmt[0], &params[i]);
+                assert_eq!(got, &want[..], "bias tensor {i}");
+                assert_eq!(got.len(), q[i].len());
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,19 @@
 //! cache blocking is `KC`×`MC`. Optional row-block threading splits `M`
 //! across `std::thread::scope` workers — rows are independent, so
 //! results are bit-identical for every thread count.
+//!
+//! The `B` operand comes in three forms ([`GemmB`]): row-major, f32
+//! NR-lane panels ([`pack_b_panels`]), or a **packed weight bitstream**
+//! ([`PackedPanels`]) — the fused packed executor's form, where each
+//! `KC`-row strip of a panel is decoded into a small per-thread f32
+//! scratch tile immediately before the multiply, so no f32 copy of the
+//! weights exists beyond one tile per thread. All three run the same
+//! micro-kernels in the same ascending-`k` order; decoding is a pure
+//! prefetch step, so the bitstream form is bit-identical to the f32
+//! panels holding the same (quantized) values.
+
+use crate::memory::PackedPanels;
+use crate::quant::QFormat;
 
 /// Register-tile rows (distinct A broadcasts per micro-kernel).
 pub const MR: usize = 4;
@@ -54,7 +67,7 @@ pub fn gemm_bias(
     threads: usize,
 ) {
     debug_assert!(b.len() >= kd * n);
-    gemm_bias_impl(m, n, kd, a, lda, BPanels::Flat(b), bias, c, ldc, threads)
+    gemm_bias_b(m, n, kd, a, lda, GemmB::Flat(b), bias, c, ldc, threads)
 }
 
 /// `C = bias + A·B` with `B` pre-packed into NR-column panels by
@@ -78,17 +91,40 @@ pub fn gemm_bias_packed(
     threads: usize,
 ) {
     debug_assert!(bp.len() >= ((n + NR - 1) / NR) * kd * NR);
-    gemm_bias_impl(m, n, kd, a, lda, BPanels::Packed(bp), bias, c, ldc, threads)
+    gemm_bias_b(m, n, kd, a, lda, GemmB::Panels(bp), bias, c, ldc, threads)
 }
 
-/// The one thread-splitting driver behind both public entry points.
-fn gemm_bias_impl(
+/// `C = bias + A·B` with `B` a [`PackedPanels`] weight bitstream packed
+/// at `fmt` — the packed-B microkernel path. Each `KC`-row strip of a
+/// panel is decoded into a per-thread f32 scratch tile right before the
+/// multiply; the decode precedes the unchanged ascending-`k`
+/// accumulation, so results are bit-identical to [`gemm_bias_packed`]
+/// over the decoded panel values (the property suite pins this for
+/// every weight width).
+pub fn gemm_bias_bits(
     m: usize,
     n: usize,
     kd: usize,
     a: &[f32],
     lda: usize,
-    b: BPanels,
+    bp: &PackedPanels,
+    fmt: QFormat,
+    bias: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    threads: usize,
+) {
+    gemm_bias_b(m, n, kd, a, lda, GemmB::Bits(bp, fmt), bias, c, ldc, threads)
+}
+
+/// The general thread-splitting driver behind every entry point.
+pub fn gemm_bias_b(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[f32],
+    lda: usize,
+    b: GemmB,
     bias: &[f32],
     c: &mut [f32],
     ldc: usize,
@@ -144,23 +180,29 @@ pub fn pack_b_panels(b: &[f32], kd: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// B operand of one blocked GEMM: row-major, or pre-packed panels.
+/// B operand of one blocked GEMM: row-major, f32 panels, or a packed
+/// weight bitstream.
 #[derive(Clone, Copy)]
-enum BPanels<'a> {
+pub enum GemmB<'a> {
     /// Row-major `kd`×`n`, stride `n`.
     Flat(&'a [f32]),
-    /// [`pack_b_panels`] layout.
-    Packed(&'a [f32]),
+    /// [`pack_b_panels`] f32 layout.
+    Panels(&'a [f32]),
+    /// [`PackedPanels`] bitstream packed at the given weight format;
+    /// strips are decoded into a per-thread f32 tile ahead of the
+    /// multiply.
+    Bits(&'a PackedPanels, QFormat),
 }
 
-impl<'a> BPanels<'a> {
+impl<'a> GemmB<'a> {
     /// The slice + row stride + column offset addressing panel columns
     /// `[nb, nb+NR)` as `slice[kk * stride + off ..]`.
     #[inline]
     fn panel(self, nb: usize, n: usize, kd: usize) -> (&'a [f32], usize, usize) {
         match self {
-            BPanels::Flat(b) => (b, n, nb),
-            BPanels::Packed(bp) => (&bp[(nb / NR) * kd * NR..], NR, 0),
+            GemmB::Flat(b) => (b, n, nb),
+            GemmB::Panels(bp) => (&bp[(nb / NR) * kd * NR..], NR, 0),
+            GemmB::Bits(..) => unreachable!("bitstream operand takes the tile path"),
         }
     }
 }
@@ -172,11 +214,14 @@ fn gemm_block(
     kd: usize,
     a: &[f32],
     lda: usize,
-    b: BPanels,
+    b: GemmB,
     bias: &[f32],
     c: &mut [f32],
     ldc: usize,
 ) {
+    if let GemmB::Bits(bp, fmt) = b {
+        return gemm_block_bits(m, n, kd, a, lda, bp, fmt, bias, c, ldc);
+    }
     for r in 0..m {
         c[r * ldc..r * ldc + n].copy_from_slice(&bias[..n]);
     }
@@ -196,9 +241,9 @@ fn gemm_block(
                     let nr = NR.min(n - nb);
                     let (bs, ldb, bn0) = b.panel(nb, n, kd);
                     if mr == MR && nr == NR {
-                        micro_full(r, nb, kp, ke, kd, a, lda, bs, ldb, bn0, c, ldc);
+                        micro_full(r, nb, kp, ke, kd, a, lda, bs, ldb, bn0, 0, c, ldc);
                     } else {
-                        micro_edge(r, mr, nb, nr, kp, ke, a, lda, bs, ldb, bn0, c, ldc);
+                        micro_edge(r, mr, nb, nr, kp, ke, a, lda, bs, ldb, bn0, 0, c, ldc);
                     }
                     nb += nr;
                 }
@@ -210,9 +255,64 @@ fn gemm_block(
     }
 }
 
+/// The packed-B tile kernel over one row range: decode one `KC`-deep
+/// strip of one NR-lane panel at a time into a stack f32 tile (~16 KiB,
+/// one per thread), then run the same micro-kernels over it. The `nb`
+/// loop moves outside the row loops so each strip is decoded exactly
+/// once per row range — per output element the accumulation is still
+/// one visit per `kp` panel in ascending order with ascending `kk`
+/// inside, i.e. the exact float-add sequence of the f32-panel path.
+fn gemm_block_bits(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[f32],
+    lda: usize,
+    bp: &PackedPanels,
+    fmt: QFormat,
+    bias: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert_eq!(bp.nr(), NR);
+    debug_assert_eq!(bp.kd(), kd);
+    for r in 0..m {
+        c[r * ldc..r * ldc + n].copy_from_slice(&bias[..n]);
+    }
+    let mut tile = [0f32; KC * NR];
+    let mut kp = 0usize;
+    while kp < kd {
+        let ke = (kp + KC).min(kd);
+        let mut nb = 0usize;
+        while nb < n {
+            let nr = NR.min(n - nb);
+            bp.read_strip(fmt, nb / NR, kp, ke, &mut tile[..(ke - kp) * NR]);
+            let mut mb = 0usize;
+            while mb < m {
+                let me = (mb + MC).min(m);
+                let mut r = mb;
+                while r < me {
+                    let mr = MR.min(me - r);
+                    if mr == MR && nr == NR {
+                        micro_full(r, nb, kp, ke, kd, a, lda, &tile, NR, 0, kp, c, ldc);
+                    } else {
+                        micro_edge(r, mr, nb, nr, kp, ke, a, lda, &tile, NR, 0, kp, c, ldc);
+                    }
+                    r += mr;
+                }
+                mb = me;
+            }
+            nb += nr;
+        }
+        kp = ke;
+    }
+}
+
 /// Full MR×NR register tile: C tile in registers, ascending-k updates.
 /// `n0` addresses the C columns; `bn0` the same columns within `b`
-/// (equal for a row-major B, 0 for a packed panel).
+/// (equal for a row-major B, 0 for a packed panel); `bk0` is the `k`
+/// index of `b`'s first row (0 for a full B, `kp` for a decoded strip
+/// tile).
 #[inline]
 fn micro_full(
     r0: usize,
@@ -225,6 +325,7 @@ fn micro_full(
     b: &[f32],
     ldb: usize,
     bn0: usize,
+    bk0: usize,
     c: &mut [f32],
     ldc: usize,
 ) {
@@ -234,7 +335,7 @@ fn micro_full(
         accr.copy_from_slice(&c[(r0 + i) * ldc + n0..][..NR]);
     }
     for kk in kp..ke {
-        let brow = &b[kk * ldb + bn0..][..NR];
+        let brow = &b[(kk - bk0) * ldb + bn0..][..NR];
         for (accr, arow) in acc.iter_mut().zip(&arows) {
             let av = arow[kk];
             for (x, &bv) in accr.iter_mut().zip(brow) {
@@ -261,6 +362,7 @@ fn micro_edge(
     b: &[f32],
     ldb: usize,
     bn0: usize,
+    bk0: usize,
     c: &mut [f32],
     ldc: usize,
 ) {
@@ -269,7 +371,7 @@ fn micro_edge(
         acc[i][..nr].copy_from_slice(&c[(r0 + i) * ldc + n0..][..nr]);
     }
     for kk in kp..ke {
-        let brow = &b[kk * ldb + bn0..][..nr];
+        let brow = &b[(kk - bk0) * ldb + bn0..][..nr];
         for i in 0..mr {
             let av = a[(r0 + i) * lda + kk];
             for (x, &bv) in acc[i][..nr].iter_mut().zip(brow) {
@@ -424,6 +526,65 @@ mod tests {
                         "({m},{n},{kd}) t={threads} elem {i}: {x} vs {y}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn bits_matches_f32_panels_bit_for_bit_across_shapes() {
+        // Weight values on the quantizer grid (what a real packed-weight
+        // GEMM multiplies): the bitstream path must reproduce the f32
+        // panel path exactly, tile edges and KC strips included.
+        let fmt = crate::quant::QFormat::new(2, 6);
+        for &(m, n, kd) in &[
+            (1usize, 1usize, 1usize),
+            (1, 10, 256),
+            (3, 5, 7),
+            (4, 16, 9),
+            (5, 17, 300),
+            (64, 24, 75),
+            (130, 33, 513),
+        ] {
+            let a = rand_vec(m * kd, 41 + m as u64);
+            let b = crate::testkit::quantized_canonical(fmt, &rand_vec(kd * n, 42 + n as u64));
+            let bias = rand_vec(n, 43 + kd as u64);
+            let bp = pack_b_panels(&b, kd, n);
+            let bits = PackedPanels::pack(fmt, &bp, kd, NR);
+            let mut want = vec![0f32; m * n];
+            gemm_bias_packed(m, n, kd, &a, kd, &bp, &bias, &mut want, n, 1);
+            for threads in [1usize, 3] {
+                let mut c = vec![f32::NAN; m * n];
+                gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut c, n, threads);
+                for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "({m},{n},{kd}) t={threads} elem {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bits_strided_c_leaves_gap_columns_untouched() {
+        let fmt = crate::quant::QFormat::new(3, 5);
+        let (m, n, kd) = (4usize, 3usize, 5usize);
+        let a = rand_vec(m * kd, 51);
+        let b = crate::testkit::quantized_canonical(fmt, &rand_vec(kd * n, 52));
+        let bias = vec![0.5; n];
+        let bp = pack_b_panels(&b, kd, n);
+        let bits = PackedPanels::pack(fmt, &bp, kd, NR);
+        let ldc = 8;
+        let mut c = vec![-7.0f32; (m - 1) * ldc + n + 5];
+        gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut c, ldc, 1);
+        let want = naive(m, n, kd, &a, &b, &bias);
+        for r in 0..m {
+            for j in 0..n {
+                assert_eq!(c[r * ldc + j], want[r * n + j]);
+            }
+            if r + 1 < m {
+                assert!(c[r * ldc + n..r * ldc + ldc].iter().all(|&v| v == -7.0));
             }
         }
     }

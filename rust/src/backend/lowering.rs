@@ -23,7 +23,9 @@
 
 use anyhow::{bail, Result};
 
+use super::gemm::NR;
 use super::Variant;
+use crate::memory::storage_width;
 use crate::nets::arch::{self, conv_out_hw, Arch, Op, Shape};
 use crate::nets::NetManifest;
 use crate::quant::QFormat;
@@ -108,6 +110,20 @@ pub struct LoweredPlan {
     /// above. [`FootprintModel`](crate::memory::FootprintModel) callers
     /// use it to bound the transient churn of a fused forward pass.
     pub max_fused_elems: usize,
+    /// Largest bias tensor (elements) any single GEMM consumes — the
+    /// packed-weight path decodes biases into a scratch window this big.
+    pub max_bias_elems: usize,
+    /// Per group: zero-padding elements the NR-lane GEMM panel layout
+    /// adds on top of the true weight elements. Priced at the group's
+    /// weight width by `FootprintModel::fused_envelope` — the gap
+    /// between the modeled weight term and what the panel bitstreams
+    /// actually store.
+    pub weight_pad_elems: Vec<usize>,
+    /// Total GEMM panel elements across the plan, padding included (the
+    /// f32 path keeps exactly these at 4 bytes each).
+    pub panel_param_elems: usize,
+    /// Total bias elements across the plan.
+    pub bias_param_elems: usize,
 }
 
 impl LoweredPlan {
@@ -219,6 +235,22 @@ impl LoweredPlan {
         if shape != Shape::Flat(arch.num_classes) {
             bail!("{}: lowered output shape {shape:?}", arch.name);
         }
+        // GEMM parameter accounting over the finished step list, derived
+        // from the same walk the executors build their weight panels
+        // from ([`gemm_tensors`]): a tensor consumed as a GEMM `B` is
+        // stored as ceil(n/NR)·NR·kd panel elements, and its bias holds
+        // `n` — the GEMM's output width — in every case.
+        let mut max_bias = 0usize;
+        let mut weight_pad = vec![0usize; arch.groups.len()];
+        let mut panel_elems = 0usize;
+        let mut bias_elems = 0usize;
+        for t in gemm_tensors(&steps) {
+            let padded = t.n.div_ceil(NR) * NR;
+            weight_pad[t.group] += (padded - t.n) * t.kd;
+            panel_elems += padded * t.kd;
+            bias_elems += t.n;
+            max_bias = max_bias.max(t.n);
+        }
         Ok(LoweredPlan {
             name: arch.name,
             steps,
@@ -231,6 +263,10 @@ impl LoweredPlan {
             max_tmp_elems: max_tmp,
             max_win_elems: max_win,
             max_fused_elems: max_fused,
+            max_bias_elems: max_bias,
+            weight_pad_elems: weight_pad,
+            panel_param_elems: panel_elems,
+            bias_param_elems: bias_elems,
         })
     }
 
@@ -252,6 +288,78 @@ impl LoweredPlan {
         }
         out
     }
+
+    /// Per-tensor pack formats: each group's `wq` row repeated over its
+    /// parameter tensors — the same expansion [`Self::quantize_params`]
+    /// applies, shared by both executors' packed-weight memos so the
+    /// assignment cannot drift between them.
+    pub fn per_tensor_formats(&self, wfmt: &[QFormat]) -> Vec<QFormat> {
+        let mut fmts = Vec::with_capacity(self.group_param_counts.iter().sum());
+        for (gi, &count) in self.group_param_counts.iter().enumerate() {
+            fmts.extend((0..count).map(|_| wfmt[gi]));
+        }
+        fmts
+    }
+
+    /// Realized bytes of the packed weight set under `wfmt`, computed
+    /// from the plan alone (no weights I/O): per GEMM tensor, the
+    /// NR-padded panel bitstream plus its bias bitstream, each
+    /// byte-ceiled at the group's storage width. Equals
+    /// `fast::packed_weight_bytes` over the real tensors exactly — the
+    /// tests pin the equality — so report paths can price the weight
+    /// half of the bound without packing anything.
+    pub fn packed_weight_bytes(&self, wfmt: &[QFormat]) -> usize {
+        let mut total = 0usize;
+        for t in gemm_tensors(&self.steps) {
+            let width = storage_width(wfmt[t.group]) as usize;
+            let padded = t.n.div_ceil(NR) * NR * t.kd;
+            total += (padded * width).div_ceil(8);
+            total += (t.n * width).div_ceil(8);
+        }
+        total
+    }
+}
+
+/// A tensor a step list consumes as a GEMM `B`.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmTensor {
+    /// Index in the flat parameter list (its bias sits at `param + 1`).
+    pub param: usize,
+    /// Precision group of the owning step.
+    pub group: usize,
+    /// GEMM depth (rows of `B`).
+    pub kd: usize,
+    /// GEMM output width (columns of `B`; also the bias length).
+    pub n: usize,
+}
+
+/// Every tensor `steps` consumes as a GEMM `B` — conv + dense kernels,
+/// and all six convs of each inception module (branch order b1, b3r,
+/// b3, b5r, b5, pp; each `(w, b)` pair). The executors build their
+/// weight panels from this walk and [`LoweredPlan::new`] derives its
+/// parameter accounting (`weight_pad_elems` & co) from it, so the two
+/// cannot drift.
+pub fn gemm_tensors(steps: &[Step]) -> Vec<GemmTensor> {
+    let mut out = Vec::new();
+    for step in steps {
+        let (base, group) = (step.param_base, step.group);
+        match (&step.op, step.in_shape) {
+            (&Op::Conv { out_c, k, .. }, Shape::Hwc(_, _, c)) => {
+                out.push(GemmTensor { param: base, group, kd: k * k * c, n: out_c });
+            }
+            (&Op::Dense { out: n, .. }, Shape::Flat(kd)) => {
+                out.push(GemmTensor { param: base, group, kd, n });
+            }
+            (&Op::Inception { b1, b3r, b3, b5r, b5, pp, .. }, Shape::Hwc(_, _, c)) => {
+                let dims = [(c, b1), (c, b3r), (9 * b3r, b3), (c, b5r), (25 * b5r, b5), (c, pp)];
+                for (i, &(kd, n)) in dims.iter().enumerate() {
+                    out.push(GemmTensor { param: base + 2 * i, group, kd, n });
+                }
+            }
+            _ => {}
+        }
+    }
+    out
 }
 
 /// A validated, decoded infer request — the shared front half of every
@@ -445,6 +553,35 @@ mod tests {
         // The windows are far below the full arenas the f32 path keeps.
         assert!(plan.max_win_elems < plan.max_act_elems / 4);
         assert!(plan.max_fused_elems < 2 * plan.max_act_elems);
+    }
+
+    #[test]
+    fn lenet_gemm_param_accounting_by_hand() {
+        let arch = arch::get("lenet").unwrap();
+        let plan = LoweredPlan::new(&arch, None).unwrap();
+        // L1 conv 5x5x1 -> 8 filters: kd=25, n=8 padded to 16 lanes;
+        // L2 conv 5x5x8 -> 16: no padding; L3 fc 256 -> 64: no padding;
+        // L4 fc 64 -> 10 padded to 16.
+        assert_eq!(plan.weight_pad_elems, vec![(16 - 8) * 25, 0, 0, (16 - 10) * 64]);
+        assert_eq!(plan.panel_param_elems, 16 * 25 + 16 * 200 + 64 * 256 + 16 * 64);
+        assert_eq!(plan.bias_param_elems, 8 + 16 + 64 + 10);
+        assert_eq!(plan.max_bias_elems, 64);
+    }
+
+    #[test]
+    fn gemm_param_accounting_covers_every_arch() {
+        for name in arch::NET_ORDER {
+            let a = arch::get(name).unwrap();
+            let plan = LoweredPlan::new(&a, None).unwrap();
+            assert_eq!(plan.weight_pad_elems.len(), plan.n_layers, "{name}");
+            assert!(plan.panel_param_elems > 0, "{name}");
+            assert!(plan.bias_param_elems > 0, "{name}");
+            assert!(plan.max_bias_elems > 0, "{name}");
+            // Padding is what the panel layout adds beyond true weight
+            // elements — it can never exceed the panels themselves.
+            let pad: usize = plan.weight_pad_elems.iter().sum();
+            assert!(pad < plan.panel_param_elems, "{name}");
+        }
     }
 
     #[test]

@@ -30,13 +30,17 @@
 //! CLI) or via the `QBOUND_BACKEND` env var; the default is the
 //! reference backend, which works on any machine.
 //!
-//! Both pure-Rust executors additionally honour an opt-in inter-layer
+//! Both pure-Rust executors additionally honour an opt-in
 //! **storage mode** ([`crate::memory::StorageMode`], `--storage packed`
 //! / `QBOUND_STORAGE=packed`): between layers only packed
 //! reduced-precision bitstreams persist, decoded in streaming windows
-//! by the consuming ops, with numerically identical results (see
+//! by the consuming ops, and the *weights* are resident only as
+//! bitstreams at each group's weight width (panel strips decoded
+//! inside the GEMM, biases into a scratch window, the interpreter's
+//! tensors per layer), with numerically identical results (see
 //! `tests/integration_storage.rs` for the parity contract and
-//! `tests/integration_memory.rs` for the measured residency bound).
+//! `tests/integration_memory.rs` for the measured whole-model
+//! residency bound).
 //! The PJRT backend executes on-device and emits a one-time no-op
 //! warning when a packed storage mode is requested.
 //!

@@ -54,15 +54,26 @@ impl Backend for ReferenceBackend {
     fn load(&self, manifest: &NetManifest, variant: Variant) -> Result<Box<dyn NetExecutor>> {
         let net = lowering::load_network(manifest, variant)?;
         let interp = Interpreter::with_stage(net.arch, net.params, net.stage_group)?;
+        let weights = match self.storage {
+            StorageMode::F32 => RefWeights::F32(lowering::WeightMemo::default()),
+            StorageMode::Packed => RefWeights::Packed(PackedParamMemo::default()),
+        };
         Ok(Box::new(ReferenceExecutor {
             interp,
             manifest: manifest.clone(),
             variant,
-            memo: lowering::WeightMemo::default(),
+            weights,
             storage: self.storage,
             executions: 0,
         }))
     }
+}
+
+/// Weight memo of one executor, matching its storage mode: resident
+/// quantized f32 tensors, or bitstreams at each group's weight width.
+enum RefWeights {
+    F32(lowering::WeightMemo),
+    Packed(PackedParamMemo),
 }
 
 /// One loaded network on the reference backend.
@@ -70,7 +81,7 @@ pub struct ReferenceExecutor {
     interp: Interpreter,
     manifest: NetManifest,
     variant: Variant,
-    memo: lowering::WeightMemo,
+    weights: RefWeights,
     storage: StorageMode,
     executions: u64,
 }
@@ -100,25 +111,85 @@ impl NetExecutor for ReferenceExecutor {
         sq: Option<&[f32]>,
     ) -> Result<Vec<f32>> {
         let req = lowering::decode_request(&self.manifest, self.variant, images, wq, dq, sq)?;
-        let qparams = self.memo.get(self.interp.plan(), &self.interp.params, &req.wfmt);
+        let view = match &mut self.weights {
+            RefWeights::F32(memo) => {
+                ParamView::F32(memo.get(self.interp.plan(), &self.interp.params, &req.wfmt))
+            }
+            RefWeights::Packed(pm) => {
+                pm.ensure(self.interp.plan(), &self.interp.params, &req.wfmt);
+                ParamView::Packed(&*pm)
+            }
+        };
 
         let elems = self.interp.arch.input_elems();
         let classes = self.manifest.num_classes;
         let mut out = Vec::with_capacity(req.batch * classes);
         for b in 0..req.batch {
             let image = &images[b * elems..(b + 1) * elems];
-            let logits = self.interp.forward_one_stored(
-                qparams,
-                image,
-                &req.dfmt,
-                req.sfmt.as_deref(),
-                self.storage,
-            )?;
+            let logits = match view {
+                ParamView::F32(qparams) => self.interp.forward_one_stored(
+                    qparams,
+                    image,
+                    &req.dfmt,
+                    req.sfmt.as_deref(),
+                    self.storage,
+                )?,
+                ParamView::Packed(_) => {
+                    // Packed weights pair with the packed activation
+                    // loop: bitstreams everywhere, decoded per layer.
+                    self.interp.forward_one_packed(view, image, &req.dfmt, req.sfmt.as_deref())?
+                }
+            };
             out.extend_from_slice(&logits);
         }
         self.executions += 1;
         Ok(out)
     }
+}
+
+/// Packed-storage weight memo: every parameter tensor resident only as
+/// a bitstream at its group's weight width. The interpreter decodes a
+/// layer's tensors right before applying its op and frees them after —
+/// the weight-side counterpart of the fused activation loop.
+#[derive(Default)]
+struct PackedParamMemo {
+    cached_wq: Vec<QFormat>,
+    /// Pack format of each tensor (its group's `wq` row).
+    fmts: Vec<QFormat>,
+    packed: Vec<PackedBuf>,
+}
+
+impl PackedParamMemo {
+    /// Rebuild the bitstreams when the weight config changes. Packing
+    /// *is* the quantizer (pack→decode equals `quantize_slice` modulo
+    /// the single two's-complement zero), so the raw fp32 tensors pack
+    /// directly.
+    fn ensure(&mut self, plan: &LoweredPlan, params: &[Vec<f32>], wfmt: &[QFormat]) {
+        if self.cached_wq == wfmt {
+            return;
+        }
+        self.fmts = plan.per_tensor_formats(wfmt);
+        self.packed = Vec::with_capacity(params.len());
+        for (p, f) in params.iter().zip(&self.fmts) {
+            self.packed.push(PackedBuf::pack(*f, p));
+        }
+        self.cached_wq = wfmt.to_vec();
+    }
+
+    /// Decode tensor `i` into a fresh vector.
+    fn decode(&self, i: usize) -> Vec<f32> {
+        let mut out = vec![0f32; self.packed[i].len()];
+        self.packed[i].unpack_into(self.fmts[i], &mut out);
+        out
+    }
+}
+
+/// Parameter source of one forward pass: resident f32 tensors, or
+/// bitstreams decoded per step.
+#[derive(Clone, Copy)]
+enum ParamView<'a> {
+    F32(&'a [Vec<f32>]),
+    Packed(&'a PackedParamMemo),
 }
 
 // ---------------------------------------------------------------------------
@@ -216,7 +287,7 @@ impl Interpreter {
         storage: StorageMode,
     ) -> Result<Vec<f32>> {
         if storage == StorageMode::Packed {
-            return self.forward_one_packed(qparams, image, dq, sfmt);
+            return self.forward_one_packed(ParamView::F32(qparams), image, dq, sfmt);
         }
         let (h, w, c) = self.arch.input_shape;
         let mut feat = Feat { shape: Shape::Hwc(h, w, c), data: image.to_vec() };
@@ -241,9 +312,12 @@ impl Interpreter {
     /// bitstream through untouched; any other op materializes its input
     /// right before applying (the interpreter is clarity-first — the
     /// fast backend is the one that streams windows into its kernels).
+    /// With a [`ParamView::Packed`] source the weights are bitstreams
+    /// too: each step's tensors are decoded right before its op applies
+    /// and freed after, so resident weights stay at the packed width.
     fn forward_one_packed(
         &self,
-        qparams: &[Vec<f32>],
+        params: ParamView,
         image: &[f32],
         dq: &[QFormat],
         sfmt: Option<&[QFormat]>,
@@ -255,7 +329,6 @@ impl Interpreter {
         let mut feat: Option<Feat> = None;
 
         for step in &self.plan.steps {
-            let mut cursor = step.param_base;
             match (&step.op, feat.take()) {
                 (Op::Flatten | Op::Dropout, None) => {
                     shape = arch::op_out_shape(&step.op, shape)?;
@@ -269,7 +342,19 @@ impl Interpreter {
                             Feat { shape, data }
                         }
                     };
-                    let out = apply_op(op, f, qparams, &mut cursor)?;
+                    let out = match params {
+                        ParamView::F32(qparams) => {
+                            let mut cursor = step.param_base;
+                            apply_op(op, f, qparams, &mut cursor)?
+                        }
+                        ParamView::Packed(pm) => {
+                            let step_params: Vec<Vec<f32>> = (0..op.param_count())
+                                .map(|i| pm.decode(step.param_base + i))
+                                .collect();
+                            let mut cursor = 0;
+                            apply_op(op, f, &step_params, &mut cursor)?
+                        }
+                    };
                     shape = out.shape;
                     feat = Some(out);
                 }
@@ -757,5 +842,33 @@ mod tests {
         let q = interp.quantize_params(&wq);
         assert_eq!(q[0][0], 0.5); // L1.conv.w quantized
         assert_eq!(q[2][0], 0.3); // L2.conv.w untouched
+    }
+
+    #[test]
+    fn packed_param_memo_decodes_quantized_tensors() {
+        let arch = arch::get("lenet").unwrap();
+        let specs = arch::param_specs(&arch).unwrap();
+        let params: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.3; s.elems()]).collect();
+        let interp = Interpreter::new(arch, params).unwrap();
+        let mut wq = vec![QFormat::FP32; 4];
+        wq[0] = QFormat::new(1, 1); // L1 rounds 0.3 -> 0.5
+        let mut memo = PackedParamMemo::default();
+        memo.ensure(interp.plan(), &interp.params, &wq);
+        assert_eq!(memo.packed.len(), interp.params.len());
+        assert_eq!(memo.decode(0)[0], 0.5); // L1 weights at Q(1.1)
+        assert_eq!(memo.decode(2)[0], 0.3); // L2 weights fp32 passthrough
+        // A packed forward equals the f32-weights packed forward.
+        let image = vec![0.5f32; interp.arch.input_elems()];
+        let dq = vec![QFormat::new(9, 4); 4];
+        let q = interp.quantize_params(&wq);
+        let want = interp
+            .forward_one_stored(&q, &image, &dq, None, StorageMode::Packed)
+            .unwrap();
+        let got = interp
+            .forward_one_packed(ParamView::Packed(&memo), &image, &dq, None)
+            .unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() == 0.0, "{a} vs {b}");
+        }
     }
 }

@@ -1,0 +1,124 @@
+//! `qbound check-mem` — the CI memory-regression gate.
+//!
+//! Reads the `MEM_*.json` records the bench-smoke job archives (one per
+//! net, written by `qbound eval --mem-json` under `--storage packed`)
+//! and exits non-zero when any net's **measured** peak RSS exceeds its
+//! **modeled** `FootprintModel::fused_envelope` by more than the
+//! allowed slack. The envelope is the whole-model residency bound
+//! (packed weights + peak activation bitstreams + panel padding + f32
+//! scratch windows); the slack covers everything a process carries that
+//! the model does not price — binary, libc, artifacts, the eval split.
+//!
+//! Scope, honestly stated: peak-RSS granularity is megabytes, so this
+//! gate catches *process-level* regressions (a leak, an accidental
+//! whole-split f32 materialization, a runaway scratch pool). The
+//! fine-grained residency claim — arenas gone, weights at packed width
+//! — is enforced at allocator granularity by
+//! `tests/integration_memory.rs` in the tier-1 suite; this gate is the
+//! per-commit backstop over the archived records. It refuses to pass
+//! vacuously: no records, no measurable records, or records that were
+//! not produced under packed storage are failures, not skips.
+
+use anyhow::{bail, Result};
+use qbound::cli::CmdSpec;
+use qbound::util::{self, json::Json};
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("check-mem", "memory-regression gate over archived MEM_*.json")
+        .opt("dir", "directory holding the MEM_*.json records", "bench-out")
+        .opt("slack-mb", "allowed MiB of overhead above the modeled envelope", "64");
+    let a = spec.parse(args)?;
+    let slack = a.f64("slack-mb")? * 1024.0 * 1024.0;
+    anyhow::ensure!(slack >= 0.0, "--slack-mb must be non-negative");
+
+    let dir = std::path::PathBuf::from(a.str("dir"));
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("MEM_") && n.ends_with(".json"))
+        })
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        // The gate must not pass vacuously: a missing record set means
+        // the packed eval suite did not run.
+        bail!("no MEM_*.json records under {}", dir.display());
+    }
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for path in &files {
+        let j = Json::parse(&util::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("{}: {e:?}", path.display()))?;
+        let net = j.at(&["net"]).as_str().unwrap_or("?").to_string();
+        // The bound only holds for packed-storage runs; an f32 or PJRT
+        // record here means the suite ran in the wrong mode.
+        let storage = j.at(&["storage"]).as_str().unwrap_or("?");
+        if storage != "packed" {
+            failures.push(format!(
+                "{net}: record {} is from a {storage:?} run, not packed storage",
+                path.display()
+            ));
+            continue;
+        }
+        let Some(envelope) = j.at(&["fused_envelope_bytes"]).as_f64() else {
+            failures.push(format!(
+                "{net}: record {} has no fused_envelope_bytes (stale schema?)",
+                path.display()
+            ));
+            continue;
+        };
+        let Some(peak) = j.at(&["peak_rss_bytes"]).as_f64() else {
+            // Peak RSS is a linux procfs reading; a null means the
+            // platform cannot measure, not that memory regressed.
+            println!("{net:<12} no measured peak RSS — skipped");
+            continue;
+        };
+        // A process-lifetime watermark includes the fp32 baseline eval
+        // that runs before the packed target — gating it would compare
+        // the wrong number (spurious failures or silently absorbed
+        // regressions). eval.rs records the scope precisely so this is
+        // detectable.
+        let scope = j.at(&["peak_rss_scope"]).as_str().unwrap_or("?");
+        if scope != "target-eval" {
+            failures.push(format!(
+                "{net}: peak-RSS watermark scope is {scope:?}, not \"target-eval\" \
+                 (reset_peak_rss failed on this runner?)"
+            ));
+            continue;
+        }
+        checked += 1;
+        let over = peak - envelope;
+        let ok = over <= slack;
+        println!(
+            "{net:<12} peak {:>10}  envelope {:>10}  overhead {:>10}  {}",
+            util::human_bytes(peak),
+            util::human_bytes(envelope),
+            util::human_bytes(over.max(0.0)),
+            if ok { "ok" } else { "FAIL" },
+        );
+        if !ok {
+            failures.push(format!(
+                "{net}: measured peak {} exceeds envelope {} by more than the {} slack",
+                util::human_bytes(peak),
+                util::human_bytes(envelope),
+                util::human_bytes(slack),
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        bail!("memory regression:\n  {}", failures.join("\n  "));
+    }
+    if checked == 0 {
+        // Every record skipped (no measurable peak) is as vacuous as an
+        // empty directory — fail so CI surfaces the broken measurement.
+        bail!("no record carried a measured peak RSS; the gate checked nothing");
+    }
+    println!(
+        "check-mem: {checked} net(s) inside the envelope (+{} slack)",
+        util::human_bytes(slack)
+    );
+    Ok(())
+}

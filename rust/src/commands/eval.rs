@@ -29,7 +29,11 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("n-images", "images to evaluate (0 = full split)", "0")
         .opt("workers", "worker threads (0 = one per core)", "0")
         .opt("batch", "images per infer call (0 = largest the backend allows)", "0")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "")
+        .opt(
+            "backend",
+            "execution backend: reference | fast | pjrt (default: env or reference)",
+            "",
+        )
         .opt(
             "storage",
             "inter-layer activation storage: f32 | packed (default: env or f32)",
@@ -113,9 +117,27 @@ pub fn run(args: &[String]) -> Result<()> {
         println!("peak rss:       {} (process VmHWM)", util::human_bytes(rss as f64));
     }
     // Measured-vs-modeled memory record for CI archiving: regressions
-    // in the realized bound show up next to FOOTPRINT.json per commit.
+    // in the realized bound show up next to FOOTPRINT.json per commit,
+    // and `qbound check-mem` fails the build when the measured peak
+    // escapes the modeled envelope.
     if !a.str("mem-json").is_empty() {
+        use qbound::backend::lowering::LoweredPlan;
+        use qbound::nets::arch;
         use qbound::util::json::Json;
+        let arch = arch::get(&net)
+            .ok_or_else(|| anyhow::anyhow!("no architecture registered for {net:?}"))?;
+        let plan = LoweredPlan::new(&arch, None)?;
+        // Whole-model residency bound of the fused packed executor:
+        // modeled weights + peak acts + panel padding + f32 windows.
+        let envelope = fpm.fused_envelope(
+            &cfg,
+            plan.max_win_elems + plan.max_bias_elems,
+            &plan.weight_pad_elems,
+        );
+        // Priced from the plan alone — identical to packing the real
+        // tensors (the tests pin the equality), without re-reading the
+        // weights file.
+        let weight_bytes = plan.packed_weight_bytes(&cfg.wq);
         let doc = Json::obj(vec![
             ("schema", Json::num(1.0)),
             ("net", Json::str(net.clone())),
@@ -135,6 +157,10 @@ pub fn run(args: &[String]) -> Result<()> {
             ),
             ("modeled_fp32_bytes", Json::num(fp_base.total_bytes)),
             ("modeled_bytes", Json::num(fp.total_bytes)),
+            // The check-mem gate compares the measured peak against
+            // this envelope (plus a process-overhead slack).
+            ("fused_envelope_bytes", Json::num(envelope)),
+            ("packed_weight_bytes", Json::num(weight_bytes as f64)),
             ("top1", Json::num(acc)),
         ]);
         let path = std::path::PathBuf::from(a.str("mem-json"));

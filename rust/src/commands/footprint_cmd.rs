@@ -27,7 +27,11 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("workers", "worker threads (0 = one per core)", "0")
         .opt("out-dir", "report directory for footprint.{md,csv}", "reports")
         .opt("json", "also write the table as JSON to this path", "")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "")
+        .opt(
+            "backend",
+            "execution backend: reference | fast | pjrt (default: env or reference)",
+            "",
+        )
         .opt(
             "cache-dir",
             "descent-trajectory cache directory; \"none\" disables caching",

@@ -1,5 +1,6 @@
 //! CLI subcommand implementations (thin veneers over the `qbound` library).
 
+pub mod check_mem;
 pub mod eval;
 pub mod footprint_cmd;
 pub mod gen_artifacts;

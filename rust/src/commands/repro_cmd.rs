@@ -15,7 +15,11 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("out-dir", "report directory", "reports")
         .opt("n-images", "images per evaluation (0 = full split)", "256")
         .opt("workers", "worker threads (0 = one per core)", "0")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
+        .opt(
+            "backend",
+            "execution backend: reference | fast | pjrt (default: env or reference)",
+            "",
+        );
     let a = spec.parse(args)?;
     let exp = a.positional(0).unwrap_or("all").to_string();
     let mut ctx = ReproCtx::with_backend(

@@ -14,7 +14,11 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("n-images", "images per evaluation (0 = full)", "256")
         .opt("workers", "worker threads (0 = one per core)", "0")
         .opt("out-dir", "report directory", "reports")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "")
+        .opt(
+            "backend",
+            "execution backend: reference | fast | pjrt (default: env or reference)",
+            "",
+        )
         .opt(
             "storage",
             "inter-layer activation storage: f32 | packed (default: env or f32)",

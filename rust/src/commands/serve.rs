@@ -24,7 +24,11 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("batches-per-request", "eval batches per request", "1")
         .opt("workers", "worker threads (0 = one per core)", "0")
         .opt("seed", "arrival-process seed", "42")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
+        .opt(
+            "backend",
+            "execution backend: reference | fast | pjrt (default: env or reference)",
+            "",
+        );
     let a = spec.parse(args)?;
     let dir = util::artifacts_dir()?;
     let net = a.str("net").to_string();

@@ -26,7 +26,11 @@ pub fn run_uniform(args: &[String]) -> Result<()> {
         .opt("max", "maximum bits", "12")
         .opt("n-images", "images per evaluation (0 = full)", "0")
         .opt("workers", "worker threads (0 = one per core)", "0")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
+        .opt(
+            "backend",
+            "execution backend: reference | fast | pjrt (default: env or reference)",
+            "",
+        );
     let a = spec.parse(args)?;
     let dir = util::artifacts_dir()?;
     let net = a.str("net").to_string();
@@ -69,7 +73,11 @@ pub fn run_layer(args: &[String]) -> Result<()> {
         .opt("max", "maximum bits", "12")
         .opt("n-images", "images per evaluation (0 = full)", "0")
         .opt("workers", "worker threads (0 = one per core)", "0")
-        .opt("backend", "execution backend: reference | fast | pjrt (default: env or reference)", "");
+        .opt(
+            "backend",
+            "execution backend: reference | fast | pjrt (default: env or reference)",
+            "",
+        );
     let a = spec.parse(args)?;
     let dir = util::artifacts_dir()?;
     let net = a.str("net").to_string();

@@ -8,6 +8,7 @@
 //!   search                   §2.5 greedy descent + Table-2 rows
 //!   traffic                  Fig-4 traffic model
 //!   footprint                fp32 vs best-config data footprint per net
+//!   check-mem                CI gate: measured peak RSS vs modeled envelope
 //!   repro <exp>              regenerate a paper table/figure (or `all`)
 //!   serve                    replay a Poisson request stream (E2E driver)
 //!   gen-artifacts            synthesize a pure-Rust artifact set
@@ -40,6 +41,7 @@ COMMANDS:
   search         greedy precision search (paper §2.5) + Table-2 rows
   traffic        memory-traffic model (paper Fig 4)
   footprint      fp32 vs best-config data footprint (text + JSON)
+  check-mem      fail if measured MEM_*.json peaks escape the modeled envelope
   repro          regenerate paper experiments: table1 fig1 fig2 fig3 fig4 fig5 table2 all
   serve          serve a timed classification request stream (E2E driver)
   gen-artifacts  synthesize a pure-Rust artifact set (no python needed)
@@ -63,6 +65,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "search" => commands::search_cmd::run(rest),
         "traffic" => commands::traffic_cmd::run(rest),
         "footprint" => commands::footprint_cmd::run(rest),
+        "check-mem" => commands::check_mem::run(rest),
         "repro" => commands::repro_cmd::run(rest),
         "serve" => commands::serve::run(rest),
         "gen-artifacts" => commands::gen_artifacts::run(rest),

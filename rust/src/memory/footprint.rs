@@ -29,10 +29,12 @@
 //! precision config (intra-group intermediates are never quantized —
 //! see `PostQuant::None`), and is not part of the quantity the
 //! precision search trades against accuracy. The fused packed
-//! executors *do* realize the modeled activation bytes, and
-//! [`FootprintModel::fused_envelope`] prices the realized residual —
-//! modeled bitstreams plus the streaming f32 windows — so the memory
-//! tests can assert the measured peak against the model.
+//! executors *do* realize the modeled bytes — activations as boundary
+//! bitstreams, weights as panel/bias bitstreams — and
+//! [`FootprintModel::fused_envelope`] prices the realized whole-model
+//! residency (modeled weights + peak activations, plus panel padding
+//! and the streaming f32 windows) so the memory tests and the CI
+//! `check-mem` gate can assert the measured peak against the model.
 
 use crate::nets::NetManifest;
 use crate::search::space::PrecisionConfig;
@@ -132,7 +134,8 @@ impl FootprintModel {
         for (l, (_, in_e, out_e, w_e)) in self.layers.iter().enumerate() {
             weight_bytes += bytes(*w_e, storage_width(cfg.wq[l]));
             let in_fmt = if l == 0 { cfg.dq[0] } else { cfg.dq[l - 1] };
-            let live = bytes(*in_e, storage_width(in_fmt)) + bytes(*out_e, storage_width(cfg.dq[l]));
+            let live =
+                bytes(*in_e, storage_width(in_fmt)) + bytes(*out_e, storage_width(cfg.dq[l]));
             if live > peak_act_bytes {
                 peak_act_bytes = live;
                 peak_layer = l;
@@ -162,17 +165,38 @@ impl FootprintModel {
         1.0 - self.ratio(cfg)
     }
 
-    /// The *realized* activation-side residency bound of the fused
-    /// packed executors: the modeled packed bitstreams (at most one
-    /// layer's in + out live at once — exactly
-    /// [`Footprint::peak_act_bytes`]) plus the backend's streaming f32
-    /// window scratch (`window_f32_elems`, the lowered plan's
-    /// `max_win_elems` high-water). `tests/integration_memory.rs`
-    /// asserts the measured resident delta of a packed run lands inside
-    /// this envelope — the step that turns FOOTPRINT.json from a model
-    /// into a measurement.
-    pub fn fused_envelope(&self, cfg: &PrecisionConfig, window_f32_elems: usize) -> f64 {
-        self.footprint(cfg).peak_act_bytes + 4.0 * window_f32_elems as f64
+    /// The *realized* whole-model residency bound of the fused packed
+    /// executors. [`FootprintModel::footprint`] already prices both the
+    /// weights and the peak live activations at the storage widths
+    /// packed buffers realize ([`Footprint::total_bytes`]); on top of
+    /// that the runtime keeps
+    ///
+    /// * the NR-lane zero padding the GEMM panel layout adds to each
+    ///   group's weight bitstream (`weight_pad_elems`, the lowered
+    ///   plan's `weight_pad_elems`, priced at the group's weight
+    ///   width), and
+    /// * the streaming f32 scratch windows (`window_f32_elems` — the
+    ///   plan's `max_win_elems` decode window plus its `max_bias_elems`
+    ///   bias window).
+    ///
+    /// `tests/integration_memory.rs` asserts the measured resident
+    /// delta of a packed run lands inside this envelope, and the CI
+    /// `check-mem` gate holds each archived `MEM_*.json` peak against
+    /// it — the step that turns FOOTPRINT.json from a model into a
+    /// measurement, for weights *and* activations.
+    pub fn fused_envelope(
+        &self,
+        cfg: &PrecisionConfig,
+        window_f32_elems: usize,
+        weight_pad_elems: &[usize],
+    ) -> f64 {
+        assert_eq!(weight_pad_elems.len(), self.layers.len(), "padding/model layer mismatch");
+        let pad: f64 = weight_pad_elems
+            .iter()
+            .zip(&cfg.wq)
+            .map(|(&e, q)| e as f64 * storage_width(*q) as f64 / 8.0)
+            .sum();
+        self.footprint(cfg).total_bytes + pad + 4.0 * window_f32_elems as f64
     }
 }
 
@@ -287,15 +311,21 @@ mod tests {
     }
 
     #[test]
-    fn fused_envelope_adds_window_bytes_to_peak_acts() {
+    fn fused_envelope_prices_whole_model_residency() {
         let fpm = FootprintModel::new(&toy_manifest());
         let cfg = PrecisionConfig::uniform(2, QFormat::new(1, 7), QFormat::new(6, 2));
         let fp = fpm.footprint(&cfg);
-        assert_eq!(fpm.fused_envelope(&cfg, 0), fp.peak_act_bytes);
-        assert_eq!(fpm.fused_envelope(&cfg, 100), fp.peak_act_bytes + 400.0);
-        // fp32 configs still bound: everything priced at 32 bits.
+        // No scratch, no padding: exactly the modeled weights + peak acts.
+        assert_eq!(fpm.fused_envelope(&cfg, 0, &[0, 0]), fp.total_bytes);
+        // 100 f32 window elems cost 400 bytes; 24 padding elems at the
+        // 8-bit weight width cost 24 bytes.
+        assert_eq!(fpm.fused_envelope(&cfg, 100, &[16, 8]), fp.total_bytes + 400.0 + 24.0);
+        // fp32 configs still bound: everything priced at 32 bits,
+        // padding included.
         let base = fpm.fp32();
-        assert_eq!(fpm.fused_envelope(&PrecisionConfig::fp32(2), 0), base.peak_act_bytes);
+        let fp32 = PrecisionConfig::fp32(2);
+        assert_eq!(fpm.fused_envelope(&fp32, 0, &[0, 0]), base.total_bytes);
+        assert_eq!(fpm.fused_envelope(&fp32, 0, &[2, 0]), base.total_bytes + 8.0);
     }
 
     #[test]

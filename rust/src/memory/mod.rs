@@ -9,6 +9,7 @@
 //! | piece | role |
 //! |---|---|
 //! | [`PackedBuf`] | a quantized tensor as a contiguous two's-complement bitstream at `I+F` bits per value, with a streaming window reader ([`PackedBuf::unpack_rows`] / [`PackedCursor`]) |
+//! | [`PackedPanels`] | a GEMM `B` weight matrix as a panel-strided bitstream, decoded one tile strip at a time by the packed-B GEMM |
 //! | [`FootprintModel`] | per-layer / per-network resident-byte model (weights + peak live activations) for any `PrecisionConfig` ([`footprint`]) |
 //! | [`StorageMode`] | the opt-in inter-layer storage switch both CPU executors honour (`--storage packed` / `QBOUND_STORAGE=packed`) |
 //!
@@ -19,7 +20,12 @@
 //! row block, see `backend/fast.rs`) instead of unpacking into a
 //! resident f32 arena. The evaluator spills whole eval splits the same
 //! way ([`crate::eval::PackedSplit`]), so the serve path's input set is
-//! packed too. Results are numerically identical to the default
+//! packed too. The *weights* are packed as well: the fast backend keeps
+//! every parameter tensor as a bitstream at its group's weight width —
+//! GEMM weights in the panel layout ([`PackedPanels`]), decoded one
+//! tile strip at a time inside the GEMM — and the reference interpreter
+//! decodes each layer's tensors right before applying its op. Results
+//! are numerically identical to the default
 //! quantize-in-f32 path (locked by `tests/integration_storage.rs`),
 //! and the byte claim is *measured*, not just modeled:
 //! `tests/integration_memory.rs` runs both modes under a counting
@@ -34,7 +40,7 @@ pub mod footprint;
 pub mod packed;
 
 pub use footprint::{Footprint, FootprintModel, LayerFootprint};
-pub use packed::{storage_width, PackedBuf, PackedCursor, MAX_PACK_BITS};
+pub use packed::{storage_width, PackedBuf, PackedCursor, PackedPanels, MAX_PACK_BITS};
 
 use anyhow::{bail, Result};
 

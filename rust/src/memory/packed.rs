@@ -264,6 +264,86 @@ impl<'a> PackedCursor<'a> {
     }
 }
 
+/// A GEMM `B` weight matrix, pre-strided into `nr`-lane column panels
+/// (the `gemm::pack_b_panels` layout), stored as one packed bitstream —
+/// the panel-aware reader of the packed-weight path.
+///
+/// Layout: panel `p` holds `kd` contiguous rows of `nr` lanes each, so
+/// rows `[k0, k1)` of panel `p` are the contiguous element range
+/// `[(p·kd + k0)·nr, (p·kd + k1)·nr)` of the bitstream. The packed-B
+/// GEMM kernel decodes one such strip at a time into a small per-thread
+/// f32 tile right before the multiply ([`PackedPanels::read_strip`]),
+/// so no f32 copy of the weights ever exists beyond one tile per
+/// thread. Packing carries the [`PackedBuf`] semantics contract: decode
+/// returns exactly the quantized weights (modulo the single
+/// two's-complement zero), so decoding before an unchanged ascending-k
+/// accumulation is bit-identical to multiplying the quantized f32
+/// panels directly.
+#[derive(Clone, Debug)]
+pub struct PackedPanels {
+    buf: PackedBuf,
+    kd: usize,
+    nr: usize,
+    n_panels: usize,
+}
+
+impl PackedPanels {
+    /// Pack a panelized matrix (`n_panels · kd · nr` values, ragged
+    /// last panel already zero-padded) under `fmt`.
+    pub fn pack(fmt: QFormat, panels: &[f32], kd: usize, nr: usize) -> PackedPanels {
+        assert!(kd > 0 && nr > 0, "degenerate panel shape {kd}x{nr}");
+        assert!(panels.len() % (kd * nr) == 0, "ragged panel slice");
+        PackedPanels {
+            buf: PackedBuf::pack(fmt, panels),
+            kd,
+            nr,
+            n_panels: panels.len() / (kd * nr),
+        }
+    }
+
+    /// Rows per panel (the GEMM `k` depth).
+    pub fn kd(&self) -> usize {
+        self.kd
+    }
+
+    /// Lanes per panel row (the GEMM register-tile width).
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.n_panels
+    }
+
+    /// Total stored values (padding lanes included).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Bits per stored value.
+    pub fn width(&self) -> u32 {
+        self.buf.width()
+    }
+
+    /// Physical footprint of the payload, rounded up to whole bytes.
+    pub fn packed_bytes(&self) -> usize {
+        self.buf.packed_bytes()
+    }
+
+    /// Decode rows `[k0, k1)` of panel `panel` into `out`
+    /// (`(k1 - k0) · nr` values) — one GEMM tile strip.
+    pub fn read_strip(&self, fmt: QFormat, panel: usize, k0: usize, k1: usize, out: &mut [f32]) {
+        assert!(panel < self.n_panels, "panel {panel} out of {}", self.n_panels);
+        assert!(k0 <= k1 && k1 <= self.kd, "strip rows {k0}..{k1} out of {}", self.kd);
+        assert_eq!(out.len(), (k1 - k0) * self.nr, "strip window size");
+        self.buf.unpack_range_into(fmt, (panel * self.kd + k0) * self.nr, out);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,9 +422,9 @@ mod tests {
     #[test]
     fn packed_bytes_accounting() {
         let fmt = QFormat::new(2, 3); // 5 bits
-        let buf = PackedBuf::pack(fmt, &vec![0.0; 13]);
+        let buf = PackedBuf::pack(fmt, &[0.0; 13]);
         assert_eq!(buf.packed_bytes(), (13 * 5 + 7) / 8); // 9 bytes
-        let f = PackedBuf::pack(QFormat::FP32, &vec![0.0; 3]);
+        let f = PackedBuf::pack(QFormat::FP32, &[0.0; 3]);
         assert_eq!(f.packed_bytes(), 12);
     }
 
@@ -431,6 +511,41 @@ mod tests {
         buf.unpack_range_into(QFormat::FP32, 3, &mut got);
         assert_eq!(got[0].to_bits(), (-0.0f32).to_bits());
         assert_eq!(got[1], 1e9);
+    }
+
+    #[test]
+    fn panel_strips_read_back_row_ranges() {
+        let fmt = QFormat::new(4, 3); // 7 bits: strips straddle words
+        let (kd, nr, n_panels) = (5usize, 4usize, 3usize);
+        let raw: Vec<f32> = (0..n_panels * kd * nr).map(|i| i as f32 * 0.31 - 9.0).collect();
+        let want = quantized_canonical(fmt, &raw);
+        let pp = PackedPanels::pack(fmt, &raw, kd, nr);
+        assert_eq!((pp.kd(), pp.nr(), pp.n_panels()), (kd, nr, n_panels));
+        assert_eq!(pp.len(), raw.len());
+        assert_eq!(pp.width(), 7);
+        // Whole panels and interior strips, every panel.
+        for p in 0..n_panels {
+            for (k0, k1) in [(0usize, kd), (0, 1), (1, 4), (kd - 1, kd), (2, 2)] {
+                let mut got = vec![f32::NAN; (k1 - k0) * nr];
+                pp.read_strip(fmt, p, k0, k1, &mut got);
+                let lo = (p * kd + k0) * nr;
+                for (i, (a, b)) in got.iter().zip(&want[lo..lo + got.len()]).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "panel {p} rows {k0}..{k1} elem {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_fp32_fallback_is_bit_exact() {
+        let raw = [0.1f32, -0.0, 1e20, -3.5]; // kd=2, nr=2, one panel
+        let pp = PackedPanels::pack(QFormat::FP32, &raw, 2, 2);
+        assert_eq!(pp.width(), 32);
+        assert_eq!(pp.packed_bytes(), 16);
+        let mut got = vec![0f32; 2];
+        pp.read_strip(QFormat::FP32, 0, 1, 2, &mut got);
+        assert_eq!(got[0].to_bits(), 1e20f32.to_bits());
+        assert_eq!(got[1], -3.5);
     }
 
     #[test]

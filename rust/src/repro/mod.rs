@@ -430,11 +430,22 @@ pub fn explore_net(ctx: &mut ReproCtx, net: &str) -> Result<DseResult> {
 /// [`explore_net`] directly.
 pub fn explore_net_cached(ctx: &mut ReproCtx, net: &str, cache_dir: &Path) -> Result<DseResult> {
     let m = ctx.manifest(net)?.clone();
+    // The artifact fingerprint is a content hash of the weights file —
+    // any rewrite (even one byte) recomputes. An unreadable file just
+    // disables caching; the descent itself will surface the real error.
+    let weights_hash = match cache::weights_fingerprint(&m.weights_path()) {
+        Ok(h) => h,
+        Err(e) => {
+            log::warn!("{net}: cannot fingerprint weights ({e:#}); descent cache disabled");
+            return explore_net(ctx, net);
+        }
+    };
     let key = cache::CacheKey {
         net: net.to_string(),
         backend: ctx.backend.label().to_string(),
         n_images: ctx.n_images,
         n_layers: m.n_layers(),
+        weights_hash,
         baseline_top1: m.baseline_top1,
     };
     let path = cache::cache_path(cache_dir, net);

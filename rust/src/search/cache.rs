@@ -10,10 +10,12 @@
 //!
 //! Invalidation is by identity, not by age: [`CacheKey`] captures
 //! everything the trajectory depends on (network, backend, eval-subset
-//! size, layer count, and the manifest's baseline accuracy as an
-//! artifact-set fingerprint). Any mismatch — or a garbled/missing file,
-//! or a schema bump — is a miss that triggers recompute + overwrite,
-//! never an error.
+//! size, layer count, a **content hash of the weights file** —
+//! [`weights_fingerprint`], so rewriting even one weight byte
+//! invalidates the trajectory — and the manifest's recorded baseline,
+//! which moves with the eval data the accuracies were measured on).
+//! Any mismatch — or a garbled/missing file, or a schema bump — is a
+//! miss that triggers recompute + overwrite, never an error.
 
 use std::path::{Path, PathBuf};
 
@@ -25,7 +27,9 @@ use crate::search::space::PrecisionConfig;
 use crate::util::{self, json::Json};
 
 /// Bump when the on-disk layout changes; older files become misses.
-pub const SCHEMA: f64 = 1.0;
+/// (2.0: the artifact fingerprint grew a content hash of the weights
+/// file next to the recorded baseline.)
+pub const SCHEMA: f64 = 2.0;
 
 /// Identity of one descent run. Every field change invalidates the
 /// cached trajectory.
@@ -36,9 +40,25 @@ pub struct CacheKey {
     /// Images per accuracy evaluation (0 = full split).
     pub n_images: usize,
     pub n_layers: usize,
-    /// The manifest's recorded baseline — a fingerprint of the artifact
-    /// set the accuracies were measured on.
+    /// Content hash of the weights file ([`weights_fingerprint`]):
+    /// catches weight rewrites the recorded baseline cannot see.
+    pub weights_hash: String,
+    /// The manifest's recorded baseline — it moves with the eval data
+    /// split, which the weights hash alone does not cover.
     pub baseline_top1: f64,
+}
+
+/// FNV-1a over the weights file bytes: cheap, stable across platforms,
+/// and any one-byte rewrite flips the digest. Not cryptographic — the
+/// cache guards against stale artifacts, not adversaries.
+pub fn weights_fingerprint(path: &Path) -> Result<String> {
+    let bytes = std::fs::read(path)?;
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in &bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Ok(format!("{:016x}-{}", h, bytes.len()))
 }
 
 /// Cache file for `net` under `dir`.
@@ -96,6 +116,7 @@ pub fn save(path: &Path, key: &CacheKey, res: &DescentResult) -> Result<()> {
         ("backend", Json::str(key.backend.clone())),
         ("n_images", Json::num(key.n_images as f64)),
         ("n_layers", Json::num(key.n_layers as f64)),
+        ("weights_hash", Json::str(key.weights_hash.clone())),
         ("baseline_top1", Json::num(key.baseline_top1)),
         ("baseline", Json::num(res.baseline)),
         ("visited", Json::arr(visited)),
@@ -114,6 +135,7 @@ pub fn load(path: &Path, key: &CacheKey) -> Option<DescentResult> {
         || j.at(&["backend"]).as_str()? != key.backend
         || j.at(&["n_images"]).as_usize()? != key.n_images
         || j.at(&["n_layers"]).as_usize()? != key.n_layers
+        || j.at(&["weights_hash"]).as_str()? != key.weights_hash
         || (j.at(&["baseline_top1"]).as_f64()? - key.baseline_top1).abs() > 1e-12
     {
         return None;
@@ -155,6 +177,7 @@ mod tests {
             backend: "fast".into(),
             n_images: 128,
             n_layers: 2,
+            weights_hash: "cafebabe01234567-96".into(),
             baseline_top1: 0.9904,
         }
     }
@@ -216,11 +239,12 @@ mod tests {
         let (key, res) = (sample_key(), sample_result());
         let path = cache_path(&dir, &key.net);
         save(&path, &key, &res).unwrap();
-        let mutations: [fn(&mut CacheKey); 5] = [
+        let mutations: [fn(&mut CacheKey); 6] = [
             |k| k.n_images = 256,
             |k| k.backend = "reference".into(),
             |k| k.net = "convnet".into(),
             |k| k.n_layers = 3,
+            |k| k.weights_hash = "0000000000000000-96".into(),
             |k| k.baseline_top1 = 0.9,
         ];
         for mutate in mutations {
@@ -230,6 +254,31 @@ mod tests {
         }
         // The matching key still hits after all those misses.
         assert!(load(&path, &key).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn one_rewritten_weight_byte_invalidates() {
+        // The ROADMAP item this key exists for: a weights file whose
+        // recorded baseline would not change (same length, one flipped
+        // byte) must still miss the cache.
+        let dir = tmp_dir("hash");
+        let wfile = dir.join("weights.ntf");
+        std::fs::write(&wfile, [0x4e, 0x54, 0x46, 0x00, 0x7f, 0x01]).unwrap();
+        let mut key = sample_key();
+        key.weights_hash = weights_fingerprint(&wfile).unwrap();
+        let path = cache_path(&dir, &key.net);
+        save(&path, &key, &sample_result()).unwrap();
+        assert!(load(&path, &key).is_some());
+
+        std::fs::write(&wfile, [0x4e, 0x54, 0x46, 0x00, 0x7e, 0x01]).unwrap();
+        let mut stale = sample_key();
+        stale.weights_hash = weights_fingerprint(&wfile).unwrap();
+        assert_ne!(key.weights_hash, stale.weights_hash, "digest must move");
+        assert!(load(&path, &stale).is_none(), "stale trajectory served");
+        // Truncation changes the digest too (length is part of it).
+        std::fs::write(&wfile, [0x4e, 0x54, 0x46, 0x00, 0x7f]).unwrap();
+        assert_ne!(key.weights_hash, weights_fingerprint(&wfile).unwrap());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,9 +1,11 @@
 //! The measured memory bound: run both storage modes of the fast
 //! backend under a counting global allocator and prove that `--storage
-//! packed` actually shrinks the process — peak live bytes strictly
-//! below the f32 run and inside the `FootprintModel` envelope — rather
-//! than just modeling the savings. This is the test infrastructure that
-//! turns FOOTPRINT.json from a model into a measurement.
+//! packed` actually shrinks the process — whole-model (weights +
+//! activations) peak live bytes strictly below the f32 run and inside
+//! the `FootprintModel` envelope — rather than just modeling the
+//! savings. This is the test infrastructure that turns FOOTPRINT.json
+//! from a model into a measurement, and the same envelope backs the CI
+//! `check-mem` regression gate.
 //!
 //! Meter state is process-global, so every test here serializes on one
 //! mutex and asserts with slack for harness noise. Thread-count
@@ -12,8 +14,8 @@
 
 use std::sync::Mutex;
 
-use qbound::backend::fast::FastBackend;
-use qbound::backend::lowering::LoweredPlan;
+use qbound::backend::fast::{packed_weight_bytes, FastBackend};
+use qbound::backend::lowering::{self, LoweredPlan};
 use qbound::backend::reference::ReferenceBackend;
 use qbound::backend::{Backend, Variant};
 use qbound::eval::Dataset;
@@ -75,20 +77,28 @@ fn packed_peak_is_below_f32_and_inside_the_model_envelope() {
         let (r_pk, p_pk, churn_pk) = measure(StorageMode::Packed);
 
         // Headline: both the steady state and the in-flight peak of the
-        // packed run are strictly below the f32 run.
+        // whole-model packed run (weights + activations) are strictly
+        // below the f32 run.
         assert!(r_pk < r_f32, "{net}: packed resident {r_pk} >= f32 {r_f32}");
         assert!(p_pk < p_f32, "{net}: packed peak {p_pk} >= f32 peak {p_f32}");
 
-        // Envelope: the f32 path's two max-sized arenas must be gone,
-        // replaced by at most the modeled packed bitstreams plus the
-        // streaming decode window (everything else — weights, panels,
-        // col/tmp scratch — is identical between the modes).
+        // Envelope: the f32 path's two max-sized arenas AND its f32
+        // weight set (panels incl. NR padding + biases, 4 B/elem) must
+        // be gone, replaced by at most the modeled whole-model envelope
+        // — packed weights + peak act bitstreams + panel padding + the
+        // f32 decode/bias windows (everything else — fp32 master
+        // params, col/tmp scratch — is identical between the modes).
         let arenas = 8.0 * plan.max_act_elems as f64; // 2 arenas x 4 B/elem
-        let envelope = fpm.fused_envelope(&cfg, plan.max_win_elems);
+        let w_f32 = 4.0 * (plan.panel_param_elems + plan.bias_param_elems) as f64;
+        let envelope = fpm.fused_envelope(
+            &cfg,
+            plan.max_win_elems + plan.max_bias_elems,
+            &plan.weight_pad_elems,
+        );
         assert!(
-            r_pk <= r_f32 - arenas + envelope + SLACK,
+            r_pk <= r_f32 - arenas - w_f32 + envelope + SLACK,
             "{net}: packed residency {r_pk} outside the model envelope \
-             (f32 {r_f32}, arenas {arenas}, envelope {envelope})"
+             (f32 {r_f32}, arenas {arenas}, f32 weights {w_f32}, envelope {envelope})"
         );
 
         // Transient churn of one fused infer is bounded by the plan's
@@ -170,6 +180,43 @@ fn eval_split_spill_shrinks_the_resident_input_set() {
     assert_eq!(out.len(), 2 * elems);
     for (a, b) in out.iter().zip(&want[2 * elems..4 * elems]) {
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn packed_weight_bytes_below_f32_on_every_arch() {
+    // The weight half of the bound, asserted directly: the bitstream
+    // weight set a fused executor memoizes (panels incl. NR padding +
+    // biases) must undercut the f32 weight set and land on the modeled
+    // weight term plus padding.
+    let _g = SERIAL.lock().unwrap();
+    let dir = testkit::ensure_artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let plan = LoweredPlan::new(&arch::get(net).unwrap(), None).unwrap();
+        let params = lowering::load_network(&m, Variant::Standard).unwrap().params;
+        let cfg = cfg8(m.n_layers());
+        let f32_bytes = 4 * (plan.panel_param_elems + plan.bias_param_elems);
+        let packed = packed_weight_bytes(&plan, &params, &cfg.wq);
+        assert!(packed < f32_bytes, "{net}: packed weights {packed} >= f32 {f32_bytes}");
+        // The plan-only pricing (what eval --mem-json records) must
+        // equal the real packing, tensor-for-tensor.
+        assert_eq!(packed, plan.packed_weight_bytes(&cfg.wq), "{net}");
+        // 8-bit formats: exactly a quarter, modulo per-tensor byte
+        // rounding.
+        assert!(
+            packed <= f32_bytes / 4 + 4 * params.len(),
+            "{net}: packed {packed} not ~1/4 of f32 {f32_bytes}"
+        );
+        // Realized = modeled weight term + the NR-lane panel padding.
+        let fpm = FootprintModel::new(&m);
+        let pad_bytes: f64 = plan.weight_pad_elems.iter().map(|&e| e as f64).sum(); // 8-bit
+        let modeled = fpm.footprint(&cfg).weight_bytes + pad_bytes;
+        assert!(
+            (packed as f64 - modeled).abs() <= 4.0 * params.len() as f64,
+            "{net}: packed {packed} vs modeled weights+padding {modeled}"
+        );
     }
 }
 

@@ -1,0 +1,112 @@
+//! Property tests for the packed-B GEMM: with the `B` operand stored as
+//! a [`PackedPanels`] bitstream, decoding one `KC`-row strip at a time
+//! into the per-thread tile must reproduce the f32-panel GEMM
+//! **bit-for-bit** — for every weight width (including the fp32
+//! sentinel and the wide word-aligned fallback), across panel shapes
+//! that straddle every tile edge, with strided `C` outputs and under
+//! row-block threading. This is the contract that lets the fused packed
+//! executor swap its weight panels for bitstreams without moving a
+//! single logit bit.
+
+use qbound::backend::gemm::{gemm_bias_bits, gemm_bias_packed, pack_b_panels, NR};
+use qbound::memory::PackedPanels;
+use qbound::prng::Xoshiro256pp;
+use qbound::quant::QFormat;
+use qbound::testkit::quantized_canonical;
+
+fn rand_vec(rng: &mut Xoshiro256pp, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform_f32(lo, hi)).collect()
+}
+
+/// Reference product: the f32-panel GEMM over the quantized weights.
+fn panel_gemm(m: usize, n: usize, kd: usize, a: &[f32], qb: &[f32], bias: &[f32]) -> Vec<f32> {
+    let bp = pack_b_panels(qb, kd, n);
+    let mut c = vec![0f32; m * n];
+    gemm_bias_packed(m, n, kd, a, kd, &bp, bias, &mut c, n, 1);
+    c
+}
+
+fn assert_bits_match(label: &str, want: &[f32], got: &[f32]) {
+    for (i, (x, y)) in want.iter().zip(got).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn every_weight_width_matches_the_f32_panel_path() {
+    // kd = 300 crosses the KC strip boundary; n = NR + 1 leaves a
+    // ragged second panel.
+    let (m, n, kd) = (5usize, NR + 1, 300usize);
+    let mut rng = Xoshiro256pp::new(2024);
+    let a = rand_vec(&mut rng, m * kd, -2.0, 2.0);
+    let bias = rand_vec(&mut rng, n, -0.5, 0.5);
+    let raw = rand_vec(&mut rng, kd * n, -3.0, 3.0);
+    let mut fmts = vec![QFormat::FP32, QFormat::new(14, 12)]; // 32-bit fallbacks
+    for ibits in 0..=12i8 {
+        for fbits in 0..=12i8 {
+            if ibits + fbits > 0 {
+                fmts.push(QFormat::new(ibits, fbits));
+            }
+        }
+    }
+    for fmt in fmts {
+        // The values a packed-weight GEMM multiplies: quantized, with
+        // `-0.0` canonicalized exactly as the bitstream stores it.
+        let qb = quantized_canonical(fmt, &raw);
+        let want = panel_gemm(m, n, kd, &a, &qb, &bias);
+        let bits = PackedPanels::pack(fmt, &pack_b_panels(&raw, kd, n), kd, NR);
+        let mut got = vec![f32::NAN; m * n];
+        gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut got, n, 1);
+        assert_bits_match(&format!("{fmt}"), &want, &got);
+    }
+}
+
+#[test]
+fn panel_shapes_threads_and_tile_edges_match() {
+    // Shapes straddle every tile edge: m % MR, n % NR, kd % KC.
+    let fmt = QFormat::new(2, 6);
+    for &(m, n, kd) in &[
+        (1usize, 1usize, 1usize),
+        (1, 10, 256),
+        (3, 5, 7),
+        (4, 16, 9),
+        (5, 17, 300),
+        (64, 24, 75),
+        (130, 33, 513),
+    ] {
+        let mut rng = Xoshiro256pp::new(7 + (m * n * kd) as u64);
+        let a = rand_vec(&mut rng, m * kd, -2.0, 2.0);
+        let bias = rand_vec(&mut rng, n, -0.5, 0.5);
+        let qb = quantized_canonical(fmt, &rand_vec(&mut rng, kd * n, -1.5, 1.5));
+        let want = panel_gemm(m, n, kd, &a, &qb, &bias);
+        let bits = PackedPanels::pack(fmt, &pack_b_panels(&qb, kd, n), kd, NR);
+        for threads in [1usize, 2, 3, 8] {
+            let mut got = vec![f32::NAN; m * n];
+            gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut got, n, threads);
+            assert_bits_match(&format!("({m},{n},{kd}) t={threads}"), &want, &got);
+        }
+    }
+}
+
+#[test]
+fn strided_c_matches_and_leaves_gaps_untouched() {
+    let fmt = QFormat::new(1, 7);
+    let (m, n, kd) = (7usize, NR + 3, 40usize);
+    let mut rng = Xoshiro256pp::new(99);
+    let a = rand_vec(&mut rng, m * kd, -2.0, 2.0);
+    let bias = rand_vec(&mut rng, n, -0.5, 0.5);
+    let qb = quantized_canonical(fmt, &rand_vec(&mut rng, kd * n, -1.0, 1.0));
+    let bits = PackedPanels::pack(fmt, &pack_b_panels(&qb, kd, n), kd, NR);
+    let want = panel_gemm(m, n, kd, &a, &qb, &bias);
+    let ldc = n + 5;
+    let mut c = vec![-7.0f32; (m - 1) * ldc + n + 5];
+    gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut c, ldc, 1);
+    for r in 0..m {
+        for j in 0..n {
+            assert_eq!(c[r * ldc + j].to_bits(), want[r * n + j].to_bits(), "row {r} col {j}");
+        }
+        if r + 1 < m {
+            assert!(c[r * ldc + n..r * ldc + ldc].iter().all(|&v| v == -7.0), "row {r} gap");
+        }
+    }
+}
