@@ -301,46 +301,58 @@ impl FastWeights {
     }
 }
 
-/// Every parameter tensor as a bitstream at its group's weight width:
-/// GEMM weights in the [`pack_b_panels`] layout ([`PackedPanels`]),
-/// biases as plain [`PackedBuf`]s.
+/// One parameter tensor resident as a bitstream: a GEMM weight in the
+/// [`pack_b_panels`] layout (the [`PackedPanels`] carries its pack-time
+/// format) or a bias as a plain [`PackedBuf`] paired with its format.
+enum PackedTensor {
+    Gemm(PackedPanels),
+    Bias(PackedBuf, QFormat),
+}
+
+/// Every parameter tensor as a bitstream at its group's weight width,
+/// one [`PackedTensor`] per parameter in init order. Each entry carries
+/// its own decode format, so there is no parallel format vector to
+/// drift out of sync with the bitstreams.
 #[derive(Default)]
 struct PackedWeights {
     cached_wq: Vec<QFormat>,
-    /// Pack format of each tensor (its group's `wq` row).
-    fmts: Vec<QFormat>,
-    /// GEMM weight tensors (`None` = bias).
-    panels: Vec<Option<PackedPanels>>,
-    /// Bias tensors (`None` = GEMM weight).
-    biases: Vec<Option<PackedBuf>>,
+    tensors: Vec<PackedTensor>,
 }
 
 impl PackedWeights {
     fn rebuild(&mut self, plan: &LoweredPlan, params: &[Vec<f32>], wfmt: &[QFormat]) {
-        self.fmts = plan.per_tensor_formats(wfmt);
-        self.panels = vec![None; params.len()];
-        self.biases = vec![None; params.len()];
+        let fmts = plan.per_tensor_formats(wfmt);
+        let mut gemm_shape: Vec<Option<(usize, usize)>> = vec![None; params.len()];
+        for t in lowering::gemm_tensors(&plan.steps) {
+            gemm_shape[t.param] = Some((t.kd, t.n));
+        }
         // Packing *is* the quantizer (pack→decode equals
         // `quantize_slice` modulo the single two's-complement zero), so
         // the raw fp32 tensors pack directly — no transient quantized
         // copy is built.
-        for t in lowering::gemm_tensors(&plan.steps) {
-            let pf = pack_b_panels(&params[t.param], t.kd, t.n);
-            self.panels[t.param] = Some(PackedPanels::pack(self.fmts[t.param], &pf, t.kd, NR));
-        }
-        for (i, p) in params.iter().enumerate() {
-            if self.panels[i].is_none() {
-                self.biases[i] = Some(PackedBuf::pack(self.fmts[i], p));
-            }
-        }
+        self.tensors = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| match gemm_shape[i] {
+                Some((kd, n)) => {
+                    let pf = pack_b_panels(p, kd, n);
+                    PackedTensor::Gemm(PackedPanels::pack(fmts[i], &pf, kd, NR))
+                }
+                None => PackedTensor::Bias(PackedBuf::pack(fmts[i], p), fmts[i]),
+            })
+            .collect();
         self.cached_wq = wfmt.to_vec();
     }
 
     /// Resident payload bytes of the packed weight set.
     fn resident_bytes(&self) -> usize {
-        let p: usize = self.panels.iter().flatten().map(|p| p.packed_bytes()).sum();
-        let b: usize = self.biases.iter().flatten().map(|b| b.packed_bytes()).sum();
-        p + b
+        self.tensors
+            .iter()
+            .map(|t| match t {
+                PackedTensor::Gemm(p) => p.packed_bytes(),
+                PackedTensor::Bias(b, _) => b.packed_bytes(),
+            })
+            .sum()
     }
 }
 
@@ -376,9 +388,10 @@ impl<'a> WView<'a> {
             WView::F32 { panels, .. } => {
                 GemmB::Panels(panels[i].as_deref().expect("GEMM weight panel"))
             }
-            WView::Packed(w) => {
-                GemmB::Bits(w.panels[i].as_ref().expect("GEMM weight panel"), w.fmts[i])
-            }
+            WView::Packed(w) => match &w.tensors[i] {
+                PackedTensor::Gemm(p) => GemmB::Bits(p),
+                PackedTensor::Bias(..) => unreachable!("parameter {i} is a bias"),
+            },
         }
     }
 
@@ -390,12 +403,14 @@ impl<'a> WView<'a> {
     {
         match self {
             WView::F32 { qparams, .. } => &qparams[i],
-            WView::Packed(w) => {
-                let p = w.biases[i].as_ref().expect("bias bitstream");
-                buf.resize(p.len(), 0.0);
-                p.unpack_into(w.fmts[i], buf);
-                buf
-            }
+            WView::Packed(w) => match &w.tensors[i] {
+                PackedTensor::Bias(b, fmt) => {
+                    buf.resize(b.len(), 0.0);
+                    b.unpack_into(*fmt, buf);
+                    buf
+                }
+                PackedTensor::Gemm(_) => unreachable!("parameter {i} is a GEMM weight"),
+            },
         }
     }
 }
@@ -1324,17 +1339,21 @@ mod tests {
             let wfmt = vec![QFormat::new(1, 7); plan.n_layers];
             let mut w = PackedWeights::default();
             w.rebuild(&plan, &params, &wfmt);
+            assert_eq!(w.tensors.len(), params.len(), "{name}");
             let mut panel_elems = 0usize;
             let mut bias_elems = 0usize;
-            for i in 0..params.len() {
-                match (&w.panels[i], &w.biases[i]) {
-                    (Some(p), None) => {
+            for (i, t) in w.tensors.iter().enumerate() {
+                match t {
+                    PackedTensor::Gemm(p) => {
                         assert_eq!(p.nr(), NR, "{name} tensor {i}");
+                        assert_eq!(p.fmt(), wfmt[0], "{name} tensor {i}");
                         assert_eq!(p.kd() * p.n_panels() * NR, p.len(), "{name} tensor {i}");
                         panel_elems += p.len();
                     }
-                    (None, Some(b)) => bias_elems += b.len(),
-                    _ => panic!("{name} tensor {i}: not exactly one representation"),
+                    PackedTensor::Bias(b, fmt) => {
+                        assert_eq!(*fmt, wfmt[0], "{name} tensor {i}");
+                        bias_elems += b.len();
+                    }
                 }
             }
             assert_eq!(panel_elems, plan.panel_param_elems, "{name}");
@@ -1366,8 +1385,8 @@ mod tests {
         // Biases decode to exactly the quantized tensors.
         let q = plan.quantize_params(&params, &wfmt);
         let mut buf = Vec::new();
-        for (i, b) in w.biases.iter().enumerate() {
-            if b.is_some() {
+        for i in 0..w.tensors.len() {
+            if matches!(w.tensors[i], PackedTensor::Bias(..)) {
                 let got = WView::Packed(&w).bias(i, &mut buf);
                 let want = crate::testkit::quantized_canonical(wfmt[0], &params[i]);
                 assert_eq!(got, &want[..], "bias tensor {i}");

@@ -34,7 +34,6 @@
 //! panels holding the same (quantized) values.
 
 use crate::memory::PackedPanels;
-use crate::quant::QFormat;
 
 /// Register-tile rows (distinct A broadcasts per micro-kernel).
 pub const MR: usize = 4;
@@ -94,13 +93,13 @@ pub fn gemm_bias_packed(
     gemm_bias_b(m, n, kd, a, lda, GemmB::Panels(bp), bias, c, ldc, threads)
 }
 
-/// `C = bias + A·B` with `B` a [`PackedPanels`] weight bitstream packed
-/// at `fmt` — the packed-B microkernel path. Each `KC`-row strip of a
-/// panel is decoded into a per-thread f32 scratch tile right before the
-/// multiply; the decode precedes the unchanged ascending-`k`
-/// accumulation, so results are bit-identical to [`gemm_bias_packed`]
-/// over the decoded panel values (the property suite pins this for
-/// every weight width).
+/// `C = bias + A·B` with `B` a [`PackedPanels`] weight bitstream — the
+/// packed-B microkernel path. Each `KC`-row strip of a panel is decoded
+/// (at the bitstream's own pack-time format) into a per-thread f32
+/// scratch tile right before the multiply; the decode precedes the
+/// unchanged ascending-`k` accumulation, so results are bit-identical
+/// to [`gemm_bias_packed`] over the decoded panel values (the property
+/// suite pins this for every weight width).
 pub fn gemm_bias_bits(
     m: usize,
     n: usize,
@@ -108,13 +107,12 @@ pub fn gemm_bias_bits(
     a: &[f32],
     lda: usize,
     bp: &PackedPanels,
-    fmt: QFormat,
     bias: &[f32],
     c: &mut [f32],
     ldc: usize,
     threads: usize,
 ) {
-    gemm_bias_b(m, n, kd, a, lda, GemmB::Bits(bp, fmt), bias, c, ldc, threads)
+    gemm_bias_b(m, n, kd, a, lda, GemmB::Bits(bp), bias, c, ldc, threads)
 }
 
 /// The general thread-splitting driver behind every entry point.
@@ -188,10 +186,10 @@ pub enum GemmB<'a> {
     Flat(&'a [f32]),
     /// [`pack_b_panels`] f32 layout.
     Panels(&'a [f32]),
-    /// [`PackedPanels`] bitstream packed at the given weight format;
-    /// strips are decoded into a per-thread f32 tile ahead of the
-    /// multiply.
-    Bits(&'a PackedPanels, QFormat),
+    /// [`PackedPanels`] bitstream (which carries its pack-time weight
+    /// format); strips are decoded into a per-thread f32 tile ahead of
+    /// the multiply.
+    Bits(&'a PackedPanels),
 }
 
 impl<'a> GemmB<'a> {
@@ -219,8 +217,8 @@ fn gemm_block(
     c: &mut [f32],
     ldc: usize,
 ) {
-    if let GemmB::Bits(bp, fmt) = b {
-        return gemm_block_bits(m, n, kd, a, lda, bp, fmt, bias, c, ldc);
+    if let GemmB::Bits(bp) = b {
+        return gemm_block_bits(m, n, kd, a, lda, bp, bias, c, ldc);
     }
     for r in 0..m {
         c[r * ldc..r * ldc + n].copy_from_slice(&bias[..n]);
@@ -269,7 +267,6 @@ fn gemm_block_bits(
     a: &[f32],
     lda: usize,
     bp: &PackedPanels,
-    fmt: QFormat,
     bias: &[f32],
     c: &mut [f32],
     ldc: usize,
@@ -286,7 +283,7 @@ fn gemm_block_bits(
         let mut nb = 0usize;
         while nb < n {
             let nr = NR.min(n - nb);
-            bp.read_strip(fmt, nb / NR, kp, ke, &mut tile[..(ke - kp) * NR]);
+            bp.read_strip(nb / NR, kp, ke, &mut tile[..(ke - kp) * NR]);
             let mut mb = 0usize;
             while mb < m {
                 let me = (mb + MC).min(m);
@@ -554,7 +551,7 @@ mod tests {
             gemm_bias_packed(m, n, kd, &a, kd, &bp, &bias, &mut want, n, 1);
             for threads in [1usize, 3] {
                 let mut c = vec![f32::NAN; m * n];
-                gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut c, n, threads);
+                gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut c, n, threads);
                 for (i, (x, y)) in c.iter().zip(&want).enumerate() {
                     assert_eq!(
                         x.to_bits(),
@@ -577,7 +574,7 @@ mod tests {
         let bits = PackedPanels::pack(fmt, &bp, kd, NR);
         let ldc = 8;
         let mut c = vec![-7.0f32; (m - 1) * ldc + n + 5];
-        gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut c, ldc, 1);
+        gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut c, ldc, 1);
         let want = naive(m, n, kd, &a, &b, &bias);
         for r in 0..m {
             for j in 0..n {

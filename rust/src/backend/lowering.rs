@@ -84,6 +84,31 @@ pub struct Step {
 /// A network flattened for execution: steps, parameter layout, and the
 /// scratch-buffer high-water marks the fast backend sizes its arenas
 /// from.
+///
+/// # Examples
+///
+/// Plans come straight from the static architecture registry — no
+/// artifacts needed — and carry the scratch high-water marks and panel
+/// padding that [`FootprintModel::fused_envelope`] prices:
+///
+/// ```
+/// use qbound::backend::lowering::LoweredPlan;
+/// use qbound::nets::arch;
+/// use qbound::quant::QFormat;
+///
+/// let lenet = arch::get("lenet").unwrap();
+/// let plan = LoweredPlan::new(&lenet, None).unwrap();
+/// assert_eq!(plan.weight_pad_elems.len(), plan.n_layers);
+/// assert!(plan.max_win_elems > 0 && plan.max_bias_elems > 0);
+///
+/// // Packed Q1.8 weights (10-bit codes) store well under the f32 cost
+/// // of the same GEMM panels + biases.
+/// let wq = vec![QFormat::new(1, 8); plan.n_layers];
+/// let f32_bytes = 4 * (plan.panel_param_elems + plan.bias_param_elems);
+/// assert!(plan.packed_weight_bytes(&wq) < f32_bytes);
+/// ```
+///
+/// [`FootprintModel::fused_envelope`]: crate::memory::FootprintModel::fused_envelope
 #[derive(Clone, Debug)]
 pub struct LoweredPlan {
     pub name: &'static str,

@@ -141,7 +141,7 @@ pub trait NetExecutor {
 /// Which backend to instantiate — `Send + Copy`, so it can cross into
 /// coordinator worker threads that then build their own (non-`Send`)
 /// [`Backend`] instance.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum BackendKind {
     /// Pure-Rust interpreted fixed-point forward pass (always available).
     #[default]

@@ -154,9 +154,10 @@ impl NetExecutor for ReferenceExecutor {
 #[derive(Default)]
 struct PackedParamMemo {
     cached_wq: Vec<QFormat>,
-    /// Pack format of each tensor (its group's `wq` row).
-    fmts: Vec<QFormat>,
-    packed: Vec<PackedBuf>,
+    /// Each tensor's bitstream paired with its pack format (its group's
+    /// `wq` row) — one entry per parameter, so the format can never
+    /// drift from the codes it decodes.
+    packed: Vec<(QFormat, PackedBuf)>,
 }
 
 impl PackedParamMemo {
@@ -168,18 +169,19 @@ impl PackedParamMemo {
         if self.cached_wq == wfmt {
             return;
         }
-        self.fmts = plan.per_tensor_formats(wfmt);
+        let fmts = plan.per_tensor_formats(wfmt);
         self.packed = Vec::with_capacity(params.len());
-        for (p, f) in params.iter().zip(&self.fmts) {
-            self.packed.push(PackedBuf::pack(*f, p));
+        for (p, f) in params.iter().zip(&fmts) {
+            self.packed.push((*f, PackedBuf::pack(*f, p)));
         }
         self.cached_wq = wfmt.to_vec();
     }
 
     /// Decode tensor `i` into a fresh vector.
     fn decode(&self, i: usize) -> Vec<f32> {
-        let mut out = vec![0f32; self.packed[i].len()];
-        self.packed[i].unpack_into(self.fmts[i], &mut out);
+        let (fmt, buf) = &self.packed[i];
+        let mut out = vec![0f32; buf.len()];
+        buf.unpack_into(*fmt, &mut out);
         out
     }
 }

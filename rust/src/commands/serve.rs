@@ -1,108 +1,396 @@
-//! `qbound serve` — replay a Poisson classification request stream against
-//! a quantized network: the "bounded-memory deployment" E2E driver.
+//! `qbound serve` — the footprint-budgeted HTTP inference daemon, plus
+//! the self-driving `--smoke` mode CI runs against a live TCP endpoint.
+//!
+//! Daemon mode binds `--addr` and serves `POST /v1/classify` until
+//! killed; executors are admitted against `--mem-budget-mb` (see
+//! [`qbound::serve`] and docs/OPERATIONS.md). Smoke mode starts the same
+//! server on an ephemeral port, replays a fixed mixed two-net workload
+//! over real sockets, checks every prediction against a freshly loaded
+//! reference-backend oracle, probes the protocol error paths, asserts
+//! the latency SLO and the RSS budget, archives `SERVE_smoke.json`, and
+//! exits nonzero on any violation — the serving layer's `check-mem`.
 
-use std::time::Duration;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Context, Result};
+use qbound::backend::lowering::LoweredPlan;
 use qbound::backend::BackendKind;
-use qbound::cli::CmdSpec;
-use qbound::coordinator::{Coordinator, EvalJob};
-use qbound::nets::NetManifest;
-use qbound::prng::Xoshiro256pp;
+use qbound::cli::{Args, CmdSpec};
+use qbound::eval::Dataset;
+use qbound::memory::{FootprintModel, StorageMode};
+use qbound::nets::{arch, ArtifactIndex, NetManifest};
 use qbound::quant::QFormat;
 use qbound::search::space::PrecisionConfig;
-use qbound::traffic::{self, Mode};
+use qbound::serve::{self, ServeOptions, Server};
 use qbound::util;
+use qbound::util::json::Json;
 
 pub fn run(args: &[String]) -> Result<()> {
-    let spec = CmdSpec::new("serve", "serve a timed classification request stream")
-        .opt("net", "network name", "lenet")
-        .opt("requests", "number of requests", "64")
-        .opt("rate", "mean arrival rate (requests/s)", "8")
-        .opt("weights", "weight format I.F (or fp32)", "1.8")
-        .opt("data", "data format I.F (or fp32)", "10.2")
-        .opt("batches-per-request", "eval batches per request", "1")
-        .opt("workers", "worker threads (0 = one per core)", "0")
-        .opt("seed", "arrival-process seed", "42")
+    let spec = CmdSpec::new("serve", "footprint-budgeted HTTP inference daemon")
+        .opt("addr", "bind address (smoke mode always uses an ephemeral port)", "127.0.0.1:8484")
+        .opt("workers", "worker threads (0 = one per core; smoke default 2)", "0")
+        .opt("queue-depth", "max in-flight requests before 429 backpressure", "64")
         .opt(
-            "backend",
-            "execution backend: reference | fast | pjrt (default: env or reference)",
-            "",
-        );
+            "mem-budget-mb",
+            "executor-cache budget in MiB (0 = auto: daemon fits every net at fp32, \
+             smoke picks a tight budget that forces evictions)",
+            "0",
+        )
+        .opt("backend", "execution backend: reference | fast | pjrt (default: env)", "")
+        .opt("storage", "activation storage: f32 | packed (default: env)", "")
+        .opt("max-body-kb", "request-body cap in KiB (413 beyond it)", "64")
+        .flag("smoke", "run the self-driving smoke workload and exit")
+        .opt("smoke-requests", "classification requests the smoke workload replays", "48")
+        .opt("slack-mb", "smoke: process-overhead slack for the RSS assertion", "192")
+        .opt("slo-ms", "smoke: p99 latency SLO in milliseconds", "5000")
+        .opt("out-dir", "smoke: directory for the SERVE_smoke.json artifact", "bench-out");
     let a = spec.parse(args)?;
-    let dir = util::artifacts_dir()?;
-    let net = a.str("net").to_string();
-    let m = NetManifest::load(&dir, &net)?;
-    let cfg = PrecisionConfig::uniform(
-        m.n_layers(),
-        QFormat::parse(a.str("weights"))?,
-        QFormat::parse(a.str("data"))?,
-    );
-    let n_req = a.usize("requests")?;
-    let rate = a.f64("rate")?;
-    let n_images = a.usize("batches-per-request")? * m.batch;
-
     let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
-    let mut coord = Coordinator::with_backend(&dir, a.usize("workers")?, backend)?;
-    // Warm the executors (load once, off the clock) with the fp32 config.
-    coord.eval_one(EvalJob {
-        net: net.clone(),
-        cfg: PrecisionConfig::fp32(m.n_layers()),
-        n_images,
-    })?;
+    let storage = StorageMode::from_arg_or_env(a.str("storage"))?;
+    if a.flag("smoke") {
+        run_smoke(&a, backend, storage)
+    } else {
+        run_daemon(&a, backend, storage)
+    }
+}
 
-    let mut rng = Xoshiro256pp::new(a.usize("seed")? as u64);
-    let mut arrivals = Vec::with_capacity(n_req);
-    let mut t = 0.0f64;
-    let nl = m.n_layers();
-    for i in 0..n_req {
-        t += rng.exponential(rate);
-        // per-request UNIQUE config (two rotating per-layer fields span a
-        // space ≫ n_req) so the memo cache cannot shortcut service —
-        // every request pays real inference.
-        let mut c = cfg.clone();
-        c.dq[i % nl].fbits = 2 + ((i / nl) % 12) as i8;
-        c.dq[(i + 1) % nl].ibits = 8 + ((i / (nl * 12)) % 6) as i8;
-        arrivals.push((Duration::from_secs_f64(t), EvalJob {
-            net: net.clone(),
-            cfg: c,
-            n_images,
-        }));
+/// MiB CLI value -> bytes.
+fn mib(v: f64) -> f64 {
+    v * 1024.0 * 1024.0
+}
+
+fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()> {
+    let dir = util::artifacts_dir()?;
+    let budget = match a.f64("mem-budget-mb")? {
+        b if b > 0.0 => mib(b),
+        _ => {
+            // Auto: room for every indexed net's fp32 executor at once —
+            // a budget that never refuses a sane single-tenant workload.
+            let index = ArtifactIndex::load(&dir)?;
+            let mut total = 0.0;
+            for net in &index.nets {
+                if let Some(e) = fp32_envelope(&dir, net)? {
+                    total += e;
+                }
+            }
+            total.max(mib(1.0))
+        }
+    };
+    let opts = ServeOptions {
+        addr: a.str("addr").to_string(),
+        workers: a.usize("workers")?,
+        queue_depth: a.usize("queue-depth")?,
+        mem_budget_bytes: budget,
+        backend,
+        storage,
+        max_body_bytes: a.usize("max-body-kb")? * 1024,
+    };
+    let server = Server::start(&dir, &opts)?;
+    let addr = server.addr();
+    println!("qbound serve — listening on http://{addr}");
+    println!("  backend {}  storage {}", backend.label(), storage.label());
+    println!("  mem budget {}  queue depth {}", util::human_bytes(budget), opts.queue_depth);
+    println!("  endpoints: GET /healthz  GET /v1/nets  GET /v1/stats  POST /v1/classify");
+    println!(
+        "  try: curl -s http://{addr}/v1/classify -X POST \
+         -d '{{\"net\":\"lenet\",\"weights\":\"1.8\",\"data\":\"10.4\",\"index\":7}}'"
+    );
+    server.join();
+    Ok(())
+}
+
+/// The fused-executor envelope of `net` at fp32, or `None` when the net
+/// has no registered architecture (it won't be served either).
+fn fp32_envelope(dir: &std::path::Path, net: &str) -> Result<Option<f64>> {
+    let Some(arch) = arch::get(net) else { return Ok(None) };
+    let m = NetManifest::load(dir, net)?;
+    let plan = LoweredPlan::new(&arch, None)?;
+    let fpm = FootprintModel::new(&m);
+    let cfg = PrecisionConfig::fp32(m.n_layers());
+    let win = plan.max_win_elems + plan.max_bias_elems;
+    Ok(Some(fpm.fused_envelope(&cfg, win, &plan.weight_pad_elems)))
+}
+
+// ---- smoke mode ---------------------------------------------------------
+
+/// One servable net, loaded alongside the daemon for oracle checks and
+/// envelope math (same public APIs the server uses internally).
+struct SmokeNet {
+    name: String,
+    manifest: NetManifest,
+    dataset: Dataset,
+    fpm: FootprintModel,
+    window_f32_elems: usize,
+    weight_pad_elems: Vec<usize>,
+}
+
+impl SmokeNet {
+    fn load(dir: &std::path::Path, name: &str) -> Result<SmokeNet> {
+        let manifest = NetManifest::load(dir, name)?;
+        let a = arch::get(name)
+            .ok_or_else(|| anyhow::anyhow!("no architecture registered for {name:?}"))?;
+        let plan = LoweredPlan::new(&a, None)?;
+        Ok(SmokeNet {
+            name: name.to_string(),
+            dataset: Dataset::load(&manifest)?,
+            fpm: FootprintModel::new(&manifest),
+            window_f32_elems: plan.max_win_elems + plan.max_bias_elems,
+            weight_pad_elems: plan.weight_pad_elems.clone(),
+            manifest,
+        })
     }
 
-    let t0 = std::time::Instant::now();
-    let lat = coord.run_stream(&arrivals)?;
-    let wall = t0.elapsed();
+    fn envelope(&self, cfg: &PrecisionConfig) -> f64 {
+        self.fpm.fused_envelope(cfg, self.window_f32_elems, &self.weight_pad_elems)
+    }
 
-    let mut sorted = lat.clone();
-    sorted.sort_unstable();
-    let p = |q: f64| sorted[((sorted.len() - 1) as f64 * q) as usize];
-    let tr = traffic::traffic_ratio(&m, Mode::Batch(m.batch), &cfg);
+    fn cfg(&self, wfmt: QFormat, dfmt: QFormat) -> PrecisionConfig {
+        PrecisionConfig::uniform(self.manifest.n_layers(), wfmt, dfmt)
+    }
+}
+
+fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()> {
+    let dir = util::artifacts_dir()?;
+    let index = ArtifactIndex::load(&dir)?;
+    let mut nets = Vec::new();
+    for name in ["lenet", "convnet"] {
+        ensure!(index.nets.iter().any(|n| n == name), "smoke needs {name} artifacts");
+        nets.push(SmokeNet::load(&dir, name)?);
+    }
+    // Rotating weight formats × two nets = 8 distinct executor keys;
+    // each key is requested twice in a row so a correctly sized cache
+    // must produce hits AND evictions under the tight budget below.
+    let wfmts = [QFormat::new(1, 8), QFormat::new(2, 7), QFormat::new(1, 6), QFormat::new(3, 4)];
+    let dfmt = QFormat::new(10, 4);
+    let max_env = nets
+        .iter()
+        .flat_map(|n| wfmts.iter().map(|w| n.envelope(&n.cfg(*w, dfmt))))
+        .fold(0f64, f64::max);
+    let budget = match a.f64("mem-budget-mb")? {
+        b if b > 0.0 => mib(b),
+        // Tight auto budget: every workload config fits alone, only ~2
+        // executors fit together — the 8-key rotation must evict.
+        _ => max_env * 2.5,
+    };
+    ensure!(budget >= max_env, "--mem-budget-mb admits no workload config");
+
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: match a.usize("workers")? {
+            0 => 2,
+            w => w,
+        },
+        queue_depth: a.usize("queue-depth")?,
+        mem_budget_bytes: budget,
+        backend,
+        storage,
+        max_body_bytes: a.usize("max-body-kb")? * 1024,
+    };
+    let server = Server::start(&dir, &opts)?;
+    let addr = server.addr();
     println!(
-        "serve — {net} @ {} req, {} imgs/req, rate {rate}/s, {} workers",
-        n_req, n_images, coord.n_workers
+        "serve --smoke — live endpoint {addr}, backend {}, storage {}, budget {}",
+        backend.label(),
+        storage.label(),
+        util::human_bytes(budget)
     );
-    println!("  config            {cfg}");
-    println!("  traffic ratio     {tr:.3} vs fp32 ({:.0}% reduction)", (1.0 - tr) * 100.0);
-    println!("  wall time         {}", util::human_duration(wall));
+
+    let (st, health) = http_get(addr, "/healthz")?;
+    ensure!(st == 200 && health.get("ok").and_then(Json::as_bool) == Some(true), "healthz: {st}");
+
+    // Mixed workload over live TCP, every answer checked against a
+    // freshly loaded reference-backend oracle.
+    let oracle = BackendKind::Reference.create()?;
+    let n_req = a.usize("smoke-requests")?;
+    ensure!(n_req >= 16, "--smoke-requests too small to exercise the cache");
+    let mut checked = 0usize;
+    for i in 0..n_req {
+        let net = &nets[i % nets.len()];
+        let wfmt = wfmts[(i / 4) % wfmts.len()];
+        let idx = i % net.dataset.n;
+        let body = format!(
+            "{{\"net\":\"{}\",\"weights\":\"{}\",\"data\":\"{}\",\"index\":{}}}",
+            net.name, wfmt, dfmt, idx
+        );
+        let (st, resp) = http_post(addr, "/v1/classify", &body)?;
+        ensure!(st == 200, "classify #{i} ({body}): status {st} {resp}");
+        let pred = resp.get("pred").and_then(Json::as_usize).context("classify: no pred")?;
+        let want = serve::reference_prediction(
+            &net.manifest,
+            &net.dataset,
+            oracle.as_ref(),
+            &net.cfg(wfmt, dfmt),
+            idx,
+        )?;
+        ensure!(pred == want, "classify #{i}: served pred {pred} != reference {want} ({body})");
+        checked += 1;
+    }
+
+    // Pipelined keep-alive pair on one connection.
+    let (s1, s2) = http_pipelined_pair(
+        addr,
+        &format!(
+            "{{\"net\":\"{}\",\"weights\":\"1.8\",\"data\":\"{dfmt}\",\"index\":0}}",
+            nets[0].name
+        ),
+    )?;
+    ensure!(s1 == 200 && s2 == 200, "pipelined pair: {s1}/{s2}");
+
+    // Protocol error probes against the live endpoint.
+    let (st, _) = http_post(addr, "/v1/classify", "{not json")?;
+    ensure!(st == 400, "malformed body probe: {st}");
+    let (st, _) = http_post(addr, "/v1/classify", "{\"net\":\"nope\"}")?;
+    ensure!(st == 404, "unknown-net probe: {st}");
+    let (st, _) = http_get(addr, "/v1/classify")?;
+    ensure!(st == 405, "method probe: {st}");
+    let st = http_oversized_probe(addr, opts.max_body_bytes + 1)?;
+    ensure!(st == 413, "oversized-body probe: {st}");
+    // Budget refusal: any net whose fp32 envelope can't fit the budget
+    // must be refused with 507 without evicting the residents.
+    let mut probed_507 = false;
+    for net in &nets {
+        if net.envelope(&net.cfg(QFormat::FP32, QFormat::FP32)) > budget {
+            let body = format!("{{\"net\":\"{}\"}}", net.name);
+            let (st, _) = http_post(addr, "/v1/classify", &body)?;
+            ensure!(st == 507, "over-budget probe on {}: {st}", net.name);
+            probed_507 = true;
+            break;
+        }
+    }
+
+    // Stats, SLO and the memory bound.
+    let (st, stats) = http_get(addr, "/v1/stats")?;
+    ensure!(st == 200, "stats: {st}");
+    let p99 = stats.get("latency_us_p99").and_then(Json::as_f64).context("stats: no p99")?;
+    let p50 = stats.get("latency_us_p50").and_then(Json::as_f64).context("stats: no p50")?;
+    let p95 = stats.get("latency_us_p95").and_then(Json::as_f64).context("stats: no p95")?;
+    let slo_us = a.f64("slo-ms")? * 1000.0;
+    ensure!(p99 <= slo_us, "p99 {p99} us over the {slo_us} us SLO");
+    let cache = stats.get("cache").context("stats: no cache block")?;
+    let hits = cache.get("hits").and_then(Json::as_u64).unwrap_or(0);
+    let evictions = cache.get("evictions").and_then(Json::as_u64).unwrap_or(0);
+    let resident = cache.get("resident_bytes").and_then(Json::as_f64).unwrap_or(f64::MAX);
+    ensure!(hits > 0, "vacuous smoke: the workload produced no cache hits");
+    ensure!(evictions > 0, "vacuous smoke: the tight budget produced no evictions");
+    ensure!(resident <= budget, "resident {resident} B over budget {budget} B");
+    let peak_rss = util::peak_rss_bytes().context("no /proc peak RSS on this platform")?;
+    let slack = mib(a.f64("slack-mb")?);
+    ensure!(
+        (peak_rss as f64) <= budget + slack,
+        "peak RSS {} over --mem-budget {} + slack {}",
+        util::human_bytes(peak_rss as f64),
+        util::human_bytes(budget),
+        util::human_bytes(slack)
+    );
+    ensure!(checked == n_req, "vacuous smoke: {checked}/{n_req} predictions checked");
+
+    // Archive the record next to BENCH_*/MEM_* artifacts.
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("mode", Json::str("smoke")),
+        ("backend", Json::str(backend.label())),
+        ("storage", Json::str(storage.label())),
+        ("requests_checked", Json::num(checked as f64)),
+        ("probed_507", Json::Bool(probed_507)),
+        ("mem_budget_bytes", Json::num(budget)),
+        ("slack_bytes", Json::num(slack)),
+        ("peak_rss_bytes", Json::num(peak_rss as f64)),
+        ("slo_us", Json::num(slo_us)),
+        ("stats", stats.clone()),
+    ]);
+    let path = std::path::PathBuf::from(a.str("out-dir")).join("SERVE_smoke.json");
+    util::write_file(&path, doc.pretty().as_bytes())?;
+
+    server.shutdown();
+    println!("  {checked} live requests checked against the reference oracle");
+    println!("  latency p50 {p50:.0} us  p95 {p95:.0} us  p99 {p99:.0} us (SLO {slo_us:.0} us)");
+    let resident_h = util::human_bytes(resident);
+    println!("  cache hits {hits}  evictions {evictions}  resident {resident_h}");
     println!(
-        "  throughput        {:.1} req/s   {:.0} images/s",
-        n_req as f64 / wall.as_secs_f64(),
-        (n_req * n_images) as f64 / wall.as_secs_f64()
+        "  peak RSS {} within budget {} + slack {}",
+        util::human_bytes(peak_rss as f64),
+        util::human_bytes(budget),
+        util::human_bytes(slack)
     );
-    println!(
-        "  latency           p50 {}  p95 {}  p99 {}  max {}",
-        util::human_duration(p(0.50)),
-        util::human_duration(p(0.95)),
-        util::human_duration(p(0.99)),
-        util::human_duration(*sorted.last().unwrap())
-    );
-    let busy = coord.busy_time().as_secs_f64();
-    println!(
-        "  worker utilization {:.0}%  (busy {:.2}s over {} workers)",
-        100.0 * busy / (wall.as_secs_f64() * coord.n_workers as f64),
-        busy,
-        coord.n_workers
-    );
+    println!("  serve json -> {}", path.display());
     Ok(())
+}
+
+// ---- minimal smoke HTTP client (pure std) -------------------------------
+
+fn http_get(addr: SocketAddr, path: &str) -> Result<(u16, Json)> {
+    let req = format!("GET {path} HTTP/1.1\r\nHost: smoke\r\nConnection: close\r\n\r\n");
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(req.as_bytes())?;
+    read_response(&mut BufReader::new(stream))
+}
+
+fn http_post(addr: SocketAddr, path: &str, body: &str) -> Result<(u16, Json)> {
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: smoke\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(req.as_bytes())?;
+    read_response(&mut BufReader::new(stream))
+}
+
+/// Two identical classify requests written back-to-back on one
+/// keep-alive connection before any response is read — exercises the
+/// daemon's pipelining over a real socket.
+fn http_pipelined_pair(addr: SocketAddr, body: &str) -> Result<(u16, u16)> {
+    let one = format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: smoke\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("{one}{one}").as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let (s1, _) = read_response(&mut reader)?;
+    let (s2, _) = read_response(&mut reader)?;
+    Ok((s1, s2))
+}
+
+/// Declare a body one byte over the cap without sending it; the daemon
+/// must refuse at the header stage with 413.
+fn http_oversized_probe(addr: SocketAddr, declared: usize) -> Result<u16> {
+    let req = format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: smoke\r\nContent-Length: {declared}\r\n\r\n"
+    );
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(req.as_bytes())?;
+    let (st, _) = read_response(&mut BufReader::new(stream))?;
+    Ok(st)
+}
+
+/// Parse one `HTTP/1.1` response: status + JSON body (Null when empty).
+fn read_response(r: &mut impl BufRead) -> Result<(u16, Json)> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .with_context(|| format!("bad status line {line:?}"))?
+        .parse()?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            bail!("eof inside response headers");
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse()?;
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)?;
+    if body.is_empty() {
+        return Ok((status, Json::Null));
+    }
+    Ok((status, Json::parse(std::str::from_utf8(&body)?).map_err(anyhow::Error::from)?))
 }

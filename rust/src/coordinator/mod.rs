@@ -296,8 +296,10 @@ impl Drop for Coordinator {
 /// to one thread *per core* in every worker — `workers × cores` compute
 /// threads for the pool — so when `QBOUND_THREADS` is unset the core
 /// budget is divided across the workers instead (an explicit setting
-/// always wins).
-fn backend_for_worker(kind: BackendKind, n_workers: usize) -> Result<Box<dyn Backend>> {
+/// always wins). Shared with the serve daemon's worker pool
+/// ([`crate::serve`]), which has the same per-worker thread-budget
+/// problem.
+pub(crate) fn backend_for_worker(kind: BackendKind, n_workers: usize) -> Result<Box<dyn Backend>> {
     if kind == BackendKind::Fast && std::env::var_os("QBOUND_THREADS").is_none() {
         let per_worker = (default_workers() / n_workers.max(1)).max(1);
         return Ok(Box::new(crate::backend::fast::FastBackend::with_options(

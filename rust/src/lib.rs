@@ -34,6 +34,7 @@
 //! | [`eval`] | batched top-1 evaluation with config-keyed memoization |
 //! | [`coordinator`] | worker-pool evaluation service (one backend/thread) |
 //! | [`search`] | uniform/per-layer sweeps, greedy descent, Pareto, Table 2 |
+//! | [`serve`] | footprint-budgeted HTTP inference daemon (`qbound serve`) |
 //! | [`report`] | tables, ASCII charts, CSV/markdown emitters |
 //! | [`tensor`], [`util`], [`cli`], [`prng`], [`testkit`], [`benchkit`] | substrates |
 
@@ -54,6 +55,7 @@ pub mod repro;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod tensor;
 pub mod testkit;
 pub mod traffic;

@@ -10,7 +10,7 @@
 //!   footprint                fp32 vs best-config data footprint per net
 //!   check-mem                CI gate: measured peak RSS vs modeled envelope
 //!   repro <exp>              regenerate a paper table/figure (or `all`)
-//!   serve                    replay a Poisson request stream (E2E driver)
+//!   serve                    footprint-budgeted HTTP inference daemon
 //!   gen-artifacts            synthesize a pure-Rust artifact set
 
 use anyhow::Result;
@@ -43,7 +43,7 @@ COMMANDS:
   footprint      fp32 vs best-config data footprint (text + JSON)
   check-mem      fail if measured MEM_*.json peaks escape the modeled envelope
   repro          regenerate paper experiments: table1 fig1 fig2 fig3 fig4 fig5 table2 all
-  serve          serve a timed classification request stream (E2E driver)
+  serve          footprint-budgeted HTTP inference daemon (--smoke self-test)
   gen-artifacts  synthesize a pure-Rust artifact set (no python needed)
 
 Run `qbound <COMMAND> --help` for options.

@@ -79,6 +79,38 @@ pub struct Footprint {
 /// allocates nothing — the greedy descent prices every candidate
 /// neighbour through [`FootprintModel::ratio`], so this sits on the
 /// search hot path.
+///
+/// # Examples
+///
+/// A single 16→10 fc layer: 160 weight elements plus 26 boundary
+/// activations. Q1.7 weights and Q6.2 data both store 8-bit codes, so
+/// the footprint is exactly a quarter of fp32; the serving/`check-mem`
+/// envelope adds the f32 scratch windows on top:
+///
+/// ```
+/// use qbound::memory::FootprintModel;
+/// use qbound::quant::QFormat;
+/// use qbound::search::space::PrecisionConfig;
+/// # use qbound::nets::{LayerMeta, NetManifest, ParamMeta};
+/// # let manifest = NetManifest {
+/// #     name: "toy".into(), dataset: "synmnist".into(), num_classes: 10,
+/// #     input_shape: vec![4, 4, 1], batch: 8, n_eval: 64, baseline_top1: 0.9,
+/// #     layers: vec![LayerMeta { name: "fc".into(), kind: "fc".into(), in_elems: 16,
+/// #         out_elems: 10, weight_elems: 160, macs: 160, stages: vec!["fc".into()] }],
+/// #     params: vec![ParamMeta { name: "w".into(), shape: vec![160] }],
+/// #     hlo_file: "x".into(), weights_file: "x".into(), dataset_file: "x".into(),
+/// #     stage_variant: None, dir: std::path::PathBuf::from("/tmp"),
+/// # };
+/// let fpm = FootprintModel::new(&manifest);
+/// assert_eq!(fpm.fp32().total_bytes, (160.0 + 26.0) * 4.0);
+///
+/// let cfg = PrecisionConfig::uniform(1, QFormat::new(1, 7), QFormat::new(6, 2));
+/// assert_eq!(fpm.footprint(&cfg).total_bytes, 160.0 + 26.0);
+/// assert_eq!(fpm.reduction(&cfg), 0.75);
+///
+/// // 26 f32 window elements and no panel padding: the realized bound.
+/// assert_eq!(fpm.fused_envelope(&cfg, 26, &[0]), 186.0 + 4.0 * 26.0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct FootprintModel {
     layers: Vec<(String, u64, u64, u64)>, // (name, in, out, weights)

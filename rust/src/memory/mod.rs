@@ -45,7 +45,7 @@ pub use packed::{storage_width, PackedBuf, PackedCursor, PackedPanels, MAX_PACK_
 use anyhow::{bail, Result};
 
 /// How executors store activations *between* layers.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum StorageMode {
     /// Quantize in place, keep the f32 representation (default).
     #[default]

@@ -58,6 +58,28 @@ pub fn storage_width(fmt: QFormat) -> u32 {
 /// Reusable: [`PackedBuf::pack_into`] re-sizes in place, so executors
 /// keep one buffer per scratch arena and the steady state allocates
 /// nothing.
+///
+/// # Examples
+///
+/// Pack a tensor at Q4.2 (6 bits per value) and decode it back; the
+/// decode is bit-identical to [`QFormat::quantize_slice`] up to the
+/// single two's-complement zero:
+///
+/// ```
+/// use qbound::memory::PackedBuf;
+/// use qbound::quant::QFormat;
+///
+/// let fmt = QFormat::new(4, 2);
+/// let xs = [0.3f32, -1.26, 7.9, -8.0];
+/// let buf = PackedBuf::pack(fmt, &xs);
+/// assert_eq!(buf.len(), 4);
+/// assert_eq!(buf.width(), 6);
+/// assert_eq!(buf.packed_bytes(), (4 * 6 + 7) / 8); // 3 bytes, not 16
+///
+/// let mut out = [0f32; 4];
+/// buf.unpack_into(fmt, &mut out);
+/// assert_eq!(out, [0.25, -1.25, 7.75, -8.0]);
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct PackedBuf {
     words: Vec<u64>,
@@ -279,9 +301,32 @@ impl<'a> PackedCursor<'a> {
 /// two's-complement zero), so decoding before an unchanged ascending-k
 /// accumulation is bit-identical to multiplying the quantized f32
 /// panels directly.
+///
+/// The pack-time [`QFormat`] is stored inside the struct and every
+/// decode uses it — a same-width wrong-format read (e.g. Q4.3 codes
+/// rescaled as Q3.4) is structurally impossible, not merely asserted.
+///
+/// # Examples
+///
+/// ```
+/// use qbound::memory::PackedPanels;
+/// use qbound::quant::QFormat;
+///
+/// // Two panels of 3 rows x 4 lanes, packed at Q2.5 (7 bits/value).
+/// let fmt = QFormat::new(2, 5);
+/// let vals: Vec<f32> = (0..24).map(|i| i as f32 * 0.11 - 1.3).collect();
+/// let pp = PackedPanels::pack(fmt, &vals, 3, 4);
+/// assert_eq!((pp.fmt(), pp.n_panels(), pp.width()), (fmt, 2, 7));
+///
+/// // Decode rows 1..3 of panel 1: one GEMM tile strip.
+/// let mut strip = [0f32; 2 * 4];
+/// pp.read_strip(1, 1, 3, &mut strip);
+/// assert_eq!(strip[0], fmt.quantize(vals[(3 + 1) * 4]));
+/// ```
 #[derive(Clone, Debug)]
 pub struct PackedPanels {
     buf: PackedBuf,
+    fmt: QFormat,
     kd: usize,
     nr: usize,
     n_panels: usize,
@@ -289,16 +334,24 @@ pub struct PackedPanels {
 
 impl PackedPanels {
     /// Pack a panelized matrix (`n_panels · kd · nr` values, ragged
-    /// last panel already zero-padded) under `fmt`.
+    /// last panel already zero-padded) under `fmt`. The format is
+    /// captured in the struct; [`PackedPanels::read_strip`] decodes
+    /// with it.
     pub fn pack(fmt: QFormat, panels: &[f32], kd: usize, nr: usize) -> PackedPanels {
         assert!(kd > 0 && nr > 0, "degenerate panel shape {kd}x{nr}");
         assert!(panels.len() % (kd * nr) == 0, "ragged panel slice");
         PackedPanels {
             buf: PackedBuf::pack(fmt, panels),
+            fmt,
             kd,
             nr,
             n_panels: panels.len() / (kd * nr),
         }
+    }
+
+    /// The format the panels were packed (and are decoded) with.
+    pub fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     /// Rows per panel (the GEMM `k` depth).
@@ -335,12 +388,13 @@ impl PackedPanels {
     }
 
     /// Decode rows `[k0, k1)` of panel `panel` into `out`
-    /// (`(k1 - k0) · nr` values) — one GEMM tile strip.
-    pub fn read_strip(&self, fmt: QFormat, panel: usize, k0: usize, k1: usize, out: &mut [f32]) {
+    /// (`(k1 - k0) · nr` values) — one GEMM tile strip, decoded with
+    /// the stored pack-time format.
+    pub fn read_strip(&self, panel: usize, k0: usize, k1: usize, out: &mut [f32]) {
         assert!(panel < self.n_panels, "panel {panel} out of {}", self.n_panels);
         assert!(k0 <= k1 && k1 <= self.kd, "strip rows {k0}..{k1} out of {}", self.kd);
         assert_eq!(out.len(), (k1 - k0) * self.nr, "strip window size");
-        self.buf.unpack_range_into(fmt, (panel * self.kd + k0) * self.nr, out);
+        self.buf.unpack_range_into(self.fmt, (panel * self.kd + k0) * self.nr, out);
     }
 }
 
@@ -521,13 +575,14 @@ mod tests {
         let want = quantized_canonical(fmt, &raw);
         let pp = PackedPanels::pack(fmt, &raw, kd, nr);
         assert_eq!((pp.kd(), pp.nr(), pp.n_panels()), (kd, nr, n_panels));
+        assert_eq!(pp.fmt(), fmt);
         assert_eq!(pp.len(), raw.len());
         assert_eq!(pp.width(), 7);
         // Whole panels and interior strips, every panel.
         for p in 0..n_panels {
             for (k0, k1) in [(0usize, kd), (0, 1), (1, 4), (kd - 1, kd), (2, 2)] {
                 let mut got = vec![f32::NAN; (k1 - k0) * nr];
-                pp.read_strip(fmt, p, k0, k1, &mut got);
+                pp.read_strip(p, k0, k1, &mut got);
                 let lo = (p * kd + k0) * nr;
                 for (i, (a, b)) in got.iter().zip(&want[lo..lo + got.len()]).enumerate() {
                     assert_eq!(a.to_bits(), b.to_bits(), "panel {p} rows {k0}..{k1} elem {i}");
@@ -541,9 +596,10 @@ mod tests {
         let raw = [0.1f32, -0.0, 1e20, -3.5]; // kd=2, nr=2, one panel
         let pp = PackedPanels::pack(QFormat::FP32, &raw, 2, 2);
         assert_eq!(pp.width(), 32);
+        assert!(pp.fmt().is_fp32());
         assert_eq!(pp.packed_bytes(), 16);
         let mut got = vec![0f32; 2];
-        pp.read_strip(QFormat::FP32, 0, 1, 2, &mut got);
+        pp.read_strip(0, 1, 2, &mut got);
         assert_eq!(got[0].to_bits(), 1e20f32.to_bits());
         assert_eq!(got[1], -3.5);
     }

@@ -1,0 +1,238 @@
+//! Footprint-budgeted executor admission: the paper's §3 memory model
+//! as serving capacity currency.
+//!
+//! The daemon keys resident executors by [`CacheKey`] — `(net,
+//! PrecisionConfig, backend, storage)` — and admits a new one only
+//! while the sum of every resident executor's
+//! [`FootprintModel::fused_envelope`](crate::memory::FootprintModel::fused_envelope)
+//! cost stays within the global `--mem-budget`. When a new key doesn't
+//! fit, least-recently-used keys are evicted until it does (or the
+//! request is refused outright if the key alone exceeds the budget).
+//!
+//! [`CacheLedger`] is deliberately executor-free — it tracks keys,
+//! modeled costs, recency and worker placement, nothing that needs a
+//! loaded network — so the admission math is unit-testable without
+//! artifacts, and the server layer owns the actual executor lifetime
+//! (workers drop evicted executors when the eviction message reaches
+//! them). The invariant the tests pin: the resident cost sum never
+//! exceeds the budget, before or after any admission.
+
+use std::collections::HashMap;
+
+use crate::backend::BackendKind;
+use crate::memory::StorageMode;
+use crate::search::space::PrecisionConfig;
+
+/// Identity of one resident executor: everything that changes the
+/// resident bytes or the numerics.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub net: String,
+    pub cfg: PrecisionConfig,
+    pub backend: BackendKind,
+    pub storage: StorageMode,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    /// Modeled resident bytes (the fused envelope of the config).
+    cost: f64,
+    /// Logical clock of the last touch (admission or routed request).
+    last_used: u64,
+    /// Worker the executor lives on.
+    worker: usize,
+}
+
+/// Verdict of one [`CacheLedger::admit`] call.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Admission {
+    /// Already resident: route to its worker.
+    Resident { worker: usize },
+    /// Admitted after evicting `evicted` (possibly empty): the caller
+    /// must load the executor on `worker` and drop the evicted ones.
+    Admitted { worker: usize, evicted: Vec<CacheKey> },
+    /// The key's cost alone exceeds the budget — no eviction pattern
+    /// can ever fit it.
+    TooLarge,
+}
+
+/// The executor-placement ledger: budget arithmetic, LRU recency and
+/// worker load, no executors.
+pub struct CacheLedger {
+    budget: f64,
+    n_workers: usize,
+    tick: u64,
+    entries: HashMap<CacheKey, Entry>,
+    /// Lifetime counters surfaced in `/v1/stats` and `SERVE_*.json`.
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheLedger {
+    /// A ledger admitting executors worth at most `budget` modeled
+    /// bytes, spread over `n_workers` workers.
+    pub fn new(budget: f64, n_workers: usize) -> CacheLedger {
+        CacheLedger {
+            budget,
+            n_workers: n_workers.max(1),
+            tick: 0,
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Sum of resident modeled costs.
+    pub fn resident_cost(&self) -> f64 {
+        self.entries.values().map(|e| e.cost).sum()
+    }
+
+    pub fn resident_len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn budget(&self) -> f64 {
+        self.budget
+    }
+
+    /// Resolve `key` (with modeled cost `cost`): touch-and-route on a
+    /// hit, or find a placement by evicting LRU keys until it fits.
+    /// Eviction victims come off the ledger immediately — the caller
+    /// owns telling the victims' workers to drop the executors.
+    pub fn admit(&mut self, key: &CacheKey, cost: f64) -> Admission {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(key) {
+            e.last_used = self.tick;
+            self.hits += 1;
+            return Admission::Resident { worker: e.worker };
+        }
+        self.misses += 1;
+        if cost > self.budget {
+            return Admission::TooLarge;
+        }
+        let mut evicted = Vec::new();
+        while self.resident_cost() + cost > self.budget {
+            // Strict LRU: the least-recently-touched key goes first.
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("positive resident cost implies a resident entry");
+            self.entries.remove(&victim);
+            self.evictions += 1;
+            evicted.push(victim);
+        }
+        let worker = self.least_loaded_worker();
+        self.entries.insert(key.clone(), Entry { cost, last_used: self.tick, worker });
+        Admission::Admitted { worker, evicted }
+    }
+
+    /// The worker holding the fewest resident executors (ties to the
+    /// lowest index) — new executors spread across the pool so one
+    /// worker doesn't serialize every config.
+    fn least_loaded_worker(&self) -> usize {
+        let mut load = vec![0usize; self.n_workers];
+        for e in self.entries.values() {
+            load[e.worker] += 1;
+        }
+        (0..self.n_workers).min_by_key(|&w| load[w]).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QFormat;
+
+    fn key(net: &str, fbits: i8) -> CacheKey {
+        CacheKey {
+            net: net.to_string(),
+            cfg: PrecisionConfig::uniform(3, QFormat::new(1, fbits), QFormat::new(8, 0)),
+            backend: BackendKind::Fast,
+            storage: StorageMode::Packed,
+        }
+    }
+
+    #[test]
+    fn admit_at_budget_edge_fits_exactly() {
+        let mut c = CacheLedger::new(100.0, 2);
+        assert_eq!(c.admit(&key("a", 1), 60.0), Admission::Admitted { worker: 0, evicted: vec![] });
+        // 60 + 40 == 100: exactly at the budget is admitted, no eviction.
+        assert_eq!(c.admit(&key("b", 1), 40.0), Admission::Admitted { worker: 1, evicted: vec![] });
+        assert_eq!(c.resident_cost(), 100.0);
+        // One more byte would not have fit: a third key forces eviction.
+        match c.admit(&key("c", 1), 1.0) {
+            Admission::Admitted { evicted, .. } => assert_eq!(evicted, vec![key("a", 1)]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn over_budget_key_is_too_large_not_evicting() {
+        let mut c = CacheLedger::new(100.0, 1);
+        assert!(matches!(c.admit(&key("a", 1), 80.0), Admission::Admitted { .. }));
+        assert_eq!(c.admit(&key("b", 1), 100.1), Admission::TooLarge);
+        // Nothing was evicted for an impossible key.
+        assert_eq!(c.resident_len(), 1);
+        assert_eq!(c.evictions, 0);
+    }
+
+    #[test]
+    fn lru_eviction_order_follows_touches() {
+        let mut c = CacheLedger::new(90.0, 1);
+        c.admit(&key("a", 1), 30.0);
+        c.admit(&key("b", 1), 30.0);
+        c.admit(&key("c", 1), 30.0);
+        // Touch a, then b: c is now least recent.
+        assert_eq!(c.admit(&key("a", 1), 30.0), Admission::Resident { worker: 0 });
+        assert_eq!(c.admit(&key("b", 1), 30.0), Admission::Resident { worker: 0 });
+        match c.admit(&key("d", 1), 60.0) {
+            // Evicts c then a (two LRU victims) to fit 60.
+            Admission::Admitted { evicted, .. } => {
+                assert_eq!(evicted, vec![key("c", 1), key("a", 1)]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!((c.hits, c.misses, c.evictions), (2, 4, 2));
+    }
+
+    #[test]
+    fn resident_sum_never_exceeds_budget() {
+        let mut c = CacheLedger::new(100.0, 3);
+        let costs = [55.0, 10.0, 45.0, 100.0, 1.0, 99.5, 37.0, 63.0, 0.5];
+        for (i, &cost) in costs.iter().enumerate() {
+            let verdict = c.admit(&key("net", i as i8 + 1), cost);
+            assert_ne!(verdict, Admission::TooLarge, "cost {cost} fits the budget");
+            assert!(
+                c.resident_cost() <= c.budget() + 1e-9,
+                "after admitting {cost}: resident {} > budget {}",
+                c.resident_cost(),
+                c.budget()
+            );
+        }
+    }
+
+    #[test]
+    fn workers_balance_by_resident_count() {
+        let mut c = CacheLedger::new(1e9, 3);
+        let workers: Vec<usize> = (0..6)
+            .map(|i| match c.admit(&key("n", i as i8 + 1), 10.0) {
+                Admission::Admitted { worker, .. } => worker,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(workers, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn distinct_configs_are_distinct_keys() {
+        let mut c = CacheLedger::new(1e9, 1);
+        c.admit(&key("a", 1), 10.0);
+        assert!(matches!(c.admit(&key("a", 2), 10.0), Admission::Admitted { .. }));
+        assert_eq!(c.admit(&key("a", 1), 10.0), Admission::Resident { worker: 0 });
+        assert_eq!(c.resident_len(), 2);
+    }
+}

@@ -1,0 +1,406 @@
+//! Minimal hand-rolled HTTP/1.1 layer for the serve daemon — pure std,
+//! no registry deps.
+//!
+//! Scope is exactly what a bounded inference endpoint needs: one
+//! request parser over a [`BufRead`] (keep-alive and pipelining fall
+//! out of calling it in a loop on one connection) and one response
+//! writer that always emits `Content-Length` so the connection framing
+//! never depends on close semantics. Chunked transfer encoding is
+//! deliberately not implemented (501): request bodies are small JSON
+//! documents whose size must be known up front for admission control.
+//!
+//! Error mapping (locked by the unit tests):
+//!
+//! | condition | status |
+//! |---|---|
+//! | malformed start line / header / version | 400 |
+//! | body without `Content-Length`           | 411 |
+//! | body over the configured cap            | 413 |
+//! | headers over [`MAX_HEADER_BYTES`]       | 431 |
+//! | `Transfer-Encoding: chunked`            | 501 |
+
+use std::io::{BufRead, Read, Write};
+
+use crate::util::json::Json;
+
+/// Cap on the start line + headers of one request. Far above anything a
+/// legitimate client sends; a stream that exceeds it is hostile or
+/// corrupt and gets a 431.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// One parsed request. Header names are lowercased at parse time;
+/// values keep their case with surrounding whitespace trimmed.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw query string (without the `?`), empty if absent.
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response
+    /// (HTTP/1.1 default, overridden by `Connection: close`; HTTP/1.0
+    /// only with `Connection: keep-alive`).
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// First value of header `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A request-level protocol error, mapped to the status the connection
+/// handler should answer with before closing.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub reason: String,
+}
+
+impl HttpError {
+    fn new(status: u16, reason: impl Into<String>) -> HttpError {
+        HttpError { status, reason: reason.into() }
+    }
+}
+
+/// Outcome of one [`read_request`] call on a keep-alive connection.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// Clean EOF before any request byte — the peer closed between
+    /// requests, not an error.
+    Closed,
+    Request(HttpRequest),
+}
+
+/// Read and parse one request. `max_body` caps the declared
+/// `Content-Length` (413 beyond it). I/O failures mid-request surface
+/// as 400 — by then the stream framing is unrecoverable either way.
+pub fn read_request(r: &mut impl BufRead, max_body: usize) -> Result<ReadOutcome, HttpError> {
+    let mut header_bytes = 0usize;
+    let start = match read_line(r, &mut header_bytes)? {
+        None => return Ok(ReadOutcome::Closed),
+        Some(line) => line,
+    };
+    let mut parts = start.split(' ');
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+            _ => return Err(HttpError::new(400, format!("malformed start line {start:?}"))),
+        };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, format!("malformed method {method:?}")));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::new(400, format!("unsupported version {version:?}"))),
+    };
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, &mut header_bytes)? {
+            None => return Err(HttpError::new(400, "eof inside headers")),
+            Some(line) => line,
+        };
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, format!("malformed header {line:?}")))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::new(400, format!("malformed header name {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let find = |name: &str| headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str());
+    if find("transfer-encoding").is_some_and(|v| !v.eq_ignore_ascii_case("identity")) {
+        return Err(HttpError::new(501, "transfer-encoding not supported"));
+    }
+    let body = match find("content-length") {
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| HttpError::new(400, format!("bad content-length {v:?}")))?;
+            if n > max_body {
+                return Err(HttpError::new(413, format!("body {n} B over the {max_body} B cap")));
+            }
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body).map_err(|e| HttpError::new(400, format!("body read: {e}")))?;
+            body
+        }
+        None if method == "POST" || method == "PUT" => {
+            return Err(HttpError::new(411, "length required"));
+        }
+        None => Vec::new(),
+    };
+
+    let keep_alive = match find("connection").map(str::to_ascii_lowercase) {
+        Some(c) if c == "close" => false,
+        Some(c) if c == "keep-alive" => true,
+        _ => http11,
+    };
+    Ok(ReadOutcome::Request(HttpRequest {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body,
+        keep_alive,
+    }))
+}
+
+/// One CRLF-terminated line (LF tolerated), `None` on clean EOF at a
+/// line start, 431 when the cumulative header budget runs out.
+fn read_line(r: &mut impl BufRead, header_bytes: &mut usize) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    let budget = MAX_HEADER_BYTES - *header_bytes;
+    let n = r
+        .by_ref()
+        .take(budget as u64)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| HttpError::new(400, format!("read: {e}")))?;
+    if n == 0 {
+        return if budget == 0 {
+            Err(HttpError::new(431, "headers too large"))
+        } else {
+            Ok(None)
+        };
+    }
+    if buf.last() != Some(&b'\n') {
+        // Budget exhausted mid-line or EOF without a terminator.
+        return if n == budget {
+            Err(HttpError::new(431, "headers too large"))
+        } else {
+            Err(HttpError::new(400, "truncated line"))
+        };
+    }
+    *header_bytes += n;
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| HttpError::new(400, "non-utf8 header line"))
+}
+
+/// The standard reason phrase for the statuses the daemon emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        507 => "Insufficient Storage",
+        _ => "Unknown",
+    }
+}
+
+/// One response, always framed with an explicit `Content-Length`.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+    pub content_type: &'static str,
+    /// Emitted as a `Retry-After` header (seconds) — the backpressure
+    /// hint on 429/503.
+    pub retry_after: Option<u32>,
+    /// Ask the client to close (mirrors the request's keep-alive and
+    /// forces close after protocol errors).
+    pub close: bool,
+}
+
+impl HttpResponse {
+    /// A JSON 200/error payload.
+    pub fn json(status: u16, body: &Json) -> HttpResponse {
+        HttpResponse {
+            status,
+            body: body.to_string().into_bytes(),
+            content_type: "application/json",
+            retry_after: None,
+            close: false,
+        }
+    }
+
+    /// A JSON error envelope: `{"error": status, "reason": msg}`.
+    pub fn error(status: u16, reason: &str) -> HttpResponse {
+        HttpResponse::json(
+            status,
+            &Json::obj(vec![
+                ("error", Json::num(status as f64)),
+                ("reason", Json::str(reason)),
+            ]),
+        )
+    }
+
+    pub fn with_retry_after(mut self, secs: u32) -> HttpResponse {
+        self.retry_after = Some(secs);
+        self
+    }
+
+    /// Serialize to the wire.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, status_reason(self.status))?;
+        write!(w, "Content-Type: {}\r\n", self.content_type)?;
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        if let Some(secs) = self.retry_after {
+            write!(w, "Retry-After: {secs}\r\n")?;
+        }
+        if self.close {
+            write!(w, "Connection: close\r\n")?;
+        }
+        write!(w, "\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(bytes: &[u8]) -> Result<ReadOutcome, HttpError> {
+        read_request(&mut std::io::BufReader::new(bytes), 4096)
+    }
+
+    fn request(bytes: &[u8]) -> HttpRequest {
+        match parse(bytes) {
+            Ok(ReadOutcome::Request(r)) => r,
+            other => panic!("expected a request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_get_with_query_and_headers() {
+        let r = request(b"GET /v1/stats?pretty=1 HTTP/1.1\r\nHost: x\r\nX-Tag: a b \r\n\r\n");
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/stats");
+        assert_eq!(r.query, "pretty=1");
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.header("X-TAG"), Some("a b"));
+        assert!(r.body.is_empty());
+        assert!(r.keep_alive);
+    }
+
+    #[test]
+    fn parses_post_body_exactly() {
+        let r = request(b"POST /v1/classify HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd");
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_error() {
+        assert!(matches!(parse(b"").unwrap(), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn malformed_start_lines_are_400() {
+        for bad in [
+            &b"GET\r\n\r\n"[..],
+            b"GET /x\r\n\r\n",
+            b"GET /x HTTP/1.1 extra\r\n\r\n",
+            b"get /x HTTP/1.1\r\n\r\n",
+            b"GET /x HTTP/2\r\n\r\n",
+            b" /x HTTP/1.1\r\n\r\n",
+        ] {
+            let err = parse(bad).unwrap_err();
+            assert_eq!(err.status, 400, "{:?} -> {}", bad, err.reason);
+        }
+    }
+
+    #[test]
+    fn malformed_headers_are_400() {
+        assert_eq!(parse(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse(b"GET / HTTP/1.1\r\nbad name: v\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse(b"GET / HTTP/1.1\r\nHost: x").unwrap_err().status, 400); // truncated
+    }
+
+    #[test]
+    fn oversized_body_is_413_and_missing_length_is_411() {
+        let huge = b"POST / HTTP/1.1\r\nContent-Length: 5000\r\n\r\n";
+        assert_eq!(parse(huge).unwrap_err().status, 413);
+        assert_eq!(parse(b"POST / HTTP/1.1\r\n\r\n").unwrap_err().status, 411);
+        let neg = parse(b"POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\nx");
+        assert_eq!(neg.unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn oversized_headers_are_431() {
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        req.extend_from_slice(format!("X-Pad: {}\r\n", "p".repeat(MAX_HEADER_BYTES)).as_bytes());
+        req.extend_from_slice(b"\r\n");
+        assert_eq!(parse(&req).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn chunked_is_501() {
+        let req = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert_eq!(parse(req).unwrap_err().status, 501);
+    }
+
+    #[test]
+    fn connection_semantics() {
+        assert!(!request(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").keep_alive);
+        assert!(!request(b"GET / HTTP/1.0\r\n\r\n").keep_alive);
+        assert!(request(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").keep_alive);
+    }
+
+    #[test]
+    fn pipelined_keep_alive_requests_parse_in_sequence() {
+        let wire = b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                     GET /b HTTP/1.1\r\n\r\n\
+                     GET /c HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut r = std::io::BufReader::new(&wire[..]);
+        let a = match read_request(&mut r, 4096).unwrap() {
+            ReadOutcome::Request(req) => req,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((a.path.as_str(), &a.body[..]), ("/a", &b"hi"[..]));
+        assert!(a.keep_alive);
+        let b = match read_request(&mut r, 4096).unwrap() {
+            ReadOutcome::Request(req) => req,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(b.path, "/b");
+        let c = match read_request(&mut r, 4096).unwrap() {
+            ReadOutcome::Request(req) => req,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(c.path, "/c");
+        assert!(!c.keep_alive);
+        assert!(matches!(read_request(&mut r, 4096).unwrap(), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let body = Json::obj(vec![("ok", Json::Bool(true))]);
+        let mut out = Vec::new();
+        HttpResponse::json(200, &body).write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"), "{text}");
+
+        let mut out = Vec::new();
+        HttpResponse::error(429, "queue full").with_retry_after(1).write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Serving metrics: latency percentiles and lifetime counters,
+//! snapshotted into `/v1/stats` responses and `SERVE_*.json` artifacts.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// How many latency samples the reservoir keeps before it stops
+/// recording new ones — a hard cap so the metrics themselves honor the
+/// bounded-memory story (64k × 8 B = 512 KiB worst case).
+const MAX_SAMPLES: usize = 65_536;
+
+/// Accumulates per-request latency samples and per-status counters.
+#[derive(Default)]
+pub struct ServeMetrics {
+    latencies_us: Vec<u64>,
+    dropped_samples: u64,
+    by_status: BTreeMap<u16, u64>,
+    pub rejected_busy: u64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// Record one completed request: its HTTP status and, for
+    /// successful classifications, the end-to-end latency.
+    pub fn record(&mut self, status: u16, latency_us: Option<u64>) {
+        *self.by_status.entry(status).or_insert(0) += 1;
+        if let Some(us) = latency_us {
+            if self.latencies_us.len() < MAX_SAMPLES {
+                self.latencies_us.push(us);
+            } else {
+                self.dropped_samples += 1;
+            }
+        }
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.by_status.values().sum()
+    }
+
+    pub fn count(&self, status: u16) -> u64 {
+        self.by_status.get(&status).copied().unwrap_or(0)
+    }
+
+    /// Latency percentile in microseconds over the recorded samples
+    /// (nearest-rank on the sorted vector), or `None` with no samples.
+    pub fn percentile_us(&self, q: f64) -> Option<u64> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        Some(sorted[idx.min(sorted.len() - 1)])
+    }
+
+    /// The stats object served at `/v1/stats` and archived in
+    /// `SERVE_*.json` (cache counters are merged in by the caller,
+    /// which owns the ledger).
+    pub fn snapshot(&self) -> Json {
+        let statuses = Json::Obj(
+            self.by_status.iter().map(|(s, n)| (s.to_string(), Json::num(*n as f64))).collect(),
+        );
+        let pct = |q: f64| match self.percentile_us(q) {
+            Some(us) => Json::num(us as f64),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("requests", Json::num(self.requests() as f64)),
+            ("rejected_busy", Json::num(self.rejected_busy as f64)),
+            ("latency_samples", Json::num(self.latencies_us.len() as f64)),
+            ("dropped_samples", Json::num(self.dropped_samples as f64)),
+            ("latency_us_p50", pct(0.50)),
+            ("latency_us_p95", pct(0.95)),
+            ("latency_us_p99", pct(0.99)),
+            ("by_status", statuses),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_over_known_distribution() {
+        let mut m = ServeMetrics::new();
+        // 1..=100 µs, shuffled order must not matter.
+        for v in (1..=100u64).rev() {
+            m.record(200, Some(v));
+        }
+        assert_eq!(m.percentile_us(0.0), Some(1));
+        assert_eq!(m.percentile_us(0.50), Some(51)); // round(99 * 0.5) = 50
+        assert_eq!(m.percentile_us(0.95), Some(95));
+        assert_eq!(m.percentile_us(0.99), Some(99));
+        assert_eq!(m.percentile_us(1.0), Some(100));
+    }
+
+    #[test]
+    fn empty_metrics_have_no_percentiles_and_null_snapshot_fields() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.percentile_us(0.5), None);
+        let snap = m.snapshot();
+        assert!(snap.get("latency_us_p50").unwrap().is_null());
+        assert_eq!(snap.get("requests").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn status_counts_and_snapshot_roundtrip() {
+        let mut m = ServeMetrics::new();
+        m.record(200, Some(120));
+        m.record(200, Some(80));
+        m.record(404, None);
+        m.record(429, None);
+        m.rejected_busy = 1;
+        assert_eq!(m.requests(), 4);
+        assert_eq!(m.count(200), 2);
+        assert_eq!(m.count(429), 1);
+        let text = m.snapshot().to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("requests").unwrap().as_u64(), Some(4));
+        assert_eq!(back.get("rejected_busy").unwrap().as_u64(), Some(1));
+        assert_eq!(back.get("by_status").unwrap().get("200").unwrap().as_u64(), Some(2));
+        assert_eq!(back.get("latency_us_p50").unwrap().as_u64(), Some(120));
+    }
+
+    #[test]
+    fn sample_reservoir_is_capped() {
+        let mut m = ServeMetrics::new();
+        for i in 0..(MAX_SAMPLES as u64 + 10) {
+            m.record(200, Some(i));
+        }
+        assert_eq!(m.snapshot().get("latency_samples").unwrap().as_usize(), Some(MAX_SAMPLES));
+        assert_eq!(m.dropped_samples, 10);
+    }
+}

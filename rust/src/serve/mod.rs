@@ -1,0 +1,617 @@
+//! The `qbound serve` daemon: a footprint-budgeted, network-facing
+//! inference service over the fused packed executors.
+//!
+//! This is the paper's bounded-memory deployment story made operational:
+//! the same `FootprintModel::fused_envelope` that the CI `check-mem`
+//! gate holds measured peaks against becomes the *admission currency*
+//! of a multi-tenant server. Every `(net, PrecisionConfig, backend,
+//! storage)` combination a client asks for is one cacheable executor
+//! with resident packed weights; the [`cache::CacheLedger`] admits
+//! executors only while their modeled envelopes sum within the global
+//! `--mem-budget`, evicting least-recently-used configs under pressure.
+//!
+//! Layering (pure std, no registry deps):
+//!
+//! * [`http`] — hand-rolled HTTP/1.1: one-request parser + explicit
+//!   `Content-Length` responses (keep-alive and pipelining fall out of
+//!   looping the parser over one connection),
+//! * [`queue`] — bounded in-flight admission (429 + `Retry-After`
+//!   backpressure instead of unbounded buffering),
+//! * [`cache`] — the budget/LRU/placement ledger (executor-free, so the
+//!   admission math is unit-tested without artifacts),
+//! * [`metrics`] — latency percentiles + counters for `/v1/stats` and
+//!   the `SERVE_*.json` artifacts,
+//! * this module — the TCP listener, connection threads, and the worker
+//!   pool. Executors are not `Send` (same constraint the
+//!   [`coordinator`](crate::coordinator) works under), so each worker
+//!   thread builds its own backend via the coordinator's per-worker
+//!   thread-budget rule and owns the executors placed on it; dispatch
+//!   routes requests to the worker whose resident packed weights
+//!   already match the requested config.
+//!
+//! Endpoints: `GET /healthz`, `GET /v1/nets`, `GET /v1/stats`,
+//! `POST /v1/classify` with a JSON body like
+//! `{"net": "lenet", "weights": "1.8", "data": "10.4", "index": 7}`.
+
+pub mod cache;
+pub mod http;
+pub mod metrics;
+pub mod queue;
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::backend::lowering::LoweredPlan;
+use crate::backend::{Backend, BackendKind, NetExecutor, Variant};
+use crate::coordinator::{backend_for_worker, default_workers};
+use crate::eval::Dataset;
+use crate::memory::{FootprintModel, StorageMode};
+use crate::nets::{arch, ArtifactIndex, NetManifest};
+use crate::quant::QFormat;
+use crate::search::space::PrecisionConfig;
+use crate::util;
+use crate::util::json::Json;
+
+use cache::{Admission, CacheKey, CacheLedger};
+use http::{HttpRequest, HttpResponse, ReadOutcome};
+use metrics::ServeMetrics;
+use queue::InflightGate;
+
+/// Daemon configuration (the `qbound serve` CLI surface).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address; port 0 asks the OS for an ephemeral port (the
+    /// smoke/test path — read the real one back from [`Server::addr`]).
+    pub addr: String,
+    /// Worker threads (0 = one per core).
+    pub workers: usize,
+    /// Max concurrently admitted requests; beyond it clients get 429.
+    pub queue_depth: usize,
+    /// Global executor-cache budget in modeled bytes.
+    pub mem_budget_bytes: f64,
+    pub backend: BackendKind,
+    pub storage: StorageMode,
+    /// Request-body cap (413 beyond it).
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:8484".to_string(),
+            workers: 0,
+            queue_depth: 64,
+            mem_budget_bytes: 64.0 * 1024.0 * 1024.0,
+            backend: BackendKind::default(),
+            storage: StorageMode::default(),
+            max_body_bytes: 64 * 1024,
+        }
+    }
+}
+
+/// Everything the daemon knows about one servable network, loaded once
+/// at startup and shared read-only with workers and dispatch.
+struct NetInfo {
+    manifest: NetManifest,
+    dataset: Dataset,
+    fpm: FootprintModel,
+    /// f32 scratch-window elements of the fused executor (decode + bias
+    /// windows) — the `window_f32_elems` argument of `fused_envelope`.
+    window_f32_elems: usize,
+    /// Per-layer NR-lane padding elements of the packed GEMM panels.
+    weight_pad_elems: Vec<usize>,
+}
+
+impl NetInfo {
+    /// The admission cost of one executor for `cfg`: the same realized
+    /// residency envelope `qbound eval --mem-json` archives and the CI
+    /// `check-mem` gate enforces.
+    fn envelope(&self, cfg: &PrecisionConfig) -> f64 {
+        self.fpm.fused_envelope(cfg, self.window_f32_elems, &self.weight_pad_elems)
+    }
+}
+
+struct JobReply {
+    pred: usize,
+    label: i32,
+    /// Whether this request paid the executor load (cache miss).
+    loaded: bool,
+}
+
+enum WorkerMsg {
+    Job { key: CacheKey, index: usize, resp: Sender<Result<JobReply, String>> },
+    Evict(CacheKey),
+}
+
+/// Mutable dispatch state, one lock: admission decisions and the
+/// ordered per-worker sends must be atomic so an `Evict(K)` issued
+/// before a later re-admission of `K` can never race past the reload on
+/// the worker's FIFO channel.
+struct Dispatch {
+    ledger: CacheLedger,
+    metrics: ServeMetrics,
+    worker_txs: Vec<Sender<WorkerMsg>>,
+}
+
+struct Shared {
+    nets: Arc<HashMap<String, NetInfo>>,
+    dispatch: Mutex<Dispatch>,
+    gate: InflightGate,
+    backend: BackendKind,
+    storage: StorageMode,
+    max_body: usize,
+    n_workers: usize,
+    queue_depth: usize,
+    stop: AtomicBool,
+}
+
+/// A running daemon: listener thread + worker pool. Dropping (or
+/// calling [`Server::shutdown`]) stops the listener and joins the
+/// workers.
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Load every net in the artifact index at `dir`, spawn the worker
+    /// pool, bind the listener, and start accepting.
+    pub fn start(dir: &Path, opts: &ServeOptions) -> Result<Server> {
+        let n_workers = if opts.workers == 0 { default_workers() } else { opts.workers };
+        // Workers build backends from the environment (the coordinator
+        // pattern): propagate the storage mode before spawning.
+        opts.storage.set_env();
+
+        let index = ArtifactIndex::load(dir)?;
+        let mut nets = HashMap::new();
+        for name in &index.nets {
+            let manifest = NetManifest::load(dir, name)
+                .with_context(|| format!("loading manifest for {name}"))?;
+            let Some(a) = arch::get(name) else {
+                log::warn!("serve: no registered architecture for {name:?}; not serving it");
+                continue;
+            };
+            let plan = LoweredPlan::new(&a, None)?;
+            let dataset = Dataset::load(&manifest)
+                .with_context(|| format!("loading dataset for {name}"))?;
+            nets.insert(name.clone(), NetInfo {
+                fpm: FootprintModel::new(&manifest),
+                window_f32_elems: plan.max_win_elems + plan.max_bias_elems,
+                weight_pad_elems: plan.weight_pad_elems.clone(),
+                manifest,
+                dataset,
+            });
+        }
+        anyhow::ensure!(!nets.is_empty(), "no servable networks in {}", dir.display());
+        let nets = Arc::new(nets);
+
+        let mut worker_txs = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let (tx, rx) = channel::<WorkerMsg>();
+            worker_txs.push(tx);
+            let nets = Arc::clone(&nets);
+            let kind = opts.backend;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, rx, nets, kind, n_workers))?,
+            );
+        }
+
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            nets,
+            dispatch: Mutex::new(Dispatch {
+                ledger: CacheLedger::new(opts.mem_budget_bytes, n_workers),
+                metrics: ServeMetrics::new(),
+                worker_txs,
+            }),
+            gate: InflightGate::new(opts.queue_depth),
+            backend: opts.backend,
+            storage: opts.storage,
+            max_body: opts.max_body_bytes,
+            n_workers,
+            queue_depth: opts.queue_depth,
+            stop: AtomicBool::new(false),
+        });
+
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("serve-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_shared.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let sh = Arc::clone(&accept_shared);
+                            // Connection threads are detached: they end
+                            // when the peer closes or errors out.
+                            let _ = std::thread::Builder::new()
+                                .name("serve-conn".to_string())
+                                .spawn(move || handle_connection(sh, s));
+                        }
+                        Err(e) => log::warn!("serve: accept failed: {e}"),
+                    }
+                }
+            })?;
+
+        log::info!(
+            "serve: listening on {addr} ({} workers, budget {}, queue {})",
+            n_workers,
+            util::human_bytes(opts.mem_budget_bytes),
+            opts.queue_depth
+        );
+        Ok(Server { addr, shared, accept: Some(accept), workers })
+    }
+
+    /// The bound address (the real port when the options asked for 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block the calling thread until the listener exits (daemon mode:
+    /// forever, unless another thread calls shutdown).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, drain the workers, join every pool thread.
+    pub fn shutdown(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a wake-up connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Dropping the senders ends the worker loops once their queues
+        // drain; in-flight jobs still get answered first.
+        self.shared.dispatch.lock().unwrap().worker_txs.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.accept.is_some() || !self.workers.is_empty() {
+            self.stop_impl();
+        }
+    }
+}
+
+// ---- connection handling -----------------------------------------------
+
+fn handle_connection(sh: Arc<Shared>, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match http::read_request(&mut reader, sh.max_body) {
+            Ok(ReadOutcome::Closed) => return,
+            Ok(ReadOutcome::Request(req)) => {
+                let keep = req.keep_alive;
+                let (mut resp, latency_us) = route(&sh, &req);
+                resp.close = !keep;
+                sh.dispatch.lock().unwrap().metrics.record(resp.status, latency_us);
+                if resp.write_to(&mut writer).is_err() || !keep {
+                    return;
+                }
+            }
+            Err(e) => {
+                // Protocol errors poison the stream framing: answer and
+                // close.
+                let mut resp = HttpResponse::error(e.status, &e.reason);
+                resp.close = true;
+                sh.dispatch.lock().unwrap().metrics.record(e.status, None);
+                let _ = resp.write_to(&mut writer);
+                return;
+            }
+        }
+    }
+}
+
+fn route(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            (HttpResponse::json(200, &Json::obj(vec![("ok", Json::Bool(true))])), None)
+        }
+        ("GET", "/v1/stats") => (stats_response(sh), None),
+        ("GET", "/v1/nets") => (nets_response(sh), None),
+        ("POST", "/v1/classify") => classify(sh, req),
+        (_, "/healthz" | "/v1/stats" | "/v1/nets") => (HttpResponse::error(405, "use GET"), None),
+        (_, "/v1/classify") => (HttpResponse::error(405, "use POST"), None),
+        (m, p) => (HttpResponse::error(404, &format!("no route {m} {p}")), None),
+    }
+}
+
+fn stats_response(sh: &Arc<Shared>) -> HttpResponse {
+    let d = sh.dispatch.lock().unwrap();
+    let Json::Obj(mut m) = d.metrics.snapshot() else { unreachable!("snapshot is an object") };
+    m.insert(
+        "cache".to_string(),
+        Json::obj(vec![
+            ("hits", Json::num(d.ledger.hits as f64)),
+            ("misses", Json::num(d.ledger.misses as f64)),
+            ("evictions", Json::num(d.ledger.evictions as f64)),
+            ("resident", Json::num(d.ledger.resident_len() as f64)),
+            ("resident_bytes", Json::num(d.ledger.resident_cost())),
+            ("budget_bytes", Json::num(d.ledger.budget())),
+        ]),
+    );
+    drop(d);
+    m.insert("workers".to_string(), Json::num(sh.n_workers as f64));
+    m.insert("queue_depth".to_string(), Json::num(sh.queue_depth as f64));
+    m.insert("in_flight".to_string(), Json::num(sh.gate.in_flight() as f64));
+    m.insert("backend".to_string(), Json::str(sh.backend.label()));
+    m.insert("storage".to_string(), Json::str(sh.storage.label()));
+    m.insert(
+        "peak_rss_bytes".to_string(),
+        util::peak_rss_bytes().map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+    );
+    HttpResponse::json(200, &Json::Obj(m))
+}
+
+fn nets_response(sh: &Arc<Shared>) -> HttpResponse {
+    let mut names: Vec<&String> = sh.nets.keys().collect();
+    names.sort();
+    let arr = names
+        .into_iter()
+        .map(|n| {
+            let info = &sh.nets[n];
+            let fp32 = info.envelope(&PrecisionConfig::fp32(info.manifest.n_layers()));
+            Json::obj(vec![
+                ("net", Json::str(n.clone())),
+                ("layers", Json::num(info.manifest.n_layers() as f64)),
+                ("images", Json::num(info.dataset.n as f64)),
+                ("classes", Json::num(info.manifest.num_classes as f64)),
+                ("fp32_envelope_bytes", Json::num(fp32)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    HttpResponse::json(200, &Json::arr(arr))
+}
+
+/// `POST /v1/classify`: parse, price, admit, route, infer, answer.
+fn classify(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) {
+    let t0 = Instant::now();
+    let fail = |status: u16, msg: &str| (HttpResponse::error(status, msg), None);
+
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return fail(400, "body is not utf-8"),
+    };
+    let body = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return fail(400, &format!("bad json body: {e}")),
+    };
+    let Some(net) = body.get("net").and_then(Json::as_str) else {
+        return fail(400, "missing field \"net\"");
+    };
+    let Some(info) = sh.nets.get(net) else {
+        return fail(404, &format!("unknown net {net:?}"));
+    };
+    let fmt_field = |field: &str| -> Result<QFormat, String> {
+        match body.get(field) {
+            None | Some(Json::Null) => Ok(QFormat::FP32),
+            Some(j) => {
+                let s = j.as_str().ok_or_else(|| format!("field {field:?} must be a string"))?;
+                QFormat::parse(s).map_err(|e| format!("field {field:?}: {e}"))
+            }
+        }
+    };
+    let (wfmt, dfmt) = match (fmt_field("weights"), fmt_field("data")) {
+        (Ok(w), Ok(d)) => (w, d),
+        (Err(e), _) | (_, Err(e)) => return fail(400, &e),
+    };
+    let index = match body.get("index") {
+        None => 0,
+        Some(j) => match j.as_usize() {
+            Some(i) => i,
+            None => return fail(400, "field \"index\" must be a non-negative integer"),
+        },
+    };
+    if index >= info.dataset.n {
+        return fail(400, &format!("index {index} out of range ({} images)", info.dataset.n));
+    }
+
+    let cfg = PrecisionConfig::uniform(info.manifest.n_layers(), wfmt, dfmt);
+    let cost = info.envelope(&cfg);
+    let key = CacheKey {
+        net: net.to_string(),
+        cfg: cfg.clone(),
+        backend: sh.backend,
+        storage: sh.storage,
+    };
+
+    // Backpressure first: a full queue refuses before touching dispatch.
+    let Some(_slot) = sh.gate.try_acquire() else {
+        sh.dispatch.lock().unwrap().metrics.rejected_busy += 1;
+        return (HttpResponse::error(429, "queue full").with_retry_after(1), None);
+    };
+
+    let (resp_tx, resp_rx) = channel();
+    let (worker, cache_state, evicted_n) = {
+        let mut d = sh.dispatch.lock().unwrap();
+        if d.worker_txs.is_empty() {
+            return fail(503, "shutting down");
+        }
+        match d.ledger.admit(&key, cost) {
+            Admission::TooLarge => {
+                let msg = format!(
+                    "config envelope {} exceeds the --mem-budget {}",
+                    util::human_bytes(cost),
+                    util::human_bytes(d.ledger.budget())
+                );
+                return fail(507, &msg);
+            }
+            Admission::Resident { worker } => {
+                let job = WorkerMsg::Job { key, index, resp: resp_tx };
+                let _ = d.worker_txs[worker].send(job);
+                (worker, "hit", 0)
+            }
+            Admission::Admitted { worker, evicted } => {
+                let n = evicted.len();
+                // Only the owning worker holds the executor, but the
+                // ledger no longer knows which one — broadcast; drops
+                // are idempotent.
+                for victim in evicted {
+                    for tx in &d.worker_txs {
+                        let _ = tx.send(WorkerMsg::Evict(victim.clone()));
+                    }
+                }
+                let job = WorkerMsg::Job { key, index, resp: resp_tx };
+                let _ = d.worker_txs[worker].send(job);
+                (worker, "load", n)
+            }
+        }
+    };
+
+    match resp_rx.recv() {
+        Ok(Ok(reply)) => {
+            let us = t0.elapsed().as_micros() as u64;
+            let doc = Json::obj(vec![
+                ("net", Json::str(net)),
+                ("config", Json::str(cfg.notation())),
+                ("index", Json::num(index as f64)),
+                ("pred", Json::num(reply.pred as f64)),
+                ("label", Json::num(reply.label as f64)),
+                ("correct", Json::Bool(reply.pred as i32 == reply.label)),
+                ("latency_us", Json::num(us as f64)),
+                ("worker", Json::num(worker as f64)),
+                ("cache", Json::str(if reply.loaded { "load" } else { cache_state })),
+                ("evicted", Json::num(evicted_n as f64)),
+                ("envelope_bytes", Json::num(cost)),
+            ]);
+            (HttpResponse::json(200, &doc), Some(us))
+        }
+        Ok(Err(msg)) => fail(500, &msg),
+        Err(_) => fail(500, "worker unavailable"),
+    }
+}
+
+// ---- worker pool --------------------------------------------------------
+
+fn worker_loop(
+    wid: usize,
+    rx: Receiver<WorkerMsg>,
+    nets: Arc<HashMap<String, NetInfo>>,
+    kind: BackendKind,
+    n_workers: usize,
+) {
+    let backend = match backend_for_worker(kind, n_workers) {
+        Ok(b) => b,
+        Err(e) => {
+            // Exiting drops `rx`; pending reply senders error out and
+            // their requests answer 500.
+            log::error!("serve worker {wid}: backend {} failed: {e:#}", kind.label());
+            return;
+        }
+    };
+    let mut executors: HashMap<CacheKey, Box<dyn NetExecutor>> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Evict(key) => {
+                if executors.remove(&key).is_some() {
+                    log::debug!("serve worker {wid}: evicted {} {}", key.net, key.cfg);
+                }
+            }
+            WorkerMsg::Job { key, index, resp } => {
+                let reply = serve_one(backend.as_ref(), &mut executors, &nets, &key, index);
+                let _ = resp.send(reply);
+            }
+        }
+    }
+}
+
+/// Run one classification on this worker: load the executor for `key`
+/// if it isn't resident yet, decode nothing the executor doesn't need
+/// (the dataset image block is shared read-only), argmax the logits.
+fn serve_one(
+    backend: &dyn Backend,
+    executors: &mut HashMap<CacheKey, Box<dyn NetExecutor>>,
+    nets: &HashMap<String, NetInfo>,
+    key: &CacheKey,
+    index: usize,
+) -> Result<JobReply, String> {
+    let info = nets.get(&key.net).ok_or_else(|| format!("unknown net {:?}", key.net))?;
+    let loaded = !executors.contains_key(key);
+    if loaded {
+        let exec = backend
+            .load(&info.manifest, Variant::Standard)
+            .map_err(|e| format!("loading {}: {e:#}", key.net))?;
+        executors.insert(key.clone(), exec);
+    }
+    let exec = executors.get_mut(key).expect("just inserted");
+    let wq = key.cfg.wire_wq();
+    let dq = key.cfg.wire_dq();
+    let d = &info.dataset;
+    let img = &d.images[index * d.image_elems..(index + 1) * d.image_elems];
+    let logits = if exec.max_batch() > exec.batch() {
+        // Variable-batch executors (reference, fast) take one image.
+        exec.infer(img, &wq, &dq, None)
+    } else {
+        // Compiled-batch backends need a full batch: replicate the
+        // image and score row 0.
+        let mut batch = Vec::with_capacity(exec.batch() * d.image_elems);
+        for _ in 0..exec.batch() {
+            batch.extend_from_slice(img);
+        }
+        exec.infer(&batch, &wq, &dq, None)
+    }
+    .map_err(|e| format!("inference failed: {e:#}"))?;
+    let row = &logits[..exec.num_classes()];
+    let mut pred = 0usize;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[pred] {
+            pred = i;
+        }
+    }
+    Ok(JobReply { pred, label: d.labels[index], loaded })
+}
+
+/// The serving accuracy oracle: classify image `index` of `net` under
+/// `cfg` through a freshly loaded executor of `oracle` — what the smoke
+/// workload checks every live HTTP answer against (same contract the
+/// cross-backend equivalence tests pin).
+pub fn reference_prediction(
+    manifest: &NetManifest,
+    dataset: &Dataset,
+    oracle: &dyn Backend,
+    cfg: &PrecisionConfig,
+    index: usize,
+) -> Result<usize> {
+    let mut exec = oracle.load(manifest, Variant::Standard)?;
+    let img = &dataset.images[index * dataset.image_elems..(index + 1) * dataset.image_elems];
+    let logits = exec.infer(img, &cfg.wire_wq(), &cfg.wire_dq(), None)?;
+    let row = &logits[..exec.num_classes()];
+    let mut pred = 0usize;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[pred] {
+            pred = i;
+        }
+    }
+    Ok(pred)
+}

@@ -1,0 +1,129 @@
+//! Admission control for in-flight requests: a bounded counting gate.
+//!
+//! The daemon accepts a connection, parses the request, then tries to
+//! take a slot from the [`InflightGate`] before touching dispatch
+//! state. When every slot is taken the request is refused immediately
+//! with `429 Too Many Requests` + `Retry-After` — bounded queueing is
+//! part of the memory story: an unbounded backlog of parsed request
+//! bodies is exactly the kind of hidden allocation the footprint model
+//! can't see, so the daemon refuses work instead of buffering it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// A counting semaphore over `capacity` in-flight requests.
+///
+/// `try_acquire` never blocks: dispatch either gets a [`InflightSlot`]
+/// (RAII — dropping it releases the slot, on success and on every error
+/// path alike) or learns the queue is full and answers 429.
+pub struct InflightGate {
+    inflight: Arc<AtomicUsize>,
+    capacity: usize,
+}
+
+/// An acquired slot; releases itself on drop.
+pub struct InflightSlot {
+    inflight: Arc<AtomicUsize>,
+}
+
+impl InflightGate {
+    pub fn new(capacity: usize) -> InflightGate {
+        InflightGate { inflight: Arc::new(AtomicUsize::new(0)), capacity: capacity.max(1) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Currently held slots (stats reporting; racy by nature).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Take a slot, or `None` when `capacity` requests are already in
+    /// flight. Lock-free compare-exchange so refusal stays cheap under
+    /// overload — the one moment it matters.
+    pub fn try_acquire(&self) -> Option<InflightSlot> {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.capacity {
+                return None;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(InflightSlot { inflight: Arc::clone(&self.inflight) }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+impl Drop for InflightSlot {
+    fn drop(&mut self) {
+        self.inflight.fetch_sub(1, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_fills_to_capacity_and_refuses() {
+        let g = InflightGate::new(2);
+        let a = g.try_acquire().expect("slot 1");
+        let b = g.try_acquire().expect("slot 2");
+        assert_eq!(g.in_flight(), 2);
+        assert!(g.try_acquire().is_none(), "third request must be refused");
+        drop(a);
+        let c = g.try_acquire().expect("slot freed by drop");
+        assert_eq!(g.in_flight(), 2);
+        drop(b);
+        drop(c);
+        assert_eq!(g.in_flight(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let g = InflightGate::new(0);
+        assert_eq!(g.capacity(), 1);
+        let slot = g.try_acquire().expect("one slot");
+        assert!(g.try_acquire().is_none());
+        drop(slot);
+    }
+
+    #[test]
+    fn concurrent_acquires_never_exceed_capacity() {
+        use std::sync::atomic::AtomicBool;
+        let g = Arc::new(InflightGate::new(3));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let over = Arc::new(AtomicBool::new(false));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (g, peak, over) = (Arc::clone(&g), Arc::clone(&peak), Arc::clone(&over));
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        if let Some(slot) = g.try_acquire() {
+                            let now = g.in_flight();
+                            peak.fetch_max(now, Ordering::Relaxed);
+                            if now > 3 {
+                                over.store(true, Ordering::Relaxed);
+                            }
+                            drop(slot);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(!over.load(Ordering::Relaxed), "in-flight exceeded capacity");
+        assert!(peak.load(Ordering::Relaxed) >= 1);
+        assert_eq!(g.in_flight(), 0);
+    }
+}

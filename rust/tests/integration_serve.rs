@@ -1,0 +1,236 @@
+//! Serving integration: a real `Server` on an ephemeral port, driven
+//! over live TCP — correctness against the reference oracle, cache
+//! hit/eviction accounting under a tight budget, budget refusal (507),
+//! protocol error statuses, and keep-alive pipelining.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use qbound::backend::lowering::LoweredPlan;
+use qbound::backend::BackendKind;
+use qbound::eval::Dataset;
+use qbound::memory::FootprintModel;
+use qbound::nets::{arch, NetManifest};
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::serve::{reference_prediction, ServeOptions, Server};
+use qbound::testkit;
+use qbound::util::json::Json;
+
+fn start(budget: f64) -> Server {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        mem_budget_bytes: budget,
+        ..ServeOptions::default()
+    };
+    Server::start(&testkit::ensure_artifacts(), &opts).unwrap()
+}
+
+/// The admission cost the daemon charges for one (net, cfg) executor.
+fn envelope(net: &str, cfg: &PrecisionConfig) -> f64 {
+    let dir = testkit::ensure_artifacts();
+    let m = NetManifest::load(&dir, net).unwrap();
+    let plan = LoweredPlan::new(&arch::get(net).unwrap(), None).unwrap();
+    let win = plan.max_win_elems + plan.max_bias_elems;
+    FootprintModel::new(&m).fused_envelope(cfg, win, &plan.weight_pad_elems)
+}
+
+fn lenet_cfg(wfmt: QFormat) -> PrecisionConfig {
+    let dir = testkit::ensure_artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    PrecisionConfig::uniform(m.n_layers(), wfmt, QFormat::new(9, 2))
+}
+
+// ---- tiny blocking HTTP client ------------------------------------------
+
+fn get(addr: SocketAddr, path: &str) -> (u16, Json) {
+    let req = format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    read_response(&mut BufReader::new(s))
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, Json) {
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    read_response(&mut BufReader::new(s))
+}
+
+fn classify_body(net: &str, wfmt: &str, index: usize) -> String {
+    format!("{{\"net\":\"{net}\",\"weights\":\"{wfmt}\",\"data\":\"9.2\",\"index\":{index}}}")
+}
+
+fn read_response(r: &mut impl BufRead) -> (u16, Json) {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        assert!(r.read_line(&mut h).unwrap() > 0, "eof inside headers");
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).unwrap();
+    if body.is_empty() {
+        return (status, Json::Null);
+    }
+    (status, Json::parse(std::str::from_utf8(&body).unwrap()).unwrap())
+}
+
+// ---- tests --------------------------------------------------------------
+
+#[test]
+fn classify_over_tcp_matches_reference_backend() {
+    let server = start(1024.0 * 1024.0 * 1024.0);
+    let addr = server.addr();
+    let dir = testkit::ensure_artifacts();
+    let manifest = NetManifest::load(&dir, "lenet").unwrap();
+    let dataset = Dataset::load(&manifest).unwrap();
+    let oracle = BackendKind::Reference.create().unwrap();
+    for (wfmt, index) in [(QFormat::new(1, 8), 3usize), (QFormat::new(2, 7), 11)] {
+        let body = classify_body("lenet", &wfmt.to_string(), index);
+        let (st, resp) = post(addr, "/v1/classify", &body);
+        assert_eq!(st, 200, "{resp}");
+        let pred = resp.get("pred").and_then(Json::as_usize).unwrap();
+        let cfg = lenet_cfg(wfmt);
+        let want = reference_prediction(&manifest, &dataset, oracle.as_ref(), &cfg, index).unwrap();
+        assert_eq!(pred, want, "served answer diverges from the reference oracle ({body})");
+        assert_eq!(resp.get("label").and_then(Json::as_f64).unwrap(), dataset.labels[index] as f64);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn repeat_config_is_a_cache_hit() {
+    let server = start(1024.0 * 1024.0 * 1024.0);
+    let addr = server.addr();
+    let body = classify_body("lenet", "1.8", 0);
+    let (st, first) = post(addr, "/v1/classify", &body);
+    assert_eq!(st, 200);
+    assert_eq!(first.get("cache").and_then(Json::as_str), Some("load"));
+    let (st, second) = post(addr, "/v1/classify", &body);
+    assert_eq!(st, 200);
+    assert_eq!(second.get("cache").and_then(Json::as_str), Some("hit"));
+    let (st, stats) = get(addr, "/v1/stats");
+    assert_eq!(st, 200);
+    let cache = stats.get("cache").unwrap();
+    assert!(cache.get("hits").and_then(Json::as_u64).unwrap() >= 1, "{stats}");
+    assert_eq!(cache.get("resident").and_then(Json::as_u64), Some(1));
+    server.shutdown();
+}
+
+#[test]
+fn tight_budget_evicts_lru_and_never_exceeds_resident_bound() {
+    let a = lenet_cfg(QFormat::new(1, 8));
+    let b = lenet_cfg(QFormat::new(2, 7));
+    let (ea, eb) = (envelope("lenet", &a), envelope("lenet", &b));
+    // Room for either executor alone, never both: A, B, A must evict twice.
+    let budget = ea.max(eb) * 1.5;
+    assert!(ea + eb > budget, "test premise: both configs can't be co-resident");
+    let server = start(budget);
+    let addr = server.addr();
+    for wfmt in ["1.8", "2.7", "1.8"] {
+        let (st, resp) = post(addr, "/v1/classify", &classify_body("lenet", wfmt, 0));
+        assert_eq!(st, 200, "{resp}");
+        assert_eq!(resp.get("cache").and_then(Json::as_str), Some("load"));
+    }
+    let (st, stats) = get(addr, "/v1/stats");
+    assert_eq!(st, 200);
+    let cache = stats.get("cache").unwrap();
+    assert!(cache.get("evictions").and_then(Json::as_u64).unwrap() >= 2, "{stats}");
+    assert!(cache.get("resident_bytes").and_then(Json::as_f64).unwrap() <= budget, "{stats}");
+    server.shutdown();
+}
+
+#[test]
+fn config_larger_than_budget_is_refused_with_507() {
+    let packed = envelope("lenet", &lenet_cfg(QFormat::new(1, 8)));
+    let dir = testkit::ensure_artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let fp32 = envelope("lenet", &PrecisionConfig::fp32(m.n_layers()));
+    assert!(fp32 > packed, "fp32 weights must cost more than packed");
+    // Midpoint budget: the packed config is admitted, fp32 is impossible.
+    let server = start((packed + fp32) / 2.0);
+    let addr = server.addr();
+    let (st, resp) = post(addr, "/v1/classify", &classify_body("lenet", "1.8", 0));
+    assert_eq!(st, 200, "{resp}");
+    let (st, resp) = post(addr, "/v1/classify", "{\"net\":\"lenet\"}");
+    assert_eq!(st, 507, "{resp}");
+    // The refusal must not have evicted the resident executor.
+    let (st, resp) = post(addr, "/v1/classify", &classify_body("lenet", "1.8", 1));
+    assert_eq!(st, 200, "{resp}");
+    assert_eq!(resp.get("cache").and_then(Json::as_str), Some("hit"));
+    server.shutdown();
+}
+
+#[test]
+fn protocol_and_routing_errors_map_to_statuses() {
+    let server = start(1024.0 * 1024.0 * 1024.0);
+    let addr = server.addr();
+    assert_eq!(post(addr, "/v1/classify", "{not json").0, 400);
+    assert_eq!(post(addr, "/v1/classify", "{\"net\":\"resnet152\"}").0, 404);
+    assert_eq!(post(addr, "/v1/classify", "{\"net\":\"lenet\",\"weights\":\"bogus\"}").0, 400);
+    assert_eq!(get(addr, "/v1/classify").0, 405);
+    assert_eq!(post(addr, "/v1/stats", "{}").0, 405);
+    assert_eq!(get(addr, "/nope").0, 404);
+    // Declared body over the cap is refused at the header stage.
+    let req = "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: 10000000\r\n\r\n";
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let (st, _) = read_response(&mut BufReader::new(s));
+    assert_eq!(st, 413);
+    server.shutdown();
+}
+
+#[test]
+fn healthz_and_nets_inventory() {
+    let server = start(1024.0 * 1024.0 * 1024.0);
+    let addr = server.addr();
+    let (st, health) = get(addr, "/healthz");
+    assert_eq!(st, 200);
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    let (st, nets) = get(addr, "/v1/nets");
+    assert_eq!(st, 200);
+    let Json::Arr(items) = &nets else { panic!("nets must be an array: {nets}") };
+    let lenet = items
+        .iter()
+        .find(|j| j.get("net").and_then(Json::as_str) == Some("lenet"))
+        .expect("lenet served");
+    assert!(lenet.get("fp32_envelope_bytes").and_then(Json::as_f64).unwrap() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_connection_pipelines_requests() {
+    let server = start(1024.0 * 1024.0 * 1024.0);
+    let addr = server.addr();
+    let body = classify_body("lenet", "1.6", 2);
+    let one = format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let mut s = TcpStream::connect(addr).unwrap();
+    // Both requests hit the wire before either response is read.
+    s.write_all(format!("{one}{one}").as_bytes()).unwrap();
+    let mut r = BufReader::new(s);
+    let (s1, first) = read_response(&mut r);
+    let (s2, second) = read_response(&mut r);
+    assert_eq!((s1, s2), (200, 200), "{first} / {second}");
+    assert_eq!(first.get("cache").and_then(Json::as_str), Some("load"));
+    assert_eq!(second.get("cache").and_then(Json::as_str), Some("hit"));
+    let pred = |j: &Json| j.get("pred").and_then(Json::as_usize);
+    assert_eq!(pred(&first), pred(&second), "pipelined answers must agree");
+    server.shutdown();
+}

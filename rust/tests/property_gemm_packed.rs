@@ -55,8 +55,9 @@ fn every_weight_width_matches_the_f32_panel_path() {
         let qb = quantized_canonical(fmt, &raw);
         let want = panel_gemm(m, n, kd, &a, &qb, &bias);
         let bits = PackedPanels::pack(fmt, &pack_b_panels(&raw, kd, n), kd, NR);
+        assert_eq!(bits.fmt(), fmt);
         let mut got = vec![f32::NAN; m * n];
-        gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut got, n, 1);
+        gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut got, n, 1);
         assert_bits_match(&format!("{fmt}"), &want, &got);
     }
 }
@@ -82,7 +83,7 @@ fn panel_shapes_threads_and_tile_edges_match() {
         let bits = PackedPanels::pack(fmt, &pack_b_panels(&qb, kd, n), kd, NR);
         for threads in [1usize, 2, 3, 8] {
             let mut got = vec![f32::NAN; m * n];
-            gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut got, n, threads);
+            gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut got, n, threads);
             assert_bits_match(&format!("({m},{n},{kd}) t={threads}"), &want, &got);
         }
     }
@@ -100,7 +101,7 @@ fn strided_c_matches_and_leaves_gaps_untouched() {
     let want = panel_gemm(m, n, kd, &a, &qb, &bias);
     let ldc = n + 5;
     let mut c = vec![-7.0f32; (m - 1) * ldc + n + 5];
-    gemm_bias_bits(m, n, kd, &a, kd, &bits, fmt, &bias, &mut c, ldc, 1);
+    gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut c, ldc, 1);
     for r in 0..m {
         for j in 0..n {
             assert_eq!(c[r * ldc + j].to_bits(), want[r * n + j].to_bits(), "row {r} col {j}");

@@ -6,7 +6,7 @@
 //! `+0.0`; `+ 0.0` applies the same canonicalization to the reference
 //! side and is the identity on every other value).
 
-use qbound::memory::{storage_width, PackedBuf, PackedCursor, MAX_PACK_BITS};
+use qbound::memory::{storage_width, PackedBuf, PackedCursor, PackedPanels, MAX_PACK_BITS};
 use qbound::quant::QFormat;
 use qbound::testkit::{
     cases, forall, gen_f32, gen_i64, gen_vec, prop, quantized_canonical, GenPair, Outcome,
@@ -200,6 +200,45 @@ fn cursor_chunked_reads_match_full_unpack() {
             )
         },
     );
+}
+
+/// Panel strips decode with the format captured at pack time — for
+/// every packable width plus both 32-bit fallbacks, every strip of
+/// every panel is bit-identical to the quantizer over the same range.
+/// Since `read_strip` takes no format, a same-width wrong-format decode
+/// (the old parallel-`fmts`-vec hazard) is structurally impossible.
+#[test]
+fn panel_strips_decode_with_stored_format_for_every_width() {
+    let (kd, nr, n_panels) = (5usize, 4usize, 2usize);
+    let xs: Vec<f32> = (0..kd * nr * n_panels).map(|i| i as f32 * 0.47 - 9.0).collect();
+    let mut fmts = vec![QFormat::FP32, QFormat::new(14, 12)]; // 32-bit fallbacks
+    for ibits in 0..=12i8 {
+        for fbits in 0..=12i8 {
+            if ibits + fbits > 0 {
+                fmts.push(QFormat::new(ibits, fbits));
+            }
+        }
+    }
+    for fmt in fmts {
+        let want = if fmt.is_fp32() { xs.clone() } else { quantized_canonical(fmt, &xs) };
+        let pp = PackedPanels::pack(fmt, &xs, kd, nr);
+        assert_eq!(pp.fmt(), fmt);
+        assert_eq!(pp.width(), storage_width(fmt));
+        for p in 0..n_panels {
+            for (k0, k1) in [(0usize, kd), (1, 3), (kd - 1, kd)] {
+                let mut got = vec![f32::NAN; (k1 - k0) * nr];
+                pp.read_strip(p, k0, k1, &mut got);
+                let lo = (p * kd + k0) * nr;
+                for (i, (a, b)) in got.iter().zip(&want[lo..lo + got.len()]).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{fmt}: panel {p} rows {k0}..{k1} elem {i}"
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// The physical footprint matches the bit arithmetic for every width.
