@@ -9,9 +9,12 @@
 //! binary also measures the PJRT path on machines that have it. The
 //! fast backend's thread budget comes from `QBOUND_THREADS`.
 
-use qbound::backend::{BackendKind, Variant};
+use qbound::backend::fast::FastBackend;
+use qbound::backend::kernels;
+use qbound::backend::{Backend, BackendKind, NetExecutor, Variant};
 use qbound::coordinator::{Coordinator, EvalJob};
 use qbound::eval::{Dataset, Evaluator};
+use qbound::memory::StorageMode;
 use qbound::nets::{ArtifactIndex, NetManifest};
 use qbound::quant::QFormat;
 use qbound::search::space::PrecisionConfig;
@@ -67,6 +70,36 @@ fn main() {
                 std::hint::black_box(exec.infer_keyed(0, &images, &wq, &dq, None).unwrap());
             },
         );
+
+        // Packed-vs-f32 storage ratio per kernel variant: the archived
+        // `ratios` rows CI reads to check the SIMD decode narrows the
+        // packed gap relative to the scalar kernels on the same host.
+        let auto = kernels::active_kind();
+        for kernel in kernels::available() {
+            kernels::force(kernel);
+            let mut means = [0.0f64; 2];
+            for (slot, storage) in
+                [StorageMode::F32, StorageMode::Packed].into_iter().enumerate()
+            {
+                let backend = FastBackend::with_options(1, storage);
+                let mut exec = backend.load(&m, Variant::Standard).unwrap();
+                let res = suite.bench_elems(
+                    &format!(
+                        "{net} [fast/{}]: infer batch {} q, storage {}",
+                        kernel.label(),
+                        m.batch,
+                        storage.label()
+                    ),
+                    m.batch as f64,
+                    || {
+                        std::hint::black_box(exec.infer(&images, &wq, &dq, None).unwrap());
+                    },
+                );
+                means[slot] = res.stats.mean.as_secs_f64();
+            }
+            suite.record_ratio(net, kernel.label(), means[1] / means[0]);
+        }
+        kernels::force(auto);
     }
 
     // Evaluator memo-cache hit path (must be ~ns — the search leans on it).

@@ -1,10 +1,14 @@
 //! Packed-storage benchmarks: pack/unpack bandwidth across widths vs
 //! the plain `quantize_slice` baseline, plus end-to-end infer latency
-//! under `--storage packed` vs default f32 storage on the fast backend.
-//! The archived JSON tracks the cost of making the reduced-width
-//! representation the thing that actually lives in memory.
+//! under `--storage packed` vs default f32 storage on the fast backend,
+//! swept across every GEMM kernel variant the host supports. The
+//! archived JSON tracks the cost of making the reduced-width
+//! representation the thing that actually lives in memory, and the
+//! per-variant `ratios` rows track how much of that cost the SIMD
+//! decode path buys back.
 
 use qbound::backend::fast::FastBackend;
+use qbound::backend::kernels;
 use qbound::backend::{Backend, NetExecutor, Variant};
 use qbound::eval::Dataset;
 use qbound::memory::{PackedBuf, StorageMode};
@@ -50,23 +54,39 @@ fn main() {
         );
     }
 
-    // End-to-end: fast-backend batch infer, f32 vs packed storage.
+    // End-to-end: fast-backend batch infer, f32 vs packed storage,
+    // swept across every kernel variant the host supports. The ratio
+    // rows archive how close the packed path sits to f32 per variant
+    // (the SIMD decode should narrow the gap vs the scalar row).
     let m = NetManifest::load(&dir, "lenet").unwrap();
     let dataset = Dataset::load(&m).unwrap();
     let images = dataset.batch_images(0, m.batch).to_vec();
     let cfg = PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 8), QFormat::new(10, 2));
     let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
-    for storage in [StorageMode::F32, StorageMode::Packed] {
-        let backend = FastBackend::with_options(2, storage);
-        let mut exec = backend.load(&m, Variant::Standard).unwrap();
-        suite.bench_elems(
-            &format!("lenet [fast]: infer batch {} q, storage {}", m.batch, storage.label()),
-            m.batch as f64,
-            || {
-                std::hint::black_box(exec.infer(&images, &wq, &dq, None).unwrap());
-            },
-        );
+    let auto = kernels::active_kind();
+    for kind in kernels::available() {
+        kernels::force(kind);
+        let mut means = [0.0f64; 2];
+        for (slot, storage) in [StorageMode::F32, StorageMode::Packed].into_iter().enumerate() {
+            let backend = FastBackend::with_options(2, storage);
+            let mut exec = backend.load(&m, Variant::Standard).unwrap();
+            let res = suite.bench_elems(
+                &format!(
+                    "lenet [fast/{}]: infer batch {} q, storage {}",
+                    kind.label(),
+                    m.batch,
+                    storage.label()
+                ),
+                m.batch as f64,
+                || {
+                    std::hint::black_box(exec.infer(&images, &wq, &dq, None).unwrap());
+                },
+            );
+            means[slot] = res.stats.mean.as_secs_f64();
+        }
+        suite.record_ratio("lenet", kind.label(), means[1] / means[0]);
     }
+    kernels::force(auto);
 
     suite.finish();
 }

@@ -49,8 +49,16 @@
 //! measured by `tests/integration_memory.rs` under a counting
 //! allocator. The fused path trades the zero-allocation steady state of
 //! the f32 path for minimal residency: per-step working vectors are
-//! allocated fresh (and weight tiles re-decoded per GEMM) so the
-//! resident set really is bitstreams + windows.
+//! allocated fresh so the resident set really is bitstreams + windows.
+//! Three decode-side optimizations keep that residency cheap, each
+//! priced into the plan's fused envelope
+//! ([`LoweredPlan::fused_window_elems`]): every bit-field span decode
+//! goes through the dispatched SIMD unpacker
+//! ([`super::kernels::unpack_span`]), single-threaded streamed 1×1
+//! GEMMs memoize decoded weight strips across `A` row blocks in a
+//! bounded per-executor [`StripCache`], and the packed im2col splits
+//! output-row blocks across threads with a private one-row decode
+//! window each — all bit-identical to their serial/scalar forms.
 //!
 //! Numeric contract: agreement with the reference backend up to fp32
 //! accumulation order (see `tests/integration_parity.rs`). The GEMM
@@ -61,7 +69,7 @@
 
 use anyhow::Result;
 
-use super::gemm::{gemm_bias_b, pack_b_panels, GemmB, NR};
+use super::gemm::{gemm_bias_b, gemm_bias_bits_cached, pack_b_panels, GemmB, StripCache, NR};
 use super::lowering::{self, LoweredPlan};
 use super::reference::{avgpool_into, gap_into, lrn_into, maxpool_into};
 use super::{Backend, NetExecutor, Variant};
@@ -90,9 +98,13 @@ pub struct FastBackend {
 }
 
 impl FastBackend {
-    /// Thread budget and storage mode from the environment
-    /// (`QBOUND_THREADS`, `QBOUND_STORAGE`).
+    /// Thread budget, storage mode and kernel dispatch from the
+    /// environment (`QBOUND_THREADS`, `QBOUND_STORAGE`,
+    /// `QBOUND_KERNEL`). Resolving the kernel here surfaces a
+    /// misconfigured `QBOUND_KERNEL` as a clean load-time error and
+    /// emits the one-time dispatch log before any compute runs.
     pub fn new() -> Result<FastBackend> {
+        super::kernels::init()?;
         Ok(FastBackend { threads: threads_from_env()?, storage: StorageMode::from_env()? })
     }
 
@@ -443,6 +455,10 @@ struct Scratch {
     /// Bias decode window (fused packed mode only — f32 mode borrows
     /// biases straight from the quantized tensors).
     bias: Vec<f32>,
+    /// Decoded-strip cache for streamed packed-B GEMMs (fused packed
+    /// mode only; capacity comes from the plan, so it is priced into
+    /// the fused envelope — 0 on plans with no streamed 1×1 conv).
+    strip: StripCache,
     /// Ping-pong boundary bitstreams (fused packed mode only).
     pk_in: PackedBuf,
     pk_out: PackedBuf,
@@ -459,6 +475,7 @@ impl Scratch {
             tmp: vec![0f32; plan.max_tmp_elems],
             win: vec![0f32; if fused { plan.max_win_elems } else { 0 }],
             bias: Vec::with_capacity(if fused { plan.max_bias_elems } else { 0 }),
+            strip: StripCache::new(if fused { plan.strip_cache_elems } else { 0 }),
             pk_in: PackedBuf::default(),
             pk_out: PackedBuf::default(),
         }
@@ -607,7 +624,7 @@ fn forward_image_fused(
     threads: usize,
     out_row: &mut [f32],
 ) {
-    let Scratch { col, tmp, win, bias, pk_in, pk_out, .. } = scr;
+    let Scratch { col, tmp, win, bias, strip, pk_in, pk_out, .. } = scr;
     let (mut pk_in, mut pk_out) = (pk_in, pk_out);
     pk_in.pack_into(dfmt[0], image);
     let mut cur_fmt = dfmt[0];
@@ -669,6 +686,7 @@ fn forward_image_fused(
                         padding,
                         win,
                         col,
+                        strip,
                         &mut next,
                         threads,
                     ),
@@ -810,8 +828,10 @@ fn conv_gemm(
 
 /// NHWC conv reading its input straight off a boundary bitstream: the
 /// fused-consumer form of [`conv_gemm`]. 1×1 stride-1 convs stream GEMM
-/// `A` row blocks through a [`PackedCursor`]; everything else builds
-/// the im2col patch matrix from one decoded input row at a time
+/// `A` row blocks through a [`PackedCursor`] — with a bitstream `B`
+/// operand the row blocks share `cache`, so each weight strip is
+/// decoded once per conv instead of once per block. Everything else
+/// builds the im2col patch matrix from one decoded input row at a time
 /// ([`im2col_from_packed`]). Output writes are the same GEMM as the
 /// in-f32 path, so results are bit-identical to running [`conv_gemm`]
 /// over a fully unpacked input.
@@ -829,6 +849,7 @@ fn conv_from_packed(
     padding: Padding,
     win: &mut [f32],
     col: &mut [f32],
+    cache: &mut StripCache,
     dst: &mut [f32],
     threads: usize,
 ) {
@@ -845,7 +866,33 @@ fn conv_from_packed(
             let rb = lowering::FUSED_A_ROWS.min(m - r0);
             let a = &mut win[..rb * c];
             cursor.read_into(a);
-            gemm_bias_b(rb, out_c, c, a, c, wgt, bias, &mut dst[r0 * out_c..], out_c, threads);
+            match wgt {
+                GemmB::Bits(bp) => gemm_bias_bits_cached(
+                    rb,
+                    out_c,
+                    c,
+                    a,
+                    c,
+                    bp,
+                    bias,
+                    &mut dst[r0 * out_c..],
+                    out_c,
+                    threads,
+                    Some(&mut *cache),
+                ),
+                _ => gemm_bias_b(
+                    rb,
+                    out_c,
+                    c,
+                    a,
+                    c,
+                    wgt,
+                    bias,
+                    &mut dst[r0 * out_c..],
+                    out_c,
+                    threads,
+                ),
+            }
             r0 += rb;
         }
         return;
@@ -869,15 +916,20 @@ fn conv_from_packed(
         ow,
         &mut win[..w * c],
         &mut col[..m * kd],
+        threads,
     );
     gemm_bias_b(m, out_c, kd, &col[..m * kd], kd, wgt, bias, dst, out_c, threads);
 }
 
 /// im2col driven by the streaming window reader: each input row is
-/// decoded exactly once into `win_row` and scattered to every patch
-/// position that uses it; out-of-bounds taps stay at the pre-filled
-/// `0.0`. Produces the exact patch matrix [`im2col`] builds from an f32
-/// input holding the same values.
+/// decoded into a one-row window and scattered to every patch position
+/// that uses it; out-of-bounds taps stay at the pre-filled `0.0`.
+/// Output-row blocks split across scoped threads when the budget
+/// allows, each thread with its *own* decode window (priced into the
+/// fused envelope via `LoweredPlan::fused_window_elems`) — blocks write
+/// disjoint `col` rows and only read the bitstream, so the result is
+/// bit-identical to the serial pass, which produces the exact patch
+/// matrix [`im2col`] builds from an f32 input holding the same values.
 fn im2col_from_packed(
     p: &PackedBuf,
     fmt: QFormat,
@@ -892,22 +944,91 @@ fn im2col_from_packed(
     ow: usize,
     win_row: &mut [f32],
     col: &mut [f32],
+    threads: usize,
 ) {
     let kd = k * k * c;
-    col.fill(0.0);
-    for iy in 0..h {
+    let t = threads.min(oh).max(1);
+    if t <= 1 || oh * ow * kd < IM2COL_PAR_MIN {
+        col.fill(0.0);
+        im2col_packed_rows(p, fmt, h, w, c, k, stride, pad_y, pad_x, 0, oh, ow, win_row, col);
+        return;
+    }
+    let rows_per = (oh + t - 1) / t;
+    std::thread::scope(|s| {
+        let mut col_rest: &mut [f32] = col;
+        let mut oy0 = 0usize;
+        while oy0 < oh {
+            let rows = rows_per.min(oh - oy0);
+            let (chunk, rest) = std::mem::take(&mut col_rest).split_at_mut(rows * ow * kd);
+            col_rest = rest;
+            s.spawn(move || {
+                // Adjacent blocks re-decode their overlapping boundary
+                // input rows into private windows; decode is pure, so
+                // overlap costs time, never correctness.
+                let mut win = vec![0f32; w * c];
+                chunk.fill(0.0);
+                im2col_packed_rows(
+                    p,
+                    fmt,
+                    h,
+                    w,
+                    c,
+                    k,
+                    stride,
+                    pad_y,
+                    pad_x,
+                    oy0,
+                    oy0 + rows,
+                    ow,
+                    &mut win,
+                    chunk,
+                );
+            });
+            oy0 += rows;
+        }
+    });
+}
+
+/// The serial packed-im2col kernel over output rows `[oy0, oy1)`; `col`
+/// holds exactly those rows (pre-filled with `0.0`). Decodes only the
+/// input rows those output rows tap.
+fn im2col_packed_rows(
+    p: &PackedBuf,
+    fmt: QFormat,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad_y: usize,
+    pad_x: usize,
+    oy0: usize,
+    oy1: usize,
+    ow: usize,
+    win_row: &mut [f32],
+    col: &mut [f32],
+) {
+    let kd = k * k * c;
+    // Input rows feeding output rows [oy0, oy1): the union of their
+    // [oy*stride - pad_y, oy*stride - pad_y + k) windows, clipped to
+    // the input (saturation may admit an edge row whose oy range below
+    // comes up empty — a wasted decode at most, never a wrong write).
+    let iy_lo = (oy0 * stride).saturating_sub(pad_y);
+    let iy_hi = ((oy1 - 1) * stride + k - 1).saturating_sub(pad_y).min(h - 1);
+    for iy in iy_lo..=iy_hi {
         p.unpack_rows(fmt, w * c, iy, win_row);
         // Output rows oy with a tap on input row iy: ky = iy + pad_y -
         // oy*stride must land in [0, k).
         let top = iy + pad_y;
-        let oy_lo = if top + 1 > k { (top + 1 - k + stride - 1) / stride } else { 0 };
-        let oy_hi = (top / stride).min(oh - 1);
+        let oy_lo =
+            (if top + 1 > k { (top + 1 - k + stride - 1) / stride } else { 0 }).max(oy0);
+        let oy_hi = (top / stride).min(oy1 - 1);
         // An inclusive range with oy_lo > oy_hi is empty (rows only
         // feeding padding-clipped or out-of-range windows).
         for oy in oy_lo..=oy_hi {
             let ky = top - oy * stride;
             for ox in 0..ow {
-                let seg = &mut col[(oy * ow + ox) * kd + ky * k * c..][..k * c];
+                let seg = &mut col[((oy - oy0) * ow + ox) * kd + ky * k * c..][..k * c];
                 for kx in 0..k {
                     let ix = (ox * stride + kx) as isize - pad_x as isize;
                     if ix >= 0 && (ix as usize) < w {
@@ -1211,7 +1332,7 @@ mod tests {
             let mut win = vec![0f32; w * c];
             let mut got = vec![f32::NAN; oh * ow * kd];
             im2col_from_packed(
-                &p, fmt, h, w, c, k, stride, pad_y, pad_x, oh, ow, &mut win, &mut got,
+                &p, fmt, h, w, c, k, stride, pad_y, pad_x, oh, ow, &mut win, &mut got, 1,
             );
             for (i, (a, b)) in want.iter().zip(&got).enumerate() {
                 assert_eq!(
@@ -1271,6 +1392,7 @@ mod tests {
             Padding::Same,
             &mut win,
             &mut col,
+            &mut StripCache::new(0),
             &mut got,
             1,
         );
@@ -1320,10 +1442,87 @@ mod tests {
             Padding::Same,
             &mut win2,
             &mut col2,
+            &mut StripCache::new(0),
             &mut got2,
             1,
         );
         assert!(want2.iter().zip(&got2).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn packed_im2col_parallel_matches_serial_bit_for_bit() {
+        // Big enough to clear IM2COL_PAR_MIN: 24x24x4 input, k=3 SAME
+        // (oh*ow*kd = 576*36).
+        let fmt = QFormat::new(5, 4);
+        let (h, w, c, k) = (24usize, 24usize, 4usize, 3usize);
+        let mut rng = crate::prng::Xoshiro256pp::new(98);
+        let raw: Vec<f32> = (0..h * w * c).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+        let x = quantized(fmt, &raw);
+        let p = PackedBuf::pack(fmt, &x);
+        let (oh, ow) = conv_out_hw(h, w, k, 1, Padding::Same);
+        let kd = k * k * c;
+        let mut win = vec![0f32; w * c];
+        let mut want = vec![f32::NAN; oh * ow * kd];
+        im2col_from_packed(&p, fmt, h, w, c, k, 1, 1, 1, oh, ow, &mut win, &mut want, 1);
+        for threads in [2usize, 3, 7, 64] {
+            let mut got = vec![f32::NAN; oh * ow * kd];
+            im2col_from_packed(&p, fmt, h, w, c, k, 1, 1, 1, oh, ow, &mut win, &mut got, threads);
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_conv_strip_cache_is_bit_identical_and_hit() {
+        // 1x1 stride-1 over packed weights: (16*16, 5) A spans two
+        // cursor row blocks, so the second block re-reads every weight
+        // strip — with a cache those re-reads must hit, without one the
+        // output must be unchanged.
+        let fmt = QFormat::new(6, 2);
+        let wfmt = QFormat::new(2, 6);
+        let mut rng = crate::prng::Xoshiro256pp::new(17);
+        let (h, w, c, out_c) = (16usize, 16usize, 5usize, 7usize);
+        let raw: Vec<f32> = (0..h * w * c).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+        let x = quantized(fmt, &raw);
+        let wgt: Vec<f32> =
+            (0..c * out_c).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let wq = quantized(wfmt, &wgt);
+        let bias: Vec<f32> = (0..out_c).map(|_| rng.uniform_f32(-0.5, 0.5)).collect();
+        let bp = PackedPanels::pack(wfmt, &pack_b_panels(&wq, c, out_c), c, NR);
+        let p = PackedBuf::pack(fmt, &x);
+        let mut col = vec![0f32; 1]; // 1x1 path never touches col
+        let mut win = vec![0f32; lowering::FUSED_A_ROWS * c];
+        let mut run = |cache: &mut StripCache| {
+            let mut dst = vec![f32::NAN; h * w * out_c];
+            conv_from_packed(
+                &p,
+                fmt,
+                h,
+                w,
+                c,
+                GemmB::Bits(&bp),
+                &bias,
+                out_c,
+                1,
+                1,
+                Padding::Same,
+                &mut win,
+                &mut col,
+                cache,
+                &mut dst,
+                1,
+            );
+            dst
+        };
+        let mut cold = StripCache::new(0);
+        let want = run(&mut cold);
+        assert_eq!((cold.hits(), cold.misses()), (0, 0));
+        let mut warm = StripCache::new(1 << 20);
+        let got = run(&mut warm);
+        assert!(warm.hits() > 0, "second row block should hit the cache");
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -18,10 +18,14 @@
 //! * **No `mul_add`.** Fusing would change results vs the reference.
 //!
 //! Register tiling is [`MR`]×[`NR`] (4×16 f32 = 8 YMM accumulators on
-//! AVX2; the inner loop over `NR` is a clean auto-vectorization target),
-//! cache blocking is `KC`×`MC`. Optional row-block threading splits `M`
-//! across `std::thread::scope` workers — rows are independent, so
-//! results are bit-identical for every thread count.
+//! AVX2), cache blocking is `KC`×`MC`. The full-tile micro-kernel is
+//! dispatched through [`super::kernels`]: explicit AVX2/NEON variants
+//! when the host supports them, the portable scalar tile otherwise —
+//! all bound by the same bit-exactness contract, so dispatch never
+//! changes results. Edge tiles (runtime `mr`×`nr`) stay scalar on
+//! every variant. Optional row-block threading splits `M` across
+//! `std::thread::scope` workers — rows are independent, so results are
+//! bit-identical for every thread count.
 //!
 //! The `B` operand comes in three forms ([`GemmB`]): row-major, f32
 //! NR-lane panels ([`pack_b_panels`]), or a **packed weight bitstream**
@@ -33,6 +37,7 @@
 //! prefetch step, so the bitstream form is bit-identical to the f32
 //! panels holding the same (quantized) values.
 
+use super::kernels;
 use crate::memory::PackedPanels;
 
 /// Register-tile rows (distinct A broadcasts per micro-kernel).
@@ -112,6 +117,42 @@ pub fn gemm_bias_bits(
     ldc: usize,
     threads: usize,
 ) {
+    gemm_bias_b(m, n, kd, a, lda, GemmB::Bits(bp), bias, c, ldc, threads)
+}
+
+/// [`gemm_bias_bits`] with an optional decoded-strip cache. When the
+/// row range is small enough that the driver would run single-threaded
+/// anyway, strips decode through `cache` (keyed by the bitstream's
+/// identity — repeated calls against the same weights skip the decode
+/// entirely); a multi-threaded split falls back to the per-thread
+/// stack-tile path, where the shared cache cannot be handed out.
+/// Bit-identical to [`gemm_bias_bits`] either way: a cached strip holds
+/// exactly the f32 values `read_strip` would decode.
+pub fn gemm_bias_bits_cached(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[f32],
+    lda: usize,
+    bp: &PackedPanels,
+    bias: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    threads: usize,
+    cache: Option<&mut StripCache>,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let t = threads.min(m / (2 * MR)).max(1);
+    if t <= 1 {
+        debug_assert!(lda >= kd && ldc >= n);
+        debug_assert!(a.len() >= (m - 1) * lda + kd);
+        debug_assert!(bias.len() >= n);
+        debug_assert!(c.len() >= (m - 1) * ldc + n);
+        gemm_block_bits(m, n, kd, a, lda, bp, bias, c, ldc, cache);
+        return;
+    }
     gemm_bias_b(m, n, kd, a, lda, GemmB::Bits(bp), bias, c, ldc, threads)
 }
 
@@ -218,8 +259,9 @@ fn gemm_block(
     ldc: usize,
 ) {
     if let GemmB::Bits(bp) = b {
-        return gemm_block_bits(m, n, kd, a, lda, bp, bias, c, ldc);
+        return gemm_block_bits(m, n, kd, a, lda, bp, bias, c, ldc, None);
     }
+    let micro = kernels::active().micro_full;
     for r in 0..m {
         c[r * ldc..r * ldc + n].copy_from_slice(&bias[..n]);
     }
@@ -239,7 +281,7 @@ fn gemm_block(
                     let nr = NR.min(n - nb);
                     let (bs, ldb, bn0) = b.panel(nb, n, kd);
                     if mr == MR && nr == NR {
-                        micro_full(r, nb, kp, ke, kd, a, lda, bs, ldb, bn0, 0, c, ldc);
+                        micro(r, nb, kp, ke, kd, a, lda, bs, ldb, bn0, 0, c, ldc);
                     } else {
                         micro_edge(r, mr, nb, nr, kp, ke, a, lda, bs, ldb, bn0, 0, c, ldc);
                     }
@@ -270,9 +312,11 @@ fn gemm_block_bits(
     bias: &[f32],
     c: &mut [f32],
     ldc: usize,
+    mut cache: Option<&mut StripCache>,
 ) {
     debug_assert_eq!(bp.nr(), NR);
     debug_assert_eq!(bp.kd(), kd);
+    let micro = kernels::active().micro_full;
     for r in 0..m {
         c[r * ldc..r * ldc + n].copy_from_slice(&bias[..n]);
     }
@@ -283,7 +327,14 @@ fn gemm_block_bits(
         let mut nb = 0usize;
         while nb < n {
             let nr = NR.min(n - nb);
-            bp.read_strip(nb / NR, kp, ke, &mut tile[..(ke - kp) * NR]);
+            let cached = cache.as_deref_mut().and_then(|sc| sc.strip(bp, nb / NR, kp, ke));
+            let strip: &[f32] = match cached {
+                Some(s) => s,
+                None => {
+                    bp.read_strip(nb / NR, kp, ke, &mut tile[..(ke - kp) * NR]);
+                    &tile[..(ke - kp) * NR]
+                }
+            };
             let mut mb = 0usize;
             while mb < m {
                 let me = (mb + MC).min(m);
@@ -291,9 +342,9 @@ fn gemm_block_bits(
                 while r < me {
                     let mr = MR.min(me - r);
                     if mr == MR && nr == NR {
-                        micro_full(r, nb, kp, ke, kd, a, lda, &tile, NR, 0, kp, c, ldc);
+                        micro(r, nb, kp, ke, kd, a, lda, strip, NR, 0, kp, c, ldc);
                     } else {
-                        micro_edge(r, mr, nb, nr, kp, ke, a, lda, &tile, NR, 0, kp, c, ldc);
+                        micro_edge(r, mr, nb, nr, kp, ke, a, lda, strip, NR, 0, kp, c, ldc);
                     }
                     r += mr;
                 }
@@ -305,43 +356,89 @@ fn gemm_block_bits(
     }
 }
 
-/// Full MR×NR register tile: C tile in registers, ascending-k updates.
-/// `n0` addresses the C columns; `bn0` the same columns within `b`
-/// (equal for a row-major B, 0 for a packed panel); `bk0` is the `k`
-/// index of `b`'s first row (0 for a full B, `kp` for a decoded strip
-/// tile).
-#[inline]
-fn micro_full(
-    r0: usize,
-    n0: usize,
-    kp: usize,
-    ke: usize,
-    kd: usize,
-    a: &[f32],
-    lda: usize,
-    b: &[f32],
-    ldb: usize,
-    bn0: usize,
-    bk0: usize,
-    c: &mut [f32],
-    ldc: usize,
-) {
-    let arows: [&[f32]; MR] = std::array::from_fn(|i| &a[(r0 + i) * lda..][..kd]);
-    let mut acc = [[0f32; NR]; MR];
-    for (i, accr) in acc.iter_mut().enumerate() {
-        accr.copy_from_slice(&c[(r0 + i) * ldc + n0..][..NR]);
+/// LRU cache of decoded `(bitstream, k-panel, NR-panel)` strips for
+/// packed-B GEMMs. The streamed 1×1-conv path calls the GEMM once per
+/// `A`-row block against the *same* weight bitstream, so without a
+/// cache every row block re-decodes every strip; with one, each strip
+/// decodes once per `infer` and later blocks reuse the f32 copy
+/// (bit-identical by construction — the cache stores exactly what
+/// [`PackedPanels::read_strip`] produces).
+///
+/// Capacity is in f32 elements and is part of the lowering plan's
+/// priced scratch (`LoweredPlan::strip_cache_elems`), so the measured
+/// memory envelope accounts for it. A capacity of 0 disables caching
+/// (every lookup misses without storing).
+pub struct StripCache {
+    cap: usize,
+    used: usize,
+    tick: u64,
+    entries: Vec<StripEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+struct StripEntry {
+    /// (bitstream identity, k-panel start, NR-panel index)
+    key: (u64, usize, usize),
+    tick: u64,
+    data: Vec<f32>,
+}
+
+impl StripCache {
+    /// Cache bounded at `cap_elems` decoded f32 values.
+    pub fn new(cap_elems: usize) -> StripCache {
+        StripCache { cap: cap_elems, used: 0, tick: 0, entries: Vec::new(), hits: 0, misses: 0 }
     }
-    for kk in kp..ke {
-        let brow = &b[(kk - bk0) * ldb + bn0..][..NR];
-        for (accr, arow) in acc.iter_mut().zip(&arows) {
-            let av = arow[kk];
-            for (x, &bv) in accr.iter_mut().zip(brow) {
-                *x += av * bv;
-            }
+
+    pub fn cap_elems(&self) -> usize {
+        self.cap
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// The decoded strip for panel columns `[panel*NR, (panel+1)*NR)`
+    /// rows `[k0, k1)`, decoding on miss and evicting least-recently
+    /// used strips to stay within capacity. `None` when the strip
+    /// cannot fit at all — the caller then streams through its stack
+    /// tile as if no cache existed.
+    fn strip(&mut self, bp: &PackedPanels, panel: usize, k0: usize, k1: usize) -> Option<&[f32]> {
+        let elems = (k1 - k0) * bp.nr();
+        if elems > self.cap {
+            return None;
         }
-    }
-    for (i, accr) in acc.iter().enumerate() {
-        c[(r0 + i) * ldc + n0..][..NR].copy_from_slice(accr);
+        self.tick += 1;
+        let key = (bp.id(), k0, panel);
+        if let Some(i) = self.entries.iter().position(|e| e.key == key) {
+            // Same bitstream + same k0 implies the same k1 (strips are
+            // KC-quantized over a fixed kd), so the entry is the whole
+            // requested strip.
+            debug_assert_eq!(self.entries[i].data.len(), elems);
+            self.entries[i].tick = self.tick;
+            self.hits += 1;
+            return Some(&self.entries[i].data);
+        }
+        self.misses += 1;
+        while self.used + elems > self.cap {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(i, _)| i)?;
+            self.used -= self.entries[lru].data.len();
+            self.entries.swap_remove(lru);
+        }
+        let mut data = vec![0f32; elems];
+        bp.read_strip(panel, k0, k1, &mut data);
+        self.used += elems;
+        self.entries.push(StripEntry { key, tick: self.tick, data });
+        self.entries.last().map(|e| e.data.as_slice())
     }
 }
 
@@ -584,6 +681,61 @@ mod tests {
                 assert!(c[r * ldc + n..r * ldc + ldc].iter().all(|&v| v == -7.0));
             }
         }
+    }
+
+    #[test]
+    fn cached_bits_matches_uncached_bit_for_bit() {
+        let fmt = crate::quant::QFormat::new(2, 6);
+        let (m, n, kd) = (64usize, 33usize, 300usize);
+        let a = rand_vec(m * kd, 61);
+        let b = crate::testkit::quantized_canonical(fmt, &rand_vec(kd * n, 62));
+        let bias = rand_vec(n, 63);
+        let bpn = pack_b_panels(&b, kd, n);
+        let bits = PackedPanels::pack(fmt, &bpn, kd, NR);
+        let mut want = vec![f32::NAN; m * n];
+        gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut want, n, 1);
+        // Generous capacity: the second pass reuses every strip.
+        let mut cache = StripCache::new(1 << 20);
+        for pass in 0..2 {
+            let mut c = vec![f32::NAN; m * n];
+            gemm_bias_bits_cached(m, n, kd, &a, kd, &bits, &bias, &mut c, n, 1, Some(&mut cache));
+            assert!(
+                c.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "pass {pass} diverged from the uncached path"
+            );
+        }
+        // 3 NR-panels × 2 k-strips, decoded once each on pass 0, all
+        // hits on pass 1.
+        assert_eq!((cache.misses(), cache.hits()), (6, 6));
+
+        // Zero capacity: every strip streams through the stack tile.
+        let mut none = StripCache::new(0);
+        let mut c = vec![f32::NAN; m * n];
+        gemm_bias_bits_cached(m, n, kd, &a, kd, &bits, &bias, &mut c, n, 1, Some(&mut none));
+        assert!(c.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!((none.hits(), none.misses()), (0, 0));
+    }
+
+    #[test]
+    fn tiny_strip_cache_evicts_and_stays_exact() {
+        let fmt = crate::quant::QFormat::new(1, 7);
+        let (m, n, kd) = (16usize, 40usize, 70usize);
+        let a = rand_vec(m * kd, 71);
+        let b = crate::testkit::quantized_canonical(fmt, &rand_vec(kd * n, 72));
+        let bias = rand_vec(n, 73);
+        let bpn = pack_b_panels(&b, kd, n);
+        let bits = PackedPanels::pack(fmt, &bpn, kd, NR);
+        let mut want = vec![f32::NAN; m * n];
+        gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut want, n, 1);
+        // Room for a single 70×16 strip: panels evict each other on
+        // every access, results must not change.
+        let mut cache = StripCache::new(kd * NR);
+        for _ in 0..2 {
+            let mut c = vec![f32::NAN; m * n];
+            gemm_bias_bits_cached(m, n, kd, &a, kd, &bits, &bias, &mut c, n, 1, Some(&mut cache));
+            assert!(c.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        assert!(cache.misses() > 0);
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! x86_64 AVX2 kernels.
+//!
+//! Bit-exactness: the micro-kernel uses separate `_mm256_mul_ps` +
+//! `_mm256_add_ps` (never `_mm256_fmadd_ps`) so each of the NR
+//! independent output lanes sees exactly the scalar kernel's
+//! `acc += a * b` rounding sequence; the unpacker reproduces the
+//! scalar decoder's sign-extend-then-scale arithmetic, which is exact
+//! for every `|code| ≤ 2^23`.
+//!
+//! `unsafe` hygiene: both entry points are safe fns that check every
+//! bound the raw-pointer bodies rely on before entering the
+//! `#[target_feature]` inner fn. The dispatch table only installs this
+//! module when `is_x86_feature_detected!("avx2")` holds.
+
+use std::arch::x86_64::*;
+
+use super::super::gemm::{MR, NR};
+
+/// AVX2 MR×NR register tile: 4 rows × 2 × 256-bit accumulators.
+/// Safe wrapper — asserts the same bounds the scalar kernel's slice
+/// indexing enforces, then calls the intrinsic body.
+pub(super) fn micro_full(
+    r0: usize,
+    n0: usize,
+    kp: usize,
+    ke: usize,
+    kd: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    bn0: usize,
+    bk0: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    assert!(kp < ke && ke <= kd && bk0 <= kp);
+    assert!(a.len() >= (r0 + MR - 1) * lda + kd);
+    assert!(b.len() >= (ke - 1 - bk0) * ldb + bn0 + NR);
+    assert!(c.len() >= (r0 + MR - 1) * ldc + n0 + NR);
+    // SAFETY: AVX2 availability is asserted above and guaranteed by
+    // the dispatch table; all pointer offsets are covered by the
+    // bounds checks above.
+    unsafe { micro_full_avx2(r0, n0, kp, ke, a, lda, b, ldb, bn0, bk0, c, ldc) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn micro_full_avx2(
+    r0: usize,
+    n0: usize,
+    kp: usize,
+    ke: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    bn0: usize,
+    bk0: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let cp = c.as_mut_ptr();
+    // C tile lives in registers across the k-panel: 4 rows × 16 cols.
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    for (i, accr) in acc.iter_mut().enumerate() {
+        let row = cp.add((r0 + i) * ldc + n0);
+        accr[0] = _mm256_loadu_ps(row);
+        accr[1] = _mm256_loadu_ps(row.add(8));
+    }
+    for kk in kp..ke {
+        let brow = bp.add((kk - bk0) * ldb + bn0);
+        let b0 = _mm256_loadu_ps(brow);
+        let b1 = _mm256_loadu_ps(brow.add(8));
+        for (i, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*ap.add((r0 + i) * lda + kk));
+            // mul + add, not fmadd: keeps lane rounding identical to
+            // the scalar kernel.
+            accr[0] = _mm256_add_ps(accr[0], _mm256_mul_ps(av, b0));
+            accr[1] = _mm256_add_ps(accr[1], _mm256_mul_ps(av, b1));
+        }
+    }
+    for (i, accr) in acc.iter().enumerate() {
+        let row = cp.add((r0 + i) * ldc + n0);
+        _mm256_storeu_ps(row, accr[0]);
+        _mm256_storeu_ps(row.add(8), accr[1]);
+    }
+}
+
+/// AVX2 bit-field span decoder: 8 values per iteration via 64-bit
+/// gathers at byte granularity + per-lane variable shifts. Values
+/// whose 8-byte gather window would overrun the bitstream fall back to
+/// the scalar tail (bounds computed here, not per lane).
+pub(super) fn unpack_span(words: &[u64], start: usize, width: u32, inv: f32, out: &mut [f32]) {
+    debug_assert!((1..=crate::memory::MAX_PACK_BITS).contains(&width));
+    debug_assert!((start + out.len()) * width as usize <= words.len() * 64);
+    let w = width as usize;
+    let total_bits = words.len() * 64;
+    // Each SIMD lane loads the 8 bytes at its value's byte offset, so
+    // a value at bit position p needs p ≤ total_bits - 64. Gather
+    // offsets are i32 bytes — cap the stream size accordingly (far
+    // above any real tensor; the scalar path covers the rest).
+    let mut n_simd = 0usize;
+    if total_bits >= 64 && words.len() <= i32::MAX as usize / 8 {
+        let max_v = (total_bits - 64) / w;
+        if max_v >= start {
+            n_simd = (max_v - start + 1).min(out.len()) & !7;
+        }
+    }
+    if n_simd > 0 {
+        // SAFETY: AVX2 is guaranteed by the dispatch table; every
+        // gather window [p/8, p/8 + 8) is within the words buffer by
+        // the n_simd bound above, and the output is sliced to the
+        // exact SIMD span.
+        unsafe { unpack_span_avx2(words, start, width, inv, &mut out[..n_simd]) };
+    }
+    if n_simd < out.len() {
+        super::scalar_unpack_span(words, start + n_simd, width, inv, &mut out[n_simd..]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_span_avx2(words: &[u64], start: usize, width: u32, inv: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len() % 8, 0);
+    let base = words.as_ptr() as *const i64;
+    let w = width as usize;
+    let invv = _mm256_set1_ps(inv);
+    // Sign-extend a width-bit code sitting in the low bits of an i32
+    // lane: shift left then arithmetic-shift right by 32 - width.
+    let sh = _mm_cvtsi32_si128(32 - width as i32);
+    // After the 64-bit variable shift each value occupies the low
+    // ≤ 31 bits of its qword; compress the even (low) dwords of both
+    // gathers into one vector of 8 codes.
+    let lo32 = _mm256_setr_epi32(0, 2, 4, 6, 0, 2, 4, 6);
+    let mut pos = start * w;
+    let mut o = out.as_mut_ptr();
+    for _ in 0..out.len() / 8 {
+        let byte = |j: usize| ((pos + j * w) >> 3) as i32;
+        let bit = |j: usize| ((pos + j * w) & 7) as i64;
+        // Byte-granular gathers (scale 1): value bits start at
+        // (p & 7) ≤ 7 and end before bit 7 + 24 = 31 of the loaded
+        // qword, so one unaligned 8-byte load always covers a value.
+        let off0 = _mm_setr_epi32(byte(0), byte(1), byte(2), byte(3));
+        let off1 = _mm_setr_epi32(byte(4), byte(5), byte(6), byte(7));
+        let g0 = _mm256_i32gather_epi64::<1>(base, off0);
+        let g1 = _mm256_i32gather_epi64::<1>(base, off1);
+        let r0 = _mm256_srlv_epi64(g0, _mm256_setr_epi64x(bit(0), bit(1), bit(2), bit(3)));
+        let r1 = _mm256_srlv_epi64(g1, _mm256_setr_epi64x(bit(4), bit(5), bit(6), bit(7)));
+        let lo0 = _mm256_permutevar8x32_epi32(r0, lo32);
+        let lo1 = _mm256_permutevar8x32_epi32(r1, lo32);
+        let codes = _mm256_inserti128_si256::<1>(lo0, _mm256_castsi256_si128(lo1));
+        let ext = _mm256_sra_epi32(_mm256_sll_epi32(codes, sh), sh);
+        // Exact: |code| ≤ 2^23 converts exactly, inv is a power of two.
+        let vals = _mm256_mul_ps(_mm256_cvtepi32_ps(ext), invv);
+        _mm256_storeu_ps(o, vals);
+        o = o.add(8);
+        pos += 8 * w;
+    }
+}

@@ -1,0 +1,480 @@
+//! Explicit SIMD microkernels behind runtime feature detection.
+//!
+//! The GEMM's hot loops used to lean on auto-vectorization of the
+//! scalar [`MR`]×[`NR`] tile; this module makes the vector code
+//! explicit and dispatches it once per process:
+//!
+//! | kind | micro-kernel | packed decode | available |
+//! |---|---|---|---|
+//! | `scalar` | portable [`MR`]×[`NR`] tile (auto-vectorizable) | word-shift loop | always |
+//! | `avx2` | 8 × 256-bit accumulators (4 rows × 2 halves) | 64-bit gathers + variable shifts, 8 lanes/iter | x86_64 with AVX2 detected |
+//! | `neon` | 16 × 128-bit accumulators (4 rows × 4 quads) | scalar extract + vector convert, 4 lanes/iter | aarch64 (NEON is baseline) |
+//!
+//! Selection: `QBOUND_KERNEL={auto,scalar,avx2,neon}` (invalid or
+//! unavailable values are errors, not silent fallbacks), default
+//! `auto` = best detected. The choice is resolved once ([`init`]) and
+//! cached; [`active`] is the hot-path accessor the GEMM and the packed
+//! decoder read a fn pointer from. [`force`] pins a variant for tests
+//! and benches — safe to call at any time *because of the contract
+//! below*.
+//!
+//! # Bit-exactness contract
+//!
+//! Every kernel variant must produce **bit-identical** results to the
+//! scalar kernel:
+//!
+//! * The micro-kernel accumulates each output element's `k` terms in
+//!   ascending order starting from the current `C` value, one
+//!   `mul` + `add` per term — **never** a fused multiply-add, which
+//!   would change the rounding vs the reference interpreter. SIMD
+//!   vectorizes across the [`NR`] *independent* output lanes (and the
+//!   decoder across independent values), which cannot change any
+//!   per-element float sequence.
+//! * The unpacker sign-extends each `width`-bit two's-complement code
+//!   and multiplies by an exact power of two; `|code| ≤ 2^23 <
+//!   2^24`, so the int→f32 conversion is exact on every path.
+//!
+//! `tests/property_gemm_packed.rs` and `tests/integration_parity.rs`
+//! sweep every available variant against the scalar baseline.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::gemm::{MR, NR};
+use crate::memory::MAX_PACK_BITS;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// Full [`MR`]×[`NR`] register-tile micro-kernel. Arguments mirror
+/// `gemm.rs`: rows `r0..r0+MR` of `a` (stride `lda`, depth `kd`),
+/// columns `n0..n0+NR` of `c` (stride `ldc`), accumulating the k-panel
+/// `kp..ke`; `b` is addressed as `b[(kk - bk0) * ldb + bn0 ..]`.
+pub type MicroFull = fn(
+    usize,     // r0
+    usize,     // n0
+    usize,     // kp
+    usize,     // ke
+    usize,     // kd
+    &[f32],    // a
+    usize,     // lda
+    &[f32],    // b
+    usize,     // ldb
+    usize,     // bn0
+    usize,     // bk0
+    &mut [f32], // c
+    usize,     // ldc
+);
+
+/// Bit-field span decoder: `out.len()` consecutive `width`-bit
+/// two's-complement codes starting at element `start` of the LSB-first
+/// little-endian bitstream `words`, each scaled by `inv` (an exact
+/// power of two) into f32.
+pub type UnpackSpan = fn(&[u64], usize, u32, f32, &mut [f32]);
+
+/// A dispatchable kernel variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum KernelKind {
+    /// Portable scalar tile — always available, the baseline every
+    /// other variant must match bit-for-bit.
+    Scalar = 1,
+    /// x86_64 AVX2 (FMA deliberately unused: fusing would change
+    /// rounding vs the scalar kernel).
+    Avx2 = 2,
+    /// aarch64 NEON.
+    Neon = 3,
+}
+
+impl KernelKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse a `QBOUND_KERNEL` spelling. `auto` is `None` (pick the
+    /// best detected variant); anything unknown is an error.
+    pub fn parse(s: &str) -> Result<Option<KernelKind>> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Ok(None),
+            "scalar" => Ok(Some(KernelKind::Scalar)),
+            "avx2" => Ok(Some(KernelKind::Avx2)),
+            "neon" => Ok(Some(KernelKind::Neon)),
+            other => {
+                bail!("unknown kernel {other:?} (expected: auto | scalar | avx2 | neon)")
+            }
+        }
+    }
+
+    /// Whether this variant can run on the current host.
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelKind::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelKind::Avx2 => false,
+            // NEON is part of the aarch64 baseline target.
+            KernelKind::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// One dispatch-table row: the fn pointers the hot paths call through.
+pub struct Kernel {
+    pub kind: KernelKind,
+    pub micro_full: MicroFull,
+    pub unpack_span: UnpackSpan,
+}
+
+static SCALAR: Kernel = Kernel {
+    kind: KernelKind::Scalar,
+    micro_full: scalar_micro_full,
+    unpack_span: scalar_unpack_span,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernel = Kernel {
+    kind: KernelKind::Avx2,
+    micro_full: avx2::micro_full,
+    unpack_span: avx2::unpack_span,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernel = Kernel {
+    kind: KernelKind::Neon,
+    micro_full: neon::micro_full,
+    unpack_span: neon::unpack_span,
+};
+
+/// The dispatch table row for an *available* kind ([`KernelKind::is_available`]).
+pub fn get(kind: KernelKind) -> &'static Kernel {
+    assert!(kind.is_available(), "kernel {:?} is not available on this host", kind.label());
+    match kind {
+        KernelKind::Scalar => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => &AVX2,
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => &NEON,
+        // At most one SIMD arm compiles per target, so this arm always
+        // covers at least one (unavailable) variant.
+        _ => unreachable!("unavailable kind passed the availability assert"),
+    }
+}
+
+/// Every variant the current host can run, scalar first — the sweep
+/// order the cross-variant test suites and benches iterate.
+pub fn available() -> Vec<KernelKind> {
+    [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Neon]
+        .into_iter()
+        .filter(|k| k.is_available())
+        .collect()
+}
+
+/// Best variant the host supports (the `auto` choice).
+fn detect_best() -> KernelKind {
+    if KernelKind::Avx2.is_available() {
+        KernelKind::Avx2
+    } else if KernelKind::Neon.is_available() {
+        KernelKind::Neon
+    } else {
+        KernelKind::Scalar
+    }
+}
+
+/// Variant selected by `QBOUND_KERNEL` (default/`auto`: best
+/// detected). Requesting a variant the host cannot run is an error,
+/// like every other `QBOUND_*` misconfiguration.
+pub fn from_env() -> Result<KernelKind> {
+    match std::env::var("QBOUND_KERNEL") {
+        Ok(s) if !s.trim().is_empty() => match KernelKind::parse(&s)? {
+            None => Ok(detect_best()),
+            Some(k) if k.is_available() => Ok(k),
+            Some(k) => bail!(
+                "QBOUND_KERNEL={} requested but this host does not support it \
+                 (available: {})",
+                k.label(),
+                available().iter().map(|k| k.label()).collect::<Vec<_>>().join(", ")
+            ),
+        },
+        _ => Ok(detect_best()),
+    }
+}
+
+/// 0 = unresolved; otherwise a `KernelKind` discriminant. All variants
+/// are bit-identical, so a resolution race is benign by contract.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn kind_from_u8(v: u8) -> KernelKind {
+    match v {
+        1 => KernelKind::Scalar,
+        2 => KernelKind::Avx2,
+        3 => KernelKind::Neon,
+        _ => unreachable!("invalid kernel discriminant {v}"),
+    }
+}
+
+/// Resolve the dispatched variant once per process (from
+/// `QBOUND_KERNEL` / auto-detection), cache it, and report it with a
+/// one-time startup log line. Backend constructors call this so a
+/// misconfigured `QBOUND_KERNEL` surfaces as a clean error before any
+/// compute runs.
+pub fn init() -> Result<KernelKind> {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v != 0 {
+        return Ok(kind_from_u8(v));
+    }
+    let kind = from_env()?;
+    if ACTIVE.compare_exchange(0, kind as u8, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+        let how = match std::env::var("QBOUND_KERNEL") {
+            Ok(s) if !s.trim().is_empty() => "QBOUND_KERNEL",
+            _ => "auto-detected",
+        };
+        log::info!("kernel dispatch: {} ({how})", kind.label());
+        Ok(kind)
+    } else {
+        // Lost the race (or a concurrent `force`): honour the winner.
+        Ok(kind_from_u8(ACTIVE.load(Ordering::Relaxed)))
+    }
+}
+
+/// The active dispatch row — resolved on first use. Panics only on a
+/// malformed `QBOUND_KERNEL` that no backend constructor surfaced
+/// first (constructors call [`init`] and return the error cleanly).
+pub fn active() -> &'static Kernel {
+    get(init().unwrap_or_else(|e| panic!("{e}")))
+}
+
+/// The active variant's kind (telemetry: serve `/v1/stats`, bench
+/// records, smoke artifacts).
+pub fn active_kind() -> KernelKind {
+    init().unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Pin the dispatched variant (tests/benches sweeping variants). The
+/// kind must be available on this host. Safe to call concurrently:
+/// every variant is bit-identical, so compute started under the old
+/// pin stays correct.
+pub fn force(kind: KernelKind) {
+    assert!(kind.is_available(), "cannot force unavailable kernel {:?}", kind.label());
+    ACTIVE.store(kind as u8, Ordering::Relaxed);
+}
+
+// ---- scalar kernels ------------------------------------------------------
+
+/// Full MR×NR register tile: C tile in registers, ascending-k updates,
+/// one `mul` + `add` per term (never `mul_add` — fusing would change
+/// results vs the reference interpreter). `n0` addresses the C columns;
+/// `bn0` the same columns within `b` (equal for a row-major B, 0 for a
+/// packed panel); `bk0` is the `k` index of `b`'s first row (0 for a
+/// full B, `kp` for a decoded strip tile).
+fn scalar_micro_full(
+    r0: usize,
+    n0: usize,
+    kp: usize,
+    ke: usize,
+    kd: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    bn0: usize,
+    bk0: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let arows: [&[f32]; MR] = std::array::from_fn(|i| &a[(r0 + i) * lda..][..kd]);
+    let mut acc = [[0f32; NR]; MR];
+    for (i, accr) in acc.iter_mut().enumerate() {
+        accr.copy_from_slice(&c[(r0 + i) * ldc + n0..][..NR]);
+    }
+    for kk in kp..ke {
+        let brow = &b[(kk - bk0) * ldb + bn0..][..NR];
+        for (accr, arow) in acc.iter_mut().zip(&arows) {
+            let av = arow[kk];
+            for (x, &bv) in accr.iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for (i, accr) in acc.iter().enumerate() {
+        c[(r0 + i) * ldc + n0..][..NR].copy_from_slice(accr);
+    }
+}
+
+/// Scalar bit-field span decoder: the word-shift loop every SIMD
+/// unpacker must match bit-for-bit (and the tail path they fall back
+/// to near the end of the bitstream). Sign-extends each `width`-bit
+/// code, then scales by `inv` — exact, since `|code| < 2^24` and `inv`
+/// is a power of two.
+pub(crate) fn scalar_unpack_span(
+    words: &[u64],
+    start: usize,
+    width: u32,
+    inv: f32,
+    out: &mut [f32],
+) {
+    let shift = 64 - width;
+    let mut bitpos = start * width as usize;
+    for o in out.iter_mut() {
+        let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
+        let mut raw = words[w] >> off;
+        if off + width > 64 {
+            raw |= words[w + 1] << (64 - off);
+        }
+        let code = ((raw << shift) as i64) >> shift;
+        *o = code as f32 * inv;
+        bitpos += width as usize;
+    }
+}
+
+/// Decode a span through the *active* kernel's vector unpacker — the
+/// width-checked entry `memory/packed.rs` routes every fixed-point
+/// window decode through.
+pub fn unpack_span(words: &[u64], start: usize, width: u32, inv: f32, out: &mut [f32]) {
+    unpack_span_with(active(), words, start, width, inv, out)
+}
+
+/// Kind-addressed variant of [`unpack_span`] (cross-variant tests and
+/// benches). Bounds are checked here so every arch implementation can
+/// assume an in-range span.
+pub fn unpack_span_with(
+    k: &Kernel,
+    words: &[u64],
+    start: usize,
+    width: u32,
+    inv: f32,
+    out: &mut [f32],
+) {
+    assert!((1..=MAX_PACK_BITS).contains(&width), "unpackable span width {width}");
+    assert!(
+        (start + out.len()) * width as usize <= words.len() * 64,
+        "span {start}+{} at width {width} overruns {} words",
+        out.len(),
+        words.len()
+    );
+    (k.unpack_span)(words, start, width, inv, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(KernelKind::parse("auto").unwrap(), None);
+        assert_eq!(KernelKind::parse(" Scalar ").unwrap(), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("AVX2").unwrap(), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("neon").unwrap(), Some(KernelKind::Neon));
+        assert!(KernelKind::parse("sse9").is_err());
+        assert_eq!(KernelKind::Scalar.label(), "scalar");
+        assert_eq!(KernelKind::Avx2.label(), "avx2");
+        assert_eq!(KernelKind::Neon.label(), "neon");
+    }
+
+    #[test]
+    fn scalar_always_available_and_first() {
+        let av = available();
+        assert_eq!(av.first(), Some(&KernelKind::Scalar));
+        for k in &av {
+            assert!(k.is_available());
+            // The table row must exist and agree on its kind.
+            assert_eq!(get(*k).kind, *k);
+        }
+        // At most one SIMD variant per arch.
+        assert!(av.len() <= 2);
+    }
+
+    #[test]
+    fn active_resolves_to_an_available_kind() {
+        let kind = active_kind();
+        assert!(kind.is_available());
+        assert_eq!(active().kind, kind);
+        // Resolution is cached: a second read agrees.
+        assert_eq!(active_kind(), kind);
+        assert_eq!(init().unwrap(), kind);
+    }
+
+    /// Pack `codes` (already masked to `width` bits) LSB-first into
+    /// little-endian words — an independent reference packer.
+    fn pack_codes(codes: &[u64], width: u32) -> Vec<u64> {
+        let mut words = vec![0u64; (codes.len() * width as usize).div_ceil(64)];
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        for (i, &code) in codes.iter().enumerate() {
+            let bits = code & mask;
+            let bitpos = i * width as usize;
+            let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
+            words[w] |= bits << off;
+            if off + width > 64 {
+                words[w + 1] |= bits >> (64 - off);
+            }
+        }
+        words
+    }
+
+    #[test]
+    fn every_variant_unpacks_bit_identically_to_scalar() {
+        let mut rng = crate::prng::Xoshiro256pp::new(0xdec0de);
+        for width in 1..=MAX_PACK_BITS {
+            // 0..135 values: exercises the 8-lane SIMD body, the
+            // non-multiple-of-8 tail, and the end-of-buffer scalar
+            // fallback (the last values sit within 64 bits of the end).
+            let n = 135usize;
+            let codes: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let words = pack_codes(&codes, width);
+            let inv = (-((width as i32) / 2) as f32).exp2();
+            for start in [0usize, 1, 7, 64, n - 9] {
+                let len = n - start;
+                let mut want = vec![f32::NAN; len];
+                unpack_span_with(get(KernelKind::Scalar), &words, start, width, inv, &mut want);
+                for kind in available() {
+                    let mut got = vec![f32::NAN; len];
+                    unpack_span_with(get(kind), &words, start, width, inv, &mut got);
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{:?} width {width} start {start} elem {i}: {g} vs {w}",
+                            kind.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_variant_micro_full_is_bit_identical_to_scalar() {
+        let mut rng = crate::prng::Xoshiro256pp::new(0x516e);
+        let (kd, lda, ldb, ldc) = (37usize, 40usize, NR, NR + 5);
+        let a: Vec<f32> = (0..(MR + 2) * lda).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+        let b: Vec<f32> = (0..kd * ldb).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+        let c0: Vec<f32> = (0..(MR + 2) * ldc).map(|_| rng.uniform_f32(-2.0, 2.0)).collect();
+        // Both addressing modes: flat-B (bk0 = 0) and strip tile
+        // (bk0 = kp, b holds only rows kp..ke).
+        for (r0, kp, ke, bk0) in [(0usize, 0usize, kd, 0usize), (2, 5, 31, 5), (1, 0, 1, 0)] {
+            let bview = &b[..(ke - bk0) * ldb];
+            let mut want = c0.clone();
+            scalar_micro_full(r0, 0, kp, ke, kd, &a, lda, bview, ldb, 0, bk0, &mut want, ldc);
+            for kind in available() {
+                let mut got = c0.clone();
+                (get(kind).micro_full)(
+                    r0, 0, kp, ke, kd, &a, lda, bview, ldb, 0, bk0, &mut got, ldc,
+                );
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "{:?} r0={r0} kp={kp} ke={ke} elem {i}",
+                        kind.label()
+                    );
+                }
+            }
+        }
+    }
+}

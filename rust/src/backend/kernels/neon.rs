@@ -1,0 +1,126 @@
+//! aarch64 NEON kernels. NEON (ASIMD) is part of the aarch64 baseline
+//! target, so no runtime detection is needed — the dispatch table
+//! compiles this module in whenever the target is aarch64.
+//!
+//! Bit-exactness: the micro-kernel uses separate `vmulq_f32` +
+//! `vaddq_f32` (never `vfmaq_f32`) so each of the NR independent
+//! output lanes sees exactly the scalar kernel's `acc += a * b`
+//! rounding sequence; the unpacker extracts sign-extended codes with
+//! the scalar decoder's arithmetic and vectorizes only the exact
+//! int→f32 convert + power-of-two scale.
+
+use std::arch::aarch64::*;
+
+use super::super::gemm::{MR, NR};
+
+/// NEON MR×NR register tile: 4 rows × 4 × 128-bit accumulators.
+/// Safe wrapper — asserts the same bounds the scalar kernel's slice
+/// indexing enforces, then calls the intrinsic body.
+pub(super) fn micro_full(
+    r0: usize,
+    n0: usize,
+    kp: usize,
+    ke: usize,
+    kd: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    bn0: usize,
+    bk0: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    assert!(kp < ke && ke <= kd && bk0 <= kp);
+    assert!(a.len() >= (r0 + MR - 1) * lda + kd);
+    assert!(b.len() >= (ke - 1 - bk0) * ldb + bn0 + NR);
+    assert!(c.len() >= (r0 + MR - 1) * ldc + n0 + NR);
+    // SAFETY: NEON is baseline on aarch64; all pointer offsets are
+    // covered by the bounds checks above.
+    unsafe { micro_full_neon(r0, n0, kp, ke, a, lda, b, ldb, bn0, bk0, c, ldc) }
+}
+
+unsafe fn micro_full_neon(
+    r0: usize,
+    n0: usize,
+    kp: usize,
+    ke: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    bn0: usize,
+    bk0: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let cp = c.as_mut_ptr();
+    // C tile in registers: 4 rows × 16 cols as 4 quad-lane vectors.
+    let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+    for (i, accr) in acc.iter_mut().enumerate() {
+        let row = cp.add((r0 + i) * ldc + n0);
+        for (q, accq) in accr.iter_mut().enumerate() {
+            *accq = vld1q_f32(row.add(4 * q));
+        }
+    }
+    for kk in kp..ke {
+        let brow = bp.add((kk - bk0) * ldb + bn0);
+        let bq = [
+            vld1q_f32(brow),
+            vld1q_f32(brow.add(4)),
+            vld1q_f32(brow.add(8)),
+            vld1q_f32(brow.add(12)),
+        ];
+        for (i, accr) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f32(*ap.add((r0 + i) * lda + kk));
+            for (accq, bv) in accr.iter_mut().zip(&bq) {
+                // mul + add, not vfmaq: keeps lane rounding identical
+                // to the scalar kernel.
+                *accq = vaddq_f32(*accq, vmulq_f32(av, *bv));
+            }
+        }
+    }
+    for (i, accr) in acc.iter().enumerate() {
+        let row = cp.add((r0 + i) * ldc + n0);
+        for (q, accq) in accr.iter().enumerate() {
+            vst1q_f32(row.add(4 * q), *accq);
+        }
+    }
+}
+
+/// NEON bit-field span decoder: codes are extracted with the scalar
+/// word-shift arithmetic (bitstream loads stay safe slice indexing),
+/// then converted and scaled four lanes at a time.
+pub(super) fn unpack_span(words: &[u64], start: usize, width: u32, inv: f32, out: &mut [f32]) {
+    debug_assert!((1..=crate::memory::MAX_PACK_BITS).contains(&width));
+    debug_assert!((start + out.len()) * width as usize <= words.len() * 64);
+    let n = out.len();
+    let w = width as usize;
+    let shift = 64 - width;
+    let mut bitpos = start * w;
+    let mut chunks = out.chunks_exact_mut(4);
+    for chunk in &mut chunks {
+        let mut codes = [0i32; 4];
+        for code in &mut codes {
+            let (wd, off) = (bitpos >> 6, (bitpos & 63) as u32);
+            let mut raw = words[wd] >> off;
+            if off + width > 64 {
+                raw |= words[wd + 1] << (64 - off);
+            }
+            *code = (((raw << shift) as i64) >> shift) as i32;
+            bitpos += w;
+        }
+        // SAFETY: NEON is baseline on aarch64; `chunk` is exactly 4
+        // lanes and `codes` is a local 4-lane array.
+        unsafe {
+            let v = vcvtq_f32_s32(vld1q_s32(codes.as_ptr()));
+            vst1q_f32(chunk.as_mut_ptr(), vmulq_n_f32(v, inv));
+        }
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        super::scalar_unpack_span(words, start + (n - rem.len()), width, inv, rem);
+    }
+}

@@ -52,6 +52,14 @@ pub enum PostQuant {
 /// keeps the result bit-identical to a whole-matrix GEMM).
 pub const FUSED_A_ROWS: usize = 128;
 
+/// Ceiling (f32 elements) on the fused path's decoded-weight-strip
+/// cache: a streamed 1×1 conv re-decodes every weight panel once per
+/// [`FUSED_A_ROWS`] block, so the executor memoizes decoded strips up
+/// to this budget (64 KiB at 4 bytes/element). The plan prices the
+/// actual per-net need into [`LoweredPlan::strip_cache_elems`], clamped
+/// here so the envelope stays bounded on any architecture.
+pub const STRIP_CACHE_CAP: usize = 16 * 1024;
+
 /// Resolve a step's output format from the decoded wire configs.
 pub fn post_format(
     post: PostQuant,
@@ -129,6 +137,17 @@ pub struct LoweredPlan {
     /// for a streamed GEMM `A`, the whole module input for inception
     /// (its four branches each re-read it).
     pub max_win_elems: usize,
+    /// Fused packed mode: largest *per-thread* im2col decode window
+    /// (one input row, `iw·ic` elements) over the packed-input non-1×1
+    /// convs. The parallel packed im2col gives every extra thread its
+    /// own row window; [`Self::fused_window_elems`] prices them.
+    pub max_row_win_elems: usize,
+    /// Fused packed mode: decoded-weight-strip cache capacity (f32
+    /// elements) the executor allocates — the largest panel-strip set
+    /// (`ceil(out_c/NR)·NR·kd`) over the 1×1 stride-1 convs that stream
+    /// their `A` in more than one [`FUSED_A_ROWS`] block, clamped to
+    /// [`STRIP_CACHE_CAP`]. Zero when no conv re-decodes weights.
+    pub strip_cache_elems: usize,
     /// Fused packed mode: largest f32 working set (elements) live during
     /// any single step — decode window (or carried intra-group input)
     /// plus the step's output — excluding the col/tmp scratch tracked
@@ -163,6 +182,8 @@ impl LoweredPlan {
         let mut max_col = 0usize;
         let mut max_tmp = 0usize;
         let mut max_win = 0usize;
+        let mut max_row_win = 0usize;
+        let mut strip_cache = 0usize;
         let mut max_fused = 0usize;
         // Whether the *current* step's input is a packed bitstream in
         // fused mode: true at entry (the network input is packed at
@@ -205,13 +226,23 @@ impl LoweredPlan {
                 let (in_e, out_e) = (shape.elems(), out_shape.elems());
                 let (win, fused) = if packed_in {
                     match (op, shape) {
-                        (&Op::Conv { k, stride, .. }, Shape::Hwc(_, iw, ic)) => {
+                        (&Op::Conv { out_c, k, stride, .. }, Shape::Hwc(_, iw, ic)) => {
                             if k == 1 && stride == 1 {
-                                // streamed GEMM A: one row block at a time
+                                // streamed GEMM A: one row block at a time.
+                                // More than one block re-reads every weight
+                                // strip — size the strip cache for it.
                                 let w = FUSED_A_ROWS.min(in_e / ic) * ic;
+                                if in_e / ic > FUSED_A_ROWS {
+                                    let strips = out_c.div_ceil(NR) * NR * ic;
+                                    strip_cache =
+                                        strip_cache.max(strips.min(STRIP_CACHE_CAP));
+                                }
                                 (w, w + out_e)
                             } else {
                                 // im2col decodes one input row at a time
+                                // (one row window *per thread* when the
+                                // packed im2col splits output rows).
+                                max_row_win = max_row_win.max(iw * ic);
                                 (iw * ic, iw * ic + out_e)
                             }
                         }
@@ -287,6 +318,8 @@ impl LoweredPlan {
             max_col_elems: max_col,
             max_tmp_elems: max_tmp,
             max_win_elems: max_win,
+            max_row_win_elems: max_row_win,
+            strip_cache_elems: strip_cache,
             max_fused_elems: max_fused,
             max_bias_elems: max_bias,
             weight_pad_elems: weight_pad,
@@ -298,6 +331,22 @@ impl LoweredPlan {
     pub fn input_elems(&self) -> usize {
         let (h, w, c) = self.input_shape;
         h * w * c
+    }
+
+    /// Fused-mode scratch-window budget (f32 elements) for a `threads`
+    /// worker budget: the largest decode window, one extra im2col row
+    /// window per additional thread, the bias decode window, and the
+    /// decoded-weight-strip cache. This is the "windows" term of the
+    /// modeled envelope
+    /// ([`FootprintModel::fused_envelope`](crate::memory::FootprintModel::fused_envelope));
+    /// envelope call sites price the single-threaded budget (`threads =
+    /// 1`) — the extra per-thread rows are short-lived transients
+    /// covered by the bound checker's slack, not steady-state residency.
+    pub fn fused_window_elems(&self, threads: usize) -> usize {
+        self.max_win_elems
+            + self.max_row_win_elems * (threads.max(1) - 1)
+            + self.max_bias_elems
+            + self.strip_cache_elems
     }
 
     /// Quantize every group's parameters with its `wq` row (biases
@@ -572,6 +621,13 @@ mod tests {
         // input (Flatten keeps the bitstream packed), 4*4*16 = 256 —
         // bigger than any conv row (28) or 1x1 block (none in lenet).
         assert_eq!(plan.max_win_elems, 256);
+        // Largest im2col row window: the L2 conv reads 12x12x8 rows.
+        assert_eq!(plan.max_row_win_elems, 12 * 8);
+        // No 1x1 conv streams multiple A blocks -> no strip cache.
+        assert_eq!(plan.strip_cache_elems, 0);
+        // The windows term: threads=1 prices no extra row windows.
+        assert_eq!(plan.fused_window_elems(1), 256 + plan.max_bias_elems);
+        assert_eq!(plan.fused_window_elems(4), 256 + 3 * 96 + plan.max_bias_elems);
         // Largest fused working set: the L1 maxpool carries its f32
         // conv input (24*24*8) plus its own output (12*12*8).
         assert_eq!(plan.max_fused_elems, 24 * 24 * 8 + 12 * 12 * 8);
@@ -616,6 +672,13 @@ mod tests {
             let plan = LoweredPlan::new(&a, None).unwrap();
             assert!(plan.max_win_elems > 0, "{name}");
             assert!(plan.max_win_elems <= plan.max_act_elems, "{name}");
+            assert!(plan.max_row_win_elems <= plan.max_win_elems, "{name}");
+            assert!(plan.strip_cache_elems <= STRIP_CACHE_CAP, "{name}");
+            assert!(
+                plan.fused_window_elems(1)
+                    == plan.max_win_elems + plan.max_bias_elems + plan.strip_cache_elems,
+                "{name}"
+            );
             // No single step's fused f32 working set reaches the two
             // max-sized arenas of the default path — the source of the
             // measured residency reduction.

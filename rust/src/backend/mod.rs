@@ -4,7 +4,8 @@
 //! [`crate::search`] — asks one question: *"run a quantized forward batch
 //! of this network and give me the logits"*. This module turns that
 //! question into a trait pair so the answer can come from different
-//! engines:
+//! engines (with the CPU hot loops themselves dispatched once per
+//! process to an ISA-specific micro-kernel variant — see [`kernels`]):
 //!
 //! * [`Backend`] — a factory bound to one execution technology; it loads
 //!   a network (manifest + weights) into a [`NetExecutor`].
@@ -50,6 +51,7 @@
 
 pub mod fast;
 pub mod gemm;
+pub mod kernels;
 pub mod lowering;
 pub mod reference;
 

@@ -35,8 +35,12 @@ pub struct ReferenceBackend {
 }
 
 impl ReferenceBackend {
-    /// Storage mode from the environment (`QBOUND_STORAGE`).
+    /// Storage mode from the environment (`QBOUND_STORAGE`). Also
+    /// resolves the kernel dispatch (`QBOUND_KERNEL`) — the packed
+    /// decode path runs through it — so a misconfiguration surfaces
+    /// here as a clean error instead of a hot-path panic.
     pub fn new() -> Result<ReferenceBackend> {
+        super::kernels::init()?;
         Ok(ReferenceBackend { storage: StorageMode::from_env()? })
     }
 

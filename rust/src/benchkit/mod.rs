@@ -78,13 +78,29 @@ impl BenchResult {
     }
 }
 
+/// One packed-vs-f32 comparison, labeled with the kernel variant it ran
+/// under: `packed_over_f32` is packed mean time / f32 mean time for the
+/// same workload (1.0 = parity, lower is faster). Archived in the
+/// suite's `BENCH_*.json` so the perf trajectory tracks how close the
+/// bit-exact packed path sits to the f32 path per kernel variant.
+#[derive(Clone, Debug)]
+pub struct RatioEntry {
+    pub net: String,
+    pub kernel: &'static str,
+    pub packed_over_f32: f64,
+}
+
 /// Benchmark registry + runner.
 pub struct BenchSuite {
     pub title: String,
     pub warmup: Duration,
     pub measure: Duration,
     pub max_iters: usize,
+    /// Kernel variant dispatched when the suite was created (benches
+    /// that `force()` a sweep label each [`RatioEntry`] individually).
+    pub kernel: &'static str,
     results: Vec<BenchResult>,
+    ratios: Vec<RatioEntry>,
 }
 
 impl BenchSuite {
@@ -96,7 +112,9 @@ impl BenchSuite {
             warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
             measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
             max_iters: 10_000,
+            kernel: crate::backend::kernels::active_kind().label(),
             results: Vec::new(),
+            ratios: Vec::new(),
         }
     }
 
@@ -158,8 +176,18 @@ impl BenchSuite {
         self.results.push(res);
     }
 
+    /// Record one packed-vs-f32 time ratio for `net` under `kernel`.
+    pub fn record_ratio(&mut self, net: &str, kernel: &'static str, packed_over_f32: f64) {
+        eprintln!("  {net}: packed/f32 time ratio {packed_over_f32:.3}x ({kernel})");
+        self.ratios.push(RatioEntry { net: net.to_string(), kernel, packed_over_f32 });
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    pub fn ratios(&self) -> &[RatioEntry] {
+        &self.ratios
     }
 
     /// File-system-safe slug of the suite title.
@@ -195,10 +223,23 @@ impl BenchSuite {
                 ])
             })
             .collect();
+        let ratios: Vec<Json> = self
+            .ratios
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("net", Json::str(r.net.clone())),
+                    ("kernel", Json::str(r.kernel)),
+                    ("packed_over_f32", Json::num(r.packed_over_f32)),
+                ])
+            })
+            .collect();
         let doc = Json::obj(vec![
             ("schema", Json::num(1.0)),
             ("title", Json::str(self.title.clone())),
+            ("kernel", Json::str(self.kernel)),
             ("results", Json::arr(results)),
+            ("ratios", Json::arr(ratios)),
         ]);
         let path = dir.join(format!("BENCH_{}.json", self.slug()));
         crate::util::write_file(&path, doc.pretty().as_bytes())?;
@@ -297,14 +338,21 @@ mod tests {
         let _ = std::fs::remove_dir_all(&tmp);
         let mut suite = BenchSuite::new("json smoke");
         suite.record_once("phase", Duration::from_millis(5));
+        suite.record_ratio("lenet", "scalar", 1.25);
         let path = suite.write_json(&tmp).unwrap();
         assert!(path.file_name().unwrap().to_str().unwrap().starts_with("BENCH_"));
         let text = std::fs::read_to_string(&path).unwrap();
         let j = Json::parse(&text).unwrap();
         assert_eq!(j.at(&["title"]).as_str(), Some("json smoke"));
+        // The dispatched kernel variant is part of the archive schema.
+        assert!(j.at(&["kernel"]).as_str().is_some());
         let rs = j.at(&["results"]).as_arr().unwrap();
         assert_eq!(rs.len(), 1);
         assert!(rs[0].at(&["mean_ns"]).as_f64().unwrap() > 0.0);
+        let ratios = j.at(&["ratios"]).as_arr().unwrap();
+        assert_eq!(ratios[0].at(&["net"]).as_str(), Some("lenet"));
+        assert_eq!(ratios[0].at(&["kernel"]).as_str(), Some("scalar"));
+        assert_eq!(ratios[0].at(&["packed_over_f32"]).as_f64(), Some(1.25));
         let _ = std::fs::remove_dir_all(&tmp);
     }
 }

@@ -129,11 +129,8 @@ pub fn run(args: &[String]) -> Result<()> {
         let plan = LoweredPlan::new(&arch, None)?;
         // Whole-model residency bound of the fused packed executor:
         // modeled weights + peak acts + panel padding + f32 windows.
-        let envelope = fpm.fused_envelope(
-            &cfg,
-            plan.max_win_elems + plan.max_bias_elems,
-            &plan.weight_pad_elems,
-        );
+        let envelope =
+            fpm.fused_envelope(&cfg, plan.fused_window_elems(1), &plan.weight_pad_elems);
         // Priced from the plan alone — identical to packing the real
         // tensors (the tests pin the equality), without re-reading the
         // weights file.

@@ -14,6 +14,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
 use anyhow::{bail, ensure, Context, Result};
+use qbound::backend::kernels;
 use qbound::backend::lowering::LoweredPlan;
 use qbound::backend::BackendKind;
 use qbound::cli::{Args, CmdSpec};
@@ -86,10 +87,18 @@ fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()
         storage,
         max_body_bytes: a.usize("max-body-kb")? * 1024,
     };
+    // Resolve kernel dispatch up front: a bad QBOUND_KERNEL fails the
+    // launch cleanly, and the startup banner reports the variant.
+    let kernel = kernels::init()?;
     let server = Server::start(&dir, &opts)?;
     let addr = server.addr();
     println!("qbound serve — listening on http://{addr}");
-    println!("  backend {}  storage {}", backend.label(), storage.label());
+    println!(
+        "  backend {}  storage {}  kernel {}",
+        backend.label(),
+        storage.label(),
+        kernel.label()
+    );
     println!("  mem budget {}  queue depth {}", util::human_bytes(budget), opts.queue_depth);
     println!("  endpoints: GET /healthz  GET /v1/nets  GET /v1/stats  POST /v1/classify");
     println!(
@@ -108,7 +117,7 @@ fn fp32_envelope(dir: &std::path::Path, net: &str) -> Result<Option<f64>> {
     let plan = LoweredPlan::new(&arch, None)?;
     let fpm = FootprintModel::new(&m);
     let cfg = PrecisionConfig::fp32(m.n_layers());
-    let win = plan.max_win_elems + plan.max_bias_elems;
+    let win = plan.fused_window_elems(1);
     Ok(Some(fpm.fused_envelope(&cfg, win, &plan.weight_pad_elems)))
 }
 
@@ -135,7 +144,7 @@ impl SmokeNet {
             name: name.to_string(),
             dataset: Dataset::load(&manifest)?,
             fpm: FootprintModel::new(&manifest),
-            window_f32_elems: plan.max_win_elems + plan.max_bias_elems,
+            window_f32_elems: plan.fused_window_elems(1),
             weight_pad_elems: plan.weight_pad_elems.clone(),
             manifest,
         })
@@ -190,9 +199,10 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
     let server = Server::start(&dir, &opts)?;
     let addr = server.addr();
     println!(
-        "serve --smoke — live endpoint {addr}, backend {}, storage {}, budget {}",
+        "serve --smoke — live endpoint {addr}, backend {}, storage {}, kernel {}, budget {}",
         backend.label(),
         storage.label(),
+        kernels::init()?.label(),
         util::human_bytes(budget)
     );
 
@@ -262,6 +272,11 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
     // Stats, SLO and the memory bound.
     let (st, stats) = http_get(addr, "/v1/stats")?;
     ensure!(st == 200, "stats: {st}");
+    let kernel = stats
+        .get("kernel")
+        .and_then(Json::as_str)
+        .context("stats: no kernel variant")?
+        .to_string();
     let p99 = stats.get("latency_us_p99").and_then(Json::as_f64).context("stats: no p99")?;
     let p50 = stats.get("latency_us_p50").and_then(Json::as_f64).context("stats: no p50")?;
     let p95 = stats.get("latency_us_p95").and_then(Json::as_f64).context("stats: no p95")?;
@@ -291,6 +306,7 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
         ("mode", Json::str("smoke")),
         ("backend", Json::str(backend.label())),
         ("storage", Json::str(storage.label())),
+        ("kernel", Json::str(kernel.as_str())),
         ("requests_checked", Json::num(checked as f64)),
         ("probed_507", Json::Bool(probed_507)),
         ("mem_budget_bytes", Json::num(budget)),

@@ -208,8 +208,10 @@ impl FootprintModel {
     ///   plan's `weight_pad_elems`, priced at the group's weight
     ///   width), and
     /// * the streaming f32 scratch windows (`window_f32_elems` — the
-    ///   plan's `max_win_elems` decode window plus its `max_bias_elems`
-    ///   bias window).
+    ///   lowered plan's `fused_window_elems(1)` budget: the
+    ///   `max_win_elems` decode window, the `max_bias_elems` bias
+    ///   window, and the `strip_cache_elems` decoded-weight-strip
+    ///   cache).
     ///
     /// `tests/integration_memory.rs` asserts the measured resident
     /// delta of a packed run lands inside this envelope, and the CI

@@ -35,6 +35,8 @@
 //! Non-finite inputs follow the quantizer (±∞ saturates); NaN has no
 //! fixed-point encoding and packs to code 0.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::quant::QFormat;
 
 /// Widest fixed-point bitstream width; wider formats (and fp32) take
@@ -199,22 +201,11 @@ impl PackedBuf {
             return;
         }
 
-        let width = self.width;
+        // Sign-extend-and-scale through the dispatched span decoder
+        // (SIMD when the host supports it, the scalar word-shift loop
+        // otherwise — bit-identical either way; see `backend::kernels`).
         let inv = (-(fmt.fbits as f32)).exp2();
-        let shift = 64 - width;
-        let mut bitpos = start * width as usize;
-        for o in out.iter_mut() {
-            let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
-            let mut raw = self.words[w] >> off;
-            if off + width > 64 {
-                raw |= self.words[w + 1] << (64 - off);
-            }
-            // Sign-extend the width-bit code, then scale back by 2^-F
-            // (exact: |code| < 2^24 and inv is a power of two).
-            let code = ((raw << shift) as i64) >> shift;
-            *o = code as f32 * inv;
-            bitpos += width as usize;
-        }
+        crate::backend::kernels::unpack_span(&self.words, start, self.width, inv, out);
     }
 
     /// Row-granular window decode for HWC tensors stored row-major:
@@ -330,7 +321,11 @@ pub struct PackedPanels {
     kd: usize,
     nr: usize,
     n_panels: usize,
+    id: u64,
 }
+
+/// Monotonic pack-time identity source for [`PackedPanels::id`].
+static NEXT_PANELS_ID: AtomicU64 = AtomicU64::new(1);
 
 impl PackedPanels {
     /// Pack a panelized matrix (`n_panels · kd · nr` values, ragged
@@ -346,7 +341,16 @@ impl PackedPanels {
             kd,
             nr,
             n_panels: panels.len() / (kd * nr),
+            id: NEXT_PANELS_ID.fetch_add(1, Ordering::Relaxed),
         }
+    }
+
+    /// Process-unique identity assigned at pack time — the decoded-strip
+    /// cache key (`gemm::StripCache`). Clones share the id: their
+    /// bitstreams are byte-identical, so cached strips decoded from one
+    /// are valid for the other.
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     /// The format the panels were packed (and are decoded) with.

@@ -105,7 +105,8 @@ struct NetInfo {
     dataset: Dataset,
     fpm: FootprintModel,
     /// f32 scratch-window elements of the fused executor (decode + bias
-    /// windows) — the `window_f32_elems` argument of `fused_envelope`.
+    /// windows + strip cache, `LoweredPlan::fused_window_elems(1)`) —
+    /// the `window_f32_elems` argument of `fused_envelope`.
     window_f32_elems: usize,
     /// Per-layer NR-lane padding elements of the packed GEMM panels.
     weight_pad_elems: Vec<usize>,
@@ -187,7 +188,7 @@ impl Server {
                 .with_context(|| format!("loading dataset for {name}"))?;
             nets.insert(name.clone(), NetInfo {
                 fpm: FootprintModel::new(&manifest),
-                window_f32_elems: plan.max_win_elems + plan.max_bias_elems,
+                window_f32_elems: plan.fused_window_elems(1),
                 weight_pad_elems: plan.weight_pad_elems.clone(),
                 manifest,
                 dataset,
@@ -367,6 +368,10 @@ fn stats_response(sh: &Arc<Shared>) -> HttpResponse {
     m.insert("in_flight".to_string(), Json::num(sh.gate.in_flight() as f64));
     m.insert("backend".to_string(), Json::str(sh.backend.label()));
     m.insert("storage".to_string(), Json::str(sh.storage.label()));
+    m.insert(
+        "kernel".to_string(),
+        Json::str(crate::backend::kernels::active_kind().label()),
+    );
     m.insert(
         "peak_rss_bytes".to_string(),
         util::peak_rss_bytes().map(|b| Json::num(b as f64)).unwrap_or(Json::Null),

@@ -86,15 +86,13 @@ fn packed_peak_is_below_f32_and_inside_the_model_envelope() {
         // weight set (panels incl. NR padding + biases, 4 B/elem) must
         // be gone, replaced by at most the modeled whole-model envelope
         // — packed weights + peak act bitstreams + panel padding + the
-        // f32 decode/bias windows (everything else — fp32 master
-        // params, col/tmp scratch — is identical between the modes).
+        // f32 decode/bias windows and weight-strip cache (everything
+        // else — fp32 master params, col/tmp scratch — is identical
+        // between the modes).
         let arenas = 8.0 * plan.max_act_elems as f64; // 2 arenas x 4 B/elem
         let w_f32 = 4.0 * (plan.panel_param_elems + plan.bias_param_elems) as f64;
-        let envelope = fpm.fused_envelope(
-            &cfg,
-            plan.max_win_elems + plan.max_bias_elems,
-            &plan.weight_pad_elems,
-        );
+        let envelope =
+            fpm.fused_envelope(&cfg, plan.fused_window_elems(1), &plan.weight_pad_elems);
         assert!(
             r_pk <= r_f32 - arenas - w_f32 + envelope + SLACK,
             "{net}: packed residency {r_pk} outside the model envelope \
@@ -102,8 +100,12 @@ fn packed_peak_is_below_f32_and_inside_the_model_envelope() {
         );
 
         // Transient churn of one fused infer is bounded by the plan's
-        // fused f32 high-water plus the logits block.
-        let churn_bound = 4.0 * (plan.max_fused_elems + n * m.num_classes) as f64 + SLACK;
+        // fused f32 high-water plus the logits block (and the
+        // decoded-weight-strip cache, which fills lazily on the first
+        // warm streamed 1×1 GEMM).
+        let churn_bound = 4.0
+            * (plan.max_fused_elems + plan.strip_cache_elems + n * m.num_classes) as f64
+            + SLACK;
         assert!(
             churn_pk <= churn_bound,
             "{net}: fused infer churn {churn_pk} > bound {churn_bound}"

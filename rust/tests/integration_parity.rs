@@ -10,13 +10,22 @@
 //! reorder accumulation (packed SIMD, split-k) stay admissible, and
 //! additionally require top-1 agreement on every row.
 
+use std::sync::Mutex;
+
 use qbound::backend::fast::FastBackend;
+use qbound::backend::kernels::{self, KernelKind};
 use qbound::backend::{Backend, BackendKind, NetExecutor, Variant};
 use qbound::eval::Dataset;
+use qbound::memory::StorageMode;
 use qbound::nets::{ArtifactIndex, NetManifest};
 use qbound::quant::QFormat;
 use qbound::search::space::PrecisionConfig;
 use qbound::testkit;
+
+/// [`kernels::force`] is process-global; the variant sweep serializes on
+/// this lock. The other tests here run lock-free: every variant is
+/// bit-identical by contract, so a concurrent force can't change them.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
 
 /// Documented cross-backend logit tolerance (fp32 accumulation order).
 const MAX_ABS_TOL: f32 = 1e-4;
@@ -162,6 +171,46 @@ fn fast_is_bit_deterministic_across_thread_counts() {
             }
         }
     }
+}
+
+#[test]
+fn every_kernel_variant_matches_scalar_logits_bit_for_bit() {
+    // End-to-end dispatch contract: on every registered architecture and
+    // in both storage modes (f32 panels and packed bitstreams — the
+    // latter exercises the SIMD unpacker), logits under each kernel
+    // variant the host supports must equal the forced-scalar logits to
+    // the bit. The sweep ignores `QBOUND_KERNEL` by design — it forces
+    // every variant the CPU has, then restores the env-selected one.
+    let _g = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = kernels::active_kind();
+    let dir = artifacts();
+    let idx = ArtifactIndex::load(&dir).unwrap();
+    for net in &idx.nets {
+        let m = NetManifest::load(&dir, net).unwrap();
+        let d = Dataset::load(&m).unwrap();
+        let cfg =
+            PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 8), QFormat::new(10, 2));
+        let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+        let n = 8.min(d.n);
+        let imgs = &d.images[..n * d.image_elems];
+        for storage in [StorageMode::F32, StorageMode::Packed] {
+            let backend = FastBackend::with_options(2, storage);
+            let mut exec = backend.load(&m, Variant::Standard).unwrap();
+            kernels::force(KernelKind::Scalar);
+            let want = exec.infer(imgs, &wq, &dq, None).unwrap();
+            for kind in kernels::available() {
+                kernels::force(kind);
+                let got = exec.infer(imgs, &wq, &dq, None).unwrap();
+                assert!(
+                    want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{net}: kernel {} changed bits under storage {}",
+                    kind.label(),
+                    storage.label()
+                );
+            }
+        }
+    }
+    kernels::force(prev);
 }
 
 #[test]

@@ -32,7 +32,7 @@ fn envelope(net: &str, cfg: &PrecisionConfig) -> f64 {
     let dir = testkit::ensure_artifacts();
     let m = NetManifest::load(&dir, net).unwrap();
     let plan = LoweredPlan::new(&arch::get(net).unwrap(), None).unwrap();
-    let win = plan.max_win_elems + plan.max_bias_elems;
+    let win = plan.fused_window_elems(1);
     FootprintModel::new(&m).fused_envelope(cfg, win, &plan.weight_pad_elems)
 }
 

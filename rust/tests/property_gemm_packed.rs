@@ -8,11 +8,20 @@
 //! executor swap its weight panels for bitstreams without moving a
 //! single logit bit.
 
+use std::sync::Mutex;
+
 use qbound::backend::gemm::{gemm_bias_bits, gemm_bias_packed, pack_b_panels, NR};
+use qbound::backend::kernels::{self, KernelKind};
 use qbound::memory::PackedPanels;
 use qbound::prng::Xoshiro256pp;
 use qbound::quant::QFormat;
 use qbound::testkit::quantized_canonical;
+
+/// [`kernels::force`] is process-global, so the variant sweep holds this
+/// lock to keep its forced windows from interleaving with another sweep.
+/// (The non-sweep tests here stay lock-free on purpose: every variant is
+/// bit-identical, so a concurrent force cannot change their outcome.)
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
 
 fn rand_vec(rng: &mut Xoshiro256pp, n: usize, lo: f32, hi: f32) -> Vec<f32> {
     (0..n).map(|_| rng.uniform_f32(lo, hi)).collect()
@@ -87,6 +96,48 @@ fn panel_shapes_threads_and_tile_edges_match() {
             assert_bits_match(&format!("({m},{n},{kd}) t={threads}"), &want, &got);
         }
     }
+}
+
+#[test]
+fn every_kernel_variant_reproduces_the_scalar_gemm_bit_for_bit() {
+    // The dispatch contract from `backend::kernels`: AVX2/NEON tiles and
+    // unpackers are drop-in replacements, not approximations. Bake the
+    // scalar baseline under a forced scalar kernel, then force each
+    // variant the host supports and demand identical bits from both the
+    // packed-bitstream and the f32-panel GEMM, across tile-edge shapes
+    // and thread counts.
+    let _g = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = kernels::active_kind();
+    let fmt = QFormat::new(3, 5);
+    for &(m, n, kd) in &[(1usize, 1usize, 1usize), (4, 16, 9), (5, 17, 300), (64, 24, 75)] {
+        let mut rng = Xoshiro256pp::new(0x5117 + (m * n * kd) as u64);
+        let a = rand_vec(&mut rng, m * kd, -2.0, 2.0);
+        let bias = rand_vec(&mut rng, n, -0.5, 0.5);
+        let qb = quantized_canonical(fmt, &rand_vec(&mut rng, kd * n, -1.5, 1.5));
+        let bits = PackedPanels::pack(fmt, &pack_b_panels(&qb, kd, n), kd, NR);
+
+        kernels::force(KernelKind::Scalar);
+        let want_f32 = panel_gemm(m, n, kd, &a, &qb, &bias);
+        let mut want = vec![f32::NAN; m * n];
+        gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut want, n, 1);
+        assert_bits_match(&format!("scalar bits vs f32 ({m},{n},{kd})"), &want_f32, &want);
+
+        for kind in kernels::available() {
+            kernels::force(kind);
+            let got_f32 = panel_gemm(m, n, kd, &a, &qb, &bias);
+            assert_bits_match(&format!("{} f32 ({m},{n},{kd})", kind.label()), &want, &got_f32);
+            for threads in [1usize, 3] {
+                let mut got = vec![f32::NAN; m * n];
+                gemm_bias_bits(m, n, kd, &a, kd, &bits, &bias, &mut got, n, threads);
+                assert_bits_match(
+                    &format!("{} bits ({m},{n},{kd}) t={threads}", kind.label()),
+                    &want,
+                    &got,
+                );
+            }
+        }
+    }
+    kernels::force(prev);
 }
 
 #[test]
