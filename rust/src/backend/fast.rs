@@ -521,6 +521,7 @@ fn forward_image(
     dfmt[0].quantize_slice(&mut src[..image.len()]);
 
     for step in &plan.steps {
+        let t_obs = crate::obs::step_start();
         let in_e = step.in_shape.elems();
         let out_e = step.out_shape.elems();
         let base = step.param_base;
@@ -602,6 +603,18 @@ fn forward_image(
         if let Some(fmt) = lowering::post_format(step.post, dfmt, sfmt) {
             fmt.quantize_slice(&mut src[..out_e]);
         }
+        crate::obs::step_end(t_obs, plan.name, step.group, "f32", || {
+            format!(
+                "net={} op={} kind={} in={:?} out={:?} dq={} kernel={}",
+                plan.name,
+                step.op.stage_name(),
+                step.op.kind(),
+                step.in_shape,
+                step.out_shape,
+                dfmt[step.group],
+                super::kernels::active_kind().label(),
+            )
+        });
     }
     out_row.copy_from_slice(&src[..plan.num_classes]);
 }
@@ -632,6 +645,7 @@ fn forward_image_fused(
     let mut cur: Option<Vec<f32>> = None;
 
     for step in &plan.steps {
+        let t_obs = crate::obs::step_start();
         let in_e = step.in_shape.elems();
         let out_e = step.out_shape.elems();
         let base = step.param_base;
@@ -765,6 +779,18 @@ fn forward_image_fused(
             std::mem::swap(&mut pk_in, &mut pk_out);
             cur_fmt = fmt;
         }
+        crate::obs::step_end(t_obs, plan.name, step.group, "packed", || {
+            format!(
+                "net={} op={} kind={} in={:?} out={:?} dq={} kernel={}",
+                plan.name,
+                step.op.stage_name(),
+                step.op.kind(),
+                step.in_shape,
+                step.out_shape,
+                dfmt[step.group],
+                super::kernels::active_kind().label(),
+            )
+        });
     }
     match cur {
         Some(v) => out_row.copy_from_slice(&v[..plan.num_classes]),

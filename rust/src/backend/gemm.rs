@@ -150,6 +150,7 @@ pub fn gemm_bias_bits_cached(
         debug_assert!(a.len() >= (m - 1) * lda + kd);
         debug_assert!(bias.len() >= n);
         debug_assert!(c.len() >= (m - 1) * ldc + n);
+        let _sp = crate::obs::span!("gemm", "m={m} n={n} k={kd} b=bits-cached");
         gemm_block_bits(m, n, kd, a, lda, bp, bias, c, ldc, cache);
         return;
     }
@@ -176,6 +177,7 @@ pub fn gemm_bias_b(
     debug_assert!(a.len() >= (m - 1) * lda + kd);
     debug_assert!(bias.len() >= n);
     debug_assert!(c.len() >= (m - 1) * ldc + n);
+    let _sp = crate::obs::span!("gemm", "m={m} n={n} k={kd} b={}", b.label());
 
     // Each worker needs a few row tiles to be worth a spawn.
     let t = threads.min(m / (2 * MR)).max(1);
@@ -234,6 +236,15 @@ pub enum GemmB<'a> {
 }
 
 impl<'a> GemmB<'a> {
+    /// Operand-flavor tag for the `gemm` span's `b=` field.
+    fn label(self) -> &'static str {
+        match self {
+            GemmB::Flat(_) => "flat",
+            GemmB::Panels(_) => "panels",
+            GemmB::Bits(_) => "bits",
+        }
+    }
+
     /// The slice + row stride + column offset addressing panel columns
     /// `[nb, nb+NR)` as `slice[kk * stride + off ..]`.
     #[inline]

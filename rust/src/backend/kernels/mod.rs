@@ -236,6 +236,12 @@ pub fn init() -> Result<KernelKind> {
             _ => "auto-detected",
         };
         log::info!("kernel dispatch: {} ({how})", kind.label());
+        crate::obs::gauge(
+            "qbound_kernel",
+            "dispatched SIMD microkernel variant (1 = active)",
+            &[("variant", kind.label())],
+        )
+        .set(1);
         Ok(kind)
     } else {
         // Lost the race (or a concurrent `force`): honour the winner.

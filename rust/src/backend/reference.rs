@@ -300,11 +300,22 @@ impl Interpreter {
         dq[0].quantize_slice(&mut feat.data);
 
         for step in &self.plan.steps {
+            let t_obs = crate::obs::step_start();
             let mut cursor = step.param_base;
             feat = apply_op(&step.op, feat, qparams, &mut cursor)?;
             if let Some(fmt) = lowering::post_format(step.post, dq, sfmt) {
                 fmt.quantize_slice(&mut feat.data);
             }
+            crate::obs::step_end(t_obs, self.plan.name, step.group, "f32", || {
+                format!(
+                    "net={} op={} kind={} out={:?} dq={}",
+                    self.plan.name,
+                    step.op.stage_name(),
+                    step.op.kind(),
+                    feat.shape,
+                    dq[step.group],
+                )
+            });
         }
         if feat.shape != Shape::Flat(self.arch.num_classes) {
             bail!("{}: output shape {:?}", self.arch.name, feat.shape);
@@ -335,6 +346,7 @@ impl Interpreter {
         let mut feat: Option<Feat> = None;
 
         for step in &self.plan.steps {
+            let t_obs = crate::obs::step_start();
             match (&step.op, feat.take()) {
                 (Op::Flatten | Op::Dropout, None) => {
                     shape = arch::op_out_shape(&step.op, shape)?;
@@ -379,6 +391,16 @@ impl Interpreter {
                 }
                 fmt = pfmt;
             }
+            crate::obs::step_end(t_obs, self.plan.name, step.group, "packed", || {
+                format!(
+                    "net={} op={} kind={} out={:?} dq={}",
+                    self.plan.name,
+                    step.op.stage_name(),
+                    step.op.kind(),
+                    shape,
+                    dq[step.group],
+                )
+            });
         }
         if shape != Shape::Flat(self.arch.num_classes) {
             bail!("{}: output shape {:?}", self.arch.name, shape);

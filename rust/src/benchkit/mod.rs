@@ -62,6 +62,9 @@ pub struct BenchResult {
     pub elems_per_iter: Option<f64>,
     /// Optional bytes-per-iteration for bandwidth reporting.
     pub bytes_per_iter: Option<f64>,
+    /// Mean packed-storage bytes decoded per iteration (from the
+    /// [`crate::obs`] decode counter), when any decoding happened.
+    pub decoded_bytes_per_iter: Option<f64>,
 }
 
 impl BenchResult {
@@ -107,6 +110,10 @@ impl BenchSuite {
     pub fn new(title: &str) -> Self {
         // QBOUND_BENCH_FAST=1 trims times for CI smoke runs.
         let fast = std::env::var("QBOUND_BENCH_FAST").is_ok();
+        // Benches report decoded bytes alongside times, so the decode
+        // accounting must be live (negligible cost: one relaxed add per
+        // decoded span).
+        crate::obs::set_metrics(true);
         Self {
             title: title.to_string(),
             warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
@@ -146,14 +153,18 @@ impl BenchSuite {
         }
         // Measure.
         let mut samples = Vec::new();
+        let decode0 = crate::obs::decode_bytes();
         let t1 = Instant::now();
         while t1.elapsed() < self.measure && samples.len() < self.max_iters {
             let it = Instant::now();
             f();
             samples.push(it.elapsed());
         }
+        let decoded = crate::obs::decode_bytes().saturating_sub(decode0);
         let res = BenchResult {
             name: name.to_string(),
+            decoded_bytes_per_iter: (decoded > 0)
+                .then(|| decoded as f64 / samples.len().max(1) as f64),
             stats: Stats::from_samples(samples),
             elems_per_iter: elems,
             bytes_per_iter: bytes,
@@ -171,6 +182,7 @@ impl BenchSuite {
             stats: Stats::from_samples(vec![elapsed]),
             elems_per_iter: None,
             bytes_per_iter: None,
+            decoded_bytes_per_iter: None,
         };
         eprintln!("  {:<44} {}", res.name, summary(&res));
         self.results.push(res);
@@ -220,6 +232,10 @@ impl BenchSuite {
                     ("stddev_ns", ns(r.stats.stddev)),
                     ("elems_per_iter", r.elems_per_iter.map(Json::num).unwrap_or(Json::Null)),
                     ("bytes_per_iter", r.bytes_per_iter.map(Json::num).unwrap_or(Json::Null)),
+                    (
+                        "decoded_bytes_per_iter",
+                        r.decoded_bytes_per_iter.map(Json::num).unwrap_or(Json::Null),
+                    ),
                 ])
             })
             .collect();

@@ -43,8 +43,16 @@ pub fn run(args: &[String]) -> Result<()> {
             "mem-json",
             "write measured peak RSS + modeled footprint JSON to this path",
             "",
+        )
+        .opt(
+            "trace",
+            "write a Chrome trace_event JSON of the evaluation to this path",
+            "",
         );
     let a = spec.parse(args)?;
+    if !a.str("trace").is_empty() {
+        qbound::obs::set_tracing(true);
+    }
 
     let dir = util::artifacts_dir()?;
     let net = a.str("net").to_string();
@@ -163,6 +171,12 @@ pub fn run(args: &[String]) -> Result<()> {
         let path = std::path::PathBuf::from(a.str("mem-json"));
         util::write_file(&path, doc.pretty().as_bytes())?;
         eprintln!("memory json -> {}", path.display());
+    }
+    if !a.str("trace").is_empty() {
+        qbound::obs::set_tracing(false);
+        let path = std::path::PathBuf::from(a.str("trace"));
+        qbound::obs::write_chrome_trace(&path, &qbound::obs::drain())?;
+        eprintln!("trace -> {}", path.display());
     }
     Ok(())
 }

@@ -5,6 +5,7 @@ pub mod eval;
 pub mod footprint_cmd;
 pub mod gen_artifacts;
 pub mod info;
+pub mod profile;
 pub mod repro_cmd;
 pub mod search_cmd;
 pub mod serve;

@@ -1,0 +1,250 @@
+//! `qbound profile` — per-layer time/decode/footprint breakdown.
+//!
+//! Runs N single-image inferences per storage mode (packed, then f32)
+//! with the [`qbound::obs`] registry enabled, then joins the per-layer
+//! histograms and decode counters against the
+//! [`FootprintModel`] prediction: one row per precision layer with
+//! measured µs/image under both storage modes, measured packed bytes
+//! decoded per image, and the modeled weight/activation bytes. Images
+//! run sequentially at batch 1 so the decode-byte deltas attribute
+//! exactly to the step that decoded them.
+
+use anyhow::Result;
+use qbound::backend::lowering::LoweredPlan;
+use qbound::backend::{kernels, BackendKind, Variant};
+use qbound::cli::CmdSpec;
+use qbound::eval::Dataset;
+use qbound::memory::{FootprintModel, StorageMode};
+use qbound::nets::{arch, ArtifactIndex, NetManifest};
+use qbound::obs;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::util;
+use qbound::util::json::Json;
+
+/// One profiled precision layer: measured times/bytes + model columns.
+struct LayerRow {
+    name: String,
+    kind: &'static str,
+    us_packed: f64,
+    us_f32: f64,
+    decode_bytes: f64,
+    model_weight_bytes: f64,
+    model_in_bytes: f64,
+    model_out_bytes: f64,
+}
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("profile", "per-layer time/decode/footprint breakdown")
+        .opt("net", "network name, or `all`", "lenet")
+        .opt("n-images", "images profiled per storage mode", "8")
+        .opt("weights", "uniform weight format I.F (or fp32)", "1.8")
+        .opt("data", "uniform data format I.F (or fp32)", "10.4")
+        .opt("backend", "execution backend: reference | fast", "fast")
+        .opt("out-dir", "directory for --json / --trace artifacts", "bench-out")
+        .flag("json", "write PROFILE_<net>.json to --out-dir")
+        .flag("trace", "write Chrome trace JSON (TRACE_profile.json) to --out-dir");
+    let a = spec.parse(args)?;
+
+    let dir = util::artifacts_dir()?;
+    let nets: Vec<String> = if a.str("net") == "all" {
+        ArtifactIndex::load(&dir)?.nets
+    } else {
+        vec![a.str("net").to_string()]
+    };
+    let n_images = a.usize("n-images")?.max(1);
+    let wfmt = QFormat::parse(a.str("weights"))?;
+    let dfmt = QFormat::parse(a.str("data"))?;
+    let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
+    #[cfg(feature = "pjrt")]
+    if matches!(backend, BackendKind::Pjrt) {
+        anyhow::bail!("profile needs a CPU executor (reference | fast)");
+    }
+    let out_dir = std::path::PathBuf::from(a.str("out-dir"));
+
+    obs::set_metrics(true);
+    if a.flag("trace") {
+        obs::set_tracing(true);
+    }
+    kernels::init()?;
+
+    for net in &nets {
+        let doc = profile_net(&dir, net, backend, wfmt, dfmt, n_images)?;
+        if a.flag("json") {
+            let path = out_dir.join(format!("PROFILE_{net}.json"));
+            util::write_file(&path, doc.pretty().as_bytes())?;
+            eprintln!("profile json -> {}", path.display());
+        }
+    }
+
+    if a.flag("trace") {
+        obs::set_tracing(false);
+        let path = out_dir.join("TRACE_profile.json");
+        obs::write_chrome_trace(&path, &obs::drain())?;
+        eprintln!("trace -> {}", path.display());
+    }
+    Ok(())
+}
+
+/// Profile one net under both storage modes; prints the table and
+/// returns the JSON document.
+fn profile_net(
+    dir: &std::path::Path,
+    net: &str,
+    backend: BackendKind,
+    wfmt: QFormat,
+    dfmt: QFormat,
+    n_images: usize,
+) -> Result<Json> {
+    let m = NetManifest::load(dir, net)?;
+    let a = arch::get(net)
+        .ok_or_else(|| anyhow::anyhow!("no architecture registered for {net:?}"))?;
+    let plan = LoweredPlan::new(&a, None)?;
+    let fpm = FootprintModel::new(&m);
+    let dataset = Dataset::load(&m)?;
+    let nl = m.n_layers();
+    let cfg = PrecisionConfig::uniform(nl, wfmt, dfmt);
+    let n = n_images.min(dataset.n);
+
+    for storage in [StorageMode::Packed, StorageMode::F32] {
+        storage.set_env();
+        let b = backend.create()?;
+        let mut exec = b.load(&m, Variant::Standard)?;
+        let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+        for i in 0..n {
+            let img = &dataset.images[i * dataset.image_elems..(i + 1) * dataset.image_elems];
+            exec.infer(img, &wq, &dq, None)?;
+        }
+    }
+
+    // Join measurements against the model, per precision layer.
+    let model = fpm.per_layer(&cfg);
+    let kinds = group_kinds(&plan, nl);
+    let per_img = |sum: u64| sum as f64 / n as f64;
+    let mut rows = Vec::with_capacity(nl);
+    for (l, lf) in model.iter().enumerate() {
+        let ls = l.to_string();
+        let read_us = |storage: &'static str| {
+            let labels = [("net", net), ("layer", ls.as_str()), ("storage", storage)];
+            let h = obs::histogram("qbound_layer_us", "", &labels).0.snapshot();
+            per_img(h.sum())
+        };
+        let labels = [("net", net), ("layer", ls.as_str()), ("storage", "packed")];
+        let decode = obs::counter("qbound_layer_decode_bytes_total", "", &labels).get();
+        rows.push(LayerRow {
+            name: lf.name.clone(),
+            kind: kinds[l],
+            us_packed: read_us("packed"),
+            us_f32: read_us("f32"),
+            decode_bytes: per_img(decode),
+            model_weight_bytes: lf.weight_bytes,
+            model_in_bytes: lf.in_bytes,
+            model_out_bytes: lf.out_bytes,
+        });
+    }
+
+    let fp = fpm.footprint(&cfg);
+    let envelope = fpm.fused_envelope(&cfg, plan.fused_window_elems(1), &plan.weight_pad_elems);
+    let packed_weight_bytes = plan.packed_weight_bytes(&cfg.wq);
+    print_table(net, &cfg, backend, n, &rows, &fp_summary(fp.weight_bytes, envelope));
+
+    let layer_rows: Vec<Json> = rows
+        .iter()
+        .enumerate()
+        .map(|(l, r)| {
+            Json::obj(vec![
+                ("layer", Json::num(l as f64)),
+                ("name", Json::str(r.name.clone())),
+                ("kind", Json::str(r.kind)),
+                ("us_per_image_packed", Json::num(r.us_packed)),
+                ("us_per_image_f32", Json::num(r.us_f32)),
+                ("decode_bytes_per_image", Json::num(r.decode_bytes)),
+                ("model_weight_bytes", Json::num(r.model_weight_bytes)),
+                ("model_in_bytes", Json::num(r.model_in_bytes)),
+                ("model_out_bytes", Json::num(r.model_out_bytes)),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("net", Json::str(net)),
+        ("config", Json::str(cfg.notation())),
+        ("backend", Json::str(backend.label())),
+        ("kernel", Json::str(kernels::active_kind().label())),
+        ("n_images", Json::num(n as f64)),
+        ("layers", Json::arr(layer_rows)),
+        // The per-layer model columns sum to these whole-model figures
+        // (same FootprintModel — `tests/integration_obs.rs` pins it).
+        ("model_weight_bytes", Json::num(fp.weight_bytes)),
+        ("model_total_bytes", Json::num(fp.total_bytes)),
+        ("fused_envelope_bytes", Json::num(envelope)),
+        ("packed_weight_bytes", Json::num(packed_weight_bytes as f64)),
+    ]))
+}
+
+fn fp_summary(weight_bytes: f64, envelope: f64) -> String {
+    format!(
+        "model weights {}, fused envelope {}",
+        util::human_bytes(weight_bytes),
+        util::human_bytes(envelope)
+    )
+}
+
+/// The representative op kind of each precision group: the parameterized
+/// stage if the group has one (conv/dense/inception), else its first op.
+fn group_kinds(plan: &LoweredPlan, nl: usize) -> Vec<&'static str> {
+    let mut kinds: Vec<Option<&'static str>> = vec![None; nl];
+    for step in &plan.steps {
+        let slot = &mut kinds[step.group];
+        // A group holds at most one parameterized op; it wins over
+        // whichever shape/activation op happened to come first.
+        if slot.is_none() || step.op.param_count() > 0 {
+            *slot = Some(step.op.kind());
+        }
+    }
+    kinds.into_iter().map(|k| k.unwrap_or("?")).collect()
+}
+
+fn print_table(
+    net: &str,
+    cfg: &PrecisionConfig,
+    backend: BackendKind,
+    n: usize,
+    rows: &[LayerRow],
+    summary: &str,
+) {
+    println!(
+        "profile: {net} ({cfg}) backend={} kernel={} images={n}",
+        backend.label(),
+        kernels::active_kind().label()
+    );
+    println!(
+        "  {:<10} {:<9} {:>12} {:>12} {:>7} {:>14} {:>12} {:>12}",
+        "layer", "kind", "us/img pk", "us/img f32", "ratio", "decode B/img", "w bytes", "act in/out"
+    );
+    let (mut t_pk, mut t_f32, mut t_dec, mut t_w) = (0f64, 0f64, 0f64, 0f64);
+    for r in rows {
+        let ratio = if r.us_packed > 0.0 { r.us_f32 / r.us_packed } else { 0.0 };
+        println!(
+            "  {:<10} {:<9} {:>12.1} {:>12.1} {:>7.2} {:>14.0} {:>12.0} {:>6.0}/{:<6.0}",
+            r.name,
+            r.kind,
+            r.us_packed,
+            r.us_f32,
+            ratio,
+            r.decode_bytes,
+            r.model_weight_bytes,
+            r.model_in_bytes,
+            r.model_out_bytes,
+        );
+        t_pk += r.us_packed;
+        t_f32 += r.us_f32;
+        t_dec += r.decode_bytes;
+        t_w += r.model_weight_bytes;
+    }
+    println!(
+        "  {:<10} {:<9} {:>12.1} {:>12.1} {:>7} {:>14.0} {:>12.0}",
+        "total", "", t_pk, t_f32, "", t_dec, t_w
+    );
+    println!("  {summary}");
+}

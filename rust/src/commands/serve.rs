@@ -41,6 +41,7 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("backend", "execution backend: reference | fast | pjrt (default: env)", "")
         .opt("storage", "activation storage: f32 | packed (default: env)", "")
         .opt("max-body-kb", "request-body cap in KiB (413 beyond it)", "64")
+        .opt("trace-dir", "span tracing: write TRACE_serve.json here on shutdown", "")
         .flag("smoke", "run the self-driving smoke workload and exit")
         .opt("smoke-requests", "classification requests the smoke workload replays", "48")
         .opt("slack-mb", "smoke: process-overhead slack for the RSS assertion", "192")
@@ -59,6 +60,12 @@ pub fn run(args: &[String]) -> Result<()> {
 /// MiB CLI value -> bytes.
 fn mib(v: f64) -> f64 {
     v * 1024.0 * 1024.0
+}
+
+/// The `--trace-dir` value as the server option (empty = disabled).
+fn trace_dir(a: &Args) -> Option<String> {
+    let d = a.str("trace-dir");
+    (!d.is_empty()).then(|| d.to_string())
 }
 
 fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()> {
@@ -86,6 +93,7 @@ fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()
         backend,
         storage,
         max_body_bytes: a.usize("max-body-kb")? * 1024,
+        trace_dir: trace_dir(a),
     };
     // Resolve kernel dispatch up front: a bad QBOUND_KERNEL fails the
     // launch cleanly, and the startup banner reports the variant.
@@ -100,7 +108,10 @@ fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()
         kernel.label()
     );
     println!("  mem budget {}  queue depth {}", util::human_bytes(budget), opts.queue_depth);
-    println!("  endpoints: GET /healthz  GET /v1/nets  GET /v1/stats  POST /v1/classify");
+    println!(
+        "  endpoints: GET /healthz  GET /v1/nets  GET /v1/stats  GET /metrics  \
+         POST /v1/classify"
+    );
     println!(
         "  try: curl -s http://{addr}/v1/classify -X POST \
          -d '{{\"net\":\"lenet\",\"weights\":\"1.8\",\"data\":\"10.4\",\"index\":7}}'"
@@ -195,6 +206,7 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
         backend,
         storage,
         max_body_bytes: a.usize("max-body-kb")? * 1024,
+        trace_dir: trace_dir(a),
     };
     let server = Server::start(&dir, &opts)?;
     let addr = server.addr();
@@ -267,6 +279,20 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
             probed_507 = true;
             break;
         }
+    }
+
+    // Prometheus exposition after traffic: the request histogram and
+    // the per-layer series must both be populated.
+    let (st, expo) = http_get_text(addr, "/metrics")?;
+    ensure!(st == 200, "metrics: {st}");
+    ensure!(!expo.trim().is_empty(), "metrics: empty exposition");
+    for series in [
+        "# TYPE",
+        "qbound_http_requests_total",
+        "qbound_request_latency_us_bucket",
+        "qbound_layer_us",
+    ] {
+        ensure!(expo.contains(series), "metrics exposition is missing {series:?}:\n{expo}");
     }
 
     // Stats, SLO and the memory bound.
@@ -342,6 +368,15 @@ fn http_get(addr: SocketAddr, path: &str) -> Result<(u16, Json)> {
     read_response(&mut BufReader::new(stream))
 }
 
+/// `GET` returning the raw body (the `/metrics` text exposition is not
+/// JSON).
+fn http_get_text(addr: SocketAddr, path: &str) -> Result<(u16, String)> {
+    let req = format!("GET {path} HTTP/1.1\r\nHost: smoke\r\nConnection: close\r\n\r\n");
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(req.as_bytes())?;
+    read_response_text(&mut BufReader::new(stream))
+}
+
 fn http_post(addr: SocketAddr, path: &str, body: &str) -> Result<(u16, Json)> {
     let req = format!(
         "POST {path} HTTP/1.1\r\nHost: smoke\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -382,6 +417,15 @@ fn http_oversized_probe(addr: SocketAddr, declared: usize) -> Result<u16> {
 
 /// Parse one `HTTP/1.1` response: status + JSON body (Null when empty).
 fn read_response(r: &mut impl BufRead) -> Result<(u16, Json)> {
+    let (status, body) = read_response_text(r)?;
+    if body.is_empty() {
+        return Ok((status, Json::Null));
+    }
+    Ok((status, Json::parse(&body).map_err(anyhow::Error::from)?))
+}
+
+/// Parse one `HTTP/1.1` response: status + raw body text.
+fn read_response_text(r: &mut impl BufRead) -> Result<(u16, String)> {
     let mut line = String::new();
     r.read_line(&mut line)?;
     let status: u16 = line
@@ -405,8 +449,5 @@ fn read_response(r: &mut impl BufRead) -> Result<(u16, Json)> {
     }
     let mut body = vec![0u8; content_length];
     r.read_exact(&mut body)?;
-    if body.is_empty() {
-        return Ok((status, Json::Null));
-    }
-    Ok((status, Json::parse(std::str::from_utf8(&body)?).map_err(anyhow::Error::from)?))
+    Ok((status, String::from_utf8(body)?))
 }

@@ -35,6 +35,7 @@
 //! | [`coordinator`] | worker-pool evaluation service (one backend/thread) |
 //! | [`search`] | uniform/per-layer sweeps, greedy descent, Pareto, Table 2 |
 //! | [`serve`] | footprint-budgeted HTTP inference daemon (`qbound serve`) |
+//! | [`obs`] | metrics registry (Prometheus exposition), span tracing, per-layer profiling substrate |
 //! | [`report`] | tables, ASCII charts, CSV/markdown emitters |
 //! | [`tensor`], [`util`], [`cli`], [`prng`], [`testkit`], [`benchkit`] | substrates |
 
@@ -48,6 +49,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod memory;
 pub mod nets;
+pub mod obs;
 pub mod prng;
 pub mod quant;
 pub mod report;

@@ -193,6 +193,12 @@ impl PackedBuf {
         assert!(start + out.len() <= self.len, "window out of range");
         assert_eq!(storage_width(fmt), self.width, "unpack format mismatch");
 
+        // Every packed decode path in the tree funnels through here
+        // (bulk, row window, cursor, panel strip), so this is the one
+        // chokepoint where decode volume is metered. No-op (one relaxed
+        // load) unless observability is enabled.
+        crate::obs::count_decode_bits(out.len() as u64 * self.width as u64);
+
         if self.width == 32 {
             for (i, o) in out.iter_mut().enumerate() {
                 let j = start + i;

@@ -72,6 +72,23 @@ impl Op {
         }
     }
 
+    /// The op's kind independent of its instance name — the `op=` field
+    /// of layer spans and the `qbound profile` kind column.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Conv { .. } => "conv",
+            Op::Dense { .. } => "dense",
+            Op::ReLU => "relu",
+            Op::MaxPool { .. } => "maxpool",
+            Op::AvgPool { .. } => "avgpool",
+            Op::GlobalAvgPool => "gap",
+            Op::Lrn { .. } => "lrn",
+            Op::Flatten => "flatten",
+            Op::Dropout => "dropout",
+            Op::Inception { .. } => "inception",
+        }
+    }
+
     /// Number of flat parameter tensors this op consumes.
     pub fn param_count(&self) -> usize {
         match self {

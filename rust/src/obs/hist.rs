@@ -1,0 +1,308 @@
+//! Fixed-bucket log2 histograms: bounded memory, no per-sample
+//! allocation, O(buckets) quantiles.
+//!
+//! The bucket layout is HDR-style — 16 linear sub-buckets per power of
+//! two. Values below 16 get one bucket each (exact); a value `v >= 16`
+//! with leading octave `o = 63 - v.leading_zeros()` lands in sub-bucket
+//! `(v >> (o - 4)) & 0xF` of octave `o`, so every bucket spans
+//! `2^(o-4)` consecutive integers. Quantiles return the bucket
+//! midpoint, which bounds the relative error by half a bucket width
+//! over the bucket floor: `2^(o-5) / 2^o = 1/32 ≈ 3.1%` (documented as
+//! "≤ ~4%"; values below 16 are exact). The whole `u64` range fits in
+//! [`N_BUCKETS`] = 976 counters — about 8 KiB per histogram, fixed at
+//! construction, regardless of how many samples are recorded.
+//!
+//! Two flavors share the layout: [`Histogram`] for externally
+//! synchronized use (e.g. behind the serve dispatch mutex) and
+//! [`AtomicHistogram`] for lock-free multi-writer use in the global
+//! metrics registry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Total bucket count: 16 exact small-value buckets + 16 sub-buckets
+/// for each of the 60 octaves `2^4 ..= 2^63`.
+pub const N_BUCKETS: usize = 16 + 60 * 16;
+
+/// Bucket index of a value (total order, monotone in `v`).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < 16 {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros() as usize; // 4..=63
+    let sub = ((v >> (o - 4)) & 0xF) as usize;
+    16 + (o - 4) * 16 + sub
+}
+
+/// Inclusive `(lo, hi)` value range of bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    assert!(i < N_BUCKETS);
+    if i < 16 {
+        return (i as u64, i as u64);
+    }
+    let o = (i - 16) / 16 + 4;
+    let sub = ((i - 16) % 16) as u64;
+    let width = 1u64 << (o - 4);
+    let lo = (1u64 << o) + sub * width;
+    (lo, lo + (width - 1))
+}
+
+/// The representative value reported for bucket `i` (its midpoint).
+pub fn bucket_mid(i: usize) -> u64 {
+    let (lo, hi) = bucket_bounds(i);
+    lo + (hi - lo) / 2
+}
+
+/// Single-writer / externally synchronized log2 histogram.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: vec![0; N_BUCKETS], count: 0, sum: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all recorded values (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Nearest-rank quantile (`q` in [0, 1]), reported as the owning
+    /// bucket's midpoint — relative error ≤ ~4% (exact below 16).
+    /// Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_mid(i);
+            }
+        }
+        bucket_mid(N_BUCKETS - 1)
+    }
+
+    /// Render this histogram as a Prometheus `histogram` family:
+    /// cumulative `_bucket{le=...}` lines for every non-empty bucket
+    /// (plus `+Inf`), then `_sum` and `_count`. `labels` is the
+    /// pre-rendered label set *without* braces (empty for none).
+    pub fn render_prometheus(&self, out: &mut String, name: &str, labels: &str) {
+        use std::fmt::Write;
+        let join = |extra: &str| {
+            if labels.is_empty() {
+                extra.to_string()
+            } else {
+                format!("{labels},{extra}")
+            }
+        };
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            let (_, hi) = bucket_bounds(i);
+            let _ = writeln!(out, "{name}_bucket{{{}}} {cum}", join(&format!("le=\"{hi}\"")));
+        }
+        let _ = writeln!(out, "{name}_bucket{{{}}} {}", join("le=\"+Inf\""), self.count);
+        let brace = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        let _ = writeln!(out, "{name}_sum{brace} {}", self.sum);
+        let _ = writeln!(out, "{name}_count{brace} {}", self.count);
+    }
+}
+
+/// Lock-free multi-writer flavor for the global registry. Counters are
+/// relaxed atomics: `snapshot` totals are eventually consistent but
+/// each bucket count is exact.
+pub struct AtomicHistogram {
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current counts into a plain [`Histogram`].
+    pub fn snapshot(&self) -> Histogram {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        Histogram { counts, count, sum: self.sum.load(Ordering::Relaxed) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounds_consistent() {
+        let mut prev = 0usize;
+        for v in [0u64, 1, 7, 15, 16, 17, 31, 32, 100, 1000, 65_535, 1 << 20, u64::MAX / 3] {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index not monotone at {v}");
+            prev = i;
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "v={v} outside bucket [{lo},{hi}]");
+            let mid = bucket_mid(i);
+            assert!(lo <= mid && mid <= hi);
+        }
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        // Small values are their own (exact) buckets.
+        for v in 0..16u64 {
+            assert_eq!(bucket_bounds(bucket_index(v)), (v, v));
+        }
+    }
+
+    /// Exact nearest-rank quantile over a sorted sample set — the
+    /// oracle the histogram approximation is held against.
+    fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+        let rank = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[rank]
+    }
+
+    fn assert_quantiles_close(samples: &[u64], what: &str) {
+        let mut h = Histogram::new();
+        let mut sorted = samples.to_vec();
+        for &v in samples {
+            h.record(v);
+        }
+        sorted.sort_unstable();
+        for q in [0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = exact_quantile(&sorted, q);
+            let approx = h.quantile(q);
+            // Documented bound: ≤ ~4% relative error (half a bucket
+            // width over the bucket floor = 1/32), exact below 16.
+            // Allow ±1 absolutely so tiny exact values don't divide
+            // by ~0.
+            let tol = (exact as f64 * 0.04).max(1.0);
+            assert!(
+                (approx as f64 - exact as f64).abs() <= tol,
+                "{what}: q={q} approx {approx} vs exact {exact}"
+            );
+        }
+        assert_eq!(h.count(), samples.len() as u64);
+        assert_eq!(h.sum(), samples.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn quantile_error_bound_on_adversarial_distributions() {
+        // Uniform ramp.
+        let ramp: Vec<u64> = (1..=10_000).collect();
+        assert_quantiles_close(&ramp, "uniform ramp");
+        // Exponentially spread (every octave hit).
+        let expo: Vec<u64> =
+            (0..60).flat_map(|o| [1u64 << o, (1u64 << o) + (1 << o) / 3]).collect();
+        assert_quantiles_close(&expo, "exponential");
+        // Constant — all mass in one bucket.
+        assert_quantiles_close(&vec![777u64; 1000], "constant");
+        // Two-point bimodal with extreme separation.
+        let mut bimodal = vec![3u64; 500];
+        bimodal.extend(vec![1u64 << 40; 500]);
+        assert_quantiles_close(&bimodal, "bimodal");
+        // Heavy tail: 99% small, 1% huge (p99 straddles the jump).
+        let mut tail: Vec<u64> = (0..990).map(|i| 100 + i % 7).collect();
+        tail.extend((0..10).map(|_| 5_000_000u64));
+        assert_quantiles_close(&tail, "heavy tail");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!((h.count(), h.sum()), (0, 0));
+    }
+
+    #[test]
+    fn atomic_snapshot_matches_plain() {
+        let a = AtomicHistogram::new();
+        let mut p = Histogram::new();
+        for v in [0u64, 5, 16, 99, 12_345, 1 << 30] {
+            a.record(v);
+            p.record(v);
+        }
+        let s = a.snapshot();
+        assert_eq!(s.count(), p.count());
+        assert_eq!(s.sum(), p.sum());
+        for q in [0.25, 0.5, 0.75, 1.0] {
+            assert_eq!(s.quantile(q), p.quantile(q));
+        }
+    }
+
+    #[test]
+    fn prometheus_render_is_cumulative_and_complete() {
+        let mut h = Histogram::new();
+        for v in [1u64, 1, 2, 100] {
+            h.record(v);
+        }
+        let mut out = String::new();
+        h.render_prometheus(&mut out, "t_us", "net=\"lenet\"");
+        assert!(out.contains("t_us_bucket{net=\"lenet\",le=\"1\"} 2"), "{out}");
+        assert!(out.contains("t_us_bucket{net=\"lenet\",le=\"2\"} 3"), "{out}");
+        assert!(out.contains("t_us_bucket{net=\"lenet\",le=\"+Inf\"} 4"), "{out}");
+        assert!(out.contains("t_us_sum{net=\"lenet\"} 104"), "{out}");
+        assert!(out.contains("t_us_count{net=\"lenet\"} 4"), "{out}");
+        // Unlabeled render uses bare names for _sum/_count.
+        let mut bare = String::new();
+        h.render_prometheus(&mut bare, "t_us", "");
+        assert!(bare.contains("t_us_sum 104"), "{bare}");
+        assert!(bare.contains("t_us_bucket{le=\"+Inf\"} 4"), "{bare}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Observability: a process-global metrics registry with Prometheus
+//! exposition, a lightweight span/tracing layer with a Chrome
+//! `trace_event` exporter, and the per-layer instrumentation helpers
+//! both CPU executors call.
+//!
+//! Three design rules govern everything in here:
+//!
+//! 1. **Always compiled, cheap when idle.** Instrumentation is not
+//!    feature-gated; instead every entry point checks one relaxed
+//!    atomic load ([`active`]) and returns immediately when both
+//!    metrics and tracing are off — no clock read, no allocation, no
+//!    lock. The serve daemon enables metrics at startup; `qbound
+//!    profile` and the `--trace` flags enable what they need; plain
+//!    `eval`/test runs pay only the load.
+//! 2. **Bounded memory.** Histograms are fixed ~8 KiB
+//!    ([`hist::N_BUCKETS`] buckets), registry families are capped at
+//!    [`registry::MAX_SERIES`] series, span rings hold
+//!    [`span::RING_CAP`] events per thread and drop the *oldest* on
+//!    overflow. Nothing grows with request count, so `check-mem` and
+//!    `integration_memory` envelopes are unaffected (and those paths
+//!    run with observability off — zero allocations in the measured
+//!    region).
+//! 3. **No numerics.** Instrumentation reads clocks and counts bytes;
+//!    it never touches tensor data, so the bit-exactness contract
+//!    (`integration_parity` / `integration_storage`) is structurally
+//!    out of reach. `tests/integration_obs.rs` still asserts
+//!    instrumented and uninstrumented logits are bit-identical.
+//!
+//! The span macro is re-exported here: `obs::span!("name", "k={v}")`
+//! opens a guard recorded on drop (see [`span_guard`]).
+
+pub mod hist;
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::time::Instant;
+
+pub use registry::{counter, gauge, histogram, registry_json, render_prometheus};
+pub use span::{drain, dropped_events, span_guard, SpanEvent};
+pub use trace::{chrome_trace_json, write_chrome_trace};
+
+pub use crate::obs_span as span;
+
+const METRICS: u8 = 1;
+const TRACING: u8 = 2;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// Bitset of enabled subsystems — the one relaxed load every disabled
+/// instrumentation site costs.
+#[inline]
+pub fn active() -> u8 {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+#[inline]
+pub fn metrics_on() -> bool {
+    active() & METRICS != 0
+}
+
+#[inline]
+pub fn tracing_on() -> bool {
+    active() & TRACING != 0
+}
+
+/// Enable/disable metrics collection (registry histograms + decode-byte
+/// accounting). The serve daemon, `qbound profile` and benchkit turn
+/// this on.
+pub fn set_metrics(on: bool) {
+    set_bit(METRICS, on);
+}
+
+/// Enable/disable span tracing (`--trace` / `--trace-dir` flags).
+pub fn set_tracing(on: bool) {
+    set_bit(TRACING, on);
+}
+
+fn set_bit(bit: u8, on: bool) {
+    let mut cur = ACTIVE.load(Ordering::Relaxed);
+    loop {
+        let next = if on { cur | bit } else { cur & !bit };
+        match ACTIVE.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+// ---- packed-decode byte accounting --------------------------------------
+
+static DECODE_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Count `bits` bits decoded from packed storage. Called from the one
+/// chokepoint every packed decode path funnels through
+/// (`PackedBuf::unpack_range_into`); a no-op unless metrics or tracing
+/// is enabled, so the multi-threaded decode hot path stays free of
+/// shared-counter traffic in production-default runs.
+#[inline]
+pub fn count_decode_bits(bits: u64) {
+    if active() != 0 {
+        DECODE_BYTES.fetch_add(bits / 8, Ordering::Relaxed);
+    }
+}
+
+/// Total bytes decoded from packed storage since process start (only
+/// accumulated while metrics/tracing are enabled).
+pub fn decode_bytes() -> u64 {
+    DECODE_BYTES.load(Ordering::Relaxed)
+}
+
+// ---- per-layer step instrumentation -------------------------------------
+
+/// Open timing for one lowered step; `None` when observability is
+/// fully disabled (one relaxed load, nothing else).
+pub struct StepTimer {
+    start: Instant,
+    decode0: u64,
+}
+
+#[inline]
+pub fn step_start() -> Option<StepTimer> {
+    if active() == 0 {
+        return None;
+    }
+    Some(StepTimer { start: Instant::now(), decode0: decode_bytes() })
+}
+
+/// Close a step: record its time into the per-layer histogram and its
+/// decode bytes into the per-layer counter (labels: net, layer group,
+/// storage), and emit a span when tracing. `detail` builds the span's
+/// field string and is only invoked when tracing is on — include op
+/// kind, shapes/MNK, formats, kernel variant there.
+pub fn step_end(
+    t: Option<StepTimer>,
+    net: &str,
+    layer: usize,
+    storage: &'static str,
+    detail: impl FnOnce() -> String,
+) {
+    let Some(t) = t else { return };
+    let us = t.start.elapsed().as_micros() as u64;
+    let dbytes = decode_bytes().saturating_sub(t.decode0);
+    let layer_s = layer.to_string();
+    if metrics_on() {
+        let labels = [("net", net), ("layer", layer_s.as_str()), ("storage", storage)];
+        histogram(
+            "qbound_layer_us",
+            "per-step execution time by layer group, microseconds",
+            &labels,
+        )
+        .record(us);
+        if dbytes > 0 {
+            counter(
+                "qbound_layer_decode_bytes_total",
+                "bytes decoded from packed storage, by layer group",
+                &labels,
+            )
+            .add(dbytes);
+        }
+    }
+    if tracing_on() {
+        // The step already ran: emit a completed event whose window is
+        // the measured one (end = now on the trace epoch clock).
+        let end_us = span::now_us();
+        let mut d = detail();
+        if !d.is_empty() {
+            d.push(' ');
+        }
+        d.push_str(&format!("layer=g{layer} decode_bytes={dbytes}"));
+        span::emit("layer", d, end_us.saturating_sub(us), us);
+    }
+}

@@ -1,0 +1,327 @@
+//! Process-global metrics registry: named counters, gauges and log2
+//! histograms, rendered in the Prometheus text exposition format.
+//!
+//! Instruments are keyed by `(name, sorted label set)` and created on
+//! first touch; handles are cheap `Arc` clones, so hot paths can
+//! resolve once and record lock-free afterwards. Memory is bounded by
+//! construction: each family holds at most [`MAX_SERIES`] series (a
+//! handle past the cap still works — it just isn't retained for
+//! exposition), every histogram is a fixed ~8 KiB, and counters/gauges
+//! are one atomic word each. No per-sample allocation anywhere.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::hist::AtomicHistogram;
+use crate::util::json::Json;
+
+/// Cap on distinct label sets per metric family — the bound that keeps
+/// a label-cardinality bug from growing the registry without limit.
+pub const MAX_SERIES: usize = 4096;
+
+/// A monotonically increasing counter.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable signed gauge.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A handle to a registered [`AtomicHistogram`].
+#[derive(Clone)]
+pub struct HistHandle(pub Arc<AtomicHistogram>);
+
+impl HistHandle {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.0.record(v);
+    }
+}
+
+/// `(metric name, sorted labels)` — the series identity.
+type Key = (String, Vec<(String, String)>);
+
+struct Family<T> {
+    series: BTreeMap<Key, Arc<T>>,
+}
+
+impl<T: Default> Family<T> {
+    fn new() -> Family<T> {
+        Family { series: BTreeMap::new() }
+    }
+
+    fn get_or_create(&mut self, name: &str, labels: &[(&str, &str)]) -> Arc<T> {
+        let mut ls: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        ls.sort();
+        let key = (name.to_string(), ls);
+        if let Some(v) = self.series.get(&key) {
+            return Arc::clone(v);
+        }
+        let v = Arc::new(T::default());
+        if self.series.len() < MAX_SERIES {
+            self.series.insert(key, Arc::clone(&v));
+        }
+        v
+    }
+}
+
+struct Registry {
+    counters: Mutex<Family<AtomicU64>>,
+    gauges: Mutex<Family<AtomicI64>>,
+    hists: Mutex<Family<AtomicHistogram>>,
+    /// `metric name -> HELP text`, first registration wins.
+    help: Mutex<BTreeMap<String, &'static str>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        counters: Mutex::new(Family::new()),
+        gauges: Mutex::new(Family::new()),
+        hists: Mutex::new(Family::new()),
+        help: Mutex::new(BTreeMap::new()),
+    })
+}
+
+fn note_help(name: &str, help: &'static str) {
+    let mut h = registry().help.lock().unwrap();
+    h.entry(name.to_string()).or_insert(help);
+}
+
+/// Get-or-create a counter series.
+pub fn counter(name: &str, help: &'static str, labels: &[(&str, &str)]) -> Counter {
+    note_help(name, help);
+    Counter(registry().counters.lock().unwrap().get_or_create(name, labels))
+}
+
+/// Get-or-create a gauge series.
+pub fn gauge(name: &str, help: &'static str, labels: &[(&str, &str)]) -> Gauge {
+    note_help(name, help);
+    Gauge(registry().gauges.lock().unwrap().get_or_create(name, labels))
+}
+
+/// Get-or-create a histogram series.
+pub fn histogram(name: &str, help: &'static str, labels: &[(&str, &str)]) -> HistHandle {
+    note_help(name, help);
+    HistHandle(registry().hists.lock().unwrap().get_or_create(name, labels))
+}
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double quote and newline.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(labels: &[(String, String)]) -> String {
+    labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Render every registered series in the Prometheus text exposition
+/// format (`# HELP` / `# TYPE` header per family, series sorted by
+/// name then labels).
+pub fn render_prometheus() -> String {
+    use std::fmt::Write;
+    let reg = registry();
+    let help = reg.help.lock().unwrap().clone();
+    let mut out = String::new();
+    let mut header = |out: &mut String, name: &str, kind: &str| {
+        let h = help.get(name).copied().unwrap_or("(undocumented)");
+        let _ = writeln!(out, "# HELP {name} {h}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+    };
+    {
+        let counters = reg.counters.lock().unwrap();
+        let mut last = String::new();
+        for ((name, labels), v) in &counters.series {
+            if *name != last {
+                header(&mut out, name, "counter");
+                last = name.clone();
+            }
+            let ls = render_labels(labels);
+            let brace = if ls.is_empty() { String::new() } else { format!("{{{ls}}}") };
+            let _ = writeln!(out, "{name}{brace} {}", v.load(Ordering::Relaxed));
+        }
+    }
+    {
+        let gauges = reg.gauges.lock().unwrap();
+        let mut last = String::new();
+        for ((name, labels), v) in &gauges.series {
+            if *name != last {
+                header(&mut out, name, "gauge");
+                last = name.clone();
+            }
+            let ls = render_labels(labels);
+            let brace = if ls.is_empty() { String::new() } else { format!("{{{ls}}}") };
+            let _ = writeln!(out, "{name}{brace} {}", v.load(Ordering::Relaxed));
+        }
+    }
+    {
+        let hists = reg.hists.lock().unwrap();
+        let mut last = String::new();
+        for ((name, labels), h) in &hists.series {
+            if *name != last {
+                header(&mut out, name, "histogram");
+                last = name.clone();
+            }
+            h.snapshot().render_prometheus(&mut out, name, &render_labels(labels));
+        }
+    }
+    out
+}
+
+/// Compact JSON summary of the registry (counters + gauges verbatim,
+/// histograms as count/sum/p50/p95/p99) — merged into `/v1/stats` and
+/// the smoke artifact.
+pub fn registry_json() -> Json {
+    let reg = registry();
+    let series_name = |name: &str, labels: &[(String, String)]| {
+        if labels.is_empty() {
+            name.to_string()
+        } else {
+            format!("{name}{{{}}}", render_labels(labels))
+        }
+    };
+    let mut counters = Vec::new();
+    for ((name, labels), v) in &reg.counters.lock().unwrap().series {
+        counters.push((series_name(name, labels), Json::num(v.load(Ordering::Relaxed) as f64)));
+    }
+    let mut gauges = Vec::new();
+    for ((name, labels), v) in &reg.gauges.lock().unwrap().series {
+        gauges.push((series_name(name, labels), Json::num(v.load(Ordering::Relaxed) as f64)));
+    }
+    let mut hists = Vec::new();
+    for ((name, labels), h) in &reg.hists.lock().unwrap().series {
+        let s = h.snapshot();
+        hists.push((
+            series_name(name, labels),
+            Json::obj(vec![
+                ("count", Json::num(s.count() as f64)),
+                ("sum", Json::num(s.sum() as f64)),
+                ("p50", Json::num(s.quantile(0.50) as f64)),
+                ("p95", Json::num(s.quantile(0.95) as f64)),
+                ("p99", Json::num(s.quantile(0.99) as f64)),
+            ]),
+        ));
+    }
+    let obj = |pairs: Vec<(String, Json)>| {
+        Json::Obj(pairs.into_iter().collect::<BTreeMap<String, Json>>())
+    };
+    Json::obj(vec![
+        ("counters", obj(counters)),
+        ("gauges", obj(gauges)),
+        ("histograms", obj(hists)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_escaping_covers_the_three_specials() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn instruments_are_shared_by_key_and_label_order_is_canonical() {
+        let a = counter("obs_test_shared_total", "test", &[("x", "1"), ("y", "2")]);
+        let b = counter("obs_test_shared_total", "test", &[("y", "2"), ("x", "1")]);
+        a.add(3);
+        b.add(4);
+        assert_eq!(a.get(), 7, "label order must not split the series");
+        let g = gauge("obs_test_gauge", "test", &[]);
+        g.set(-5);
+        assert_eq!(gauge("obs_test_gauge", "test", &[]).get(), -5);
+    }
+
+    #[test]
+    fn exposition_parses_name_type_help_and_series_lines() {
+        counter("obs_test_expo_total", "an expo test counter", &[("net", "le\"net")]).add(2);
+        histogram("obs_test_expo_us", "an expo test histogram", &[]).record(42);
+        let text = render_prometheus();
+        let mut saw_help = false;
+        let mut saw_type = false;
+        let mut saw_series = false;
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                assert!(rest.contains(' '), "HELP without text: {line}");
+                saw_help |= rest.starts_with("obs_test_expo_total");
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let kind = rest.split_whitespace().nth(1).unwrap();
+                assert!(matches!(kind, "counter" | "gauge" | "histogram"), "{line}");
+                saw_type |= rest.starts_with("obs_test_expo_total");
+                continue;
+            }
+            // Every sample line is `name[{labels}] value`.
+            let (series, value) = line.rsplit_once(' ').expect(line);
+            assert!(value.parse::<f64>().is_ok(), "unparsable value in {line}");
+            let name = series.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in {line}"
+            );
+            saw_series |= series.starts_with("obs_test_expo_total");
+        }
+        assert!(saw_help && saw_type && saw_series, "{text}");
+        // The escaped quote round-trips in the exposition.
+        assert!(text.contains("net=\"le\\\"net\""), "{text}");
+        // The histogram family renders its _count.
+        assert!(text.contains("obs_test_expo_us_count"), "{text}");
+    }
+
+    #[test]
+    fn registry_json_summarizes_families() {
+        counter("obs_test_json_total", "test", &[]).add(9);
+        histogram("obs_test_json_us", "test", &[]).record(100);
+        let j = registry_json();
+        assert_eq!(j.at(&["counters", "obs_test_json_total"]).as_u64(), Some(9));
+        assert_eq!(j.at(&["histograms", "obs_test_json_us", "count"]).as_u64(), Some(1));
+    }
+}

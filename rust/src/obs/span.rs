@@ -1,0 +1,148 @@
+//! Lightweight spans: timed regions pushed into per-thread ring
+//! buffers, drained by an exporter (Chrome `trace_event` JSON — see
+//! [`super::trace`]).
+//!
+//! The design goal is *cheap when idle*: a disabled span is one relaxed
+//! atomic load ([`super::tracing_on`]) and nothing else — no clock
+//! read, no allocation, no lock. When tracing is enabled, each span
+//! costs two `Instant` reads, one detail `String` (built lazily by the
+//! caller's closure) and a push into the current thread's ring buffer
+//! (an uncontended mutex — only the draining exporter ever takes it
+//! from another thread). Rings are bounded at [`RING_CAP`] events;
+//! overflow drops the *oldest* event and counts it, so a long-running
+//! daemon's memory stays flat and the most recent window of activity is
+//! what gets exported.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events retained per thread before the oldest are dropped
+/// (~100 bytes/event worst case → ≲ 1 MiB per tracing thread).
+pub const RING_CAP: usize = 8192;
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Static category name (`"request"`, `"layer"`, `"gemm"`, ...).
+    pub name: &'static str,
+    /// Free-form fields, built only when tracing is on.
+    pub detail: String,
+    /// Start, microseconds since the process trace epoch.
+    pub ts_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Small dense thread id (assigned per thread on first span).
+    pub tid: u64,
+}
+
+struct Ring {
+    events: VecDeque<SpanEvent>,
+}
+
+static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TL: (u64, Arc<Mutex<Ring>>) = {
+        let ring = Arc::new(Mutex::new(Ring { events: VecDeque::new() }));
+        RINGS.lock().unwrap().push(Arc::clone(&ring));
+        (NEXT_TID.fetch_add(1, Ordering::Relaxed), ring)
+    };
+}
+
+/// Microseconds since the process-wide trace epoch (first use).
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    Instant::now().duration_since(epoch).as_micros() as u64
+}
+
+/// An in-flight span; records itself into the thread's ring on drop.
+pub struct SpanGuard {
+    name: &'static str,
+    detail: String,
+    start_us: u64,
+}
+
+impl SpanGuard {
+    /// Append a field discovered mid-span (e.g. bytes decoded).
+    pub fn add_field(&mut self, field: &str) {
+        if !self.detail.is_empty() {
+            self.detail.push(' ');
+        }
+        self.detail.push_str(field);
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end = now_us();
+        emit(
+            self.name,
+            std::mem::take(&mut self.detail),
+            self.start_us,
+            end.saturating_sub(self.start_us),
+        );
+    }
+}
+
+/// Open a span named `name`; `detail` is only invoked when tracing is
+/// enabled. Returns `None` (cost: one relaxed load) when tracing is
+/// off — bind the result (`let _sp = ...`) so the guard lives to the
+/// end of the region.
+#[inline]
+pub fn span_guard(name: &'static str, detail: impl FnOnce() -> String) -> Option<SpanGuard> {
+    if !super::tracing_on() {
+        return None;
+    }
+    Some(SpanGuard { name, detail: detail(), start_us: now_us() })
+}
+
+/// Push an already-completed event into the current thread's ring —
+/// for regions whose timing was measured out-of-band (the per-layer
+/// step instrumentation). The caller has checked tracing is on.
+pub fn emit(name: &'static str, detail: String, ts_us: u64, dur_us: u64) {
+    TL.with(|(tid, ring)| {
+        let mut r = ring.lock().unwrap();
+        if r.events.len() >= RING_CAP {
+            r.events.pop_front();
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        r.events.push_back(SpanEvent { name, detail, ts_us, dur_us, tid: *tid });
+    });
+}
+
+/// Take every buffered event from every thread's ring, in timestamp
+/// order. Rings stay registered (threads keep tracing into them).
+pub fn drain() -> Vec<SpanEvent> {
+    let rings: Vec<Arc<Mutex<Ring>>> = RINGS.lock().unwrap().clone();
+    let mut all = Vec::new();
+    for ring in rings {
+        let mut r = ring.lock().unwrap();
+        all.extend(r.events.drain(..));
+    }
+    all.sort_by_key(|e| e.ts_us);
+    all
+}
+
+/// Total events dropped to ring overflow since process start.
+pub fn dropped_events() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Open a span: `obs::span!("name")` or
+/// `obs::span!("name", "fmt {}", args)`. Expands to
+/// [`span_guard`](crate::obs::span_guard) — bind the result so the
+/// guard spans the region: `let _sp = obs::span!(...)`.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {
+        $crate::obs::span_guard($name, String::new)
+    };
+    ($name:expr, $($arg:tt)+) => {
+        $crate::obs::span_guard($name, || format!($($arg)+))
+    };
+}

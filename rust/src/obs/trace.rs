@@ -1,0 +1,77 @@
+//! Chrome `trace_event` export: serialize drained [`SpanEvent`]s as a
+//! JSON document `chrome://tracing` and Perfetto load directly.
+//!
+//! Each span becomes one complete event (`"ph": "X"`) with `ts`/`dur`
+//! in microseconds; nesting is inferred by the viewer from time
+//! containment per `tid`, which holds for our spans because a request
+//! span and the layer spans it contains run on the same worker thread.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::span::SpanEvent;
+use crate::util::json::Json;
+
+/// Build the `trace_event` document for `events`.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut fields = vec![
+                ("name", Json::str(e.name)),
+                ("cat", Json::str("qbound")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(e.ts_us as f64)),
+                ("dur", Json::num(e.dur_us as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(e.tid as f64)),
+            ];
+            if !e.detail.is_empty() {
+                fields.push(("args", Json::obj(vec![("detail", Json::str(e.detail.clone()))])));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::arr(rows)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("dropped_events", Json::num(super::span::dropped_events() as f64)),
+    ])
+}
+
+/// Write `events` to `path` as Chrome trace JSON (parents created).
+pub fn write_chrome_trace(path: &Path, events: &[SpanEvent]) -> Result<()> {
+    crate::util::write_file(path, chrome_trace_json(events).pretty().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_document_shape() {
+        let events = vec![
+            SpanEvent {
+                name: "request",
+                detail: "net=lenet".into(),
+                ts_us: 10,
+                dur_us: 100,
+                tid: 3,
+            },
+            SpanEvent { name: "layer", detail: String::new(), ts_us: 20, dur_us: 30, tid: 3 },
+        ];
+        let j = chrome_trace_json(&events);
+        let rows = j.at(&["traceEvents"]).as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].at(&["ph"]).as_str(), Some("X"));
+        assert_eq!(rows[0].at(&["ts"]).as_u64(), Some(10));
+        assert_eq!(rows[0].at(&["args", "detail"]).as_str(), Some("net=lenet"));
+        // Detail-less events omit args entirely.
+        assert!(rows[1].get("args").is_none());
+        // The document round-trips through the parser (valid JSON).
+        let text = j.pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.at(&["traceEvents"]).as_arr().unwrap().len(), 2);
+    }
+}

@@ -237,6 +237,18 @@ impl HttpResponse {
         }
     }
 
+    /// A plain-text payload in the Prometheus exposition content type
+    /// (`GET /metrics`).
+    pub fn text(status: u16, body: String) -> HttpResponse {
+        HttpResponse {
+            status,
+            body: body.into_bytes(),
+            content_type: "text/plain; version=0.0.4",
+            retry_after: None,
+            close: false,
+        }
+    }
+
     /// A JSON error envelope: `{"error": status, "reason": msg}`.
     pub fn error(status: u16, reason: &str) -> HttpResponse {
         HttpResponse::json(

@@ -1,22 +1,30 @@
-//! Serving metrics: latency percentiles and lifetime counters,
-//! snapshotted into `/v1/stats` responses and `SERVE_*.json` artifacts.
+//! Request metrics: latency distribution + status counters for
+//! `/v1/stats`, `GET /metrics` and `SERVE_smoke.json`.
+//!
+//! Latencies live in a fixed-size log2 histogram
+//! ([`crate::obs::hist::Histogram`], ~8 KiB): recording is O(1) with no
+//! per-sample allocation, quantiles are O(buckets) with a documented
+//! ≤ ~4% relative error (exact below 16 µs), and — unlike the
+//! clone-and-sort reservoir this replaced — there is no sample cap and
+//! nothing is ever dropped, no matter how long the daemon runs.
+//! `ServeMetrics` is owned by the dispatch mutex, so the plain
+//! (non-atomic) flavor suffices.
 
 use std::collections::BTreeMap;
 
+use crate::obs::hist::Histogram;
 use crate::util::json::Json;
 
-/// How many latency samples the reservoir keeps before it stops
-/// recording new ones — a hard cap so the metrics themselves honor the
-/// bounded-memory story (64k × 8 B = 512 KiB worst case).
-const MAX_SAMPLES: usize = 65_536;
-
-/// Accumulates per-request latency samples and per-status counters.
+/// Latency + status accounting for the daemon.
 #[derive(Default)]
 pub struct ServeMetrics {
-    latencies_us: Vec<u64>,
-    dropped_samples: u64,
+    latency: Histogram,
+    /// Response counts per HTTP status.
     by_status: BTreeMap<u16, u64>,
-    pub rejected_busy: u64,
+    /// 429 refusals from the in-flight gate. Kept consistent with
+    /// `by_status` by construction: [`ServeMetrics::record`] bumps both
+    /// from the same status code.
+    rejected_busy: u64,
 }
 
 impl ServeMetrics {
@@ -24,60 +32,75 @@ impl ServeMetrics {
         ServeMetrics::default()
     }
 
-    /// Record one completed request: its HTTP status and, for
-    /// successful classifications, the end-to-end latency.
+    /// Count one response; classification latencies pass
+    /// `latency_us`, error/infra responses pass `None`.
     pub fn record(&mut self, status: u16, latency_us: Option<u64>) {
         *self.by_status.entry(status).or_insert(0) += 1;
+        if status == 429 {
+            self.rejected_busy += 1;
+        }
         if let Some(us) = latency_us {
-            if self.latencies_us.len() < MAX_SAMPLES {
-                self.latencies_us.push(us);
-            } else {
-                self.dropped_samples += 1;
-            }
+            self.latency.record(us);
         }
     }
 
+    /// Total responses recorded.
     pub fn requests(&self) -> u64 {
         self.by_status.values().sum()
     }
 
+    /// Responses with a given status.
     pub fn count(&self, status: u16) -> u64 {
         self.by_status.get(&status).copied().unwrap_or(0)
     }
 
-    /// Latency percentile in microseconds over the recorded samples
-    /// (nearest-rank on the sorted vector), or `None` with no samples.
-    pub fn percentile_us(&self, q: f64) -> Option<u64> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut sorted = self.latencies_us.clone();
-        sorted.sort_unstable();
-        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-        Some(sorted[idx.min(sorted.len() - 1)])
+    /// Requests refused by the in-flight gate (HTTP 429).
+    pub fn rejected_busy(&self) -> u64 {
+        self.rejected_busy
     }
 
-    /// The stats object served at `/v1/stats` and archived in
-    /// `SERVE_*.json` (cache counters are merged in by the caller,
-    /// which owns the ledger).
+    /// Latency quantile in µs (`q` in [0, 1]): the owning histogram
+    /// bucket's midpoint, ≤ ~4% relative error. 0.0 before any sample.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        self.latency.quantile(q) as f64
+    }
+
+    /// The `/v1/stats` fragment.
     pub fn snapshot(&self) -> Json {
-        let statuses = Json::Obj(
-            self.by_status.iter().map(|(s, n)| (s.to_string(), Json::num(*n as f64))).collect(),
-        );
-        let pct = |q: f64| match self.percentile_us(q) {
-            Some(us) => Json::num(us as f64),
-            None => Json::Null,
-        };
+        let by_status: Vec<(String, Json)> =
+            self.by_status.iter().map(|(s, n)| (s.to_string(), Json::num(*n as f64))).collect();
         Json::obj(vec![
             ("requests", Json::num(self.requests() as f64)),
             ("rejected_busy", Json::num(self.rejected_busy as f64)),
-            ("latency_samples", Json::num(self.latencies_us.len() as f64)),
-            ("dropped_samples", Json::num(self.dropped_samples as f64)),
-            ("latency_us_p50", pct(0.50)),
-            ("latency_us_p95", pct(0.95)),
-            ("latency_us_p99", pct(0.99)),
-            ("by_status", statuses),
+            ("latency_samples", Json::num(self.latency.count() as f64)),
+            ("latency_us_p50", Json::num(self.percentile_us(0.50))),
+            ("latency_us_p95", Json::num(self.percentile_us(0.95))),
+            ("latency_us_p99", Json::num(self.percentile_us(0.99))),
+            ("by_status", Json::Obj(by_status.into_iter().collect())),
         ])
+    }
+
+    /// Append this struct's series to a Prometheus text exposition:
+    /// `qbound_http_requests_total{status=...}`,
+    /// `qbound_http_rejected_busy_total`, and the
+    /// `qbound_request_latency_us` histogram.
+    pub fn render_prometheus(&self, out: &mut String) {
+        use std::fmt::Write;
+        let _ = writeln!(out, "# HELP qbound_http_requests_total responses by HTTP status");
+        let _ = writeln!(out, "# TYPE qbound_http_requests_total counter");
+        for (status, n) in &self.by_status {
+            let _ = writeln!(out, "qbound_http_requests_total{{status=\"{status}\"}} {n}");
+        }
+        let _ = writeln!(
+            out,
+            "# HELP qbound_http_rejected_busy_total requests refused by the in-flight gate"
+        );
+        let _ = writeln!(out, "# TYPE qbound_http_rejected_busy_total counter");
+        let _ = writeln!(out, "qbound_http_rejected_busy_total {}", self.rejected_busy);
+        let _ =
+            writeln!(out, "# HELP qbound_request_latency_us classification latency, microseconds");
+        let _ = writeln!(out, "# TYPE qbound_request_latency_us histogram");
+        self.latency.render_prometheus(out, "qbound_request_latency_us", "");
     }
 }
 
@@ -86,54 +109,74 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentiles_over_known_distribution() {
+    fn percentiles_track_known_distribution_within_error_bound() {
         let mut m = ServeMetrics::new();
-        // 1..=100 µs, shuffled order must not matter.
-        for v in (1..=100u64).rev() {
-            m.record(200, Some(v));
+        for us in 1..=100u64 {
+            m.record(200, Some(us));
         }
-        assert_eq!(m.percentile_us(0.0), Some(1));
-        assert_eq!(m.percentile_us(0.50), Some(51)); // round(99 * 0.5) = 50
-        assert_eq!(m.percentile_us(0.95), Some(95));
-        assert_eq!(m.percentile_us(0.99), Some(99));
-        assert_eq!(m.percentile_us(1.0), Some(100));
+        // Exact nearest-rank values are 51 / 95 / 99; the histogram
+        // answers within its documented ≤ ~4% relative error.
+        for (q, exact) in [(0.50, 51.0), (0.95, 95.0), (0.99, 99.0)] {
+            let got = m.percentile_us(q);
+            assert!(
+                (got - exact).abs() <= (exact * 0.04).max(1.0),
+                "q={q}: got {got}, exact {exact}"
+            );
+        }
+        assert_eq!(m.requests(), 100);
     }
 
     #[test]
-    fn empty_metrics_have_no_percentiles_and_null_snapshot_fields() {
+    fn empty_metrics_are_zero() {
         let m = ServeMetrics::new();
-        assert_eq!(m.percentile_us(0.5), None);
+        assert_eq!(m.percentile_us(0.99), 0.0);
         let snap = m.snapshot();
-        assert!(snap.get("latency_us_p50").unwrap().is_null());
-        assert_eq!(snap.get("requests").unwrap().as_u64(), Some(0));
+        assert_eq!(snap.get("requests").and_then(Json::as_u64), Some(0));
+        assert_eq!(snap.get("latency_samples").and_then(Json::as_u64), Some(0));
     }
 
     #[test]
-    fn status_counts_and_snapshot_roundtrip() {
+    fn no_sample_cap_unlike_the_old_reservoir() {
         let mut m = ServeMetrics::new();
-        m.record(200, Some(120));
-        m.record(200, Some(80));
+        // Well past the old 64 Ki reservoir cap: every sample counts.
+        for i in 0..200_000u64 {
+            m.record(200, Some(i % 1000));
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.get("latency_samples").and_then(Json::as_u64), Some(200_000));
+        assert!(snap.get("dropped_samples").is_none(), "reservoir-era field must be gone");
+    }
+
+    #[test]
+    fn status_counts_and_rejected_busy_stay_consistent() {
+        let mut m = ServeMetrics::new();
+        m.record(200, Some(1500));
+        m.record(200, Some(900));
         m.record(404, None);
         m.record(429, None);
-        m.rejected_busy = 1;
-        assert_eq!(m.requests(), 4);
         assert_eq!(m.count(200), 2);
+        assert_eq!(m.count(404), 1);
+        // The 429 shows up in BOTH views from one record() call.
         assert_eq!(m.count(429), 1);
-        let text = m.snapshot().to_string();
-        let back = Json::parse(&text).unwrap();
-        assert_eq!(back.get("requests").unwrap().as_u64(), Some(4));
-        assert_eq!(back.get("rejected_busy").unwrap().as_u64(), Some(1));
-        assert_eq!(back.get("by_status").unwrap().get("200").unwrap().as_u64(), Some(2));
-        assert_eq!(back.get("latency_us_p50").unwrap().as_u64(), Some(120));
+        assert_eq!(m.rejected_busy(), 1);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("requests").and_then(Json::as_u64), Some(4));
+        assert_eq!(snap.get("rejected_busy").and_then(Json::as_u64), Some(1));
+        assert_eq!(snap.at(&["by_status", "429"]).as_u64(), Some(1));
+        assert_eq!(snap.get("latency_samples").and_then(Json::as_u64), Some(2));
     }
 
     #[test]
-    fn sample_reservoir_is_capped() {
+    fn prometheus_render_has_all_three_families() {
         let mut m = ServeMetrics::new();
-        for i in 0..(MAX_SAMPLES as u64 + 10) {
-            m.record(200, Some(i));
-        }
-        assert_eq!(m.snapshot().get("latency_samples").unwrap().as_usize(), Some(MAX_SAMPLES));
-        assert_eq!(m.dropped_samples, 10);
+        m.record(200, Some(120));
+        m.record(429, None);
+        let mut out = String::new();
+        m.render_prometheus(&mut out);
+        assert!(out.contains("qbound_http_requests_total{status=\"200\"} 1"), "{out}");
+        assert!(out.contains("qbound_http_requests_total{status=\"429\"} 1"), "{out}");
+        assert!(out.contains("qbound_http_rejected_busy_total 1"), "{out}");
+        assert!(out.contains("qbound_request_latency_us_count 1"), "{out}");
+        assert!(out.contains("qbound_request_latency_us_bucket{le=\"+Inf\"} 1"), "{out}");
     }
 }

@@ -30,8 +30,15 @@
 //!   already match the requested config.
 //!
 //! Endpoints: `GET /healthz`, `GET /v1/nets`, `GET /v1/stats`,
+//! `GET /metrics` (Prometheus text exposition), and
 //! `POST /v1/classify` with a JSON body like
 //! `{"net": "lenet", "weights": "1.8", "data": "10.4", "index": 7}`.
+//!
+//! Observability: the daemon enables the [`crate::obs`] metrics
+//! registry at startup (per-layer histograms populate as traffic
+//! flows), and `--trace-dir` additionally turns on span tracing — on
+//! shutdown the buffered spans are written as Chrome `trace_event`
+//! JSON (`TRACE_serve.json`) loadable in `chrome://tracing`/Perfetto.
 
 pub mod cache;
 pub mod http;
@@ -82,6 +89,9 @@ pub struct ServeOptions {
     pub storage: StorageMode,
     /// Request-body cap (413 beyond it).
     pub max_body_bytes: usize,
+    /// When set, span tracing is enabled and a Chrome trace JSON is
+    /// written to `<trace_dir>/TRACE_serve.json` on shutdown.
+    pub trace_dir: Option<String>,
 }
 
 impl Default for ServeOptions {
@@ -94,6 +104,7 @@ impl Default for ServeOptions {
             backend: BackendKind::default(),
             storage: StorageMode::default(),
             max_body_bytes: 64 * 1024,
+            trace_dir: None,
         }
     }
 }
@@ -163,6 +174,7 @@ pub struct Server {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    trace_dir: Option<String>,
 }
 
 impl Server {
@@ -173,6 +185,12 @@ impl Server {
         // Workers build backends from the environment (the coordinator
         // pattern): propagate the storage mode before spawning.
         opts.storage.set_env();
+        // Per-layer histograms and decode counters populate from the
+        // first request; span tracing only when a trace sink exists.
+        crate::obs::set_metrics(true);
+        if opts.trace_dir.is_some() {
+            crate::obs::set_tracing(true);
+        }
 
         let index = ArtifactIndex::load(dir)?;
         let mut nets = HashMap::new();
@@ -258,7 +276,8 @@ impl Server {
             util::human_bytes(opts.mem_budget_bytes),
             opts.queue_depth
         );
-        Ok(Server { addr, shared, accept: Some(accept), workers })
+        let trace_dir = opts.trace_dir.clone();
+        Ok(Server { addr, shared, accept: Some(accept), workers, trace_dir })
     }
 
     /// The bound address (the real port when the options asked for 0).
@@ -292,6 +311,15 @@ impl Server {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(dir) = self.trace_dir.take() {
+            crate::obs::set_tracing(false);
+            let events = crate::obs::drain();
+            let path = Path::new(&dir).join("TRACE_serve.json");
+            match crate::obs::write_chrome_trace(&path, &events) {
+                Ok(()) => log::info!("serve: wrote {} spans to {}", events.len(), path.display()),
+                Err(e) => log::warn!("serve: writing trace {} failed: {e:#}", path.display()),
+            }
+        }
     }
 }
 
@@ -310,11 +338,26 @@ fn handle_connection(sh: Arc<Shared>, stream: TcpStream) {
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
     loop {
+        // Spans the read+parse of one request (includes any socket wait
+        // on a keep-alive connection); emitted only on success.
+        let t_read = crate::obs::tracing_on().then(crate::obs::span::now_us);
         match http::read_request(&mut reader, sh.max_body) {
             Ok(ReadOutcome::Closed) => return,
             Ok(ReadOutcome::Request(req)) => {
+                if let Some(t0) = t_read {
+                    let end = crate::obs::span::now_us();
+                    crate::obs::span::emit(
+                        "http_parse",
+                        format!("{} {}", req.method, req.path),
+                        t0,
+                        end.saturating_sub(t0),
+                    );
+                }
                 let keep = req.keep_alive;
-                let (mut resp, latency_us) = route(&sh, &req);
+                let (mut resp, latency_us) = {
+                    let _sp = crate::obs::span!("request", "{} {}", req.method, req.path);
+                    route(&sh, &req)
+                };
                 resp.close = !keep;
                 sh.dispatch.lock().unwrap().metrics.record(resp.status, latency_us);
                 if resp.write_to(&mut writer).is_err() || !keep {
@@ -341,8 +384,11 @@ fn route(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) {
         }
         ("GET", "/v1/stats") => (stats_response(sh), None),
         ("GET", "/v1/nets") => (nets_response(sh), None),
+        ("GET", "/metrics") => (metrics_response(sh), None),
         ("POST", "/v1/classify") => classify(sh, req),
-        (_, "/healthz" | "/v1/stats" | "/v1/nets") => (HttpResponse::error(405, "use GET"), None),
+        (_, "/healthz" | "/v1/stats" | "/v1/nets" | "/metrics") => {
+            (HttpResponse::error(405, "use GET"), None)
+        }
         (_, "/v1/classify") => (HttpResponse::error(405, "use POST"), None),
         (m, p) => (HttpResponse::error(404, &format!("no route {m} {p}")), None),
     }
@@ -376,7 +422,19 @@ fn stats_response(sh: &Arc<Shared>) -> HttpResponse {
         "peak_rss_bytes".to_string(),
         util::peak_rss_bytes().map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
     );
+    m.insert("obs".to_string(), crate::obs::registry_json());
+    m.insert("decode_bytes_total".to_string(), Json::num(crate::obs::decode_bytes() as f64));
     HttpResponse::json(200, &Json::Obj(m))
+}
+
+/// `GET /metrics`: the Prometheus text exposition — request-level
+/// series owned by [`ServeMetrics`] followed by the process-global
+/// registry (per-layer histograms, decode counters, kernel gauge).
+fn metrics_response(sh: &Arc<Shared>) -> HttpResponse {
+    let mut out = String::new();
+    sh.dispatch.lock().unwrap().metrics.render_prometheus(&mut out);
+    out.push_str(&crate::obs::render_prometheus());
+    HttpResponse::text(200, out)
 }
 
 fn nets_response(sh: &Arc<Shared>) -> HttpResponse {
@@ -451,9 +509,12 @@ fn classify(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) 
         storage: sh.storage,
     };
 
-    // Backpressure first: a full queue refuses before touching dispatch.
+    // Backpressure first: a full queue refuses before touching
+    // dispatch. The 429 is counted by `ServeMetrics::record` at the
+    // connection layer (status counter and rejected_busy from the same
+    // call, so the two views can't drift).
+    let _sp = crate::obs::span!("admission", "net={net} cfg={} envelope={cost:.0}", cfg.notation());
     let Some(_slot) = sh.gate.try_acquire() else {
-        sh.dispatch.lock().unwrap().metrics.rejected_busy += 1;
         return (HttpResponse::error(429, "queue full").with_retry_after(1), None);
     };
 
@@ -493,6 +554,9 @@ fn classify(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) 
             }
         }
     };
+    // The admission span ends here; the executor wait is the worker's
+    // own `infer` span (same timeline, different tid).
+    drop(_sp);
 
     match resp_rx.recv() {
         Ok(Ok(reply)) => {
@@ -564,11 +628,15 @@ fn serve_one(
     let info = nets.get(&key.net).ok_or_else(|| format!("unknown net {:?}", key.net))?;
     let loaded = !executors.contains_key(key);
     if loaded {
+        let _sp = crate::obs::span!("cache_load", "net={} cfg={}", key.net, key.cfg);
         let exec = backend
             .load(&info.manifest, Variant::Standard)
             .map_err(|e| format!("loading {}: {e:#}", key.net))?;
         executors.insert(key.clone(), exec);
     }
+    // Worker-thread span: the per-layer `layer` spans the executor
+    // emits land on this same thread, so the viewer nests them here.
+    let _sp = crate::obs::span!("infer", "net={} cfg={} index={index}", key.net, key.cfg);
     let exec = executors.get_mut(key).expect("just inserted");
     let wq = key.cfg.wire_wq();
     let dq = key.cfg.wire_dq();

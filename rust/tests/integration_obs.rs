@@ -1,0 +1,263 @@
+//! Observability integration: the contracts the `obs` subsystem makes
+//! to the rest of the system.
+//!
+//! * Instrumentation never perturbs numerics — logits are bit-identical
+//!   with metrics+tracing on vs fully off, under both storage modes.
+//! * The per-layer decode counters reconcile with the
+//!   [`FootprintModel`] prediction (the join `qbound profile` performs).
+//! * A live server answers `GET /metrics` with a parseable Prometheus
+//!   exposition populated by real traffic.
+//! * Span rings nest by time containment and drop the *oldest* events
+//!   at [`RING_CAP`], keeping memory flat.
+//!
+//! The obs enable flags are process-global, so every test here holds
+//! one file-local mutex and restores the flags before releasing it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Mutex, MutexGuard};
+
+use qbound::backend::{Backend, BackendKind, Variant};
+use qbound::eval::Dataset;
+use qbound::memory::{FootprintModel, StorageMode};
+use qbound::nets::NetManifest;
+use qbound::obs;
+use qbound::obs::span::RING_CAP;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::serve::{ServeOptions, Server};
+use qbound::testkit;
+
+/// Serializes every test in this file: obs flags (and `QBOUND_STORAGE`)
+/// are process-global state.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Restore the disabled-by-default flag state on scope exit, even if
+/// the test panics (the next test would otherwise inherit live flags).
+struct FlagsOff;
+impl Drop for FlagsOff {
+    fn drop(&mut self) {
+        obs::set_metrics(false);
+        obs::set_tracing(false);
+    }
+}
+
+fn fast() -> Box<dyn Backend> {
+    BackendKind::Fast.create().unwrap()
+}
+
+fn lenet_cfg(nl: usize) -> PrecisionConfig {
+    PrecisionConfig::uniform(nl, QFormat::new(1, 8), QFormat::new(10, 4))
+}
+
+#[test]
+fn instrumentation_preserves_logits_bit_exactly() {
+    let _g = lock();
+    let _off = FlagsOff;
+    let dir = testkit::ensure_artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let d = Dataset::load(&m).unwrap();
+    let cfg = lenet_cfg(m.n_layers());
+    let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+    for storage in [StorageMode::F32, StorageMode::Packed] {
+        storage.set_env();
+        let b = fast();
+        let mut exec = b.load(&m, Variant::Standard).unwrap();
+        let imgs = d.batch_images(0, m.batch);
+        obs::set_metrics(false);
+        obs::set_tracing(false);
+        let plain = exec.infer(imgs, &wq, &dq, None).unwrap();
+        obs::set_metrics(true);
+        obs::set_tracing(true);
+        let observed = exec.infer(imgs, &wq, &dq, None).unwrap();
+        obs::set_metrics(false);
+        obs::set_tracing(false);
+        // Bitwise, not approximate: instrumentation reads clocks and
+        // counts bytes but never touches tensor data.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&plain), bits(&observed), "{storage:?}");
+    }
+    obs::drain(); // leave no spans behind for later tests
+}
+
+#[test]
+fn per_layer_counters_reconcile_with_the_footprint_model() {
+    let _g = lock();
+    let _off = FlagsOff;
+    let dir = testkit::ensure_artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let d = Dataset::load(&m).unwrap();
+    let nl = m.n_layers();
+    let cfg = lenet_cfg(nl);
+    let fpm = FootprintModel::new(&m);
+
+    // The per-layer model columns must sum to the whole-model weight
+    // figure — the reconciliation row `qbound profile` prints.
+    let model = fpm.per_layer(&cfg);
+    let w_sum: f64 = model.iter().map(|lf| lf.weight_bytes).sum();
+    let fp = fpm.footprint(&cfg);
+    assert!((w_sum - fp.weight_bytes).abs() < 1e-6, "{w_sum} vs {fp:?}");
+
+    // Registry series are cumulative across the process; measure deltas.
+    let layer_labels = |l: &str| [("net", "lenet"), ("layer", l), ("storage", "packed")];
+    let before: Vec<(u64, u64)> = (0..nl)
+        .map(|l| {
+            let ls = l.to_string();
+            let h = obs::histogram("qbound_layer_us", "", &layer_labels(&ls)).0.snapshot();
+            let c = obs::counter("qbound_layer_decode_bytes_total", "", &layer_labels(&ls));
+            (h.count(), c.get())
+        })
+        .collect();
+    let decode0 = obs::decode_bytes();
+
+    StorageMode::Packed.set_env();
+    obs::set_metrics(true);
+    let b = fast();
+    let mut exec = b.load(&m, Variant::Standard).unwrap();
+    let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+    let n = 3usize;
+    for i in 0..n {
+        let img = &d.images[i * d.image_elems..(i + 1) * d.image_elems];
+        exec.infer(img, &wq, &dq, None).unwrap();
+    }
+    obs::set_metrics(false);
+
+    let mut layer_decoded = 0u64;
+    for (l, (count0, decode_l0)) in before.iter().enumerate() {
+        let ls = l.to_string();
+        let h = obs::histogram("qbound_layer_us", "", &layer_labels(&ls)).0.snapshot();
+        // Every precision group runs at least one lowered step per image.
+        assert!(
+            h.count() - count0 >= n as u64,
+            "layer {l}: {} step timings for {n} images",
+            h.count() - count0
+        );
+        let c = obs::counter("qbound_layer_decode_bytes_total", "", &layer_labels(&ls));
+        layer_decoded += c.get() - decode_l0;
+    }
+    // Per-layer attribution never exceeds the global chokepoint count,
+    // and packed inference must actually decode something.
+    let global_decoded = obs::decode_bytes() - decode0;
+    assert!(layer_decoded > 0, "packed run decoded nothing");
+    assert!(
+        layer_decoded <= global_decoded,
+        "layers claim {layer_decoded} B, chokepoint saw {global_decoded} B"
+    );
+}
+
+#[test]
+fn metrics_endpoint_serves_populated_prometheus_exposition() {
+    let _g = lock();
+    let _off = FlagsOff;
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        ..ServeOptions::default()
+    };
+    let server = Server::start(&testkit::ensure_artifacts(), &opts).unwrap();
+    let addr = server.addr();
+
+    // Drive real traffic so the request histograms and per-layer series
+    // have samples, then scrape.
+    let body = r#"{"net":"lenet","weights":"1.8","data":"9.2","index":0}"#;
+    let head = format!("POST /v1/classify\r\nContent-Length: {}", body.len());
+    let (st, _) = http(addr, &head, body);
+    assert_eq!(st, 200);
+    let (st, expo) = http(addr, "GET /metrics", "");
+    server.shutdown();
+    assert_eq!(st, 200);
+
+    // Structural parse: every non-comment line is `name[{labels}] value`.
+    let mut series = Vec::new();
+    for line in expo.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (name_labels, value) = line.rsplit_once(' ').expect(line);
+        assert!(value.parse::<f64>().is_ok(), "unparsable value: {line}");
+        series.push(name_labels.to_string());
+    }
+    for want in [
+        "qbound_http_requests_total{status=\"200\"}",
+        "qbound_request_latency_us_bucket",
+        "qbound_layer_us_bucket",
+        "qbound_layer_us_count",
+    ] {
+        assert!(series.iter().any(|s| s.starts_with(want)), "missing {want} in:\n{expo}");
+    }
+}
+
+#[test]
+fn span_rings_nest_and_drop_oldest_on_overflow() {
+    let _g = lock();
+    let _off = FlagsOff;
+    obs::drain(); // start from empty rings
+    obs::set_tracing(true);
+    {
+        let _outer = obs::span!("obs_test_outer", "k={}", 1);
+        let _inner = obs::span!("obs_test_inner");
+    } // inner drops first, then outer
+    obs::set_tracing(false);
+    let events = obs::drain();
+    let outer = events.iter().find(|e| e.name == "obs_test_outer").unwrap();
+    let inner = events.iter().find(|e| e.name == "obs_test_inner").unwrap();
+    assert_eq!(outer.detail, "k=1");
+    assert_eq!(outer.tid, inner.tid);
+    // Chrome-trace nesting is inferred from time containment.
+    assert!(inner.ts_us >= outer.ts_us, "{inner:?} vs {outer:?}");
+    assert!(inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us, "{inner:?} vs {outer:?}");
+
+    // Overflow: RING_CAP + extra events on one thread keeps the ring at
+    // RING_CAP, drops exactly the oldest `extra`, and counts them.
+    let extra = 17u64;
+    let dropped0 = obs::dropped_events();
+    for i in 0..(RING_CAP as u64 + extra) {
+        obs::span::emit("obs_test_overflow", format!("i={i}"), i, 1);
+    }
+    let events = obs::drain();
+    let kept: Vec<&str> = events
+        .iter()
+        .filter(|e| e.name == "obs_test_overflow")
+        .map(|e| e.detail.as_str())
+        .collect();
+    assert_eq!(kept.len(), RING_CAP);
+    assert_eq!(obs::dropped_events() - dropped0, extra);
+    assert_eq!(kept.first().copied(), Some(format!("i={extra}").as_str()));
+    assert_eq!(kept.last().copied(), Some(format!("i={}", RING_CAP as u64 + extra - 1).as_str()));
+}
+
+// ---- tiny blocking HTTP client ------------------------------------------
+
+/// `head` is `"METHOD /path"` plus any extra headers, `\r\n`-separated.
+fn http(addr: std::net::SocketAddr, head: &str, body: &str) -> (u16, String) {
+    let (req_line, extra) = head.split_once("\r\n").unwrap_or((head, ""));
+    let mut req = format!("{req_line} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n");
+    if !extra.is_empty() {
+        req.push_str(extra);
+        req.push_str("\r\n");
+    }
+    req.push_str("\r\n");
+    req.push_str(body);
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut r = BufReader::new(s);
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        assert!(r.read_line(&mut h).unwrap() > 0, "eof inside headers");
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap();
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    std::io::Read::read_exact(&mut r, &mut buf).unwrap();
+    (status, String::from_utf8(buf).unwrap())
+}
