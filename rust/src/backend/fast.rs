@@ -67,6 +67,8 @@
 //! (im2col materializes padding as `0.0` where the interpreter skips
 //! out-of-bounds taps).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::gemm::{gemm_bias_b, gemm_bias_bits_cached, pack_b_panels, GemmB, StripCache, NR};
@@ -77,6 +79,7 @@ use crate::memory::{PackedBuf, PackedCursor, PackedPanels, StorageMode};
 use crate::nets::arch::{conv_out_hw, same_pad_before, Op, Padding, Shape};
 use crate::nets::NetManifest;
 use crate::quant::QFormat;
+use crate::store::Store;
 
 /// Worker-thread budget: `QBOUND_THREADS`, defaulting to available
 /// parallelism. `0`/garbage is an error (not a silent fallback).
@@ -91,21 +94,29 @@ pub fn threads_from_env() -> Result<usize> {
 }
 
 /// Factory for [`FastExecutor`]s.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct FastBackend {
     threads: usize,
     storage: StorageMode,
+    /// Packed-weight store executors load/publish bitstreams through
+    /// (`--storage packed` only); `None` = always pack locally.
+    store: Option<Arc<Store>>,
 }
 
 impl FastBackend {
-    /// Thread budget, storage mode and kernel dispatch from the
-    /// environment (`QBOUND_THREADS`, `QBOUND_STORAGE`,
-    /// `QBOUND_KERNEL`). Resolving the kernel here surfaces a
-    /// misconfigured `QBOUND_KERNEL` as a clean load-time error and
-    /// emits the one-time dispatch log before any compute runs.
+    /// Thread budget, storage mode, packed-weight store and kernel
+    /// dispatch from the environment (`QBOUND_THREADS`,
+    /// `QBOUND_STORAGE`, `QBOUND_STORE_DIR`, `QBOUND_KERNEL`).
+    /// Resolving the kernel here surfaces a misconfigured
+    /// `QBOUND_KERNEL` as a clean load-time error and emits the
+    /// one-time dispatch log before any compute runs.
     pub fn new() -> Result<FastBackend> {
         super::kernels::init()?;
-        Ok(FastBackend { threads: threads_from_env()?, storage: StorageMode::from_env()? })
+        Ok(FastBackend {
+            threads: threads_from_env()?,
+            storage: StorageMode::from_env()?,
+            store: Store::from_env(),
+        })
     }
 
     /// Explicit thread budget, default f32 storage (tests, embedding).
@@ -113,9 +124,19 @@ impl FastBackend {
         FastBackend::with_options(threads, StorageMode::F32)
     }
 
-    /// Fully explicit construction.
+    /// Fully explicit construction (no store; see
+    /// [`FastBackend::with_store`]).
     pub fn with_options(threads: usize, storage: StorageMode) -> FastBackend {
-        FastBackend { threads: threads.max(1), storage }
+        FastBackend { threads: threads.max(1), storage, store: None }
+    }
+
+    /// Attach (or detach) a packed-weight store. The explicit value is
+    /// final — it overrides whatever `QBOUND_STORE_DIR` said at
+    /// construction, which is how the serve daemon pins every worker to
+    /// the `--store-dir` it was started with.
+    pub fn with_store(mut self, store: Option<Arc<Store>>) -> FastBackend {
+        self.store = store;
+        self
     }
 }
 
@@ -136,6 +157,7 @@ impl Backend for FastBackend {
             scratch: Vec::new(),
             threads: self.threads,
             storage: self.storage,
+            store: self.store.clone(),
             executions: 0,
         }))
     }
@@ -154,6 +176,8 @@ pub struct FastExecutor {
     scratch: Vec<Scratch>,
     threads: usize,
     storage: StorageMode,
+    /// Packed-weight store rebuilds go through (None = pack locally).
+    store: Option<Arc<Store>>,
     executions: u64,
 }
 
@@ -183,7 +207,7 @@ impl NetExecutor for FastExecutor {
     ) -> Result<Vec<f32>> {
         let req = lowering::decode_request(&self.manifest, self.variant, images, wq, dq, sq)?;
         let batch = req.batch;
-        let wts = self.weights.view(&self.plan, &self.params, &req.wfmt);
+        let wts = self.weights.view(&self.plan, &self.params, &req.wfmt, self.store.as_deref());
 
         let elems = self.plan.input_elems();
         let classes = self.plan.num_classes;
@@ -283,8 +307,18 @@ impl FastWeights {
         }
     }
 
-    /// The weight view for `wfmt`, rebuilt only when the config changes.
-    fn view(&mut self, plan: &LoweredPlan, params: &[Vec<f32>], wfmt: &[QFormat]) -> WView<'_> {
+    /// The weight view for `wfmt`, rebuilt only when the config
+    /// changes. `store` (packed mode only) turns a rebuild into a
+    /// load-or-pack against the content-addressed store — a warm store
+    /// makes it a pure mmap share; f32 mode has no bitstream to share
+    /// and ignores it.
+    fn view(
+        &mut self,
+        plan: &LoweredPlan,
+        params: &[Vec<f32>],
+        wfmt: &[QFormat],
+        store: Option<&Store>,
+    ) -> WView<'_> {
         match self {
             FastWeights::F32 { cached_wq, qparams, panels } => {
                 if cached_wq != wfmt {
@@ -305,7 +339,7 @@ impl FastWeights {
             }
             FastWeights::Packed(w) => {
                 if w.cached_wq != wfmt {
-                    w.rebuild(plan, params, wfmt);
+                    w.rebuild(plan, params, wfmt, store);
                 }
                 WView::Packed(w)
             }
@@ -332,7 +366,13 @@ struct PackedWeights {
 }
 
 impl PackedWeights {
-    fn rebuild(&mut self, plan: &LoweredPlan, params: &[Vec<f32>], wfmt: &[QFormat]) {
+    fn rebuild(
+        &mut self,
+        plan: &LoweredPlan,
+        params: &[Vec<f32>],
+        wfmt: &[QFormat],
+        store: Option<&Store>,
+    ) {
         let fmts = plan.per_tensor_formats(wfmt);
         let mut gemm_shape: Vec<Option<(usize, usize)>> = vec![None; params.len()];
         for t in lowering::gemm_tensors(&plan.steps) {
@@ -341,16 +381,32 @@ impl PackedWeights {
         // Packing *is* the quantizer (pack→decode equals
         // `quantize_slice` modulo the single two's-complement zero), so
         // the raw fp32 tensors pack directly — no transient quantized
-        // copy is built.
+        // copy is built. With a store attached, each tensor resolves
+        // content-addressed first: an existing valid file is mmap'd and
+        // shared (zero pack work, zero marginal resident bytes within
+        // the process); only genuinely new (tensor, layout, format)
+        // keys pack — and then publish for the next loader. The decode
+        // paths see identical bitstream words either way, so logits are
+        // bit-identical with or without the store.
         self.tensors = params
             .iter()
             .enumerate()
             .map(|(i, p)| match gemm_shape[i] {
                 Some((kd, n)) => {
-                    let pf = pack_b_panels(p, kd, n);
-                    PackedTensor::Gemm(PackedPanels::pack(fmts[i], &pf, kd, NR))
+                    let pack = || PackedPanels::pack(fmts[i], &pack_b_panels(p, kd, n), kd, NR);
+                    PackedTensor::Gemm(match store {
+                        Some(s) => s.panels_for(p, fmts[i], kd, n, NR, pack),
+                        None => pack(),
+                    })
                 }
-                None => PackedTensor::Bias(PackedBuf::pack(fmts[i], p), fmts[i]),
+                None => {
+                    let pack = || PackedBuf::pack(fmts[i], p);
+                    let buf = match store {
+                        Some(s) => s.buf_for(p, fmts[i], pack),
+                        None => pack(),
+                    };
+                    PackedTensor::Bias(buf, fmts[i])
+                }
             })
             .collect();
         self.cached_wq = wfmt.to_vec();
@@ -377,7 +433,7 @@ impl PackedWeights {
 /// --mem-json`.
 pub fn packed_weight_bytes(plan: &LoweredPlan, params: &[Vec<f32>], wfmt: &[QFormat]) -> usize {
     let mut w = PackedWeights::default();
-    w.rebuild(plan, params, wfmt);
+    w.rebuild(plan, params, wfmt, None);
     w.resident_bytes()
 }
 
@@ -1563,7 +1619,7 @@ mod tests {
             let params: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.1; s.elems()]).collect();
             let wfmt = vec![QFormat::new(1, 7); plan.n_layers];
             let mut w = PackedWeights::default();
-            w.rebuild(&plan, &params, &wfmt);
+            w.rebuild(&plan, &params, &wfmt, None);
             assert_eq!(w.tensors.len(), params.len(), "{name}");
             let mut panel_elems = 0usize;
             let mut bias_elems = 0usize;
@@ -1598,7 +1654,7 @@ mod tests {
             .collect();
         let wfmt = vec![QFormat::new(1, 7); plan.n_layers]; // 8 bits
         let mut w = PackedWeights::default();
-        w.rebuild(&plan, &params, &wfmt);
+        w.rebuild(&plan, &params, &wfmt, None);
         // 8-bit codes: exactly one byte per stored element (panels carry
         // NR-lane padding), modulo per-tensor byte rounding.
         let elems = plan.panel_param_elems + plan.bias_param_elems;

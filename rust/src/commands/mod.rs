@@ -9,5 +9,6 @@ pub mod profile;
 pub mod repro_cmd;
 pub mod search_cmd;
 pub mod serve;
+pub mod store_cmd;
 pub mod sweeps;
 pub mod traffic_cmd;

@@ -42,7 +42,18 @@ pub fn run(args: &[String]) -> Result<()> {
         .opt("storage", "activation storage: f32 | packed (default: env)", "")
         .opt("max-body-kb", "request-body cap in KiB (413 beyond it)", "64")
         .opt("trace-dir", "span tracing: write TRACE_serve.json here on shutdown", "")
+        .opt(
+            "store-dir",
+            "packed-weight store directory (default: QBOUND_STORE_DIR; empty = no store): \
+             warm restarts skip re-packing and same-weight executors share one mapping",
+            "",
+        )
         .flag("smoke", "run the self-driving smoke workload and exit")
+        .flag(
+            "expect-warm",
+            "smoke: assert a warm start against --store-dir (zero packs; reads the cold \
+             run's STORE_stats.json and rewrites it with the cold/warm pair)",
+        )
         .opt("smoke-requests", "classification requests the smoke workload replays", "48")
         .opt("slack-mb", "smoke: process-overhead slack for the RSS assertion", "192")
         .opt("slo-ms", "smoke: p99 latency SLO in milliseconds", "5000")
@@ -66,6 +77,17 @@ fn mib(v: f64) -> f64 {
 fn trace_dir(a: &Args) -> Option<String> {
     let d = a.str("trace-dir");
     (!d.is_empty()).then(|| d.to_string())
+}
+
+/// Resolve the packed-weight store directory: `--store-dir`, falling
+/// back to `QBOUND_STORE_DIR`. The CLI is the only place the
+/// environment is consulted — the server takes the resolved value.
+fn store_dir(a: &Args) -> Option<String> {
+    let d = a.str("store-dir");
+    if !d.is_empty() {
+        return Some(d.to_string());
+    }
+    std::env::var("QBOUND_STORE_DIR").ok().filter(|v| !v.is_empty())
 }
 
 fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()> {
@@ -94,6 +116,7 @@ fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()
         storage,
         max_body_bytes: a.usize("max-body-kb")? * 1024,
         trace_dir: trace_dir(a),
+        store_dir: store_dir(a),
     };
     // Resolve kernel dispatch up front: a bad QBOUND_KERNEL fails the
     // launch cleanly, and the startup banner reports the variant.
@@ -108,6 +131,10 @@ fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()
         kernel.label()
     );
     println!("  mem budget {}  queue depth {}", util::human_bytes(budget), opts.queue_depth);
+    match &opts.store_dir {
+        Some(d) => println!("  packed-weight store: {d}"),
+        None => println!("  packed-weight store: disabled (--store-dir / QBOUND_STORE_DIR)"),
+    }
     println!(
         "  endpoints: GET /healthz  GET /v1/nets  GET /v1/stats  GET /metrics  \
          POST /v1/classify"
@@ -207,7 +234,16 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
         storage,
         max_body_bytes: a.usize("max-body-kb")? * 1024,
         trace_dir: trace_dir(a),
+        store_dir: store_dir(a),
     };
+    ensure!(
+        !a.flag("expect-warm") || opts.store_dir.is_some(),
+        "--expect-warm needs --store-dir (or QBOUND_STORE_DIR)"
+    );
+    // Start-to-ready: bind + load manifests + one sweep that touches
+    // every workload config once, so every executor's weights are
+    // packed (cold) or store-loaded (warm) inside the measured window.
+    let t_ready = std::time::Instant::now();
     let server = Server::start(&dir, &opts)?;
     let addr = server.addr();
     println!(
@@ -220,6 +256,17 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
 
     let (st, health) = http_get(addr, "/healthz")?;
     ensure!(st == 200 && health.get("ok").and_then(Json::as_bool) == Some(true), "healthz: {st}");
+    for net in &nets {
+        for wfmt in &wfmts {
+            let body = format!(
+                "{{\"net\":\"{}\",\"weights\":\"{}\",\"data\":\"{}\",\"index\":0}}",
+                net.name, wfmt, dfmt
+            );
+            let (st, _) = http_post(addr, "/v1/classify", &body)?;
+            ensure!(st == 200, "ready sweep ({body}): status {st}");
+        }
+    }
+    let ready_us = t_ready.elapsed().as_micros() as f64;
 
     // Mixed workload over live TCP, every answer checked against a
     // freshly loaded reference-backend oracle.
@@ -339,10 +386,67 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
         ("slack_bytes", Json::num(slack)),
         ("peak_rss_bytes", Json::num(peak_rss as f64)),
         ("slo_us", Json::num(slo_us)),
+        ("ready_us", Json::num(ready_us)),
         ("stats", stats.clone()),
     ]);
     let path = std::path::PathBuf::from(a.str("out-dir")).join("SERVE_smoke.json");
     util::write_file(&path, doc.pretty().as_bytes())?;
+
+    // Packed-weight store verdict + STORE_stats.json artifact. The cold
+    // run records its pack count and start-to-ready time; the warm run
+    // (`--expect-warm`, same --store-dir, fresh process) must load every
+    // bitstream from disk — zero packs, hard — and not be slower than
+    // the cold start beyond generous CI noise slack.
+    if let Some(sdir) = &opts.store_dir {
+        let store_stats = stats.get("store").cloned().context("stats: no store block")?;
+        let packs = store_stats.get("packs").and_then(Json::as_f64).context("store: no packs")?;
+        let run = Json::obj(vec![
+            ("dir", Json::str(sdir.clone())),
+            ("backend", Json::str(backend.label())),
+            ("storage", Json::str(storage.label())),
+            ("ready_us", Json::num(ready_us)),
+            ("requests_checked", Json::num(checked as f64)),
+            ("store", store_stats),
+            ("cache", stats.get("cache").cloned().unwrap_or(Json::Null)),
+        ]);
+        let spath = std::path::PathBuf::from(a.str("out-dir")).join("STORE_stats.json");
+        let record = if a.flag("expect-warm") {
+            let prev = std::fs::read_to_string(&spath)
+                .with_context(|| format!("--expect-warm: no cold-run {}", spath.display()))?;
+            let prev = Json::parse(&prev).map_err(anyhow::Error::from)?;
+            let cold = prev.get("cold").cloned().context("--expect-warm: no cold record")?;
+            let cold_packs = cold
+                .get("store")
+                .and_then(|s| s.get("packs"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0);
+            ensure!(cold_packs > 0.0, "vacuous warm check: the cold run recorded no packs");
+            ensure!(
+                packs == 0.0,
+                "warm start re-packed {packs:.0} bitstreams; the store at {sdir} should \
+                 already hold all of them"
+            );
+            let cold_ready = cold.get("ready_us").and_then(Json::as_f64).unwrap_or(0.0);
+            let max_warm = cold_ready * 1.5 + 2_000_000.0;
+            ensure!(
+                ready_us <= max_warm,
+                "warm start-to-ready {ready_us:.0} us over the bound {max_warm:.0} us \
+                 (cold was {cold_ready:.0} us)"
+            );
+            println!(
+                "  warm start: 0 packs (cold packed {cold_packs:.0}), ready {:.0} ms \
+                 (cold {:.0} ms)",
+                ready_us / 1000.0,
+                cold_ready / 1000.0
+            );
+            Json::obj(vec![("schema", Json::num(1.0)), ("cold", cold), ("warm", run)])
+        } else {
+            println!("  cold start: {packs:.0} packs, ready {:.0} ms", ready_us / 1000.0);
+            Json::obj(vec![("schema", Json::num(1.0)), ("cold", run)])
+        };
+        util::write_file(&spath, record.pretty().as_bytes())?;
+        println!("  store json -> {}", spath.display());
+    }
 
     server.shutdown();
     println!("  {checked} live requests checked against the reference oracle");

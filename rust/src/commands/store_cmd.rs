@@ -1,0 +1,173 @@
+//! `qbound store` — inspect and manage the content-addressed
+//! packed-weight store ([`qbound::store`]).
+//!
+//! Actions:
+//!
+//! * `ls` — one row per store file: key, payload description,
+//!   validation verdict, size, age.
+//! * `gc` — remove store files (and stale temp files); `--dry-run`
+//!   reports without removing, `--older-than-hours` keeps young files.
+//!   Removal never invalidates live mappings in running daemons
+//!   (Linux keeps an unlinked file alive until the last mapping
+//!   drops), so `gc` is safe to run beside a serving process — at
+//!   worst the next cold load re-packs and re-publishes.
+//! * `warm` — pre-pack every weight tensor of the indexed networks at
+//!   the given uniform weight formats, so a subsequent
+//!   `qbound serve --store-dir` (or eval with `QBOUND_STORE_DIR`)
+//!   starts with zero pack work.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use qbound::backend::gemm::{pack_b_panels, NR};
+use qbound::backend::lowering::{self, LoweredPlan};
+use qbound::backend::Variant;
+use qbound::cli::{Args, CmdSpec};
+use qbound::memory::{PackedBuf, PackedPanels};
+use qbound::nets::{arch, ArtifactIndex, NetManifest};
+use qbound::quant::QFormat;
+use qbound::store::Store;
+use qbound::util;
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new("store", "inspect/manage the content-addressed packed-weight store")
+        .positional("action", "ls | gc | warm")
+        .opt("dir", "store directory (default: QBOUND_STORE_DIR)", "")
+        .opt("older-than-hours", "gc: only remove files at least this old", "0")
+        .flag("dry-run", "gc: report what would be removed without removing anything")
+        .opt("net", "warm: network to pre-pack (default: every indexed net)", "")
+        .opt(
+            "weights",
+            "warm: comma-separated uniform weight formats to pre-pack",
+            "1.8,2.7,1.6,3.4",
+        );
+    let a = spec.parse(args)?;
+    let dir = match a.str("dir") {
+        "" => std::env::var("QBOUND_STORE_DIR")
+            .ok()
+            .filter(|v| !v.is_empty())
+            .context("no store directory: pass --dir or set QBOUND_STORE_DIR")?,
+        d => d.to_string(),
+    };
+    let store = Store::open(Path::new(&dir))?;
+    match a.positional(0).unwrap_or("ls") {
+        "ls" => ls(&store),
+        "gc" => gc(&store, &a),
+        "warm" => warm(&store, &a),
+        other => bail!("unknown store action {other:?} (expected ls | gc | warm)"),
+    }
+}
+
+fn ls(store: &Store) -> Result<()> {
+    let entries = store.ls()?;
+    println!("store {} — {} file(s)", store.dir().display(), entries.len());
+    let mut total = 0u64;
+    let mut invalid = 0usize;
+    for e in &entries {
+        total += e.file_bytes;
+        if !e.valid {
+            invalid += 1;
+        }
+        println!(
+            "  {:<56} {:>10}  {:>8}  {}",
+            e.key,
+            util::human_bytes(e.file_bytes as f64),
+            format_age(e.age_secs),
+            if e.valid { e.desc.clone() } else { format!("INVALID ({})", e.desc) }
+        );
+    }
+    println!("  total {} ({invalid} invalid)", util::human_bytes(total as f64));
+    Ok(())
+}
+
+fn format_age(secs: u64) -> String {
+    match secs {
+        s if s < 120 => format!("{s}s"),
+        s if s < 7200 => format!("{}m", s / 60),
+        s if s < 48 * 3600 => format!("{}h", s / 3600),
+        s => format!("{}d", s / 86400),
+    }
+}
+
+fn gc(store: &Store, a: &Args) -> Result<()> {
+    let min_age = Duration::from_secs_f64(a.f64("older-than-hours")? * 3600.0);
+    let dry = a.flag("dry-run");
+    let report = store.gc(min_age, dry)?;
+    println!(
+        "store gc {}{}: removed {} file(s) ({}), {} stale temp file(s); \
+         kept {} live, {} young",
+        store.dir().display(),
+        if dry { " [dry run]" } else { "" },
+        report.removed,
+        util::human_bytes(report.removed_bytes as f64),
+        report.removed_tmp,
+        report.kept_live,
+        report.kept_young,
+    );
+    Ok(())
+}
+
+/// Pre-pack the weight tensors of the selected nets at each uniform
+/// weight format — exactly the (tensor, layout, format) keys the fast
+/// packed executors resolve, via the same store API, so a warmed store
+/// serves every later load from disk.
+fn warm(store: &Store, a: &Args) -> Result<()> {
+    let dir = util::artifacts_dir()?;
+    let nets: Vec<String> = match a.str("net") {
+        "" => ArtifactIndex::load(&dir)?.nets,
+        n => vec![n.to_string()],
+    };
+    let fmts = a
+        .list("weights")
+        .iter()
+        .map(|s| QFormat::parse(s))
+        .collect::<Result<Vec<_>>>()
+        .context("parsing --weights")?;
+    anyhow::ensure!(!fmts.is_empty(), "--weights lists no formats");
+
+    let before = store.stats();
+    let mut tensors = 0usize;
+    for net in &nets {
+        if arch::get(net).is_none() {
+            println!("  {net}: no registered architecture, skipping");
+            continue;
+        }
+        let manifest = NetManifest::load(&dir, net)?;
+        let loaded = lowering::load_network(&manifest, Variant::Standard)?;
+        let plan = LoweredPlan::new(&loaded.arch, None)?;
+        let mut gemm_shape: Vec<Option<(usize, usize)>> = vec![None; loaded.params.len()];
+        for t in lowering::gemm_tensors(&plan.steps) {
+            gemm_shape[t.param] = Some((t.kd, t.n));
+        }
+        for fmt in &fmts {
+            let wq = vec![*fmt; manifest.n_layers()];
+            let per_tensor = plan.per_tensor_formats(&wq);
+            for (i, p) in loaded.params.iter().enumerate() {
+                match gemm_shape[i] {
+                    Some((kd, n)) => {
+                        let _ = store.panels_for(p, per_tensor[i], kd, n, NR, || {
+                            PackedPanels::pack(per_tensor[i], &pack_b_panels(p, kd, n), kd, NR)
+                        });
+                    }
+                    None => {
+                        let _ = store
+                            .buf_for(p, per_tensor[i], || PackedBuf::pack(per_tensor[i], p));
+                    }
+                }
+                tensors += 1;
+            }
+        }
+        println!("  {net}: {} tensors x {} formats", loaded.params.len(), fmts.len());
+    }
+    let after = store.stats();
+    println!(
+        "store warm {}: {} tensor-format keys resolved — {} packed+published, \
+         {} already present",
+        store.dir().display(),
+        tensors,
+        after.packs - before.packs,
+        (after.hits_disk - before.hits_disk) + (after.hits_shared - before.hits_shared),
+    );
+    Ok(())
+}

@@ -299,13 +299,26 @@ impl Drop for Coordinator {
 /// always wins). Shared with the serve daemon's worker pool
 /// ([`crate::serve`]), which has the same per-worker thread-budget
 /// problem.
-pub(crate) fn backend_for_worker(kind: BackendKind, n_workers: usize) -> Result<Box<dyn Backend>> {
-    if kind == BackendKind::Fast && std::env::var_os("QBOUND_THREADS").is_none() {
-        let per_worker = (default_workers() / n_workers.max(1)).max(1);
-        return Ok(Box::new(crate::backend::fast::FastBackend::with_options(
-            per_worker,
-            crate::memory::StorageMode::from_env()?,
-        )));
+/// `store` is the packed-weight store the worker's fast backend should
+/// load/publish bitstreams through — the *final* word, overriding
+/// `QBOUND_STORE_DIR` (the serve daemon pins workers to its
+/// `--store-dir`; the coordinator passes the env resolution through).
+pub(crate) fn backend_for_worker(
+    kind: BackendKind,
+    n_workers: usize,
+    store: Option<Arc<crate::store::Store>>,
+) -> Result<Box<dyn Backend>> {
+    if kind == BackendKind::Fast {
+        let backend = if std::env::var_os("QBOUND_THREADS").is_none() {
+            let per_worker = (default_workers() / n_workers.max(1)).max(1);
+            crate::backend::fast::FastBackend::with_options(
+                per_worker,
+                crate::memory::StorageMode::from_env()?,
+            )
+        } else {
+            crate::backend::fast::FastBackend::new()?
+        };
+        return Ok(Box::new(backend.with_store(store)));
     }
     kind.create()
 }
@@ -322,7 +335,7 @@ fn worker_loop(
 ) {
     // Backend + evaluators are created lazily per worker: a worker that
     // never sees a googlenet job never loads googlenet.
-    let backend = match backend_for_worker(kind, n_workers) {
+    let backend = match backend_for_worker(kind, n_workers, crate::store::Store::from_env()) {
         Ok(b) => b,
         Err(e) => {
             log::error!("worker failed to create {} backend: {e:#}", kind.label());

@@ -35,6 +35,7 @@
 //! | [`coordinator`] | worker-pool evaluation service (one backend/thread) |
 //! | [`search`] | uniform/per-layer sweeps, greedy descent, Pareto, Table 2 |
 //! | [`serve`] | footprint-budgeted HTTP inference daemon (`qbound serve`) |
+//! | [`store`] | content-addressed packed-weight store, mmap'd zero-copy sharing (`qbound store`) |
 //! | [`obs`] | metrics registry (Prometheus exposition), span tracing, per-layer profiling substrate |
 //! | [`report`] | tables, ASCII charts, CSV/markdown emitters |
 //! | [`tensor`], [`util`], [`cli`], [`prng`], [`testkit`], [`benchkit`] | substrates |
@@ -58,6 +59,7 @@ pub mod repro;
 pub mod runtime;
 pub mod search;
 pub mod serve;
+pub mod store;
 pub mod tensor;
 pub mod testkit;
 pub mod traffic;

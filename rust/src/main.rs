@@ -11,6 +11,7 @@
 //!   check-mem                CI gate: measured peak RSS vs modeled envelope
 //!   repro <exp>              regenerate a paper table/figure (or `all`)
 //!   serve                    footprint-budgeted HTTP inference daemon
+//!   store                    packed-weight store: ls / gc / warm
 //!   profile                  per-layer time/decode/footprint breakdown
 //!   gen-artifacts            synthesize a pure-Rust artifact set
 
@@ -45,6 +46,7 @@ COMMANDS:
   check-mem      fail if measured MEM_*.json peaks escape the modeled envelope
   repro          regenerate paper experiments: table1 fig1 fig2 fig3 fig4 fig5 table2 all
   serve          footprint-budgeted HTTP inference daemon (--smoke self-test)
+  store          content-addressed packed-weight store: ls / gc / warm
   profile        per-layer time/decode/footprint breakdown (+ JSON/trace)
   gen-artifacts  synthesize a pure-Rust artifact set (no python needed)
 
@@ -70,6 +72,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "check-mem" => commands::check_mem::run(rest),
         "repro" => commands::repro_cmd::run(rest),
         "serve" => commands::serve::run(rest),
+        "store" => commands::store_cmd::run(rest),
         "profile" => commands::profile::run(rest),
         "gen-artifacts" => commands::gen_artifacts::run(rest),
         "--help" | "-h" | "help" => {

@@ -232,6 +232,23 @@ impl FootprintModel {
             .sum();
         self.footprint(cfg).total_bytes + pad + 4.0 * window_f32_elems as f64
     }
+
+    /// The weight component of [`FootprintModel::fused_envelope`]: all
+    /// resident parameter bytes at `cfg.wq` storage widths *plus* the
+    /// GEMM panel padding at the same widths. This is exactly the slice
+    /// of an executor's residency that the packed-weight store
+    /// ([`crate::store`]) can share between executors whose weight
+    /// formats agree — the serving cache prices it once per distinct
+    /// (network, `wq`) pair when store-backed sharing is active.
+    pub fn shared_weight_bytes(&self, cfg: &PrecisionConfig, weight_pad_elems: &[usize]) -> f64 {
+        assert_eq!(weight_pad_elems.len(), self.layers.len(), "padding/model layer mismatch");
+        let pad: f64 = weight_pad_elems
+            .iter()
+            .zip(&cfg.wq)
+            .map(|(&e, q)| e as f64 * storage_width(*q) as f64 / 8.0)
+            .sum();
+        self.footprint(cfg).weight_bytes + pad
+    }
 }
 
 #[cfg(test)]
@@ -360,6 +377,20 @@ mod tests {
         let fp32 = PrecisionConfig::fp32(2);
         assert_eq!(fpm.fused_envelope(&fp32, 0, &[0, 0]), base.total_bytes);
         assert_eq!(fpm.fused_envelope(&fp32, 0, &[2, 0]), base.total_bytes + 8.0);
+    }
+
+    #[test]
+    fn shared_weight_bytes_is_the_envelope_weight_component() {
+        let fpm = FootprintModel::new(&toy_manifest());
+        let cfg = PrecisionConfig::uniform(2, QFormat::new(1, 7), QFormat::new(6, 2));
+        // 110 weight elems at 8 bits + (16+8) padding elems at 8 bits.
+        assert_eq!(fpm.shared_weight_bytes(&cfg, &[16, 8]), 110.0 + 24.0);
+        // Envelope = shared weights + peak acts + f32 windows.
+        let fp = fpm.footprint(&cfg);
+        assert_eq!(
+            fpm.fused_envelope(&cfg, 100, &[16, 8]),
+            fpm.shared_weight_bytes(&cfg, &[16, 8]) + fp.peak_act_bytes + 400.0
+        );
     }
 
     #[test]

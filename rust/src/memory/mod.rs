@@ -40,7 +40,7 @@ pub mod footprint;
 pub mod packed;
 
 pub use footprint::{Footprint, FootprintModel, LayerFootprint};
-pub use packed::{storage_width, PackedBuf, PackedCursor, PackedPanels, MAX_PACK_BITS};
+pub use packed::{storage_width, PackedBuf, PackedCursor, PackedPanels, WordBacking, MAX_PACK_BITS};
 
 use anyhow::{bail, Result};
 

@@ -36,8 +36,40 @@
 //! fixed-point encoding and packs to code 0.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::quant::QFormat;
+
+/// Read-only word storage a [`PackedBuf`] can borrow instead of own —
+/// e.g. one mmap'd packed-weight store file ([`crate::store`]) serving
+/// every executor that holds the same tensor. Implementations promise
+/// the words are immutable for the backing's lifetime.
+pub trait WordBacking: Send + Sync + std::fmt::Debug {
+    /// The backing's `u64` words (little-endian bitstream words, same
+    /// layout as an owned [`PackedBuf`]).
+    fn words(&self) -> &[u64];
+}
+
+/// The storage behind a [`PackedBuf`]: its own words, or a window into
+/// a shared read-only backing. Decode paths are identical either way —
+/// both resolve to `&[u64]` before any bit is touched.
+#[derive(Clone, Debug)]
+enum Words {
+    Owned(Vec<u64>),
+    Shared {
+        backing: Arc<dyn WordBacking>,
+        /// Word offset of this buffer's window inside the backing.
+        off: usize,
+        /// Window length in words.
+        n_words: usize,
+    },
+}
+
+impl Default for Words {
+    fn default() -> Self {
+        Words::Owned(Vec::new())
+    }
+}
 
 /// Widest fixed-point bitstream width; wider formats (and fp32) take
 /// the 32-bit word-aligned fallback.
@@ -84,7 +116,7 @@ pub fn storage_width(fmt: QFormat) -> u32 {
 /// ```
 #[derive(Clone, Debug, Default)]
 pub struct PackedBuf {
-    words: Vec<u64>,
+    words: Words,
     len: usize,
     width: u32,
 }
@@ -95,6 +127,55 @@ impl PackedBuf {
         let mut buf = PackedBuf::default();
         buf.pack_into(fmt, xs);
         buf
+    }
+
+    /// A buffer whose words live in a shared read-only backing (one
+    /// mmap'd store file, typically): `n_words` words starting at word
+    /// `off` of `backing` hold `len` values of `width` bits each.
+    /// Decode behavior is identical to an owned buffer; cloning shares
+    /// the backing (`Arc`) instead of copying words.
+    pub fn from_shared(
+        backing: Arc<dyn WordBacking>,
+        off: usize,
+        n_words: usize,
+        len: usize,
+        width: u32,
+    ) -> PackedBuf {
+        assert!(width >= 1 && width <= 64, "bad packed width {width}");
+        assert_eq!(n_words, (len * width as usize + 63) / 64, "word count mismatch");
+        assert!(
+            off + n_words <= backing.words().len(),
+            "shared window {off}+{n_words} outside backing of {} words",
+            backing.words().len()
+        );
+        PackedBuf { words: Words::Shared { backing, off, n_words }, len, width }
+    }
+
+    /// Whether the words live in a shared backing rather than an owned
+    /// vector (diagnostics / tests; decode semantics do not differ).
+    pub fn is_shared(&self) -> bool {
+        matches!(self.words, Words::Shared { .. })
+    }
+
+    /// The bitstream words, wherever they live.
+    pub(crate) fn words(&self) -> &[u64] {
+        match &self.words {
+            Words::Owned(v) => v,
+            Words::Shared { backing, off, n_words } => &backing.words()[*off..*off + *n_words],
+        }
+    }
+
+    /// Mutable owned words for (re)packing. A shared buffer detaches to
+    /// an empty owned vector first — packing never writes through a
+    /// read-only backing.
+    fn words_mut(&mut self) -> &mut Vec<u64> {
+        if let Words::Shared { .. } = self.words {
+            self.words = Words::Owned(Vec::new());
+        }
+        match &mut self.words {
+            Words::Owned(v) => v,
+            Words::Shared { .. } => unreachable!("detached above"),
+        }
     }
 
     /// Number of stored values.
@@ -124,15 +205,16 @@ impl PackedBuf {
         self.width = width;
         self.len = xs.len();
         let n_words = (xs.len() * width as usize + 63) / 64;
-        self.words.clear();
+        let words = self.words_mut();
+        words.clear();
         // Exact reservation: Vec's amortized doubling would otherwise
         // leave up to 2× the needed capacity resident, which the
         // allocation-tracking memory tests would charge against the
         // packed envelope.
-        if self.words.capacity() < n_words {
-            self.words.reserve_exact(n_words);
+        if words.capacity() < n_words {
+            words.reserve_exact(n_words);
         }
-        self.words.resize(n_words, 0);
+        words.resize(n_words, 0);
 
         if width == 32 {
             // Word-aligned fallback, two values per u64, LSB-first. The
@@ -142,12 +224,12 @@ impl PackedBuf {
             // with the two's-complement bitstream path.
             if fmt.is_fp32() {
                 for (i, &x) in xs.iter().enumerate() {
-                    self.words[i / 2] |= (x.to_bits() as u64) << ((i % 2) * 32);
+                    words[i / 2] |= (x.to_bits() as u64) << ((i % 2) * 32);
                 }
             } else {
                 for (i, &x) in xs.iter().enumerate() {
                     let bits = (fmt.quantize(x) + 0.0).to_bits() as u64;
-                    self.words[i / 2] |= bits << ((i % 2) * 32);
+                    words[i / 2] |= bits << ((i % 2) * 32);
                 }
             }
             return;
@@ -167,9 +249,9 @@ impl PackedBuf {
             let code = (x * scale).clamp(slo, shi).round_ties_even() as i32;
             let bits = (code as u32 as u64) & mask;
             let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
-            self.words[w] |= bits << off;
+            words[w] |= bits << off;
             if off + width > 64 {
-                self.words[w + 1] |= bits >> (64 - off);
+                words[w + 1] |= bits >> (64 - off);
             }
             bitpos += width as usize;
         }
@@ -199,10 +281,11 @@ impl PackedBuf {
         // load) unless observability is enabled.
         crate::obs::count_decode_bits(out.len() as u64 * self.width as u64);
 
+        let words = self.words();
         if self.width == 32 {
             for (i, o) in out.iter_mut().enumerate() {
                 let j = start + i;
-                *o = f32::from_bits((self.words[j / 2] >> ((j % 2) * 32)) as u32);
+                *o = f32::from_bits((words[j / 2] >> ((j % 2) * 32)) as u32);
             }
             return;
         }
@@ -211,7 +294,7 @@ impl PackedBuf {
         // (SIMD when the host supports it, the scalar word-shift loop
         // otherwise — bit-identical either way; see `backend::kernels`).
         let inv = (-(fmt.fbits as f32)).exp2();
-        crate::backend::kernels::unpack_span(&self.words, start, self.width, inv, out);
+        crate::backend::kernels::unpack_span(words, start, self.width, inv, out);
     }
 
     /// Row-granular window decode for HWC tensors stored row-major:
@@ -227,14 +310,15 @@ impl PackedBuf {
     pub fn get(&self, fmt: QFormat, i: usize) -> f32 {
         assert!(i < self.len);
         assert_eq!(storage_width(fmt), self.width);
+        let words = self.words();
         if self.width == 32 {
-            return f32::from_bits((self.words[i / 2] >> ((i % 2) * 32)) as u32);
+            return f32::from_bits((words[i / 2] >> ((i % 2) * 32)) as u32);
         }
         let bitpos = i * self.width as usize;
         let (w, off) = (bitpos >> 6, (bitpos & 63) as u32);
-        let mut raw = self.words[w] >> off;
+        let mut raw = words[w] >> off;
         if off + self.width > 64 {
-            raw |= self.words[w + 1] << (64 - off);
+            raw |= words[w + 1] << (64 - off);
         }
         let shift = 64 - self.width;
         let code = ((raw << shift) as i64) >> shift;
@@ -351,12 +435,43 @@ impl PackedPanels {
         }
     }
 
+    /// Rebuild panels around an existing bitstream — the store's load
+    /// path ([`crate::store`]): `buf` typically borrows an mmap'd file
+    /// via [`PackedBuf::from_shared`]. `id` carries the strip-cache
+    /// identity; the store assigns one id per distinct store key so
+    /// every executor sharing a mapping also shares cached strips.
+    pub fn from_buf(buf: PackedBuf, fmt: QFormat, kd: usize, nr: usize, id: u64) -> PackedPanels {
+        assert!(kd > 0 && nr > 0, "degenerate panel shape {kd}x{nr}");
+        assert_eq!(storage_width(fmt), buf.width(), "panel format mismatch");
+        assert!(buf.len() % (kd * nr) == 0, "ragged panel buffer");
+        let n_panels = buf.len() / (kd * nr);
+        PackedPanels { buf, fmt, kd, nr, n_panels, id }
+    }
+
+    /// Mint a fresh strip-cache identity from the same sequence pack()
+    /// uses — callers building panels via [`PackedPanels::from_buf`]
+    /// (the store) draw ids here so they never collide with packed ones.
+    pub fn alloc_id() -> u64 {
+        NEXT_PANELS_ID.fetch_add(1, Ordering::Relaxed)
+    }
+
     /// Process-unique identity assigned at pack time — the decoded-strip
     /// cache key (`gemm::StripCache`). Clones share the id: their
     /// bitstreams are byte-identical, so cached strips decoded from one
     /// are valid for the other.
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The underlying bitstream (store serialization reads it).
+    pub(crate) fn buf(&self) -> &PackedBuf {
+        &self.buf
+    }
+
+    /// Whether the bitstream lives in a shared backing (see
+    /// [`PackedBuf::is_shared`]).
+    pub fn is_shared(&self) -> bool {
+        self.buf.is_shared()
     }
 
     /// The format the panels were packed (and are decoded) with.
@@ -612,6 +727,65 @@ mod tests {
         pp.read_strip(0, 1, 2, &mut got);
         assert_eq!(got[0].to_bits(), 1e20f32.to_bits());
         assert_eq!(got[1], -3.5);
+    }
+
+    #[derive(Debug)]
+    struct VecBacking(Vec<u64>);
+    impl WordBacking for VecBacking {
+        fn words(&self) -> &[u64] {
+            &self.0
+        }
+    }
+
+    #[test]
+    fn shared_backing_decodes_bit_identically() {
+        let fmt = QFormat::new(4, 3); // 7 bits: windows straddle words
+        let xs: Vec<f32> = (0..57).map(|i| i as f32 * 0.37 - 9.0).collect();
+        let owned = PackedBuf::pack(fmt, &xs);
+        assert!(!owned.is_shared());
+        let backing: Arc<dyn WordBacking> = Arc::new(VecBacking(owned.words().to_vec()));
+        let n_words = owned.words().len();
+        let shared = PackedBuf::from_shared(backing, 0, n_words, xs.len(), owned.width());
+        assert!(shared.is_shared());
+        let (mut a, mut b) = (vec![0f32; xs.len()], vec![0f32; xs.len()]);
+        owned.unpack_into(fmt, &mut a);
+        shared.unpack_into(fmt, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(shared.get(fmt, 13).to_bits(), owned.get(fmt, 13).to_bits());
+        // Repacking a shared buffer detaches to owned words.
+        let mut shared = shared;
+        shared.pack_into(fmt, &[1.0, 2.0]);
+        assert!(!shared.is_shared());
+        assert_eq!(shared.len(), 2);
+    }
+
+    #[test]
+    fn shared_panels_match_packed_panels() {
+        let fmt = QFormat::new(2, 5);
+        let (kd, nr) = (3usize, 4usize);
+        let raw: Vec<f32> = (0..2 * kd * nr).map(|i| i as f32 * 0.11 - 1.3).collect();
+        let packed = PackedPanels::pack(fmt, &raw, kd, nr);
+        let backing: Arc<dyn WordBacking> = Arc::new(VecBacking(packed.buf().words().to_vec()));
+        let buf = PackedBuf::from_shared(
+            backing,
+            0,
+            packed.buf().words().len(),
+            packed.len(),
+            packed.width(),
+        );
+        let id = PackedPanels::alloc_id();
+        let shared = PackedPanels::from_buf(buf, fmt, kd, nr, id);
+        assert_eq!(shared.id(), id);
+        assert!(shared.is_shared());
+        assert_eq!(shared.n_panels(), packed.n_panels());
+        let (mut a, mut b) = (vec![0f32; 2 * nr], vec![0f32; 2 * nr]);
+        packed.read_strip(1, 1, 3, &mut a);
+        shared.read_strip(1, 1, 3, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

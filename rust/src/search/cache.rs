@@ -28,8 +28,11 @@ use crate::util::{self, json::Json};
 
 /// Bump when the on-disk layout changes; older files become misses.
 /// (2.0: the artifact fingerprint grew a content hash of the weights
-/// file next to the recorded baseline.)
-pub const SCHEMA: f64 = 2.0;
+/// file next to the recorded baseline. 3.0: [`weights_fingerprint`]
+/// moved from 64-bit FNV-1a to SHA-256 — the digest now also names
+/// files in the shared packed-weight store, where an FNV collision
+/// would silently serve the wrong weights.)
+pub const SCHEMA: f64 = 3.0;
 
 /// Identity of one descent run. Every field change invalidates the
 /// cached trajectory.
@@ -48,17 +51,16 @@ pub struct CacheKey {
     pub baseline_top1: f64,
 }
 
-/// FNV-1a over the weights file bytes: cheap, stable across platforms,
-/// and any one-byte rewrite flips the digest. Not cryptographic — the
-/// cache guards against stale artifacts, not adversaries.
+/// SHA-256 over the weights file bytes (plus the byte length, which is
+/// redundant but keeps the digest self-describing in logs). Stable
+/// across platforms, and any one-byte rewrite flips the digest. This
+/// fingerprint also names files in the content-addressed packed-weight
+/// store ([`crate::store`]), a shared namespace where a collision
+/// silently serves the wrong weights — hence a real 256-bit hash rather
+/// than the FNV-1a it replaced.
 pub fn weights_fingerprint(path: &Path) -> Result<String> {
     let bytes = std::fs::read(path)?;
-    let mut h: u64 = 0xcbf29ce484222325;
-    for &b in &bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    Ok(format!("{:016x}-{}", h, bytes.len()))
+    Ok(format!("{}-{}", crate::util::sha256::sha256_hex(&bytes), bytes.len()))
 }
 
 /// Cache file for `net` under `dir`.

@@ -16,6 +16,13 @@
 //! (workers drop evicted executors when the eviction message reaches
 //! them). The invariant the tests pin: the resident cost sum never
 //! exceeds the budget, before or after any admission.
+//!
+//! When the daemon runs with a packed-weight store ([`crate::store`]),
+//! executors that share weight bitstreams (same network, same weight
+//! formats, same storage mode) hold **one** mapping between them — the
+//! ledger mirrors that by pricing the shared weight bytes once per
+//! sharing key ([`CacheLedger::resident_cost`] is deduplicated;
+//! [`CacheLedger::dedup_saved_bytes`] reports the discount).
 
 use std::collections::HashMap;
 
@@ -41,6 +48,12 @@ struct Entry {
     last_used: u64,
     /// Worker the executor lives on.
     worker: usize,
+    /// When the executor's packed weights come out of the shared store
+    /// ([`crate::store`]): the sharing key (net + weight formats +
+    /// storage) and the weight bytes included in `cost` that are backed
+    /// by one shared mapping. Entries with the same sharing key pay
+    /// those bytes **once** in [`CacheLedger::resident_cost`].
+    shared: Option<(String, f64)>,
 }
 
 /// Verdict of one [`CacheLedger::admit`] call.
@@ -84,9 +97,47 @@ impl CacheLedger {
         }
     }
 
-    /// Sum of resident modeled costs.
+    /// Deduplicated sum of resident modeled costs: entries that share a
+    /// packed-weight mapping (same sharing key) pay the shared weight
+    /// bytes once, because the process really does hold one mapping.
     pub fn resident_cost(&self) -> f64 {
+        Self::deduped_cost(self.entries.values())
+    }
+
+    /// Undiscounted sum of the entries' modeled costs (as if nothing
+    /// were shared) — `raw - resident_cost` is the dedup saving.
+    pub fn raw_resident_cost(&self) -> f64 {
         self.entries.values().map(|e| e.cost).sum()
+    }
+
+    /// Bytes the budget arithmetic saves right now because resident
+    /// executors share packed-weight mappings.
+    pub fn dedup_saved_bytes(&self) -> f64 {
+        self.raw_resident_cost() - self.resident_cost()
+    }
+
+    /// Deduped cost of an arbitrary entry set: total cost minus, per
+    /// sharing key, everything beyond the largest member's shared bytes
+    /// (the one physical mapping is priced at the largest claim).
+    fn deduped_cost<'a>(entries: impl Iterator<Item = &'a Entry>) -> f64 {
+        let mut total = 0f64;
+        let mut groups: HashMap<&str, (f64, f64)> = HashMap::new(); // key -> (sum, max)
+        for e in entries {
+            total += e.cost;
+            if let Some((key, bytes)) = &e.shared {
+                let g = groups.entry(key.as_str()).or_insert((0.0, 0.0));
+                g.0 += bytes;
+                g.1 = g.1.max(*bytes);
+            }
+        }
+        total - groups.values().map(|(sum, max)| sum - max).sum::<f64>()
+    }
+
+    /// What `resident_cost()` would be after also admitting an entry
+    /// with (`cost`, `shared`).
+    fn cost_with(&self, cost: f64, shared: &Option<(String, f64)>) -> f64 {
+        let probe = Entry { cost, last_used: 0, worker: 0, shared: shared.clone() };
+        Self::deduped_cost(self.entries.values().chain(std::iter::once(&probe)))
     }
 
     pub fn resident_len(&self) -> usize {
@@ -101,7 +152,18 @@ impl CacheLedger {
     /// hit, or find a placement by evicting LRU keys until it fits.
     /// Eviction victims come off the ledger immediately — the caller
     /// owns telling the victims' workers to drop the executors.
-    pub fn admit(&mut self, key: &CacheKey, cost: f64) -> Admission {
+    ///
+    /// `shared` declares the store-backed weight sharing of the new
+    /// entry (see [`Entry::shared`]): while a same-key peer is
+    /// resident, the shared bytes don't count against the budget a
+    /// second time — so a config differing only in activation formats
+    /// admits at roughly its activation cost.
+    pub fn admit(
+        &mut self,
+        key: &CacheKey,
+        cost: f64,
+        shared: Option<(String, f64)>,
+    ) -> Admission {
         self.tick += 1;
         if let Some(e) = self.entries.get_mut(key) {
             e.last_used = self.tick;
@@ -113,20 +175,30 @@ impl CacheLedger {
             return Admission::TooLarge;
         }
         let mut evicted = Vec::new();
-        while self.resident_cost() + cost > self.budget {
+        while self.cost_with(cost, &shared) > self.budget {
             // Strict LRU: the least-recently-touched key goes first.
-            let victim = self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-                .expect("positive resident cost implies a resident entry");
+            // An empty ledger that is still over budget would mean the
+            // new entry alone exceeds it, which the `cost > budget`
+            // check above already excluded — but a daemon must not die
+            // on an accounting bug, so degrade to a refusal instead of
+            // panicking (surfaces as 507 at the HTTP layer).
+            let Some(victim) =
+                self.entries.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
+            else {
+                debug_assert!(false, "over budget with no resident entries (cost {cost})");
+                log::error!(
+                    "serve cache: admission accounting underflow for cost {cost} \
+                     against budget {}; refusing the key",
+                    self.budget
+                );
+                return Admission::TooLarge;
+            };
             self.entries.remove(&victim);
             self.evictions += 1;
             evicted.push(victim);
         }
         let worker = self.least_loaded_worker();
-        self.entries.insert(key.clone(), Entry { cost, last_used: self.tick, worker });
+        self.entries.insert(key.clone(), Entry { cost, last_used: self.tick, worker, shared });
         Admission::Admitted { worker, evicted }
     }
 
@@ -159,12 +231,13 @@ mod tests {
     #[test]
     fn admit_at_budget_edge_fits_exactly() {
         let mut c = CacheLedger::new(100.0, 2);
-        assert_eq!(c.admit(&key("a", 1), 60.0), Admission::Admitted { worker: 0, evicted: vec![] });
+        let admitted = |worker| Admission::Admitted { worker, evicted: vec![] };
+        assert_eq!(c.admit(&key("a", 1), 60.0, None), admitted(0));
         // 60 + 40 == 100: exactly at the budget is admitted, no eviction.
-        assert_eq!(c.admit(&key("b", 1), 40.0), Admission::Admitted { worker: 1, evicted: vec![] });
+        assert_eq!(c.admit(&key("b", 1), 40.0, None), admitted(1));
         assert_eq!(c.resident_cost(), 100.0);
         // One more byte would not have fit: a third key forces eviction.
-        match c.admit(&key("c", 1), 1.0) {
+        match c.admit(&key("c", 1), 1.0, None) {
             Admission::Admitted { evicted, .. } => assert_eq!(evicted, vec![key("a", 1)]),
             other => panic!("{other:?}"),
         }
@@ -173,8 +246,8 @@ mod tests {
     #[test]
     fn over_budget_key_is_too_large_not_evicting() {
         let mut c = CacheLedger::new(100.0, 1);
-        assert!(matches!(c.admit(&key("a", 1), 80.0), Admission::Admitted { .. }));
-        assert_eq!(c.admit(&key("b", 1), 100.1), Admission::TooLarge);
+        assert!(matches!(c.admit(&key("a", 1), 80.0, None), Admission::Admitted { .. }));
+        assert_eq!(c.admit(&key("b", 1), 100.1, None), Admission::TooLarge);
         // Nothing was evicted for an impossible key.
         assert_eq!(c.resident_len(), 1);
         assert_eq!(c.evictions, 0);
@@ -183,13 +256,13 @@ mod tests {
     #[test]
     fn lru_eviction_order_follows_touches() {
         let mut c = CacheLedger::new(90.0, 1);
-        c.admit(&key("a", 1), 30.0);
-        c.admit(&key("b", 1), 30.0);
-        c.admit(&key("c", 1), 30.0);
+        c.admit(&key("a", 1), 30.0, None);
+        c.admit(&key("b", 1), 30.0, None);
+        c.admit(&key("c", 1), 30.0, None);
         // Touch a, then b: c is now least recent.
-        assert_eq!(c.admit(&key("a", 1), 30.0), Admission::Resident { worker: 0 });
-        assert_eq!(c.admit(&key("b", 1), 30.0), Admission::Resident { worker: 0 });
-        match c.admit(&key("d", 1), 60.0) {
+        assert_eq!(c.admit(&key("a", 1), 30.0, None), Admission::Resident { worker: 0 });
+        assert_eq!(c.admit(&key("b", 1), 30.0, None), Admission::Resident { worker: 0 });
+        match c.admit(&key("d", 1), 60.0, None) {
             // Evicts c then a (two LRU victims) to fit 60.
             Admission::Admitted { evicted, .. } => {
                 assert_eq!(evicted, vec![key("c", 1), key("a", 1)]);
@@ -204,7 +277,7 @@ mod tests {
         let mut c = CacheLedger::new(100.0, 3);
         let costs = [55.0, 10.0, 45.0, 100.0, 1.0, 99.5, 37.0, 63.0, 0.5];
         for (i, &cost) in costs.iter().enumerate() {
-            let verdict = c.admit(&key("net", i as i8 + 1), cost);
+            let verdict = c.admit(&key("net", i as i8 + 1), cost, None);
             assert_ne!(verdict, Admission::TooLarge, "cost {cost} fits the budget");
             assert!(
                 c.resident_cost() <= c.budget() + 1e-9,
@@ -219,7 +292,7 @@ mod tests {
     fn workers_balance_by_resident_count() {
         let mut c = CacheLedger::new(1e9, 3);
         let workers: Vec<usize> = (0..6)
-            .map(|i| match c.admit(&key("n", i as i8 + 1), 10.0) {
+            .map(|i| match c.admit(&key("n", i as i8 + 1), 10.0, None) {
                 Admission::Admitted { worker, .. } => worker,
                 other => panic!("{other:?}"),
             })
@@ -230,9 +303,65 @@ mod tests {
     #[test]
     fn distinct_configs_are_distinct_keys() {
         let mut c = CacheLedger::new(1e9, 1);
-        c.admit(&key("a", 1), 10.0);
-        assert!(matches!(c.admit(&key("a", 2), 10.0), Admission::Admitted { .. }));
-        assert_eq!(c.admit(&key("a", 1), 10.0), Admission::Resident { worker: 0 });
+        c.admit(&key("a", 1), 10.0, None);
+        assert!(matches!(c.admit(&key("a", 2), 10.0, None), Admission::Admitted { .. }));
+        assert_eq!(c.admit(&key("a", 1), 10.0, None), Admission::Resident { worker: 0 });
         assert_eq!(c.resident_len(), 2);
+    }
+
+    fn shared(bytes: f64) -> Option<(String, f64)> {
+        Some(("lenet-w1.8-packed".to_string(), bytes))
+    }
+
+    #[test]
+    fn shared_weight_bytes_are_priced_once() {
+        let mut c = CacheLedger::new(1e9, 1);
+        // Two executors, 100 bytes each, 60 of which is one shared
+        // weight mapping: the process holds 100 + 40 real bytes.
+        c.admit(&key("a", 1), 100.0, shared(60.0));
+        c.admit(&key("a", 2), 100.0, shared(60.0));
+        assert_eq!(c.raw_resident_cost(), 200.0);
+        assert_eq!(c.resident_cost(), 140.0);
+        assert_eq!(c.dedup_saved_bytes(), 60.0);
+        // A third peer only adds its activation slice.
+        c.admit(&key("a", 3), 100.0, shared(60.0));
+        assert_eq!(c.resident_cost(), 180.0);
+        // Unshared entries are unaffected.
+        c.admit(&key("b", 1), 10.0, None);
+        assert_eq!(c.resident_cost(), 190.0);
+    }
+
+    #[test]
+    fn dedup_discount_expands_effective_capacity() {
+        // Budget fits one full executor plus one deduped peer, but not
+        // two full copies.
+        let mut c = CacheLedger::new(150.0, 1);
+        assert!(matches!(c.admit(&key("a", 1), 100.0, shared(60.0)), Admission::Admitted { .. }));
+        // Without sharing this would evict; with it, 100 + 40 = 140 fits.
+        assert_eq!(
+            c.admit(&key("a", 2), 100.0, shared(60.0)),
+            Admission::Admitted { worker: 0, evicted: vec![] }
+        );
+        assert_eq!(c.resident_cost(), 140.0);
+        // An unshared 100-byte key can't coexist with even one full
+        // copy (100 + 100 > 150): both peers must go.
+        match c.admit(&key("a", 3), 100.0, None) {
+            Admission::Admitted { evicted, .. } => {
+                assert_eq!(evicted, vec![key("a", 1), key("a", 2)]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.resident_cost(), 100.0);
+    }
+
+    #[test]
+    fn budget_invariant_holds_with_sharing() {
+        let mut c = CacheLedger::new(100.0, 2);
+        for i in 0..8 {
+            let sh = if i % 2 == 0 { shared(30.0) } else { None };
+            let verdict = c.admit(&key("n", i + 1), 60.0, sh);
+            assert_ne!(verdict, Admission::TooLarge);
+            assert!(c.resident_cost() <= c.budget() + 1e-9);
+        }
     }
 }

@@ -39,6 +39,18 @@
 //! flows), and `--trace-dir` additionally turns on span tracing — on
 //! shutdown the buffered spans are written as Chrome `trace_event`
 //! JSON (`TRACE_serve.json`) loadable in `chrome://tracing`/Perfetto.
+//!
+//! With `--store-dir` the workers route packed-weight bitstreams
+//! through the content-addressed store ([`crate::store`]): restarts
+//! warm-start from disk with zero re-packs, executors whose weight
+//! formats match share one mmap'd mapping, and the admission ledger
+//! prices that mapping once (`/v1/stats` reports both the deduplicated
+//! `resident_bytes` and the `dedup_saved_bytes` discount).
+//!
+//! Crash robustness: request handlers run under `catch_unwind` (a
+//! panic costs one 500 + counter, never the daemon), and the dispatch
+//! mutex recovers from poisoning ([`lock_dispatch`]) instead of
+//! cascading `PoisonError` panics through every connection thread.
 
 pub mod cache;
 pub mod http;
@@ -68,6 +80,8 @@ use crate::search::space::PrecisionConfig;
 use crate::util;
 use crate::util::json::Json;
 
+use crate::store::Store;
+
 use cache::{Admission, CacheKey, CacheLedger};
 use http::{HttpRequest, HttpResponse, ReadOutcome};
 use metrics::ServeMetrics;
@@ -92,6 +106,14 @@ pub struct ServeOptions {
     /// When set, span tracing is enabled and a Chrome trace JSON is
     /// written to `<trace_dir>/TRACE_serve.json` on shutdown.
     pub trace_dir: Option<String>,
+    /// Packed-weight store directory ([`crate::store`]). When set, the
+    /// workers load/publish packed bitstreams through the store — warm
+    /// restarts skip re-packing, and executors sharing weight formats
+    /// share one resident mapping (the cache ledger prices it once).
+    /// The CLI resolves `--store-dir` / `QBOUND_STORE_DIR` into this;
+    /// the server itself never reads the environment, so tests can run
+    /// store-backed and store-free daemons side by side.
+    pub store_dir: Option<String>,
 }
 
 impl Default for ServeOptions {
@@ -105,6 +127,7 @@ impl Default for ServeOptions {
             storage: StorageMode::default(),
             max_body_bytes: 64 * 1024,
             trace_dir: None,
+            store_dir: None,
         }
     }
 }
@@ -160,10 +183,33 @@ struct Shared {
     gate: InflightGate,
     backend: BackendKind,
     storage: StorageMode,
+    /// The packed-weight store the workers were pinned to (if any) —
+    /// also read by `/v1/stats` and by the admission path to price
+    /// shared weight mappings once.
+    store: Option<Arc<Store>>,
     max_body: usize,
     n_workers: usize,
     queue_depth: usize,
     stop: AtomicBool,
+}
+
+/// Lock the dispatch state, recovering from mutex poisoning instead of
+/// propagating it: a connection thread that panicked while holding the
+/// lock must not take the whole daemon down with it. `Dispatch` is
+/// poison-safe by construction — every critical section leaves the
+/// ledger/metrics in a consistent state before any fallible call — so
+/// recovery is sound, and each occurrence is counted and logged.
+fn lock_dispatch(sh: &Shared) -> std::sync::MutexGuard<'_, Dispatch> {
+    sh.dispatch.lock().unwrap_or_else(|poisoned| {
+        crate::obs::counter(
+            "qbound_serve_lock_recoveries_total",
+            "dispatch mutex poison recoveries (a thread panicked while holding the lock)",
+            &[],
+        )
+        .inc();
+        log::warn!("serve: dispatch mutex poisoned by a panicked thread; recovering");
+        poisoned.into_inner()
+    })
 }
 
 /// A running daemon: listener thread + worker pool. Dropping (or
@@ -183,8 +229,19 @@ impl Server {
     pub fn start(dir: &Path, opts: &ServeOptions) -> Result<Server> {
         let n_workers = if opts.workers == 0 { default_workers() } else { opts.workers };
         // Workers build backends from the environment (the coordinator
-        // pattern): propagate the storage mode before spawning.
+        // pattern): propagate the storage mode before spawning. The
+        // packed-weight store is NOT propagated through the environment
+        // — it is resolved here once and handed to each worker
+        // explicitly, so concurrent servers (tests) can't race on a
+        // process-global variable.
         opts.storage.set_env();
+        let store = match &opts.store_dir {
+            Some(d) => Some(
+                Store::open(Path::new(d))
+                    .with_context(|| format!("opening packed-weight store at {d}"))?,
+            ),
+            None => None,
+        };
         // Per-layer histograms and decode counters populate from the
         // first request; span tracing only when a trace sink exists.
         crate::obs::set_metrics(true);
@@ -222,10 +279,11 @@ impl Server {
             worker_txs.push(tx);
             let nets = Arc::clone(&nets);
             let kind = opts.backend;
+            let wstore = store.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, rx, nets, kind, n_workers))?,
+                    .spawn(move || worker_loop(wid, rx, nets, kind, n_workers, wstore))?,
             );
         }
 
@@ -242,6 +300,7 @@ impl Server {
             gate: InflightGate::new(opts.queue_depth),
             backend: opts.backend,
             storage: opts.storage,
+            store,
             max_body: opts.max_body_bytes,
             n_workers,
             queue_depth: opts.queue_depth,
@@ -307,7 +366,7 @@ impl Server {
         }
         // Dropping the senders ends the worker loops once their queues
         // drain; in-flight jobs still get answered first.
-        self.shared.dispatch.lock().unwrap().worker_txs.clear();
+        lock_dispatch(&self.shared).worker_txs.clear();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -354,13 +413,39 @@ fn handle_connection(sh: Arc<Shared>, stream: TcpStream) {
                     );
                 }
                 let keep = req.keep_alive;
-                let (mut resp, latency_us) = {
+                // A panicking handler must cost one 500, not the
+                // daemon: catch it, count it, answer, close this
+                // connection (its state is suspect). `AssertUnwindSafe`
+                // is justified because nothing on this thread is reused
+                // after a panic — shared state is either lock-protected
+                // (and `lock_dispatch` recovers poisoning) or atomic.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let _sp = crate::obs::span!("request", "{} {}", req.method, req.path);
                     route(&sh, &req)
-                };
-                resp.close = !keep;
-                sh.dispatch.lock().unwrap().metrics.record(resp.status, latency_us);
-                if resp.write_to(&mut writer).is_err() || !keep {
+                }));
+                let panicked = caught.is_err();
+                let (mut resp, latency_us) = caught.unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    crate::obs::counter(
+                        "qbound_serve_request_panics_total",
+                        "request handlers that panicked and were converted to HTTP 500",
+                        &[],
+                    )
+                    .inc();
+                    log::error!(
+                        "serve: handler panicked on {} {}: {msg}",
+                        req.method,
+                        req.path
+                    );
+                    (HttpResponse::error(500, "internal error (handler panicked)"), None)
+                });
+                resp.close = !keep || panicked;
+                lock_dispatch(&sh).metrics.record(resp.status, latency_us);
+                if resp.write_to(&mut writer).is_err() || resp.close {
                     return;
                 }
             }
@@ -369,7 +454,7 @@ fn handle_connection(sh: Arc<Shared>, stream: TcpStream) {
                 // close.
                 let mut resp = HttpResponse::error(e.status, &e.reason);
                 resp.close = true;
-                sh.dispatch.lock().unwrap().metrics.record(e.status, None);
+                lock_dispatch(&sh).metrics.record(e.status, None);
                 let _ = resp.write_to(&mut writer);
                 return;
             }
@@ -395,7 +480,7 @@ fn route(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) {
 }
 
 fn stats_response(sh: &Arc<Shared>) -> HttpResponse {
-    let d = sh.dispatch.lock().unwrap();
+    let d = lock_dispatch(sh);
     let Json::Obj(mut m) = d.metrics.snapshot() else { unreachable!("snapshot is an object") };
     m.insert(
         "cache".to_string(),
@@ -404,11 +489,27 @@ fn stats_response(sh: &Arc<Shared>) -> HttpResponse {
             ("misses", Json::num(d.ledger.misses as f64)),
             ("evictions", Json::num(d.ledger.evictions as f64)),
             ("resident", Json::num(d.ledger.resident_len() as f64)),
+            // De-duplicated: executors sharing one store-backed weight
+            // mapping pay its bytes once (what the process really holds).
             ("resident_bytes", Json::num(d.ledger.resident_cost())),
+            // The same sum with no sharing discount, and the delta.
+            ("raw_resident_bytes", Json::num(d.ledger.raw_resident_cost())),
+            ("dedup_saved_bytes", Json::num(d.ledger.dedup_saved_bytes())),
             ("budget_bytes", Json::num(d.ledger.budget())),
         ]),
     );
     drop(d);
+    m.insert(
+        "store".to_string(),
+        match &sh.store {
+            Some(s) => {
+                let Json::Obj(mut o) = s.stats_json() else { unreachable!("stats is an object") };
+                o.insert("enabled".to_string(), Json::Bool(true));
+                Json::Obj(o)
+            }
+            None => Json::obj(vec![("enabled", Json::Bool(false))]),
+        },
+    );
     m.insert("workers".to_string(), Json::num(sh.n_workers as f64));
     m.insert("queue_depth".to_string(), Json::num(sh.queue_depth as f64));
     m.insert("in_flight".to_string(), Json::num(sh.gate.in_flight() as f64));
@@ -432,7 +533,7 @@ fn stats_response(sh: &Arc<Shared>) -> HttpResponse {
 /// registry (per-layer histograms, decode counters, kernel gauge).
 fn metrics_response(sh: &Arc<Shared>) -> HttpResponse {
     let mut out = String::new();
-    sh.dispatch.lock().unwrap().metrics.render_prometheus(&mut out);
+    lock_dispatch(sh).metrics.render_prometheus(&mut out);
     out.push_str(&crate::obs::render_prometheus());
     HttpResponse::text(200, out)
 }
@@ -508,6 +609,22 @@ fn classify(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) 
         backend: sh.backend,
         storage: sh.storage,
     };
+    // Store-backed fast/packed executors share one weight mapping per
+    // (net, weight formats): declare that slice of the envelope to the
+    // ledger so peers differing only in activation formats are priced
+    // at their activation cost.
+    let shared_weights = if sh.store.is_some()
+        && sh.storage == StorageMode::Packed
+        && sh.backend == BackendKind::Fast
+    {
+        let wq: Vec<String> = cfg.wq.iter().map(|q| q.to_string()).collect();
+        Some((
+            format!("{net}|w{}|{}", wq.join(","), sh.storage.label()),
+            info.fpm.shared_weight_bytes(&cfg, &info.weight_pad_elems),
+        ))
+    } else {
+        None
+    };
 
     // Backpressure first: a full queue refuses before touching
     // dispatch. The 429 is counted by `ServeMetrics::record` at the
@@ -520,11 +637,11 @@ fn classify(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) 
 
     let (resp_tx, resp_rx) = channel();
     let (worker, cache_state, evicted_n) = {
-        let mut d = sh.dispatch.lock().unwrap();
+        let mut d = lock_dispatch(sh);
         if d.worker_txs.is_empty() {
             return fail(503, "shutting down");
         }
-        match d.ledger.admit(&key, cost) {
+        match d.ledger.admit(&key, cost, shared_weights) {
             Admission::TooLarge => {
                 let msg = format!(
                     "config envelope {} exceeds the --mem-budget {}",
@@ -589,8 +706,9 @@ fn worker_loop(
     nets: Arc<HashMap<String, NetInfo>>,
     kind: BackendKind,
     n_workers: usize,
+    store: Option<Arc<Store>>,
 ) {
-    let backend = match backend_for_worker(kind, n_workers) {
+    let backend = match backend_for_worker(kind, n_workers, store) {
         Ok(b) => b,
         Err(e) => {
             // Exiting drops `rx`; pending reply senders error out and
@@ -637,7 +755,15 @@ fn serve_one(
     // Worker-thread span: the per-layer `layer` spans the executor
     // emits land on this same thread, so the viewer nests them here.
     let _sp = crate::obs::span!("infer", "net={} cfg={} index={index}", key.net, key.cfg);
-    let exec = executors.get_mut(key).expect("just inserted");
+    // The executor was either resident or inserted just above; if it is
+    // somehow missing anyway, that's a worker-state bug — answer this
+    // request with a 500 instead of panicking the worker thread (which
+    // would orphan every executor placed on it).
+    let Some(exec) = executors.get_mut(key) else {
+        debug_assert!(false, "executor for {} {} missing after load", key.net, key.cfg);
+        log::error!("serve: executor for {} {} missing after load", key.net, key.cfg);
+        return Err("executor missing after load (worker-state bug)".to_string());
+    };
     let wq = key.cfg.wire_wq();
     let dq = key.cfg.wire_dq();
     let d = &info.dataset;

@@ -1,0 +1,313 @@
+//! Read-only file mapping behind a safe API — the zero-copy substrate
+//! of the packed-weight store.
+//!
+//! `libc` is unavailable offline, so on Linux (x86_64 / aarch64) the
+//! `mmap`/`munmap` syscalls are issued directly via `core::arch::asm!`
+//! inside this module; everywhere else — and whenever the syscall
+//! fails — the file is read into an owned, 8-byte-aligned heap buffer
+//! instead. Both shapes present the same immutable byte region, so the
+//! sharing semantics (one [`Region`] in an `Arc`, many readers) hold on
+//! every platform; only the "page cache backs N processes" bonus is
+//! Linux-specific.
+//!
+//! Safety perimeter:
+//!
+//! * Mappings are `PROT_READ` + `MAP_PRIVATE`: nothing can write
+//!   through them, and writes to the underlying file by *other*
+//!   processes are not guaranteed visible — irrelevant here because
+//!   store files are immutable once published (temp file + `rename`,
+//!   never modified in place; see [`crate::store`]). That protocol is
+//!   also what rules out `SIGBUS`: the mapped length is captured at map
+//!   time and store files are never truncated, only unlinked — and an
+//!   unlinked file stays alive until the last mapping drops.
+//! * The pointer/length pair never leaves this module; readers only see
+//!   `&[u8]` / `&[u64]` borrows tied to the [`Region`]'s lifetime, and
+//!   `Drop` unmaps exactly what was mapped.
+
+use std::fs::File;
+use std::io::{self, Read, Seek};
+
+/// An immutable byte region holding one store file: mmap'd when the
+/// platform allows, an owned heap copy otherwise. `Send + Sync` — the
+/// bytes never change after construction.
+#[derive(Debug)]
+pub struct Region {
+    kind: Kind,
+}
+
+enum Kind {
+    /// File-backed mapping (Linux fast path). `len` is the exact file
+    /// length; the kernel rounds the mapping itself up to page size.
+    Mapped { ptr: *const u8, len: usize },
+    /// Heap fallback: `u64` storage so 8-byte alignment is free;
+    /// `len` is the real byte length (the last word may be partial).
+    Heap { words: Vec<u64>, len: usize },
+}
+
+impl std::fmt::Debug for Kind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Kind::Mapped { len, .. } => write!(f, "Mapped({len} bytes)"),
+            Kind::Heap { len, .. } => write!(f, "Heap({len} bytes)"),
+        }
+    }
+}
+
+// SAFETY: the region is immutable for its whole lifetime — `PROT_READ`
+// private mapping or an owned Vec nobody can reach mutably — so shared
+// access from any thread is sound.
+unsafe impl Send for Region {}
+unsafe impl Sync for Region {}
+
+impl Region {
+    /// Map `file` (its full current length) read-only. Falls back to a
+    /// heap copy when mapping is unsupported or fails; `is_mapped`
+    /// reports which shape resulted. Empty files are an error — a store
+    /// file always has at least a header.
+    pub fn map(file: &mut File) -> io::Result<Region> {
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "empty file"));
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large"))?;
+        if let Some(ptr) = sys::mmap_readonly(file, len) {
+            return Ok(Region { kind: Kind::Mapped { ptr, len } });
+        }
+        // Heap fallback: word-aligned storage, exact byte length kept.
+        let n_words = len.div_ceil(8);
+        let mut words = vec![0u64; n_words];
+        // SAFETY: a `[u64; n]` is trivially viewable as `[u8; 8n]`; we
+        // only write the first `len` bytes and never read past the Vec.
+        let bytes =
+            unsafe { std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, len) };
+        file.seek(io::SeekFrom::Start(0))?;
+        file.read_exact(bytes)?;
+        Ok(Region { kind: Kind::Heap { words, len } })
+    }
+
+    /// Byte length of the region (the exact file length at map time).
+    pub fn len(&self) -> usize {
+        match &self.kind {
+            Kind::Mapped { len, .. } => *len,
+            Kind::Heap { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether the region is a real file mapping (vs the heap copy).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.kind, Kind::Mapped { .. })
+    }
+
+    /// The region's bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.kind {
+            // SAFETY: `ptr` is a live `PROT_READ` mapping of exactly
+            // `len` bytes, valid until `Drop`, never written.
+            Kind::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Kind::Heap { words, len } => {
+                // SAFETY: in-bounds prefix view of the owned words.
+                unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, *len) }
+            }
+        }
+    }
+
+    /// View `n_words` little-endian `u64`s starting at `byte_off` —
+    /// the packed-bitstream payload view. `byte_off` must be 8-aligned
+    /// (mmap bases are page-aligned and the heap buffer is word-backed,
+    /// so an aligned offset yields an aligned pointer); returns `None`
+    /// on misalignment or out-of-bounds instead of panicking, because
+    /// callers validate untrusted file headers with it.
+    pub fn words_at(&self, byte_off: usize, n_words: usize) -> Option<&[u64]> {
+        if byte_off % 8 != 0 {
+            return None;
+        }
+        let end = byte_off.checked_add(n_words.checked_mul(8)?)?;
+        if end > self.len() {
+            return None;
+        }
+        let base = self.bytes().as_ptr();
+        debug_assert_eq!(base.align_offset(8), 0, "region base must be 8-aligned");
+        // SAFETY: range-checked above; base + byte_off is 8-aligned
+        // (aligned base, aligned offset); u64 has no invalid bit
+        // patterns. Byte order note: words were written to disk as
+        // little-endian u64s, so this view is only correct on
+        // little-endian hosts — the header validation in
+        // `crate::store` rejects foreign-endian files by magic.
+        Some(unsafe { std::slice::from_raw_parts(base.add(byte_off) as *const u64, n_words) })
+    }
+}
+
+impl Drop for Region {
+    fn drop(&mut self) {
+        if let Kind::Mapped { ptr, len } = &self.kind {
+            sys::munmap(*ptr, *len);
+        }
+    }
+}
+
+/// Raw `mmap`/`munmap` on Linux x86_64 / aarch64; stubs elsewhere.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+
+    /// `mmap(NULL, len, PROT_READ, MAP_PRIVATE, fd, 0)`; `None` on any
+    /// failure (caller falls back to a heap copy).
+    pub fn mmap_readonly(file: &File, len: usize) -> Option<*const u8> {
+        let fd = file.as_raw_fd();
+        let ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: plain syscall; arguments follow the x86_64 Linux ABI
+        // (nr in rax, args rdi/rsi/rdx/r10/r8/r9, rcx+r11 clobbered).
+        unsafe {
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") 9isize => ret, // __NR_mmap
+                in("rdi") 0usize,
+                in("rsi") len,
+                in("rdx") PROT_READ,
+                in("r10") MAP_PRIVATE,
+                in("r8") fd as isize,
+                in("r9") 0usize,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: plain syscall; aarch64 ABI (nr in x8, args x0..x5).
+        unsafe {
+            core::arch::asm!(
+                "svc 0",
+                in("x8") 222usize, // __NR_mmap
+                inlateout("x0") 0usize => ret,
+                in("x1") len,
+                in("x2") PROT_READ,
+                in("x3") MAP_PRIVATE,
+                in("x4") fd as isize,
+                in("x5") 0usize,
+                options(nostack)
+            );
+        }
+        // Kernel returns a small negative errno on failure.
+        if (-4095..0).contains(&ret) {
+            None
+        } else {
+            Some(ret as *const u8)
+        }
+    }
+
+    /// `munmap(ptr, len)` — failure is unrecoverable-by-retry and
+    /// harmless to ignore (the region leaks, nothing dangles).
+    pub fn munmap(ptr: *const u8, len: usize) {
+        let _ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: unmapping a region this module mapped, exactly once.
+        unsafe {
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") 11isize => _ret, // __NR_munmap
+                in("rdi") ptr,
+                in("rsi") len,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: unmapping a region this module mapped, exactly once.
+        unsafe {
+            core::arch::asm!(
+                "svc 0",
+                in("x8") 215usize, // __NR_munmap
+                inlateout("x0") ptr as usize => _ret,
+                in("x1") len,
+                options(nostack)
+            );
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    use std::fs::File;
+
+    /// No raw-syscall support on this target; always take the heap path.
+    pub fn mmap_readonly(_file: &File, _len: usize) -> Option<*const u8> {
+        None
+    }
+
+    pub fn munmap(_ptr: *const u8, _len: usize) {
+        unreachable!("no mapping can exist without mmap support");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("qbound-mmap-{tag}-{}", std::process::id()));
+        std::fs::File::create(&p).unwrap().write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_bytes_exactly() {
+        let data: Vec<u8> = (0..4099u32).map(|i| (i % 251) as u8).collect(); // off page size
+        let p = tmp_file("exact", &data);
+        let mut f = File::open(&p).unwrap();
+        let r = Region::map(&mut f).unwrap();
+        assert_eq!(r.len(), data.len());
+        assert_eq!(r.bytes(), &data[..]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn word_view_is_little_endian_and_checked() {
+        let mut bytes = Vec::new();
+        for w in [0x1122334455667788u64, 0xdeadbeefcafef00d] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        bytes.push(0xff); // trailing partial word
+        let p = tmp_file("words", &bytes);
+        let mut f = File::open(&p).unwrap();
+        let r = Region::map(&mut f).unwrap();
+        assert_eq!(r.words_at(0, 2).unwrap(), &[0x1122334455667788, 0xdeadbeefcafef00d]);
+        assert_eq!(r.words_at(8, 1).unwrap(), &[0xdeadbeefcafef00d]);
+        assert!(r.words_at(1, 1).is_none(), "misaligned offset");
+        assert!(r.words_at(8, 2).is_none(), "past the end");
+        assert!(r.words_at(16, 1).is_none(), "partial trailing word");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn mapping_survives_unlink() {
+        // The gc safety property: removing a store file must not
+        // invalidate live mappings.
+        let data = vec![7u8; 1024];
+        let p = tmp_file("unlink", &data);
+        let mut f = File::open(&p).unwrap();
+        let r = Region::map(&mut f).unwrap();
+        drop(f);
+        std::fs::remove_file(&p).unwrap();
+        assert_eq!(r.bytes(), &data[..]);
+    }
+
+    #[test]
+    fn empty_file_is_an_error() {
+        let p = tmp_file("empty", b"");
+        let mut f = File::open(&p).unwrap();
+        assert!(Region::map(&mut f).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

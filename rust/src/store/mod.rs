@@ -1,0 +1,795 @@
+//! Content-addressed on-disk store of packed weight bitstreams, with
+//! zero-copy in-process sharing.
+//!
+//! The serving daemon (and every coordinator worker, and `qbound
+//! eval/profile`) used to re-quantize and re-pack the same weight
+//! tensors per executor — N workers × M resident configs held N·M
+//! copies of bitstreams that are byte-identical by construction. This
+//! module collapses that to **one resident copy per distinct tensor**:
+//!
+//! * **Key** = (SHA-256 of the raw f32 tensor bytes, panel layout,
+//!   [`QFormat`]) — content-addressed, so identical weights at the same
+//!   format share a file no matter which net/config/worker asks.
+//! * **Value** = a self-describing file (`<key>.qbw`): a 128-byte
+//!   validated header plus the packed `u64` bitstream words. Files are
+//!   written to a unique temp name and published with an atomic
+//!   `rename`, so concurrent same-key writers race cleanly — both end
+//!   up with a complete, identical file, never a torn one.
+//! * **Load** mmaps the file read-only ([`mmap::Region`]) and hands out
+//!   [`PackedPanels`]/[`PackedBuf`] values whose words *borrow* the
+//!   mapping ([`PackedBuf::from_shared`]): executors decode straight
+//!   from the page cache. A per-store registry of `Weak` regions makes
+//!   every in-process loader of the same key share one `Arc`-mapped
+//!   region (and one strip-cache id), so the marginal cost of another
+//!   executor with the same weights is zero bytes.
+//!
+//! Any validation failure — bad magic, size drift, payload checksum
+//! mismatch — rejects the file, which is then deleted and re-packed
+//! from the source weights: the store is a cache, never an authority.
+//! `gc` ([`Store::gc`]) removes entries not referenced by the live
+//! registry (and stale temp files); unlinking never invalidates live
+//! mappings (see [`mmap`]).
+
+pub mod mmap;
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{Duration, SystemTime};
+
+use anyhow::{Context, Result};
+
+use crate::memory::{storage_width, PackedBuf, PackedPanels, WordBacking};
+use crate::quant::QFormat;
+use crate::util::json::Json;
+use crate::util::sha256::Sha256;
+
+/// Store file magic: identifies the format *and* pins little-endian
+/// word order (the payload view is a raw `&[u64]` reinterpretation).
+const MAGIC: &[u8; 8] = b"QBWSTOR1";
+/// Bump when the header layout changes; older files become misses.
+const VERSION: u32 = 1;
+/// Fixed header size; the payload words start here (8-byte aligned).
+const HEADER_BYTES: usize = 128;
+
+const KIND_PANELS: u32 = 1;
+const KIND_BUF: u32 = 2;
+
+/// Self-describing store-file header. Every field a reader needs to
+/// interpret — or distrust — the payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Header {
+    kind: u32,
+    width: u32,
+    /// Stored values.
+    len: u64,
+    /// Payload length in `u64` words.
+    n_words: u64,
+    kd: u64,
+    nr: u64,
+    n_panels: u64,
+    ibits: i32,
+    fbits: i32,
+    /// First 8 bytes (LE) of SHA-256 over the payload bytes.
+    check: u64,
+}
+
+impl Header {
+    fn encode(&self) -> [u8; HEADER_BYTES] {
+        let mut h = [0u8; HEADER_BYTES];
+        h[0..8].copy_from_slice(MAGIC);
+        h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        h[12..16].copy_from_slice(&self.kind.to_le_bytes());
+        h[16..20].copy_from_slice(&self.width.to_le_bytes());
+        h[24..32].copy_from_slice(&self.len.to_le_bytes());
+        h[32..40].copy_from_slice(&self.n_words.to_le_bytes());
+        h[40..48].copy_from_slice(&self.kd.to_le_bytes());
+        h[48..56].copy_from_slice(&self.nr.to_le_bytes());
+        h[56..64].copy_from_slice(&self.n_panels.to_le_bytes());
+        h[64..68].copy_from_slice(&self.ibits.to_le_bytes());
+        h[68..72].copy_from_slice(&self.fbits.to_le_bytes());
+        h[72..80].copy_from_slice(&self.check.to_le_bytes());
+        h
+    }
+
+    /// Decode and structurally validate a header. `None` on anything
+    /// unexpected — wrong magic/version, impossible sizes — never a
+    /// panic: the bytes are untrusted disk content.
+    fn decode(bytes: &[u8]) -> Option<Header> {
+        if bytes.len() < HEADER_BYTES || &bytes[0..8] != MAGIC {
+            return None;
+        }
+        // Offsets are all inside the length-checked 128-byte prefix.
+        let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().expect("4 bytes"));
+        let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().expect("8 bytes"));
+        let i32_at = |o: usize| i32::from_le_bytes(bytes[o..o + 4].try_into().expect("4 bytes"));
+        if u32_at(8) != VERSION {
+            return None;
+        }
+        let h = Header {
+            kind: u32_at(12),
+            width: u32_at(16),
+            len: u64_at(24),
+            n_words: u64_at(32),
+            kd: u64_at(40),
+            nr: u64_at(48),
+            n_panels: u64_at(56),
+            ibits: i32_at(64),
+            fbits: i32_at(68),
+            check: u64_at(72),
+        };
+        // Size fields are untrusted: checked arithmetic, no panics.
+        let ok = (h.kind == KIND_PANELS || h.kind == KIND_BUF)
+            && h.width >= 1
+            && h.width <= 64
+            && h.len.checked_mul(h.width as u64).map(|b| b.div_ceil(64)) == Some(h.n_words)
+            && (h.kind != KIND_PANELS
+                || h.n_panels.checked_mul(h.kd).and_then(|v| v.checked_mul(h.nr))
+                    == Some(h.len));
+        ok.then_some(h)
+    }
+
+    fn fmt_label(&self) -> String {
+        if self.ibits < 0 {
+            "fp32".to_string()
+        } else {
+            format!("{}.{}", self.ibits, self.fbits)
+        }
+    }
+}
+
+/// First 8 bytes (LE) of SHA-256 over a word slice's bytes — the
+/// payload integrity check. 64 bits of a cryptographic digest is ample
+/// for corruption detection (the 256-bit *naming* hash is what guards
+/// against collisions).
+fn payload_check(words: &[u64]) -> u64 {
+    let mut h = Sha256::new();
+    let mut buf = [0u8; 4096];
+    for chunk in words.chunks(512) {
+        for (i, w) in chunk.iter().enumerate() {
+            buf[8 * i..8 * i + 8].copy_from_slice(&w.to_le_bytes());
+        }
+        h.update(&buf[..chunk.len() * 8]);
+    }
+    u64::from_le_bytes(h.finish()[..8].try_into().expect("8-byte prefix"))
+}
+
+/// SHA-256 over a raw f32 tensor (little-endian bytes), as hex — the
+/// content half of every store key.
+pub fn content_hash(raw: &[f32]) -> String {
+    let mut h = Sha256::new();
+    let mut buf = [0u8; 4096];
+    for chunk in raw.chunks(1024) {
+        for (i, v) in chunk.iter().enumerate() {
+            buf[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        h.update(&buf[..chunk.len() * 4]);
+    }
+    crate::util::sha256::hex(&h.finish())
+}
+
+/// Store key of a GEMM weight tensor packed into `kd`×`nr` panels
+/// covering `n` output columns. 160 bits of content hash plus the
+/// full layout and format, all legible in `store ls`.
+pub fn panels_key(raw: &[f32], fmt: QFormat, kd: usize, n: usize, nr: usize) -> String {
+    format!("{}-g{kd}x{n}r{nr}-{fmt}", &content_hash(raw)[..40])
+}
+
+/// Store key of a flat (bias) tensor packed at `fmt`.
+pub fn bias_key(raw: &[f32], fmt: QFormat) -> String {
+    format!("{}-b{}-{fmt}", &content_hash(raw)[..40], raw.len())
+}
+
+/// Word view into a mapped store file's payload: the [`WordBacking`]
+/// that lets a [`PackedBuf`] borrow an mmap'd region.
+#[derive(Debug)]
+struct RegionWords {
+    region: Arc<mmap::Region>,
+    n_words: usize,
+}
+
+impl WordBacking for RegionWords {
+    fn words(&self) -> &[u64] {
+        // Range and alignment were validated when the region was
+        // admitted to the registry; the region is immutable after.
+        self.region
+            .words_at(HEADER_BYTES, self.n_words)
+            .expect("payload range validated at load")
+    }
+}
+
+/// One live mapping in the in-process registry.
+struct SharedEntry {
+    region: Weak<mmap::Region>,
+    /// Strip-cache identity every sharer of this key reuses.
+    panels_id: u64,
+}
+
+/// Cumulative per-store counters (process lifetime). `packs` is the
+/// warm-start acceptance counter: a fully warm start performs zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    /// Key already mapped in this process (zero-cost share).
+    pub hits_shared: u64,
+    /// Key loaded from disk (one mmap, no pack).
+    pub hits_disk: u64,
+    /// Key absent — had to pack from source weights.
+    pub misses: u64,
+    /// Pack operations performed (== misses unless saving failed).
+    pub packs: u64,
+    /// Files published (atomic tmp + rename).
+    pub writes: u64,
+    /// Files rejected by validation (then deleted and re-packed).
+    pub invalid: u64,
+}
+
+#[derive(Default)]
+struct StatsCells {
+    hits_shared: AtomicU64,
+    hits_disk: AtomicU64,
+    misses: AtomicU64,
+    packs: AtomicU64,
+    writes: AtomicU64,
+    invalid: AtomicU64,
+}
+
+/// A content-addressed packed-weight store rooted at one directory.
+///
+/// [`Store::open`] returns a per-directory process singleton, so every
+/// opener of the same directory shares one registry and one set of
+/// counters — that is what makes "one resident mapping per distinct
+/// tensor" hold across serve workers, the coordinator pool, and CLI
+/// commands inside one process.
+pub struct Store {
+    dir: PathBuf,
+    shared: Mutex<HashMap<String, SharedEntry>>,
+    stats: StatsCells,
+}
+
+/// Per-directory singletons (keyed by canonical path).
+static INSTANCES: OnceLock<Mutex<HashMap<PathBuf, Arc<Store>>>> = OnceLock::new();
+
+impl std::fmt::Debug for Store {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Store").field("dir", &self.dir).finish_non_exhaustive()
+    }
+}
+
+impl Store {
+    /// Open (creating if needed) the store at `dir`. Returns the
+    /// process-wide instance for that directory.
+    pub fn open(dir: &Path) -> Result<Arc<Store>> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        let canon = dir
+            .canonicalize()
+            .with_context(|| format!("resolving store dir {}", dir.display()))?;
+        let mut map = INSTANCES
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        if let Some(s) = map.get(&canon) {
+            return Ok(Arc::clone(s));
+        }
+        let store = Arc::new(Store {
+            dir: canon.clone(),
+            shared: Mutex::new(HashMap::new()),
+            stats: StatsCells::default(),
+        });
+        map.insert(canon, Arc::clone(&store));
+        Ok(store)
+    }
+
+    /// The store selected by `QBOUND_STORE_DIR`, if any. Open failures
+    /// are logged and treated as "no store" — a broken store directory
+    /// must not take inference down.
+    pub fn from_env() -> Option<Arc<Store>> {
+        match std::env::var("QBOUND_STORE_DIR") {
+            Ok(d) if !d.trim().is_empty() => match Store::open(Path::new(d.trim())) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    log::warn!("QBOUND_STORE_DIR unusable, continuing without store: {e:#}");
+                    None
+                }
+            },
+            _ => None,
+        }
+    }
+
+    /// Store root directory (canonical).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.qbw"))
+    }
+
+    // ---- load-or-pack ------------------------------------------------------
+
+    /// Panel bitstream for the GEMM tensor `raw` under (`fmt`, `kd`,
+    /// `n`, `nr`): shared mapping if this process already holds the
+    /// key, an mmap load if the store file exists and validates, else
+    /// `pack()` + atomic publish. Never fails — every store problem
+    /// degrades to the plain owned pack the caller would have done
+    /// anyway.
+    pub fn panels_for(
+        &self,
+        raw: &[f32],
+        fmt: QFormat,
+        kd: usize,
+        n: usize,
+        nr: usize,
+        pack: impl FnOnce() -> PackedPanels,
+    ) -> PackedPanels {
+        let key = panels_key(raw, fmt, kd, n, nr);
+        let expect_len = (n.div_ceil(nr) * kd * nr) as u64;
+        let expect = Header {
+            kind: KIND_PANELS,
+            width: storage_width(fmt),
+            len: expect_len,
+            n_words: (expect_len * storage_width(fmt) as u64).div_ceil(64),
+            kd: kd as u64,
+            nr: nr as u64,
+            n_panels: n.div_ceil(nr) as u64,
+            ibits: fmt.ibits as i32,
+            fbits: fmt.fbits as i32,
+            check: 0, // filled/verified per path
+        };
+        match self.load_or_insert(&key, &expect) {
+            Some((region, h, id)) => {
+                let buf = shared_buf(region, &h);
+                PackedPanels::from_buf(buf, fmt, kd, nr, id)
+            }
+            None => {
+                let pp = pack();
+                self.count(|s| &s.packs, "qbound_store_packs_total", &[]);
+                debug_assert_eq!(pp.len() as u64, expect.len, "pack layout drifted from key");
+                let mut h = expect;
+                h.check = payload_check(pp.buf().words());
+                self.publish(&key, &h, pp.buf().words());
+                // Load the published file back so this executor also
+                // decodes from the shared mapping (and later loaders
+                // share with it); fall back to the owned pack if that
+                // fails for any reason.
+                match self.load_or_insert(&key, &expect) {
+                    Some((region, h, id)) => {
+                        PackedPanels::from_buf(shared_buf(region, &h), fmt, kd, nr, id)
+                    }
+                    None => pp,
+                }
+            }
+        }
+    }
+
+    /// Flat (bias) bitstream for `raw` under `fmt` — same protocol as
+    /// [`Store::panels_for`].
+    pub fn buf_for(
+        &self,
+        raw: &[f32],
+        fmt: QFormat,
+        pack: impl FnOnce() -> PackedBuf,
+    ) -> PackedBuf {
+        let key = bias_key(raw, fmt);
+        let expect = Header {
+            kind: KIND_BUF,
+            width: storage_width(fmt),
+            len: raw.len() as u64,
+            n_words: (raw.len() as u64 * storage_width(fmt) as u64).div_ceil(64),
+            kd: 0,
+            nr: 0,
+            n_panels: 0,
+            ibits: fmt.ibits as i32,
+            fbits: fmt.fbits as i32,
+            check: 0,
+        };
+        match self.load_or_insert(&key, &expect) {
+            Some((region, h, _)) => shared_buf(region, &h),
+            None => {
+                let buf = pack();
+                self.count(|s| &s.packs, "qbound_store_packs_total", &[]);
+                debug_assert_eq!(buf.len() as u64, expect.len, "pack length drifted from key");
+                let mut h = expect;
+                h.check = payload_check(buf.words());
+                self.publish(&key, &h, buf.words());
+                match self.load_or_insert(&key, &expect) {
+                    Some((region, h, _)) => shared_buf(region, &h),
+                    None => buf,
+                }
+            }
+        }
+    }
+
+    /// Resolve `key` to a live mapped region: registry first, then the
+    /// store file (validated, then admitted to the registry). `None`
+    /// means "not available — pack it". Also returns the header and
+    /// the key's strip-cache id.
+    fn load_or_insert(
+        &self,
+        key: &str,
+        expect: &Header,
+    ) -> Option<(Arc<mmap::Region>, Header, u64)> {
+        // Fast path: someone in this process already mapped the key.
+        {
+            let mut shared = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(entry) = shared.get(key) {
+                if let Some(region) = entry.region.upgrade() {
+                    if let Some(h) = Header::decode(region.bytes()) {
+                        if headers_compatible(&h, expect) {
+                            self.count(
+                                |s| &s.hits_shared,
+                                "qbound_store_hits_total",
+                                &[("source", "shared")],
+                            );
+                            return Some((region, h, entry.panels_id));
+                        }
+                    }
+                }
+                shared.remove(key); // dead weak or stale mapping
+            }
+        }
+
+        // Disk path: map + validate the store file.
+        let path = self.file_path(key);
+        let mut file = match File::open(&path) {
+            Ok(f) => f,
+            Err(_) => {
+                self.count(|s| &s.misses, "qbound_store_misses_total", &[]);
+                return None;
+            }
+        };
+        let region = match mmap::Region::map(&mut file) {
+            Ok(r) => Arc::new(r),
+            Err(e) => {
+                log::warn!("store: mapping {} failed: {e}", path.display());
+                self.reject(&path);
+                return None;
+            }
+        };
+        let h = match Header::decode(region.bytes()) {
+            Some(h) if headers_compatible(&h, expect) => h,
+            _ => {
+                log::warn!("store: {} failed header validation, re-packing", path.display());
+                self.reject(&path);
+                return None;
+            }
+        };
+        let payload_len = (h.n_words as usize).checked_mul(8);
+        let words = match region.words_at(HEADER_BYTES, h.n_words as usize) {
+            // Exact length: a valid file is header + payload, nothing else.
+            Some(w) if payload_len.map(|p| HEADER_BYTES + p) == Some(region.len()) => w,
+            _ => {
+                log::warn!("store: {} is truncated or oversized, re-packing", path.display());
+                self.reject(&path);
+                return None;
+            }
+        };
+        if payload_check(words) != h.check {
+            log::warn!("store: {} payload checksum mismatch, re-packing", path.display());
+            self.reject(&path);
+            return None;
+        }
+        let id = PackedPanels::alloc_id();
+        let mut shared = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+        // Another thread may have won the race while we validated; share
+        // its region (and id) so the process still holds one mapping.
+        if let Some(entry) = shared.get(key) {
+            if let Some(r) = entry.region.upgrade() {
+                self.count(|s| &s.hits_shared, "qbound_store_hits_total", &[("source", "shared")]);
+                return Some((r, h, entry.panels_id));
+            }
+        }
+        shared.insert(
+            key.to_string(),
+            SharedEntry { region: Arc::downgrade(&region), panels_id: id },
+        );
+        self.count(|s| &s.hits_disk, "qbound_store_hits_total", &[("source", "disk")]);
+        Some((region, h, id))
+    }
+
+    /// Atomically publish `words` under `key`: write header + payload
+    /// to a unique temp file, then `rename` into place. Concurrent
+    /// same-key writers both succeed (last rename wins; the contents
+    /// are identical by construction). IO failures are logged, not
+    /// fatal — the caller keeps its owned pack.
+    fn publish(&self, key: &str, header: &Header, words: &[u64]) {
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            "{key}.{}-{}.tmp",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let path = self.file_path(key);
+        let write = || -> std::io::Result<()> {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&header.encode())?;
+            let mut buf = Vec::with_capacity(4096);
+            for chunk in words.chunks(512) {
+                buf.clear();
+                for w in chunk {
+                    buf.extend_from_slice(&w.to_le_bytes());
+                }
+                f.write_all(&buf)?;
+            }
+            f.sync_all()?;
+            std::fs::rename(&tmp, &path)
+        };
+        match write() {
+            Ok(()) => {
+                self.count(|s| &s.writes, "qbound_store_writes_total", &[]);
+            }
+            Err(e) => {
+                log::warn!("store: publishing {} failed: {e}", path.display());
+                let _ = std::fs::remove_file(&tmp);
+            }
+        }
+    }
+
+    /// Drop an invalid store file (best-effort) and count the rejection.
+    fn reject(&self, path: &Path) {
+        self.count(|s| &s.invalid, "qbound_store_invalid_total", &[]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    fn count(
+        &self,
+        cell: impl Fn(&StatsCells) -> &AtomicU64,
+        obs_name: &'static str,
+        labels: &[(&str, &str)],
+    ) {
+        cell(&self.stats).fetch_add(1, Ordering::Relaxed);
+        crate::obs::counter(obs_name, "", labels).inc();
+    }
+
+    // ---- introspection -----------------------------------------------------
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits_shared: self.stats.hits_shared.load(Ordering::Relaxed),
+            hits_disk: self.stats.hits_disk.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            packs: self.stats.packs.load(Ordering::Relaxed),
+            writes: self.stats.writes.load(Ordering::Relaxed),
+            invalid: self.stats.invalid.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Bytes of store files currently mapped and alive in this process
+    /// — the de-duplicated resident weight total, counted once per
+    /// distinct key no matter how many executors share it.
+    pub fn resident_shared_bytes(&self) -> u64 {
+        self.live_regions().iter().map(|(_, r)| r.len() as u64).sum()
+    }
+
+    /// Number of distinct live mappings.
+    pub fn resident_mappings(&self) -> usize {
+        self.live_regions().len()
+    }
+
+    fn live_regions(&self) -> Vec<(String, Arc<mmap::Region>)> {
+        let mut shared = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+        // Prune dead weaks while we're here.
+        shared.retain(|_, e| e.region.strong_count() > 0);
+        shared
+            .iter()
+            .filter_map(|(k, e)| e.region.upgrade().map(|r| (k.clone(), r)))
+            .collect()
+    }
+
+    /// `/v1/stats` + `STORE_stats.json` block.
+    pub fn stats_json(&self) -> Json {
+        let s = self.stats();
+        Json::obj(vec![
+            ("dir", Json::str(self.dir.display().to_string())),
+            ("hits_shared", Json::num(s.hits_shared as f64)),
+            ("hits_disk", Json::num(s.hits_disk as f64)),
+            ("misses", Json::num(s.misses as f64)),
+            ("packs", Json::num(s.packs as f64)),
+            ("writes", Json::num(s.writes as f64)),
+            ("invalid", Json::num(s.invalid as f64)),
+            ("resident_shared_bytes", Json::num(self.resident_shared_bytes() as f64)),
+            ("resident_mappings", Json::num(self.resident_mappings() as f64)),
+        ])
+    }
+
+    /// One `ls` row per store file.
+    pub fn ls(&self) -> Result<Vec<LsEntry>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir).context("reading store dir")? {
+            let entry = entry?;
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some(key) = name.strip_suffix(".qbw") else { continue };
+            let meta = entry.metadata()?;
+            let age = meta
+                .modified()
+                .ok()
+                .and_then(|m| SystemTime::now().duration_since(m).ok())
+                .unwrap_or_default();
+            let (desc, valid) = match describe(&path) {
+                Some(h) => (
+                    format!(
+                        "{} {} {}v x {}b",
+                        if h.kind == KIND_PANELS { "panels" } else { "buf" },
+                        h.fmt_label(),
+                        h.len,
+                        h.width,
+                    ),
+                    true,
+                ),
+                None => ("INVALID".to_string(), false),
+            };
+            out.push(LsEntry {
+                key: key.to_string(),
+                desc,
+                valid,
+                file_bytes: meta.len(),
+                age_secs: age.as_secs(),
+            });
+        }
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        Ok(out)
+    }
+
+    /// Remove store files that are (a) not referenced by this process's
+    /// live registry and (b) at least `min_age` old; stale temp files
+    /// (crashed writers) older than a minute go unconditionally. Never
+    /// touches live keys — and even for another process's live
+    /// mappings, unlink is safe: Linux keeps an unlinked file alive
+    /// until the last mapping drops, and a later cold loader just
+    /// re-packs.
+    pub fn gc(&self, min_age: Duration, dry_run: bool) -> Result<GcReport> {
+        let live: std::collections::HashSet<String> =
+            self.live_regions().into_iter().map(|(k, _)| k).collect();
+        let mut report = GcReport::default();
+        for entry in std::fs::read_dir(&self.dir).context("reading store dir")? {
+            let entry = entry?;
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let meta = entry.metadata()?;
+            let age = meta
+                .modified()
+                .ok()
+                .and_then(|m| SystemTime::now().duration_since(m).ok())
+                .unwrap_or_default();
+            if name.ends_with(".tmp") {
+                if age >= Duration::from_secs(60) {
+                    report.removed_tmp += 1;
+                    if !dry_run {
+                        let _ = std::fs::remove_file(&path);
+                    }
+                }
+                continue;
+            }
+            let Some(key) = name.strip_suffix(".qbw") else { continue };
+            if live.contains(key) {
+                report.kept_live += 1;
+            } else if age < min_age {
+                report.kept_young += 1;
+            } else {
+                report.removed += 1;
+                report.removed_bytes += meta.len();
+                if !dry_run {
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// One row of [`Store::ls`].
+#[derive(Clone, Debug)]
+pub struct LsEntry {
+    pub key: String,
+    /// Human summary: kind, format, value count, width — or `INVALID`.
+    pub desc: String,
+    pub valid: bool,
+    pub file_bytes: u64,
+    pub age_secs: u64,
+}
+
+/// What [`Store::gc`] did (or would do, under `--dry-run`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GcReport {
+    pub removed: usize,
+    pub removed_bytes: u64,
+    pub kept_live: usize,
+    pub kept_young: usize,
+    pub removed_tmp: usize,
+}
+
+/// Build the shared-backed [`PackedBuf`] over a validated region.
+fn shared_buf(region: Arc<mmap::Region>, h: &Header) -> PackedBuf {
+    let backing: Arc<dyn WordBacking> =
+        Arc::new(RegionWords { region, n_words: h.n_words as usize });
+    PackedBuf::from_shared(backing, 0, h.n_words as usize, h.len as usize, h.width)
+}
+
+/// Whether a decoded header matches what the caller's key implies
+/// (everything except the checksum, which is verified against the
+/// payload separately).
+fn headers_compatible(h: &Header, expect: &Header) -> bool {
+    h.kind == expect.kind
+        && h.width == expect.width
+        && h.len == expect.len
+        && h.n_words == expect.n_words
+        && h.kd == expect.kd
+        && h.nr == expect.nr
+        && h.n_panels == expect.n_panels
+        && h.ibits == expect.ibits
+        && h.fbits == expect.fbits
+}
+
+/// Full-file validation for `ls`: header + exact length + checksum.
+fn describe(path: &Path) -> Option<Header> {
+    let mut file = File::open(path).ok()?;
+    let region = mmap::Region::map(&mut file).ok()?;
+    let h = Header::decode(region.bytes())?;
+    if (h.n_words as usize).checked_mul(8).map(|p| HEADER_BYTES + p) != Some(region.len()) {
+        return None;
+    }
+    let words = region.words_at(HEADER_BYTES, h.n_words as usize)?;
+    (payload_check(words) == h.check).then_some(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip_and_rejection() {
+        let h = Header {
+            kind: KIND_PANELS,
+            width: 9,
+            len: 96,
+            n_words: (96 * 9u64).div_ceil(64),
+            kd: 6,
+            nr: 16,
+            n_panels: 1,
+            ibits: 1,
+            fbits: 8,
+            check: 0xdeadbeef,
+        };
+        let bytes = h.encode();
+        assert_eq!(Header::decode(&bytes), Some(h));
+        // Wrong magic, wrong version, inconsistent sizes: all rejected.
+        let mut bad = bytes;
+        bad[0] ^= 1;
+        assert!(Header::decode(&bad).is_none());
+        let mut bad = bytes;
+        bad[8] = 99;
+        assert!(Header::decode(&bad).is_none());
+        let mut bad = bytes;
+        bad[32] ^= 1; // n_words no longer matches len*width
+        assert!(Header::decode(&bad).is_none());
+        assert!(Header::decode(&bytes[..64]).is_none());
+    }
+
+    #[test]
+    fn keys_separate_content_layout_and_format() {
+        let a = vec![0.5f32; 96];
+        let mut b = a.clone();
+        b[41] += 0.25;
+        let fmt = QFormat::new(1, 8);
+        let base = panels_key(&a, fmt, 6, 16, 16);
+        assert_ne!(base, panels_key(&b, fmt, 6, 16, 16), "content");
+        assert_ne!(base, panels_key(&a, QFormat::new(2, 7), 6, 16, 16), "format");
+        assert_ne!(base, panels_key(&a, fmt, 3, 16, 16), "layout");
+        assert_ne!(base, bias_key(&a, fmt), "kind");
+        assert_eq!(base, panels_key(&a.clone(), fmt, 6, 16, 16), "deterministic");
+    }
+
+    #[test]
+    fn open_is_a_per_directory_singleton() {
+        let dir = std::env::temp_dir()
+            .join(format!("qbound-store-singleton-{}", std::process::id()));
+        let a = Store::open(&dir).unwrap();
+        let b = Store::open(&dir).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

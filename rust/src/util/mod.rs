@@ -1,6 +1,7 @@
 //! Shared utilities: logger, timers, human formatting, fs helpers.
 
 pub mod json;
+pub mod sha256;
 
 use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -1,7 +1,9 @@
 //! Serving integration: a real `Server` on an ephemeral port, driven
 //! over live TCP — correctness against the reference oracle, cache
 //! hit/eviction accounting under a tight budget, budget refusal (507),
-//! protocol error statuses, and keep-alive pipelining.
+//! protocol error statuses, keep-alive pipelining, and the packed-weight
+//! store behaviors (shared-mapping dedup pricing, kill/restart warm
+//! start).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -9,11 +11,12 @@ use std::net::{SocketAddr, TcpStream};
 use qbound::backend::lowering::LoweredPlan;
 use qbound::backend::BackendKind;
 use qbound::eval::Dataset;
-use qbound::memory::FootprintModel;
+use qbound::memory::{FootprintModel, StorageMode};
 use qbound::nets::{arch, NetManifest};
 use qbound::quant::QFormat;
 use qbound::search::space::PrecisionConfig;
 use qbound::serve::{reference_prediction, ServeOptions, Server};
+use qbound::store::Store;
 use qbound::testkit;
 use qbound::util::json::Json;
 
@@ -210,6 +213,133 @@ fn healthz_and_nets_inventory() {
         .expect("lenet served");
     assert!(lenet.get("fp32_envelope_bytes").and_then(Json::as_f64).unwrap() > 0.0);
     server.shutdown();
+}
+
+// ---- packed-weight store behaviors --------------------------------------
+
+/// A store-backed fast/packed server on a fresh per-test directory.
+fn start_with_store(tag: &str, budget: f64) -> (Server, std::path::PathBuf) {
+    let dir = std::env::temp_dir()
+        .join(format!("qbound-serve-store-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        mem_budget_bytes: budget,
+        backend: BackendKind::Fast,
+        storage: StorageMode::Packed,
+        store_dir: Some(dir.to_string_lossy().into_owned()),
+        ..ServeOptions::default()
+    };
+    (Server::start(&testkit::ensure_artifacts(), &opts).unwrap(), dir)
+}
+
+#[test]
+fn store_backed_executors_dedup_resident_weight_bytes() {
+    let (server, store_dir) = start_with_store("dedup", 1024.0 * 1024.0 * 1024.0);
+    let addr = server.addr();
+    // Same net, same weight formats, different activation formats: two
+    // executors, one physical weight mapping.
+    for dfmt in ["9.2", "10.4"] {
+        let body = format!(
+            "{{\"net\":\"lenet\",\"weights\":\"1.8\",\"data\":\"{dfmt}\",\"index\":0}}"
+        );
+        let (st, resp) = post(addr, "/v1/classify", &body);
+        assert_eq!(st, 200, "{resp}");
+    }
+
+    let dir = testkit::ensure_artifacts();
+    let m = NetManifest::load(&dir, "lenet").unwrap();
+    let plan = LoweredPlan::new(&arch::get("lenet").unwrap(), None).unwrap();
+    let fpm = FootprintModel::new(&m);
+    let mk = |d: QFormat| PrecisionConfig::uniform(m.n_layers(), QFormat::new(1, 8), d);
+    let (cfg_a, cfg_b) = (mk(QFormat::new(9, 2)), mk(QFormat::new(10, 4)));
+    let win = plan.fused_window_elems(1);
+    let (ea, eb) = (
+        fpm.fused_envelope(&cfg_a, win, &plan.weight_pad_elems),
+        fpm.fused_envelope(&cfg_b, win, &plan.weight_pad_elems),
+    );
+    let shared = fpm.shared_weight_bytes(&cfg_a, &plan.weight_pad_elems);
+    assert!(shared > 0.0);
+
+    let (st, stats) = get(addr, "/v1/stats");
+    assert_eq!(st, 200);
+    let cache = stats.get("cache").unwrap();
+    assert_eq!(cache.get("resident").and_then(Json::as_u64), Some(2), "{stats}");
+    let resident = cache.get("resident_bytes").and_then(Json::as_f64).unwrap();
+    let saved = cache.get("dedup_saved_bytes").and_then(Json::as_f64).unwrap();
+    // The two executors are priced as one weight copy plus both
+    // activation slices — not two full envelopes.
+    assert!(
+        (resident - (ea + eb - shared)).abs() < 1.0,
+        "resident {resident} vs {ea}+{eb}-{shared} ({stats})"
+    );
+    assert!(resident <= ea + eb - 0.9 * shared, "dedup discount missing ({stats})");
+    assert!((saved - shared).abs() < 1.0, "saved {saved} != shared {shared} ({stats})");
+
+    // The store really holds live shared mappings for the process.
+    let store = stats.get("store").unwrap();
+    assert_eq!(store.get("enabled").and_then(Json::as_bool), Some(true), "{stats}");
+    assert!(store.get("resident_shared_bytes").and_then(Json::as_f64).unwrap() > 0.0, "{stats}");
+    assert!(store.get("packs").and_then(Json::as_f64).unwrap() > 0.0, "{stats}");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store_dir);
+}
+
+#[test]
+fn killed_and_restarted_server_warm_starts_with_zero_packs() {
+    let (server, store_dir) = start_with_store("restart", 1024.0 * 1024.0 * 1024.0);
+    let addr = server.addr();
+    let body = classify_body("lenet", "1.8", 5);
+    let (st, first) = post(addr, "/v1/classify", &body);
+    assert_eq!(st, 200, "{first}");
+    let pred_before = first.get("pred").and_then(Json::as_usize).unwrap();
+    // The daemon's answer matches the (store-free) reference oracle.
+    let dir = testkit::ensure_artifacts();
+    let manifest = NetManifest::load(&dir, "lenet").unwrap();
+    let dataset = Dataset::load(&manifest).unwrap();
+    let oracle = BackendKind::Reference.create().unwrap();
+    let want = reference_prediction(
+        &manifest,
+        &dataset,
+        oracle.as_ref(),
+        &lenet_cfg(QFormat::new(1, 8)),
+        5,
+    )
+    .unwrap();
+    assert_eq!(pred_before, want);
+    server.shutdown(); // the "kill": executors and mappings drop
+
+    // The store is a per-directory singleton, so its lifetime counters
+    // survive the server: packs must not move across the restart.
+    let store = Store::open(&store_dir).unwrap();
+    let packs_cold = store.stats().packs;
+    assert!(packs_cold > 0, "cold server never packed");
+
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        mem_budget_bytes: 1024.0 * 1024.0 * 1024.0,
+        backend: BackendKind::Fast,
+        storage: StorageMode::Packed,
+        store_dir: Some(store_dir.to_string_lossy().into_owned()),
+        ..ServeOptions::default()
+    };
+    let server2 = Server::start(&testkit::ensure_artifacts(), &opts).unwrap();
+    let (st, second) = post(server2.addr(), "/v1/classify", &body);
+    assert_eq!(st, 200, "{second}");
+    assert_eq!(
+        second.get("pred").and_then(Json::as_usize),
+        Some(pred_before),
+        "restarted server answers differently"
+    );
+    assert_eq!(store.stats().packs, packs_cold, "warm restart re-packed weights");
+    assert!(
+        store.stats().hits_disk + store.stats().hits_shared > 0,
+        "warm restart never loaded from the store"
+    );
+    server2.shutdown();
+    let _ = std::fs::remove_dir_all(&store_dir);
 }
 
 #[test]

@@ -1,0 +1,206 @@
+//! Packed-weight store integration: concurrency, corruption rejection,
+//! gc-vs-live safety, and the warm-start zero-pack contract through the
+//! fast backend — the on-disk half of the serving warm-start story.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use qbound::backend::{Backend, Variant};
+use qbound::backend::fast::FastBackend;
+use qbound::memory::{PackedBuf, PackedPanels, StorageMode};
+use qbound::nets::NetManifest;
+use qbound::quant::QFormat;
+use qbound::search::space::PrecisionConfig;
+use qbound::store::{bias_key, panels_key, Store};
+use qbound::testkit;
+
+/// A fresh store directory for one test (distinct names — the store is
+/// a per-directory process singleton, so reuse would leak counters
+/// between tests).
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qbound-store-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn tensor(n: usize, seed: u32) -> Vec<f32> {
+    (0..n)
+        .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 997) as f32 / 499.0 - 1.0)
+        .collect()
+}
+
+#[test]
+fn concurrent_same_key_loaders_race_cleanly() {
+    let store = Store::open(&fresh_dir("race")).unwrap();
+    let raw = Arc::new(tensor(48 * 20, 7));
+    let (fmt, kd, n) = (QFormat::new(2, 7), 48, 20);
+    let packs = Arc::new(AtomicUsize::new(0));
+
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let (store, raw, packs) = (Arc::clone(&store), Arc::clone(&raw), Arc::clone(&packs));
+        handles.push(std::thread::spawn(move || {
+            store.panels_for(&raw, fmt, kd, n, 16, || {
+                packs.fetch_add(1, Ordering::SeqCst);
+                PackedPanels::pack(fmt, &qbound::backend::gemm::pack_b_panels(&raw, kd, n), kd, 16)
+            })
+        }));
+    }
+    let results: Vec<PackedPanels> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Every racer decodes the same bits as a plain owned pack.
+    let reference =
+        PackedPanels::pack(fmt, &qbound::backend::gemm::pack_b_panels(&raw, kd, n), kd, 16);
+    let strip_len = reference.nr() * reference.kd();
+    let mut want = vec![0f32; strip_len];
+    let mut got = vec![0f32; strip_len];
+    for pp in &results {
+        assert_eq!((pp.kd(), pp.nr(), pp.len()), (reference.kd(), reference.nr(), reference.len()));
+        for panel in 0..reference.n_panels() {
+            reference.read_strip(panel, 0, kd, &mut want);
+            pp.read_strip(panel, 0, kd, &mut got);
+            assert_eq!(want, got, "panel {panel} diverged under the race");
+        }
+    }
+    // At least one racer packed; the published file validates.
+    assert!(packs.load(Ordering::SeqCst) >= 1);
+    let key = panels_key(&raw, fmt, kd, n, 16);
+    let entry = store
+        .ls()
+        .unwrap()
+        .into_iter()
+        .find(|e| e.key == key)
+        .expect("published store file listed");
+    assert!(entry.valid, "store file invalid after the race: {}", entry.desc);
+
+    // A later loader needs no pack at all — not even a shared hit
+    // requirement, just: the closure must not run.
+    drop(results);
+    let before = packs.load(Ordering::SeqCst);
+    let _again = store.panels_for(&raw, fmt, kd, n, 16, || {
+        packs.fetch_add(1, Ordering::SeqCst);
+        PackedPanels::pack(fmt, &qbound::backend::gemm::pack_b_panels(&raw, kd, n), kd, 16)
+    });
+    assert_eq!(packs.load(Ordering::SeqCst), before, "warm load invoked pack()");
+}
+
+#[test]
+fn corrupted_files_are_rejected_and_repacked() {
+    let store = Store::open(&fresh_dir("corrupt")).unwrap();
+    let raw = tensor(300, 3);
+    let fmt = QFormat::new(1, 8);
+    let key = bias_key(&raw, fmt);
+    let path = store.dir().join(format!("{key}.qbw"));
+
+    let packs = AtomicUsize::new(0);
+    let pack = || {
+        packs.fetch_add(1, Ordering::SeqCst);
+        PackedBuf::pack(fmt, &raw)
+    };
+    drop(store.buf_for(&raw, fmt, pack)); // publish + drop the mapping
+    assert_eq!(packs.load(Ordering::SeqCst), 1);
+    assert!(path.exists());
+
+    // Three corruption shapes; each must be detected, quarantined
+    // (file removed) and transparently re-packed.
+    type Corrupt = fn(&std::path::Path);
+    let corruptions: [(&str, Corrupt); 3] = [
+        ("payload bit flip", |p| {
+            let mut bytes = std::fs::read(p).unwrap();
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0x10;
+            std::fs::write(p, bytes).unwrap();
+        }),
+        ("truncation", |p| {
+            let bytes = std::fs::read(p).unwrap();
+            std::fs::write(p, &bytes[..bytes.len() - 8]).unwrap();
+        }),
+        ("garbled magic", |p| {
+            let mut bytes = std::fs::read(p).unwrap();
+            bytes[0] ^= 0xff;
+            std::fs::write(p, bytes).unwrap();
+        }),
+    ];
+    for (i, (what, corrupt)) in corruptions.iter().enumerate() {
+        corrupt(&path);
+        let invalid_before = store.stats().invalid;
+        let buf = store.buf_for(&raw, fmt, || {
+            packs.fetch_add(1, Ordering::SeqCst);
+            PackedBuf::pack(fmt, &raw)
+        });
+        assert_eq!(packs.load(Ordering::SeqCst), 2 + i, "{what}: expected a re-pack");
+        assert!(store.stats().invalid > invalid_before, "{what}: not counted invalid");
+        // The re-published file is valid again and the returned buffer
+        // decodes like a fresh pack.
+        let reference = PackedBuf::pack(fmt, &raw);
+        for j in [0usize, 1, 7, 299] {
+            assert_eq!(buf.get(fmt, j), reference.get(fmt, j), "{what}: bits diverged");
+        }
+        drop(buf);
+        let entry =
+            store.ls().unwrap().into_iter().find(|e| e.key == key).expect("file republished");
+        assert!(entry.valid, "{what}: re-published file invalid: {}", entry.desc);
+    }
+}
+
+#[test]
+fn gc_keeps_live_mappings_and_removes_dead_files() {
+    let store = Store::open(&fresh_dir("gc")).unwrap();
+    let (live_raw, dead_raw) = (tensor(200, 11), tensor(200, 12));
+    let fmt = QFormat::new(3, 4);
+    let live = store.buf_for(&live_raw, fmt, || PackedBuf::pack(fmt, &live_raw));
+    drop(store.buf_for(&dead_raw, fmt, || PackedBuf::pack(fmt, &dead_raw)));
+    assert!(live.is_shared(), "live buffer must be store-backed for this test");
+
+    let report = store.gc(Duration::ZERO, false).unwrap();
+    assert_eq!(report.kept_live, 1, "the mapped key must survive gc");
+    assert_eq!(report.removed, 1, "the dropped key must be collected");
+
+    let live_key = bias_key(&live_raw, fmt);
+    let keys: Vec<String> = store.ls().unwrap().into_iter().map(|e| e.key).collect();
+    assert_eq!(keys, vec![live_key], "exactly the live key remains");
+    // The survivor still decodes — and so would the removed mapping,
+    // had anyone held it (unlink never invalidates live regions).
+    assert_eq!(live.get(fmt, 13), PackedBuf::pack(fmt, &live_raw).get(fmt, 13));
+}
+
+#[test]
+fn warm_backend_start_packs_nothing_and_is_bit_identical() {
+    let store = Store::open(&fresh_dir("warm")).unwrap();
+    let dir = testkit::ensure_artifacts();
+    let manifest = NetManifest::load(&dir, "lenet").unwrap();
+    let cfg = PrecisionConfig::uniform(manifest.n_layers(), QFormat::new(1, 8), QFormat::new(9, 2));
+    let (wq, dq) = (cfg.wire_wq(), cfg.wire_dq());
+    let img_elems = {
+        let ds = qbound::eval::Dataset::load(&manifest).unwrap();
+        ds.images[..ds.image_elems].to_vec()
+    };
+
+    let infer = |backend: &FastBackend| -> Vec<f32> {
+        let mut exec = backend.load(&manifest, Variant::Standard).unwrap();
+        exec.infer(&img_elems, &wq, &dq, None).unwrap()
+    };
+
+    // Cold: packs and publishes every lenet weight tensor at this wq.
+    let cold_backend = FastBackend::with_options(1, StorageMode::Packed)
+        .with_store(Some(Arc::clone(&store)));
+    let cold_logits = infer(&cold_backend);
+    let packs_cold = store.stats().packs;
+    assert!(packs_cold > 0, "cold start must pack");
+    drop(cold_backend);
+
+    // Warm: a fresh backend against the same store dir loads every
+    // bitstream from disk — zero pack calls, bit-identical logits.
+    let warm_backend = FastBackend::with_options(1, StorageMode::Packed)
+        .with_store(Some(Arc::clone(&store)));
+    let warm_logits = infer(&warm_backend);
+    assert_eq!(store.stats().packs, packs_cold, "warm start re-packed");
+    assert!(store.stats().hits_disk + store.stats().hits_shared > 0, "warm start never hit");
+    assert_eq!(cold_logits, warm_logits, "store-backed logits drifted across restart");
+
+    // And both agree bit-for-bit with a store-free packed executor.
+    let plain = infer(&FastBackend::with_options(1, StorageMode::Packed).with_store(None));
+    assert_eq!(plain, warm_logits, "store-backed logits diverge from the owned pack path");
+}
