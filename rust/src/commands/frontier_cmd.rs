@@ -1,0 +1,190 @@
+//! `qbound frontier` — export per-net accuracy↔footprint rung ladders
+//! (`FRONTIER_<net>.json`) for `qbound serve --autoscale`.
+//!
+//! Reuses the paper's §2.5 machinery end to end: the greedy descent
+//! (`qbound search` / Fig 5) supplies measured `(config, accuracy,
+//! footprint ratio)` points, [`pareto::frontier`] keeps the
+//! non-dominated ones, and [`FootprintModel::fused_envelope`] prices
+//! each surviving rung in the serve daemon's admission currency. The
+//! ladder is ordered widest (rung 0) to narrowest; the daemon clamps
+//! it at `--accuracy-floor` load time, so this command exports the
+//! whole frontier and prints how much of it a given floor keeps.
+//!
+//! When `BENCH_*.json` files from `qbound bench` sit next to the
+//! output, the net's best measured packed/f32 kernel time ratio is
+//! attached as `packed_over_f32_time` — the throughput side of the
+//! ladder, for operators reading the file.
+
+use anyhow::Result;
+use qbound::backend::lowering::LoweredPlan;
+use qbound::backend::BackendKind;
+use qbound::cli::CmdSpec;
+use qbound::memory::FootprintModel;
+use qbound::nets::{arch, ArtifactIndex};
+use qbound::report::{pct, ratio, Table};
+use qbound::repro::{self, ReproCtx};
+use qbound::search::pareto;
+use qbound::serve::frontier::{Frontier, Rung};
+use qbound::util::{self, json::Json};
+
+pub fn run(args: &[String]) -> Result<()> {
+    let spec = CmdSpec::new(
+        "frontier",
+        "export per-net accuracy-footprint rung ladders for serve --autoscale",
+    )
+    .opt("net", "network name, or 'all'", "all")
+    .opt("n-images", "images per evaluation (0 = full)", "128")
+    .opt("workers", "worker threads (0 = one per core)", "0")
+    .opt(
+        "backend",
+        "execution backend: reference | fast | pjrt (default: env or reference)",
+        "",
+    )
+    .opt("out-dir", "directory for FRONTIER_<net>.json (BENCH_*.json read from here too)", "bench-out")
+    .opt(
+        "cache-dir",
+        "descent-trajectory cache directory; \"none\" disables caching",
+        "reports/dse-cache",
+    )
+    .opt("max-rungs", "cap on ladder length (endpoints kept, middle thinned evenly)", "6")
+    .opt("floor", "accuracy floor for the printed usable-rung summary", "0.01");
+    let a = spec.parse(args)?;
+
+    let max_rungs = a.usize("max-rungs")?;
+    anyhow::ensure!(max_rungs >= 2, "--max-rungs must be >= 2 (a ladder needs two ends)");
+    let floor = a.f64("floor")?;
+    let mut ctx = ReproCtx::with_backend(
+        std::path::Path::new(a.str("out-dir")),
+        a.usize("workers")?,
+        a.usize("n-images")?,
+        BackendKind::from_arg_or_env(a.str("backend"))?,
+    )?;
+    let nets: Vec<String> = if a.str("net") == "all" {
+        ArtifactIndex::load(&ctx.artifacts)?.nets
+    } else {
+        vec![a.str("net").to_string()]
+    };
+    let out_dir = std::path::PathBuf::from(a.str("out-dir"));
+    let cache_dir = a.str("cache-dir").to_string();
+
+    let mut t = Table::new(
+        "Autoscale frontiers — rung ladders (rung 0 widest)",
+        &["net", "rung", "config", "top-1", "rel err", "FP ratio", "envelope"],
+    );
+    for net in &nets {
+        let m = ctx.manifest(net)?.clone();
+        let Some(net_arch) = arch::get(net) else {
+            println!("{net}: no registered architecture, skipping");
+            continue;
+        };
+        let fpm = FootprintModel::new(&m);
+        let plan = LoweredPlan::new(&net_arch, None)?;
+        let window = plan.fused_window_elems(1);
+        let pads = plan.weight_pad_elems.clone();
+
+        // The descent dominates the cost; the cache key (net, backend,
+        // n-images, weights hash) is shared with `qbound footprint`, so
+        // CI pays for the trajectory once.
+        let dse = if cache_dir == "none" {
+            repro::explore_net(&mut ctx, net)?
+        } else {
+            repro::explore_net_cached(&mut ctx, net, std::path::Path::new(&cache_dir))?
+        };
+        let mut points = dse.descent.visited.clone();
+        points.extend(dse.descent.explored.iter().cloned());
+        anyhow::ensure!(!points.is_empty(), "{net}: descent visited no configurations");
+
+        // Non-dominated in (footprint ↓, accuracy ↑); pareto returns
+        // cost-ascending, the ladder wants widest (highest-cost) first.
+        let xy: Vec<(f64, f64)> = points.iter().map(|v| (v.footprint_ratio, v.accuracy)).collect();
+        let mut keep = pareto::frontier(&xy);
+        keep.reverse();
+        let keep = thin(keep, max_rungs);
+
+        let rungs: Vec<Rung> = keep
+            .iter()
+            .map(|&i| {
+                let v = &points[i];
+                Rung {
+                    cfg: v.cfg.clone(),
+                    accuracy: v.accuracy,
+                    // The descent's rel_err is signed (a config can beat
+                    // the sampled baseline); the ladder's floor semantics
+                    // only care about loss.
+                    rel_err: v.rel_err.max(0.0),
+                    footprint_ratio: v.footprint_ratio,
+                    envelope_bytes: fpm.fused_envelope(&v.cfg, window, &pads),
+                }
+            })
+            .collect();
+        let f = Frontier {
+            net: net.clone(),
+            baseline_accuracy: dse.descent.baseline,
+            rungs,
+        };
+        f.validate()?;
+
+        for (i, r) in f.rungs.iter().enumerate() {
+            t.row(vec![
+                if i == 0 { net.clone() } else { String::new() },
+                i.to_string(),
+                r.cfg.notation(),
+                pct(r.accuracy),
+                format!("{:.4}", r.rel_err),
+                ratio(r.footprint_ratio),
+                util::human_bytes(r.envelope_bytes),
+            ]);
+        }
+
+        // Attach the bench throughput hint when bench artifacts exist
+        // next to the output (extra key — the serve loader ignores it).
+        let mut doc = f.to_json();
+        if let (Json::Obj(map), Some(r)) = (&mut doc, bench_time_ratio(&out_dir, net)) {
+            map.insert("packed_over_f32_time".to_string(), Json::num(r));
+        }
+        let path = out_dir.join(Frontier::file_name(net));
+        util::write_file(&path, doc.pretty().as_bytes())?;
+        println!(
+            "{net}: {} rung(s) ({} usable at floor {floor}) -> {}",
+            f.rungs.len(),
+            f.usable_rungs(floor),
+            path.display()
+        );
+    }
+    print!("{}", t.text());
+    Ok(())
+}
+
+/// Evenly thin an index ladder to at most `max` entries, always keeping
+/// both endpoints (the widest and narrowest rungs).
+fn thin(keep: Vec<usize>, max: usize) -> Vec<usize> {
+    if keep.len() <= max {
+        return keep;
+    }
+    (0..max).map(|i| keep[i * (keep.len() - 1) / (max - 1)]).collect()
+}
+
+/// The net's best (smallest) measured packed/f32 kernel time ratio from
+/// any `BENCH_*.json` in `dir`, if one is there.
+fn bench_time_ratio(dir: &std::path::Path, net: &str) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let Ok(entry) = entry else { continue };
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if !name.starts_with("BENCH_") || !name.ends_with(".json") {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        let Ok(doc) = Json::parse(&text) else { continue };
+        let Some(rows) = doc.get("ratios").and_then(Json::as_arr) else { continue };
+        for row in rows {
+            if row.get("net").and_then(Json::as_str) == Some(net) {
+                if let Some(r) = row.get("packed_over_f32").and_then(Json::as_f64) {
+                    best = Some(best.map_or(r, |b: f64| b.min(r)));
+                }
+            }
+        }
+    }
+    best
+}

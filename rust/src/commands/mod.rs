@@ -3,6 +3,7 @@
 pub mod check_mem;
 pub mod eval;
 pub mod footprint_cmd;
+pub mod frontier_cmd;
 pub mod gen_artifacts;
 pub mod info;
 pub mod profile;

@@ -23,6 +23,8 @@ use qbound::memory::{FootprintModel, StorageMode};
 use qbound::nets::{arch, ArtifactIndex, NetManifest};
 use qbound::quant::QFormat;
 use qbound::search::space::PrecisionConfig;
+use qbound::serve::autoscale::AutoscaleOptions;
+use qbound::serve::frontier::Frontier;
 use qbound::serve::{self, ServeOptions, Server};
 use qbound::util;
 use qbound::util::json::Json;
@@ -48,6 +50,28 @@ pub fn run(args: &[String]) -> Result<()> {
              warm restarts skip re-packing and same-weight executors share one mapping",
             "",
         )
+        .flag(
+            "autoscale",
+            "enable the precision-autoscaling controller (loads FRONTIER_<net>.json from \
+             --frontier-dir; see `qbound frontier` and docs/AUTOSCALING.md)",
+        )
+        .opt("frontier-dir", "autoscale: directory holding FRONTIER_<net>.json ladders", "bench-out")
+        .opt(
+            "accuracy-floor",
+            "autoscale: max relative accuracy loss vs fp32 any served rung may have",
+            "0.01",
+        )
+        .opt("high-water", "autoscale: pressure above this degrades one rung", "0.75")
+        .opt("low-water", "autoscale: pressure below this recovers one rung", "0.25")
+        .opt("burst-ticks", "autoscale: consecutive hot ticks before degrading", "2")
+        .opt("hysteresis-ticks", "autoscale: consecutive calm ticks before recovering", "3")
+        .opt("tick-ms", "autoscale: controller sampling period in milliseconds", "200")
+        .opt(
+            "p99-slo-ms",
+            "autoscale: p99 latency SLO in ms; above 0, p99/slo joins queue occupancy \
+             as a pressure signal",
+            "0",
+        )
         .flag("smoke", "run the self-driving smoke workload and exit")
         .flag(
             "expect-warm",
@@ -62,10 +86,34 @@ pub fn run(args: &[String]) -> Result<()> {
     let backend = BackendKind::from_arg_or_env(a.str("backend"))?;
     let storage = StorageMode::from_arg_or_env(a.str("storage"))?;
     if a.flag("smoke") {
-        run_smoke(&a, backend, storage)
+        if a.flag("autoscale") {
+            run_smoke_autoscale(&a, backend, storage)
+        } else {
+            run_smoke(&a, backend, storage)
+        }
     } else {
         run_daemon(&a, backend, storage)
     }
+}
+
+/// The `--autoscale` knob bundle (None when the flag is off); bad
+/// combinations fail here, before the daemon binds.
+fn autoscale_options(a: &Args) -> Result<Option<AutoscaleOptions>> {
+    if !a.flag("autoscale") {
+        return Ok(None);
+    }
+    let opts = AutoscaleOptions {
+        frontier_dir: a.str("frontier-dir").to_string(),
+        accuracy_floor: a.f64("accuracy-floor")?,
+        high_water: a.f64("high-water")?,
+        low_water: a.f64("low-water")?,
+        burst_ticks: a.usize("burst-ticks")?,
+        hysteresis_ticks: a.usize("hysteresis-ticks")?,
+        tick_ms: a.usize("tick-ms")? as u64,
+        p99_slo_us: a.f64("p99-slo-ms")? * 1000.0,
+    };
+    opts.validate()?;
+    Ok(Some(opts))
 }
 
 /// MiB CLI value -> bytes.
@@ -117,6 +165,7 @@ fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()
         max_body_bytes: a.usize("max-body-kb")? * 1024,
         trace_dir: trace_dir(a),
         store_dir: store_dir(a),
+        autoscale: autoscale_options(a)?,
     };
     // Resolve kernel dispatch up front: a bad QBOUND_KERNEL fails the
     // launch cleanly, and the startup banner reports the variant.
@@ -134,6 +183,13 @@ fn run_daemon(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()
     match &opts.store_dir {
         Some(d) => println!("  packed-weight store: {d}"),
         None => println!("  packed-weight store: disabled (--store-dir / QBOUND_STORE_DIR)"),
+    }
+    match &opts.autoscale {
+        Some(ao) => println!(
+            "  autoscale: on (frontiers {}, floor {}, watermarks {}/{}, tick {} ms)",
+            ao.frontier_dir, ao.accuracy_floor, ao.low_water, ao.high_water, ao.tick_ms
+        ),
+        None => println!("  autoscale: off (--autoscale + `qbound frontier` to enable)"),
     }
     println!(
         "  endpoints: GET /healthz  GET /v1/nets  GET /v1/stats  GET /metrics  \
@@ -235,6 +291,7 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
         max_body_bytes: a.usize("max-body-kb")? * 1024,
         trace_dir: trace_dir(a),
         store_dir: store_dir(a),
+        autoscale: None,
     };
     ensure!(
         !a.flag("expect-warm") || opts.store_dir.is_some(),
@@ -460,6 +517,270 @@ fn run_smoke(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()>
         util::human_bytes(slack)
     );
     println!("  serve json -> {}", path.display());
+    Ok(())
+}
+
+// ---- autoscale smoke leg ------------------------------------------------
+
+/// `serve --smoke --autoscale`: start the daemon with the controller on,
+/// hammer it from concurrent clients until it degrades at least one
+/// rung, drain until it recovers, then assert the transition record —
+/// ≥1 degrade, ≥1 recovery, no served rung past the accuracy floor,
+/// zero store re-packs across the swaps — and archive
+/// `AUTOSCALE_smoke.json`. Every observed rung's predictions are
+/// checked against the reference oracle at that rung's config.
+fn run_smoke_autoscale(a: &Args, backend: BackendKind, storage: StorageMode) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    let dir = util::artifacts_dir()?;
+    let net = SmokeNet::load(&dir, "lenet")?;
+    let fdir = std::path::PathBuf::from(a.str("frontier-dir"));
+    let fpath = fdir.join(Frontier::file_name("lenet"));
+    let frontier = Frontier::load(&fpath).with_context(|| {
+        format!(
+            "autoscale smoke needs {} — run `qbound frontier --net lenet` first",
+            fpath.display()
+        )
+    })?;
+    let floor = a.f64("accuracy-floor")?;
+    let usable = frontier.usable_rungs(floor);
+    ensure!(
+        usable >= 2,
+        "autoscale smoke needs >= 2 rungs within floor {floor}, {} has {usable} \
+         (loosen --accuracy-floor or re-run `qbound frontier` with more images)",
+        fpath.display()
+    );
+
+    // Every usable rung must fit the budget alone: the burst has to
+    // degrade because of queue pressure, never admission refusals.
+    let max_env = frontier.rungs[..usable]
+        .iter()
+        .map(|r| net.envelope(&r.cfg))
+        .fold(0f64, f64::max);
+    let budget = match a.f64("mem-budget-mb")? {
+        b if b > 0.0 => mib(b),
+        _ => max_env * 2.5,
+    };
+    ensure!(budget >= max_env, "--mem-budget-mb admits no usable rung");
+
+    let auto_opts = autoscale_options(a)?.expect("--autoscale is set on this path");
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        // One worker and a tiny queue: a concurrent burst drives the
+        // occupancy fraction to 1.0 within a tick or two.
+        workers: 1,
+        queue_depth: 4,
+        mem_budget_bytes: budget,
+        backend,
+        storage,
+        max_body_bytes: a.usize("max-body-kb")? * 1024,
+        trace_dir: trace_dir(a),
+        store_dir: store_dir(a),
+        autoscale: Some(auto_opts.clone()),
+    };
+    let t_ready = std::time::Instant::now();
+    let server = Server::start(&dir, &opts)?;
+    let addr = server.addr();
+    println!(
+        "serve --smoke --autoscale — live endpoint {addr}, backend {}, {} rung(s) \
+         ({usable} usable at floor {floor}), budget {}",
+        backend.label(),
+        frontier.rungs.len(),
+        util::human_bytes(budget)
+    );
+
+    let (st, health) = http_get(addr, "/healthz")?;
+    ensure!(st == 200 && health.get("ok").and_then(Json::as_bool) == Some(true), "healthz: {st}");
+    // One quiet classify: the daemon must answer at rung 0 (widest) and
+    // say so in the response.
+    let (st, resp) = http_post(addr, "/v1/classify", "{\"net\":\"lenet\",\"index\":0}")?;
+    ensure!(st == 200, "ready classify: status {st} {resp}");
+    ensure!(
+        resp.get("rung").and_then(Json::as_u64) == Some(0),
+        "expected rung 0 before the burst, got {resp}"
+    );
+    let ready_us = t_ready.elapsed().as_micros() as f64;
+
+    let (st, stats0) = http_get(addr, "/v1/stats")?;
+    ensure!(st == 200, "stats: {st}");
+    let store_on = stats0.at(&["store", "enabled"]).as_bool() == Some(true);
+    let packs_ready = stats0.at(&["store", "packs"]).as_f64().unwrap_or(0.0);
+
+    // Burst phase: concurrent clients keep the queue saturated until
+    // /v1/stats shows a degrade, then linger briefly so responses at
+    // the narrow rung are actually observed.
+    let stop = AtomicBool::new(false);
+    let observed: Mutex<Vec<(usize, usize, usize)>> = Mutex::new(Vec::new()); // (rung, index, pred)
+    let mut degraded = false;
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let idx = i % 4;
+                    i += 1;
+                    let body = format!("{{\"net\":\"lenet\",\"index\":{idx}}}");
+                    // 429s under saturation are the point, not a failure.
+                    if let Ok((200, resp)) = http_post(addr, "/v1/classify", &body) {
+                        if let (Some(r), Some(p)) = (
+                            resp.get("rung").and_then(Json::as_usize),
+                            resp.get("pred").and_then(Json::as_usize),
+                        ) {
+                            observed.lock().unwrap().push((r, idx, p));
+                        }
+                    }
+                }
+            });
+        }
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(50));
+            if let Ok((200, stats)) = http_get(addr, "/v1/stats") {
+                let rung = stats
+                    .at(&["autoscale", "nets", "lenet", "active_rung"])
+                    .as_u64()
+                    .unwrap_or(0);
+                if rung >= 1 {
+                    degraded = true;
+                    break;
+                }
+            }
+        }
+        // Grace window: keep bursting until a narrow-rung answer lands.
+        let grace = Instant::now() + Duration::from_secs(5);
+        while degraded && Instant::now() < grace {
+            if observed.lock().unwrap().iter().any(|(r, _, _)| *r >= 1) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    ensure!(degraded, "burst phase never degraded the rung (see --high-water/--burst-ticks)");
+
+    // Drain phase: no traffic — the hysteresis window must bring the
+    // rung back to 0 and count a recovery.
+    let mut recovered = false;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(100));
+        if let Ok((200, stats)) = http_get(addr, "/v1/stats") {
+            let rung = stats
+                .at(&["autoscale", "nets", "lenet", "active_rung"])
+                .as_u64()
+                .unwrap_or(u64::MAX);
+            let recoveries =
+                stats.at(&["autoscale", "recoveries"]).as_u64().unwrap_or(0);
+            if rung == 0 && recoveries >= 1 {
+                recovered = true;
+                break;
+            }
+        }
+    }
+    ensure!(recovered, "drain phase never recovered to rung 0");
+
+    // Final record: transitions, floor compliance, zero re-packs.
+    let (st, stats) = http_get(addr, "/v1/stats")?;
+    ensure!(st == 200, "final stats: {st}");
+    let degrades = stats.at(&["autoscale", "degrades"]).as_u64().unwrap_or(0);
+    let recoveries = stats.at(&["autoscale", "recoveries"]).as_u64().unwrap_or(0);
+    ensure!(degrades >= 1, "no degrade transition recorded");
+    ensure!(recoveries >= 1, "no recovery transition recorded");
+    let transitions = stats
+        .at(&["autoscale", "transitions"])
+        .as_arr()
+        .context("stats: no transition log")?
+        .to_vec();
+    ensure!(!transitions.is_empty(), "empty transition log after observed transitions");
+    for t in &transitions {
+        let to = t.get("to").and_then(Json::as_usize).context("transition: no \"to\"")?;
+        ensure!(to < usable, "transition selected rung {to}, outside the {usable} usable");
+        let rel = frontier.rungs[to].rel_err;
+        ensure!(
+            rel <= floor + 1e-12,
+            "transition to rung {to} violates the accuracy floor ({rel} > {floor})"
+        );
+    }
+    let packs_final = stats.at(&["store", "packs"]).as_f64().unwrap_or(0.0);
+    if store_on {
+        ensure!(
+            packs_final == packs_ready,
+            "rung swaps re-packed weights ({packs_ready:.0} -> {packs_final:.0} packs); \
+             the pre-warm should have covered every usable rung"
+        );
+    }
+
+    // Oracle: check served predictions at every observed rung against
+    // the reference backend running that rung's exact config.
+    let samples = observed.into_inner().unwrap_or_default();
+    let mut by_rung: std::collections::BTreeMap<usize, Vec<(usize, usize)>> = Default::default();
+    for (r, idx, pred) in samples {
+        by_rung.entry(r).or_default().push((idx, pred));
+    }
+    ensure!(
+        by_rung.keys().any(|r| *r >= 1),
+        "no response was observed at a degraded rung (burst raced the stop signal)"
+    );
+    let oracle = BackendKind::Reference.create()?;
+    let mut checked = 0usize;
+    for (r, entries) in &by_rung {
+        for (idx, pred) in entries.iter().take(3) {
+            let want = serve::reference_prediction(
+                &net.manifest,
+                &net.dataset,
+                oracle.as_ref(),
+                &frontier.rungs[*r].cfg,
+                *idx,
+            )?;
+            ensure!(
+                *pred == want,
+                "rung {r} index {idx}: served pred {pred} != reference {want}"
+            );
+            checked += 1;
+        }
+    }
+
+    let rungs_observed: Vec<Json> =
+        by_rung.keys().map(|r| Json::num(*r as f64)).collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("mode", Json::str("autoscale-smoke")),
+        ("backend", Json::str(backend.label())),
+        ("storage", Json::str(storage.label())),
+        ("frontier", Json::str(fpath.display().to_string())),
+        ("rungs", Json::num(frontier.rungs.len() as f64)),
+        ("usable_rungs", Json::num(usable as f64)),
+        ("accuracy_floor", Json::num(floor)),
+        ("high_water", Json::num(auto_opts.high_water)),
+        ("low_water", Json::num(auto_opts.low_water)),
+        ("burst_ticks", Json::num(auto_opts.burst_ticks as f64)),
+        ("hysteresis_ticks", Json::num(auto_opts.hysteresis_ticks as f64)),
+        ("tick_ms", Json::num(auto_opts.tick_ms as f64)),
+        ("mem_budget_bytes", Json::num(budget)),
+        ("ready_us", Json::num(ready_us)),
+        ("degrades", Json::num(degrades as f64)),
+        ("recoveries", Json::num(recoveries as f64)),
+        ("rungs_observed", Json::arr(rungs_observed)),
+        ("requests_checked", Json::num(checked as f64)),
+        ("store_enabled", Json::Bool(store_on)),
+        ("packs_ready", Json::num(packs_ready)),
+        ("packs_final", Json::num(packs_final)),
+        ("transitions", Json::Arr(transitions)),
+    ]);
+    let path = std::path::PathBuf::from(a.str("out-dir")).join("AUTOSCALE_smoke.json");
+    util::write_file(&path, doc.pretty().as_bytes())?;
+
+    server.shutdown();
+    println!("  degrades {degrades}  recoveries {recoveries}  (usable rungs {usable})");
+    println!(
+        "  store packs ready/final: {packs_ready:.0}/{packs_final:.0}{}",
+        if store_on { " (zero re-pack swaps)" } else { " (store off)" }
+    );
+    let rung_list: Vec<usize> = by_rung.keys().copied().collect();
+    println!("  {checked} predictions oracle-checked across rungs {rung_list:?}");
+    println!("  autoscale json -> {}", path.display());
     Ok(())
 }
 

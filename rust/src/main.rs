@@ -8,6 +8,7 @@
 //!   search                   §2.5 greedy descent + Table-2 rows
 //!   traffic                  Fig-4 traffic model
 //!   footprint                fp32 vs best-config data footprint per net
+//!   frontier                 export FRONTIER_<net>.json rung ladders for autoscaling
 //!   check-mem                CI gate: measured peak RSS vs modeled envelope
 //!   repro <exp>              regenerate a paper table/figure (or `all`)
 //!   serve                    footprint-budgeted HTTP inference daemon
@@ -43,6 +44,7 @@ COMMANDS:
   search         greedy precision search (paper §2.5) + Table-2 rows
   traffic        memory-traffic model (paper Fig 4)
   footprint      fp32 vs best-config data footprint (text + JSON)
+  frontier       export FRONTIER_<net>.json rung ladders for serve --autoscale
   check-mem      fail if measured MEM_*.json peaks escape the modeled envelope
   repro          regenerate paper experiments: table1 fig1 fig2 fig3 fig4 fig5 table2 all
   serve          footprint-budgeted HTTP inference daemon (--smoke self-test)
@@ -69,6 +71,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "search" => commands::search_cmd::run(rest),
         "traffic" => commands::traffic_cmd::run(rest),
         "footprint" => commands::footprint_cmd::run(rest),
+        "frontier" => commands::frontier_cmd::run(rest),
         "check-mem" => commands::check_mem::run(rest),
         "repro" => commands::repro_cmd::run(rest),
         "serve" => commands::serve::run(rest),

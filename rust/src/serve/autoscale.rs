@@ -1,0 +1,716 @@
+//! Closed-loop precision autoscaling for the serve daemon.
+//!
+//! A QoS controller thread samples the daemon's own signals — queue
+//! occupancy ([`super::queue::InflightGate`]), arrival rate, and the
+//! p99 latency the dispatch [`super::metrics::ServeMetrics`] histogram
+//! already tracks — and moves each net's *active*
+//! [`PrecisionConfig`] along its precomputed accuracy↔footprint
+//! ladder ([`super::frontier::Frontier`]):
+//!
+//! * sustained pressure above `--high-water` for `--burst-ticks`
+//!   consecutive ticks degrades one rung toward narrower widths
+//!   (smaller envelope → more concurrent executors fit the
+//!   [`super::cache::CacheLedger`] budget, less decode traffic);
+//! * sustained pressure below `--low-water` for `--hysteresis-ticks`
+//!   ticks recovers one rung back toward full width;
+//! * the band between the watermarks resets both streaks, so the
+//!   controller cannot flap across a noisy boundary;
+//! * no rung whose measured relative accuracy loss exceeds
+//!   `--accuracy-floor` is ever reachable — the floor is applied when
+//!   the frontier is loaded ([`Frontier::usable_rungs`]), clamping the
+//!   ladder itself rather than checking per decision.
+//!
+//! Transitions are one-rung-at-a-time and fully observable: a
+//! `qbound_autoscale_rung` gauge and reason-labelled transition
+//! counters in the registry, a bounded in-memory transition log
+//! surfaced under `/v1/stats`, a span in the Chrome trace when tracing
+//! is on, and a stderr log line. With a packed-weight store attached,
+//! [`prewarm_store`] packs every usable rung's weights at startup so a
+//! swap costs one mmap plus a ledger re-price — never a re-pack.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::frontier::Frontier;
+use crate::backend::gemm::{pack_b_panels, NR};
+use crate::backend::lowering::{self, LoweredPlan};
+use crate::backend::Variant;
+use crate::memory::{PackedBuf, PackedPanels};
+use crate::nets::NetManifest;
+use crate::obs;
+use crate::search::space::PrecisionConfig;
+use crate::store::Store;
+use crate::util::json::Json;
+
+/// Knobs for the controller loop; defaults match the CLI flag
+/// defaults documented in `docs/AUTOSCALING.md`.
+#[derive(Clone, Debug)]
+pub struct AutoscaleOptions {
+    /// Directory holding `FRONTIER_<net>.json` ladders.
+    pub frontier_dir: String,
+    /// Maximum relative accuracy loss vs fp32 any served rung may have.
+    pub accuracy_floor: f64,
+    /// Pressure above this degrades (after `burst_ticks` in a row).
+    pub high_water: f64,
+    /// Pressure below this recovers (after `hysteresis_ticks` in a row).
+    pub low_water: f64,
+    /// Consecutive hot ticks required before degrading one rung.
+    pub burst_ticks: usize,
+    /// Consecutive calm ticks required before recovering one rung.
+    pub hysteresis_ticks: usize,
+    /// Controller sampling period, milliseconds.
+    pub tick_ms: u64,
+    /// Optional p99 latency SLO in microseconds; when positive, the
+    /// pressure signal is `max(queue occupancy, p99 / slo)`.
+    pub p99_slo_us: f64,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> Self {
+        AutoscaleOptions {
+            frontier_dir: "bench-out".to_string(),
+            accuracy_floor: 0.01,
+            high_water: 0.75,
+            low_water: 0.25,
+            burst_ticks: 2,
+            hysteresis_ticks: 3,
+            tick_ms: 200,
+            p99_slo_us: 0.0,
+        }
+    }
+}
+
+impl AutoscaleOptions {
+    /// Reject knob combinations with no sane interpretation.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.accuracy_floor >= 0.0,
+            "--accuracy-floor must be >= 0 (got {})",
+            self.accuracy_floor
+        );
+        anyhow::ensure!(
+            self.low_water < self.high_water,
+            "--low-water ({}) must be below --high-water ({})",
+            self.low_water,
+            self.high_water
+        );
+        anyhow::ensure!(self.high_water > 0.0, "--high-water must be positive");
+        anyhow::ensure!(self.burst_ticks >= 1, "--burst-ticks must be >= 1");
+        anyhow::ensure!(self.hysteresis_ticks >= 1, "--hysteresis-ticks must be >= 1");
+        anyhow::ensure!(self.tick_ms >= 1, "--tick-ms must be >= 1");
+        Ok(())
+    }
+}
+
+/// One controller-tick observation of the daemon's load signals.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricSample {
+    /// In-flight requests over queue capacity, in [0, 1].
+    pub queue_frac: f64,
+    /// Requests per second since the previous tick.
+    pub arrival_hz: f64,
+    /// p99 request latency from the serve histogram, microseconds.
+    pub p99_us: f64,
+}
+
+/// A rung change the controller decided on: `reason` is `"burst"`
+/// (degrade, `to == from + 1`) or `"drain"` (recover, `to == from - 1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transition {
+    pub from: usize,
+    pub to: usize,
+    pub reason: &'static str,
+}
+
+/// The per-net hysteresis state machine: pure and synchronous, so the
+/// watermark/streak semantics are unit-testable with synthetic feeds.
+///
+/// ```
+/// use qbound::serve::autoscale::{AutoscaleOptions, MetricSample, RungController};
+///
+/// let opts = AutoscaleOptions {
+///     high_water: 0.75,
+///     low_water: 0.25,
+///     burst_ticks: 2,
+///     hysteresis_ticks: 2,
+///     ..AutoscaleOptions::default()
+/// };
+/// let mut c = RungController::new(3, &opts);
+/// let hot = MetricSample { queue_frac: 1.0, ..Default::default() };
+/// let calm = MetricSample { queue_frac: 0.0, ..Default::default() };
+/// assert!(c.observe(&hot).is_none(), "one hot tick is not a burst");
+/// let t = c.observe(&hot).expect("second hot tick degrades");
+/// assert_eq!((t.from, t.to, t.reason), (0, 1, "burst"));
+/// assert!(c.observe(&calm).is_none());
+/// let t = c.observe(&calm).expect("second calm tick recovers");
+/// assert_eq!((t.from, t.to, t.reason), (1, 0, "drain"));
+/// ```
+#[derive(Debug)]
+pub struct RungController {
+    usable: usize,
+    active: usize,
+    high_water: f64,
+    low_water: f64,
+    burst_ticks: usize,
+    hysteresis_ticks: usize,
+    p99_slo_us: f64,
+    hot: usize,
+    calm: usize,
+}
+
+impl RungController {
+    /// A controller over `usable` floor-respecting rungs (indices
+    /// `0..usable`), starting at rung 0 (widest).
+    pub fn new(usable: usize, opts: &AutoscaleOptions) -> RungController {
+        RungController {
+            usable,
+            active: 0,
+            high_water: opts.high_water,
+            low_water: opts.low_water,
+            burst_ticks: opts.burst_ticks,
+            hysteresis_ticks: opts.hysteresis_ticks,
+            p99_slo_us: opts.p99_slo_us,
+            hot: 0,
+            calm: 0,
+        }
+    }
+
+    /// The currently selected rung index.
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    /// Feed one tick's sample; returns the transition taken, if any.
+    pub fn observe(&mut self, s: &MetricSample) -> Option<Transition> {
+        let mut pressure = s.queue_frac;
+        if self.p99_slo_us > 0.0 {
+            pressure = pressure.max(s.p99_us / self.p99_slo_us);
+        }
+        if pressure > self.high_water {
+            self.hot += 1;
+            self.calm = 0;
+        } else if pressure < self.low_water {
+            self.calm += 1;
+            self.hot = 0;
+        } else {
+            // Dead band: reset both streaks so a load level hovering
+            // between the watermarks can never flap the rung.
+            self.hot = 0;
+            self.calm = 0;
+        }
+        if self.hot >= self.burst_ticks && self.active + 1 < self.usable {
+            let from = self.active;
+            self.active += 1;
+            self.hot = 0;
+            self.calm = 0;
+            return Some(Transition { from, to: self.active, reason: "burst" });
+        }
+        if self.calm >= self.hysteresis_ticks && self.active > 0 {
+            let from = self.active;
+            self.active -= 1;
+            self.hot = 0;
+            self.calm = 0;
+            return Some(Transition { from, to: self.active, reason: "drain" });
+        }
+        None
+    }
+}
+
+/// One transition as recorded for `/v1/stats` and `AUTOSCALE_*.json`.
+#[derive(Clone, Debug)]
+struct TransitionRecord {
+    t_ms: f64,
+    net: String,
+    from: usize,
+    to: usize,
+    reason: &'static str,
+    queue_frac: f64,
+    arrival_hz: f64,
+    p99_us: f64,
+}
+
+impl TransitionRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t_ms", Json::num(self.t_ms)),
+            ("net", Json::str(self.net.clone())),
+            ("from", Json::num(self.from as f64)),
+            ("to", Json::num(self.to as f64)),
+            ("reason", Json::str(self.reason)),
+            ("queue_frac", Json::num(self.queue_frac)),
+            ("arrival_hz", Json::num(self.arrival_hz)),
+            ("p99_us", Json::num(self.p99_us)),
+        ])
+    }
+}
+
+/// Cap on the in-memory transition log surfaced by `/v1/stats` —
+/// oldest entries drop first, counters keep the full totals.
+const MAX_TRANSITIONS: usize = 256;
+
+struct NetAutoscale {
+    frontier: Frontier,
+    usable: usize,
+    active: AtomicUsize,
+    controller: Mutex<RungController>,
+    rung_gauge: obs::registry::Gauge,
+}
+
+/// Shared controller state: one ladder + state machine per net with a
+/// frontier file, plus the bounded transition log.
+pub struct AutoscaleState {
+    opts: AutoscaleOptions,
+    nets: BTreeMap<String, NetAutoscale>,
+    transitions: Mutex<Vec<TransitionRecord>>,
+    degrades: AtomicU64,
+    recoveries: AtomicU64,
+    started: Instant,
+}
+
+impl AutoscaleState {
+    /// Load `FRONTIER_<net>.json` for every served net (from
+    /// `opts.frontier_dir`), clamp each ladder at the accuracy floor,
+    /// and build the per-net controllers. Nets without a frontier file
+    /// are left static (logged); it is an error if *no* net has one,
+    /// or if a loaded ladder disagrees with the net's layer count.
+    pub fn build(
+        opts: AutoscaleOptions,
+        layer_counts: &HashMap<String, usize>,
+    ) -> Result<AutoscaleState> {
+        opts.validate()?;
+        let dir = Path::new(&opts.frontier_dir);
+        let mut nets = BTreeMap::new();
+        let mut names: Vec<&String> = layer_counts.keys().collect();
+        names.sort();
+        for net in names {
+            let path = dir.join(Frontier::file_name(net));
+            if !path.exists() {
+                log::warn!(
+                    "autoscale: no {} — {net} will serve its static config \
+                     (run `qbound frontier --net {net}`)",
+                    path.display()
+                );
+                continue;
+            }
+            let frontier = Frontier::load(&path)?;
+            anyhow::ensure!(
+                frontier.net == *net,
+                "frontier {} is for net {:?}, expected {net:?}",
+                path.display(),
+                frontier.net
+            );
+            anyhow::ensure!(
+                frontier.rungs[0].cfg.n_layers() == layer_counts[net],
+                "frontier {} has {}-layer configs but {net} has {} layers \
+                 (stale artifacts? re-run `qbound frontier`)",
+                path.display(),
+                frontier.rungs[0].cfg.n_layers(),
+                layer_counts[net]
+            );
+            let usable = frontier.usable_rungs(opts.accuracy_floor);
+            anyhow::ensure!(
+                usable >= 1,
+                "frontier {}: no rung respects --accuracy-floor {}",
+                path.display(),
+                opts.accuracy_floor
+            );
+            let rung_gauge = obs::gauge(
+                "qbound_autoscale_rung",
+                "active precision rung per net (0 = widest)",
+                &[("net", net)],
+            );
+            rung_gauge.set(0);
+            log::info!(
+                "autoscale: {net} ladder loaded — {} rung(s), {usable} within floor {}",
+                frontier.rungs.len(),
+                opts.accuracy_floor
+            );
+            nets.insert(
+                net.clone(),
+                NetAutoscale {
+                    usable,
+                    active: AtomicUsize::new(0),
+                    controller: Mutex::new(RungController::new(usable, &opts)),
+                    rung_gauge,
+                    frontier,
+                },
+            );
+        }
+        anyhow::ensure!(
+            !nets.is_empty(),
+            "autoscale enabled but no FRONTIER_<net>.json found in {} \
+             (run `qbound frontier` first)",
+            dir.display()
+        );
+        Ok(AutoscaleState {
+            opts,
+            nets,
+            transitions: Mutex::new(Vec::new()),
+            degrades: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn opts(&self) -> &AutoscaleOptions {
+        &self.opts
+    }
+
+    /// The config a request for `net` should execute right now, with
+    /// its rung index; `None` for nets without a ladder (serve static).
+    pub fn active_cfg(&self, net: &str) -> Option<(usize, PrecisionConfig)> {
+        let na = self.nets.get(net)?;
+        let rung = na.active.load(Ordering::Relaxed).min(na.usable - 1);
+        Some((rung, na.frontier.rungs[rung].cfg.clone()))
+    }
+
+    /// Feed one sample to every net's controller; applies and records
+    /// any transitions, returning them for the caller's logs.
+    pub fn tick(&self, s: &MetricSample) -> Vec<(String, Transition)> {
+        let mut taken = Vec::new();
+        for (net, na) in &self.nets {
+            let t = {
+                let mut c = na.controller.lock().unwrap_or_else(|p| p.into_inner());
+                c.observe(s)
+            };
+            if let Some(t) = t {
+                na.active.store(t.to, Ordering::Relaxed);
+                self.record(net, na, &t, s);
+                taken.push((net.clone(), t));
+            }
+        }
+        taken
+    }
+
+    fn record(&self, net: &str, na: &NetAutoscale, t: &Transition, s: &MetricSample) {
+        na.rung_gauge.set(t.to as i64);
+        obs::counter(
+            "qbound_autoscale_transitions_total",
+            "precision rung transitions by net and reason",
+            &[("net", net), ("reason", t.reason)],
+        )
+        .inc();
+        if t.reason == "burst" {
+            self.degrades.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.recoveries.fetch_add(1, Ordering::Relaxed);
+        }
+        if obs::tracing_on() {
+            obs::span::emit(
+                "autoscale_transition",
+                format!(
+                    "net={net} rung={}->{} reason={} queue_frac={:.2} p99_us={:.0}",
+                    t.from, t.to, t.reason, s.queue_frac, s.p99_us
+                ),
+                obs::span::now_us(),
+                0,
+            );
+        }
+        log::info!(
+            "autoscale: {net} rung {} -> {} ({}) [queue {:.0}%, {:.1} req/s, p99 {:.0}us] \
+             now serving {}",
+            t.from,
+            t.to,
+            t.reason,
+            s.queue_frac * 100.0,
+            s.arrival_hz,
+            s.p99_us,
+            na.frontier.rungs[t.to].cfg.notation()
+        );
+        let rec = TransitionRecord {
+            t_ms: self.started.elapsed().as_secs_f64() * 1e3,
+            net: net.to_string(),
+            from: t.from,
+            to: t.to,
+            reason: t.reason,
+            queue_frac: s.queue_frac,
+            arrival_hz: s.arrival_hz,
+            p99_us: s.p99_us,
+        };
+        let mut log = self.transitions.lock().unwrap_or_else(|p| p.into_inner());
+        if log.len() >= MAX_TRANSITIONS {
+            log.remove(0);
+        }
+        log.push(rec);
+    }
+
+    /// The `autoscale` block of `/v1/stats` (and `AUTOSCALE_*.json`).
+    pub fn stats_json(&self) -> Json {
+        let mut net_map = BTreeMap::new();
+        for (net, na) in &self.nets {
+            let rung = na.active.load(Ordering::Relaxed).min(na.usable - 1);
+            let r = &na.frontier.rungs[rung];
+            net_map.insert(
+                net.clone(),
+                Json::obj(vec![
+                    ("active_rung", Json::num(rung as f64)),
+                    ("rungs", Json::num(na.frontier.rungs.len() as f64)),
+                    ("usable_rungs", Json::num(na.usable as f64)),
+                    ("active_rel_err", Json::num(r.rel_err)),
+                    ("active_config", Json::str(r.cfg.notation())),
+                    ("baseline_accuracy", Json::num(na.frontier.baseline_accuracy)),
+                ]),
+            );
+        }
+        let nets = Json::Obj(net_map);
+        let transitions = {
+            let log = self.transitions.lock().unwrap_or_else(|p| p.into_inner());
+            Json::arr(log.iter().map(TransitionRecord::to_json))
+        };
+        Json::obj(vec![
+            ("enabled", Json::Bool(true)),
+            ("accuracy_floor", Json::num(self.opts.accuracy_floor)),
+            ("high_water", Json::num(self.opts.high_water)),
+            ("low_water", Json::num(self.opts.low_water)),
+            ("burst_ticks", Json::num(self.opts.burst_ticks as f64)),
+            ("hysteresis_ticks", Json::num(self.opts.hysteresis_ticks as f64)),
+            ("tick_ms", Json::num(self.opts.tick_ms as f64)),
+            ("degrades", Json::num(self.degrades.load(Ordering::Relaxed) as f64)),
+            ("recoveries", Json::num(self.recoveries.load(Ordering::Relaxed) as f64)),
+            ("nets", nets),
+            ("transitions", transitions),
+        ])
+    }
+}
+
+/// Pack every usable rung's weight tensors through the store, exactly
+/// as `qbound store warm` does for uniform ladders — same
+/// `(tensor, layout, format)` keys the fast packed executors resolve —
+/// so later rung swaps are pure mmap loads. Returns the number of
+/// fresh packs (0 on a warm store).
+pub fn prewarm_store(store: &Store, artifacts: &Path, state: &AutoscaleState) -> Result<u64> {
+    let before = store.stats();
+    for (net, na) in &state.nets {
+        let manifest = NetManifest::load(artifacts, net)
+            .with_context(|| format!("autoscale prewarm: loading {net} manifest"))?;
+        let loaded = lowering::load_network(&manifest, Variant::Standard)?;
+        let plan = LoweredPlan::new(&loaded.arch, None)?;
+        let mut gemm_shape: Vec<Option<(usize, usize)>> = vec![None; loaded.params.len()];
+        for t in lowering::gemm_tensors(&plan.steps) {
+            gemm_shape[t.param] = Some((t.kd, t.n));
+        }
+        for rung in &na.frontier.rungs[..na.usable] {
+            let per_tensor = plan.per_tensor_formats(&rung.cfg.wq);
+            for (i, p) in loaded.params.iter().enumerate() {
+                match gemm_shape[i] {
+                    Some((kd, n)) => {
+                        let _ = store.panels_for(p, per_tensor[i], kd, n, NR, || {
+                            PackedPanels::pack(per_tensor[i], &pack_b_panels(p, kd, n), kd, NR)
+                        });
+                    }
+                    None => {
+                        let _ =
+                            store.buf_for(p, per_tensor[i], || PackedBuf::pack(per_tensor[i], p));
+                    }
+                }
+            }
+        }
+    }
+    let after = store.stats();
+    Ok(after.packs - before.packs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QFormat;
+    use crate::serve::frontier::Rung;
+
+    fn opts() -> AutoscaleOptions {
+        AutoscaleOptions {
+            high_water: 0.75,
+            low_water: 0.25,
+            burst_ticks: 2,
+            hysteresis_ticks: 3,
+            ..AutoscaleOptions::default()
+        }
+    }
+
+    fn hot() -> MetricSample {
+        MetricSample { queue_frac: 1.0, arrival_hz: 50.0, p99_us: 900.0 }
+    }
+
+    fn calm() -> MetricSample {
+        MetricSample { queue_frac: 0.0, arrival_hz: 1.0, p99_us: 100.0 }
+    }
+
+    fn mid() -> MetricSample {
+        MetricSample { queue_frac: 0.5, arrival_hz: 10.0, p99_us: 400.0 }
+    }
+
+    #[test]
+    fn degrades_only_after_burst_ticks_in_a_row() {
+        let mut c = RungController::new(3, &opts());
+        assert_eq!(c.observe(&hot()), None);
+        assert_eq!(
+            c.observe(&hot()),
+            Some(Transition { from: 0, to: 1, reason: "burst" })
+        );
+        // Streak resets after a transition: one more hot tick is not enough.
+        assert_eq!(c.observe(&hot()), None);
+        assert_eq!(
+            c.observe(&hot()),
+            Some(Transition { from: 1, to: 2, reason: "burst" })
+        );
+    }
+
+    #[test]
+    fn never_degrades_past_the_floor_clamped_ladder() {
+        let mut c = RungController::new(2, &opts());
+        assert_eq!(c.observe(&hot()), None);
+        assert_eq!(c.observe(&hot()).map(|t| t.to), Some(1));
+        for _ in 0..20 {
+            assert_eq!(c.observe(&hot()), None, "rung must saturate at usable-1");
+        }
+        assert_eq!(c.active(), 1);
+    }
+
+    #[test]
+    fn single_rung_ladder_never_moves() {
+        let mut c = RungController::new(1, &opts());
+        for _ in 0..10 {
+            assert_eq!(c.observe(&hot()), None);
+        }
+        for _ in 0..10 {
+            assert_eq!(c.observe(&calm()), None);
+        }
+        assert_eq!(c.active(), 0);
+    }
+
+    #[test]
+    fn recovers_only_after_hysteresis_window() {
+        let mut c = RungController::new(3, &opts());
+        c.observe(&hot());
+        c.observe(&hot());
+        assert_eq!(c.active(), 1);
+        assert_eq!(c.observe(&calm()), None);
+        assert_eq!(c.observe(&calm()), None);
+        assert_eq!(
+            c.observe(&calm()),
+            Some(Transition { from: 1, to: 0, reason: "drain" })
+        );
+        // At the widest rung, calm ticks are a no-op.
+        for _ in 0..10 {
+            assert_eq!(c.observe(&calm()), None);
+        }
+        assert_eq!(c.active(), 0);
+    }
+
+    #[test]
+    fn dead_band_resets_streaks_so_no_flapping() {
+        let mut c = RungController::new(3, &opts());
+        // hot, mid, hot, mid ... never two hot in a row => never degrades.
+        for _ in 0..10 {
+            assert_eq!(c.observe(&hot()), None);
+            assert_eq!(c.observe(&mid()), None);
+        }
+        assert_eq!(c.active(), 0);
+        // Same once degraded: calm streaks broken by the dead band
+        // never recover.
+        c.observe(&hot());
+        c.observe(&hot());
+        assert_eq!(c.active(), 1);
+        for _ in 0..10 {
+            assert_eq!(c.observe(&calm()), None);
+            assert_eq!(c.observe(&calm()), None);
+            assert_eq!(c.observe(&mid()), None);
+        }
+        assert_eq!(c.active(), 1);
+    }
+
+    #[test]
+    fn p99_slo_pressure_degrades_even_with_an_empty_queue() {
+        let mut c = RungController::new(2, &AutoscaleOptions { p99_slo_us: 1000.0, ..opts() });
+        let slow = MetricSample { queue_frac: 0.0, arrival_hz: 2.0, p99_us: 5000.0 };
+        assert_eq!(c.observe(&slow), None);
+        assert_eq!(c.observe(&slow).map(|t| t.reason), Some("burst"));
+    }
+
+    fn ladder(net: &str, n_layers: usize) -> Frontier {
+        let rung = |w, acc: f64, fp: f64| Rung {
+            cfg: PrecisionConfig::uniform(n_layers, w, QFormat::new(10, 4)),
+            accuracy: acc,
+            rel_err: (0.9 - acc) / 0.9,
+            footprint_ratio: fp,
+            envelope_bytes: fp * 1.0e6,
+        };
+        Frontier {
+            net: net.to_string(),
+            baseline_accuracy: 0.9,
+            rungs: vec![
+                rung(QFormat::new(2, 8), 0.9, 0.5),
+                rung(QFormat::new(1, 8), 0.897, 0.42),
+                rung(QFormat::new(1, 5), 0.85, 0.3), // 5.6% rel loss: outside a 1% floor
+            ],
+        }
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("qbound-autoscale-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn build_clamps_ladders_at_the_floor_and_scales_within_it() {
+        let dir = temp_dir("build");
+        ladder("lenet", 4).save(&dir.join(Frontier::file_name("lenet"))).unwrap();
+        let counts = HashMap::from([("lenet".to_string(), 4usize)]);
+        let opts = AutoscaleOptions {
+            frontier_dir: dir.display().to_string(),
+            ..AutoscaleOptions::default()
+        };
+        let state = AutoscaleState::build(opts, &counts).unwrap();
+        let (rung, cfg) = state.active_cfg("lenet").unwrap();
+        assert_eq!(rung, 0);
+        assert_eq!(cfg.wq[0], QFormat::new(2, 8));
+
+        // Drive a burst: rung must stop at 1 (rung 2 busts the floor).
+        for _ in 0..10 {
+            state.tick(&hot());
+        }
+        let (rung, cfg) = state.active_cfg("lenet").unwrap();
+        assert_eq!(rung, 1, "floor-violating rung 2 must be unreachable");
+        assert_eq!(cfg.wq[0], QFormat::new(1, 8));
+
+        // Drain: back to the widest rung.
+        for _ in 0..10 {
+            state.tick(&calm());
+        }
+        assert_eq!(state.active_cfg("lenet").unwrap().0, 0);
+
+        let j = state.stats_json();
+        assert!(j.get("degrades").and_then(Json::as_u64).unwrap() >= 1);
+        assert!(j.get("recoveries").and_then(Json::as_u64).unwrap() >= 1);
+        assert_eq!(
+            j.at(&["nets", "lenet", "usable_rungs"]).as_u64(),
+            Some(2)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn build_rejects_layer_count_drift_and_requires_some_ladder() {
+        let dir = temp_dir("drift");
+        ladder("lenet", 4).save(&dir.join(Frontier::file_name("lenet"))).unwrap();
+        let counts = HashMap::from([("lenet".to_string(), 5usize)]);
+        let opts = AutoscaleOptions {
+            frontier_dir: dir.display().to_string(),
+            ..AutoscaleOptions::default()
+        };
+        assert!(AutoscaleState::build(opts.clone(), &counts).is_err());
+
+        let counts = HashMap::from([("other".to_string(), 4usize)]);
+        assert!(
+            AutoscaleState::build(opts, &counts).is_err(),
+            "no net with a frontier file must be an error"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

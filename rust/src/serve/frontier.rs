@@ -1,0 +1,352 @@
+//! The accuracy↔footprint frontier the autoscaler walks: an ordered
+//! ladder of precision "rungs" per network, precomputed offline by
+//! `qbound frontier` from the greedy-descent trajectory (paper Fig 5 /
+//! Table 2) and loaded by the serve daemon from `FRONTIER_<net>.json`.
+//!
+//! Rung 0 is the *widest* (highest-accuracy, largest-footprint)
+//! operating point; each following rung narrows the per-layer widths
+//! along the Pareto frontier. The controller
+//! ([`super::autoscale`]) only ever moves one rung at a time, and only
+//! inside the floor-clamped prefix ([`Frontier::usable_rungs`]), so the
+//! configured relative-accuracy floor is enforced *structurally*: a
+//! rung whose measured `rel_err` busts the floor is unreachable, not
+//! merely discouraged.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::quant::QFormat;
+use crate::search::space::PrecisionConfig;
+use crate::util;
+use crate::util::json::Json;
+
+/// One operating point on a net's accuracy↔footprint frontier.
+///
+/// `rel_err` is the measured relative accuracy loss vs the fp32
+/// baseline (`(baseline - accuracy) / baseline`), the quantity the
+/// `--accuracy-floor` guarantee is stated in; `footprint_ratio` is the
+/// modeled resident-byte ratio vs fp32
+/// ([`crate::memory::FootprintModel::ratio`]); `envelope_bytes` is the
+/// serve-admission cost of one executor at this rung
+/// (`FootprintModel::fused_envelope`), so the daemon can price a swap
+/// without re-deriving the model.
+///
+/// ```
+/// use qbound::quant::QFormat;
+/// use qbound::search::space::PrecisionConfig;
+/// use qbound::serve::frontier::Rung;
+///
+/// let rung = Rung {
+///     cfg: PrecisionConfig::uniform(3, QFormat::new(1, 8), QFormat::new(10, 4)),
+///     accuracy: 0.94,
+///     rel_err: 0.005,
+///     footprint_ratio: 0.41,
+///     envelope_bytes: 8.0e5,
+/// };
+/// assert_eq!(rung.cfg.n_layers(), 3);
+/// assert!(rung.rel_err < 0.01, "within a 1% floor");
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct Rung {
+    /// The per-layer precision assignment served at this rung.
+    pub cfg: PrecisionConfig,
+    /// Measured top-1 accuracy at this rung (same eval split as the
+    /// descent that produced it).
+    pub accuracy: f64,
+    /// Relative accuracy loss vs the fp32 baseline, in [0, 1].
+    pub rel_err: f64,
+    /// Modeled data-footprint ratio vs fp32 (Table-2 ranking key).
+    pub footprint_ratio: f64,
+    /// Serve-admission envelope of one executor at this rung, in bytes.
+    pub envelope_bytes: f64,
+}
+
+impl Rung {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wq", fmts_json(&self.cfg.wq)),
+            ("dq", fmts_json(&self.cfg.dq)),
+            ("config", Json::str(self.cfg.notation())),
+            ("accuracy", Json::num(self.accuracy)),
+            ("rel_err", Json::num(self.rel_err)),
+            ("footprint_ratio", Json::num(self.footprint_ratio)),
+            ("envelope_bytes", Json::num(self.envelope_bytes)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Rung> {
+        let num = |field: &str| {
+            j.get(field)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("rung: missing numeric field {field:?}"))
+        };
+        Ok(Rung {
+            cfg: PrecisionConfig { wq: fmts_from(j, "wq")?, dq: fmts_from(j, "dq")? },
+            accuracy: num("accuracy")?,
+            rel_err: num("rel_err")?,
+            footprint_ratio: num("footprint_ratio")?,
+            envelope_bytes: num("envelope_bytes")?,
+        })
+    }
+}
+
+/// A net's full rung ladder: rung 0 widest, monotonically narrowing.
+///
+/// Round-trips through the `FRONTIER_<net>.json` schema `qbound
+/// frontier` emits and `qbound serve --autoscale` loads:
+///
+/// ```
+/// use qbound::quant::QFormat;
+/// use qbound::search::space::PrecisionConfig;
+/// use qbound::serve::frontier::{Frontier, Rung};
+///
+/// let rung = |w, d, acc: f64, fp: f64| Rung {
+///     cfg: PrecisionConfig::uniform(2, w, d),
+///     accuracy: acc,
+///     rel_err: (0.95 - acc) / 0.95,
+///     footprint_ratio: fp,
+///     envelope_bytes: fp * 1.0e6,
+/// };
+/// let f = Frontier {
+///     net: "lenet".to_string(),
+///     baseline_accuracy: 0.95,
+///     rungs: vec![
+///         rung(QFormat::new(2, 7), QFormat::new(10, 4), 0.95, 0.45),
+///         rung(QFormat::new(1, 7), QFormat::new(9, 3), 0.945, 0.38),
+///         rung(QFormat::new(1, 5), QFormat::new(8, 2), 0.88, 0.30),
+///     ],
+/// };
+/// f.validate().unwrap();
+/// // The last rung loses ~7.4% relative accuracy: a 1% floor clamps it off.
+/// assert_eq!(f.usable_rungs(0.01), 2);
+/// let back = Frontier::from_json(&f.to_json()).unwrap();
+/// assert_eq!(back.rungs.len(), 3);
+/// assert_eq!(back.rungs[2].cfg, f.rungs[2].cfg);
+/// ```
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    /// Network the ladder belongs to.
+    pub net: String,
+    /// fp32 top-1 accuracy the `rel_err` values are relative to.
+    pub baseline_accuracy: f64,
+    /// Operating points, widest first.
+    pub rungs: Vec<Rung>,
+}
+
+impl Frontier {
+    /// The artifact name convention: `FRONTIER_<net>.json`.
+    pub fn file_name(net: &str) -> String {
+        format!("FRONTIER_{net}.json")
+    }
+
+    /// Structural sanity: at least one rung, every rung over the same
+    /// layer count, footprint non-increasing and relative error
+    /// non-decreasing down the ladder (rung 0 widest). The serve daemon
+    /// refuses a frontier that fails this rather than scaling along a
+    /// mis-ordered ladder.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.rungs.is_empty(), "frontier for {}: no rungs", self.net);
+        anyhow::ensure!(
+            self.baseline_accuracy > 0.0,
+            "frontier for {}: non-positive baseline accuracy",
+            self.net
+        );
+        let n_layers = self.rungs[0].cfg.n_layers();
+        for (i, r) in self.rungs.iter().enumerate() {
+            anyhow::ensure!(
+                r.cfg.n_layers() == n_layers,
+                "frontier for {}: rung {i} has {} layers, rung 0 has {n_layers}",
+                self.net,
+                r.cfg.n_layers()
+            );
+            anyhow::ensure!(
+                r.rel_err >= -1e-9,
+                "frontier for {}: rung {i} has negative rel_err {}",
+                self.net,
+                r.rel_err
+            );
+            if i > 0 {
+                let prev = &self.rungs[i - 1];
+                anyhow::ensure!(
+                    r.footprint_ratio <= prev.footprint_ratio + 1e-9,
+                    "frontier for {}: rung {i} footprint {} above rung {} ({})",
+                    self.net,
+                    r.footprint_ratio,
+                    i - 1,
+                    prev.footprint_ratio
+                );
+                anyhow::ensure!(
+                    r.rel_err >= prev.rel_err - 1e-9,
+                    "frontier for {}: rung {i} rel_err {} below rung {} ({})",
+                    self.net,
+                    r.rel_err,
+                    i - 1,
+                    prev.rel_err
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// How many leading rungs respect an accuracy floor: the count `n`
+    /// such that `rungs[..n]` all lose at most `floor` relative
+    /// accuracy vs fp32. The controller never selects a rung at or past
+    /// this index, which is the whole floor guarantee.
+    pub fn usable_rungs(&self, floor: f64) -> usize {
+        self.rungs.iter().take_while(|r| r.rel_err <= floor + 1e-12).count()
+    }
+
+    /// Serialize to the `FRONTIER_<net>.json` schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("net", Json::str(self.net.clone())),
+            ("baseline_accuracy", Json::num(self.baseline_accuracy)),
+            ("rungs", Json::arr(self.rungs.iter().map(Rung::to_json))),
+        ])
+    }
+
+    /// Parse the `FRONTIER_<net>.json` schema (inverse of
+    /// [`Frontier::to_json`]); structural checks are the caller's
+    /// [`Frontier::validate`].
+    pub fn from_json(j: &Json) -> Result<Frontier> {
+        let net = j.get("net").and_then(Json::as_str).context("frontier: missing \"net\"")?;
+        let baseline = j
+            .get("baseline_accuracy")
+            .and_then(Json::as_f64)
+            .context("frontier: missing \"baseline_accuracy\"")?;
+        let rungs = j
+            .get("rungs")
+            .and_then(Json::as_arr)
+            .context("frontier: missing \"rungs\" array")?
+            .iter()
+            .map(Rung::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Frontier { net: net.to_string(), baseline_accuracy: baseline, rungs })
+    }
+
+    /// Load and validate a frontier file.
+    pub fn load(path: &Path) -> Result<Frontier> {
+        let text = util::read_to_string(path)
+            .with_context(|| format!("reading frontier {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("parsing frontier {}", path.display()))?;
+        let f = Frontier::from_json(&j)?;
+        f.validate()?;
+        Ok(f)
+    }
+
+    /// Write the frontier as pretty JSON (creating parent directories).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        util::write_file(path, self.to_json().pretty().as_bytes())
+    }
+}
+
+fn fmts_json(v: &[QFormat]) -> Json {
+    Json::arr(v.iter().map(|q| Json::str(q.to_string())))
+}
+
+fn fmts_from(j: &Json, field: &str) -> Result<Vec<QFormat>> {
+    j.get(field)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("rung: missing array field {field:?}"))?
+        .iter()
+        .map(|s| {
+            let s = s.as_str().with_context(|| format!("rung: non-string entry in {field:?}"))?;
+            QFormat::parse(s)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> Frontier {
+        let rung = |w, d, acc: f64, fp: f64| Rung {
+            cfg: PrecisionConfig::uniform(4, w, d),
+            accuracy: acc,
+            rel_err: (0.9 - acc) / 0.9,
+            footprint_ratio: fp,
+            envelope_bytes: fp * 2.0e6,
+        };
+        Frontier {
+            net: "lenet".to_string(),
+            baseline_accuracy: 0.9,
+            rungs: vec![
+                rung(QFormat::new(2, 8), QFormat::new(10, 4), 0.9, 0.5),
+                rung(QFormat::new(1, 8), QFormat::new(10, 4), 0.897, 0.42),
+                rung(QFormat::new(1, 6), QFormat::new(9, 2), 0.88, 0.33),
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_field() {
+        let f = ladder();
+        let back = Frontier::from_json(&f.to_json()).unwrap();
+        assert_eq!(back.net, f.net);
+        assert_eq!(back.baseline_accuracy, f.baseline_accuracy);
+        assert_eq!(back.rungs.len(), f.rungs.len());
+        for (a, b) in back.rungs.iter().zip(&f.rungs) {
+            assert_eq!(a, b);
+        }
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn save_and_load_round_trip_on_disk() {
+        let f = ladder();
+        let dir = std::env::temp_dir()
+            .join(format!("qbound-frontier-test-{}", std::process::id()));
+        let path = dir.join(Frontier::file_name("lenet"));
+        f.save(&path).unwrap();
+        let back = Frontier::load(&path).unwrap();
+        assert_eq!(back.rungs, f.rungs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn usable_rungs_clamps_at_the_floor() {
+        let f = ladder();
+        // rung 1 loses 0.33% relative, rung 2 loses 2.2%.
+        assert_eq!(f.usable_rungs(0.01), 2);
+        assert_eq!(f.usable_rungs(0.05), 3);
+        assert_eq!(f.usable_rungs(0.001), 1);
+        assert_eq!(f.usable_rungs(0.0), 1, "rung 0 is exact — always usable");
+    }
+
+    #[test]
+    fn validate_rejects_disorder_and_shape_drift() {
+        let mut f = ladder();
+        f.rungs.swap(0, 2); // widest no longer first
+        assert!(f.validate().is_err());
+
+        let mut f = ladder();
+        f.rungs[1].cfg = PrecisionConfig::uniform(3, QFormat::new(1, 8), QFormat::new(10, 4));
+        assert!(f.validate().is_err(), "layer-count drift must be rejected");
+
+        let mut f = ladder();
+        f.rungs.clear();
+        assert!(f.validate().is_err(), "an empty ladder is unusable");
+    }
+
+    #[test]
+    fn fp32_formats_survive_the_wire() {
+        let f = Frontier {
+            net: "n".to_string(),
+            baseline_accuracy: 0.5,
+            rungs: vec![Rung {
+                cfg: PrecisionConfig::fp32(2),
+                accuracy: 0.5,
+                rel_err: 0.0,
+                footprint_ratio: 1.0,
+                envelope_bytes: 1.0e6,
+            }],
+        };
+        let back = Frontier::from_json(&f.to_json()).unwrap();
+        assert!(back.rungs[0].cfg.wq.iter().all(QFormat::is_fp32));
+    }
+}

@@ -51,8 +51,21 @@
 //! panic costs one 500 + counter, never the daemon), and the dispatch
 //! mutex recovers from poisoning ([`lock_dispatch`]) instead of
 //! cascading `PoisonError` panics through every connection thread.
+//!
+//! With autoscaling enabled ([`ServeOptions::autoscale`], the CLI's
+//! `--autoscale`) a controller thread samples queue occupancy, arrival
+//! rate and p99 latency every tick and walks each net's precomputed
+//! accuracy↔footprint ladder ([`frontier`], [`autoscale`]): sustained
+//! pressure degrades the served precision one rung toward narrower
+//! widths, a calm hysteresis window recovers it, and `--accuracy-floor`
+//! bounds how much accuracy a reachable rung may give up. While a net
+//! has a ladder, its active rung *overrides* the per-request
+//! `weights`/`data` fields — clients see which rung answered in the
+//! response's `rung` field and the ladder state under `/v1/stats`.
 
+pub mod autoscale;
 pub mod cache;
+pub mod frontier;
 pub mod http;
 pub mod metrics;
 pub mod queue;
@@ -65,7 +78,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -114,6 +127,12 @@ pub struct ServeOptions {
     /// the server itself never reads the environment, so tests can run
     /// store-backed and store-free daemons side by side.
     pub store_dir: Option<String>,
+    /// When set, the precision-autoscaling controller runs with these
+    /// knobs: frontiers are loaded from `FRONTIER_<net>.json` files,
+    /// usable rungs are pre-warmed through the store (if any), and a
+    /// `serve-autoscale` thread moves each net's active config along
+    /// its ladder under load. `None` (the default) serves statically.
+    pub autoscale: Option<autoscale::AutoscaleOptions>,
 }
 
 impl Default for ServeOptions {
@@ -128,6 +147,7 @@ impl Default for ServeOptions {
             max_body_bytes: 64 * 1024,
             trace_dir: None,
             store_dir: None,
+            autoscale: None,
         }
     }
 }
@@ -187,6 +207,8 @@ struct Shared {
     /// also read by `/v1/stats` and by the admission path to price
     /// shared weight mappings once.
     store: Option<Arc<Store>>,
+    /// Precision-autoscaling ladders + controllers (None = static).
+    autoscale: Option<Arc<autoscale::AutoscaleState>>,
     max_body: usize,
     n_workers: usize,
     queue_depth: usize,
@@ -220,6 +242,7 @@ pub struct Server {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    controller: Option<JoinHandle<()>>,
     trace_dir: Option<String>,
 }
 
@@ -270,6 +293,30 @@ impl Server {
             });
         }
         anyhow::ensure!(!nets.is_empty(), "no servable networks in {}", dir.display());
+
+        // Autoscaling: load the per-net frontier ladders (floor-clamped)
+        // and pre-pack every usable rung's weights through the store, so
+        // a later rung swap is one mmap + ledger re-price, never a
+        // re-pack.
+        let autoscale = match &opts.autoscale {
+            Some(ao) => {
+                let counts: HashMap<String, usize> =
+                    nets.iter().map(|(n, i)| (n.clone(), i.manifest.n_layers())).collect();
+                let state = Arc::new(autoscale::AutoscaleState::build(ao.clone(), &counts)?);
+                if let Some(store) = &store {
+                    if opts.storage == StorageMode::Packed && opts.backend == BackendKind::Fast {
+                        let packs = autoscale::prewarm_store(store, dir, &state)
+                            .context("pre-warming the store for autoscale rungs")?;
+                        log::info!(
+                            "serve: autoscale pre-warm packed {packs} fresh tensor key(s) \
+                             (0 = store already warm)"
+                        );
+                    }
+                }
+                Some(state)
+            }
+            None => None,
+        };
         let nets = Arc::new(nets);
 
         let mut worker_txs = Vec::with_capacity(n_workers);
@@ -301,6 +348,7 @@ impl Server {
             backend: opts.backend,
             storage: opts.storage,
             store,
+            autoscale,
             max_body: opts.max_body_bytes,
             n_workers,
             queue_depth: opts.queue_depth,
@@ -329,6 +377,18 @@ impl Server {
                 }
             })?;
 
+        let controller = match shared.autoscale.clone() {
+            Some(state) => {
+                let sh = Arc::clone(&shared);
+                Some(
+                    std::thread::Builder::new()
+                        .name("serve-autoscale".to_string())
+                        .spawn(move || controller_loop(sh, state))?,
+                )
+            }
+            None => None,
+        };
+
         log::info!(
             "serve: listening on {addr} ({} workers, budget {}, queue {})",
             n_workers,
@@ -336,7 +396,7 @@ impl Server {
             opts.queue_depth
         );
         let trace_dir = opts.trace_dir.clone();
-        Ok(Server { addr, shared, accept: Some(accept), workers, trace_dir })
+        Ok(Server { addr, shared, accept: Some(accept), workers, controller, trace_dir })
     }
 
     /// The bound address (the real port when the options asked for 0).
@@ -364,6 +424,9 @@ impl Server {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.controller.take() {
+            let _ = h.join();
+        }
         // Dropping the senders ends the worker loops once their queues
         // drain; in-flight jobs still get answered first.
         lock_dispatch(&self.shared).worker_txs.clear();
@@ -384,9 +447,42 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        if self.accept.is_some() || !self.workers.is_empty() {
+        if self.accept.is_some() || self.controller.is_some() || !self.workers.is_empty() {
             self.stop_impl();
         }
+    }
+}
+
+/// The autoscaling tick loop: sample the daemon's own signals, feed the
+/// per-net controllers, let [`autoscale::AutoscaleState::tick`] apply
+/// and record any transitions. Sleeps in short slices so shutdown never
+/// waits out a full tick.
+fn controller_loop(sh: Arc<Shared>, state: Arc<autoscale::AutoscaleState>) {
+    let tick = Duration::from_millis(state.opts().tick_ms);
+    let slice = Duration::from_millis(5).min(tick);
+    let mut last = Instant::now();
+    let mut last_requests = lock_dispatch(&sh).metrics.requests();
+    while !sh.stop.load(Ordering::SeqCst) {
+        let t0 = Instant::now();
+        while t0.elapsed() < tick {
+            if sh.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(slice);
+        }
+        let (requests, p99_us) = {
+            let d = lock_dispatch(&sh);
+            (d.metrics.requests(), d.metrics.percentile_us(0.99))
+        };
+        let dt = last.elapsed().as_secs_f64().max(1e-9);
+        last = Instant::now();
+        let sample = autoscale::MetricSample {
+            queue_frac: sh.gate.in_flight() as f64 / sh.queue_depth.max(1) as f64,
+            arrival_hz: requests.saturating_sub(last_requests) as f64 / dt,
+            p99_us,
+        };
+        last_requests = requests;
+        state.tick(&sample);
     }
 }
 
@@ -510,6 +606,13 @@ fn stats_response(sh: &Arc<Shared>) -> HttpResponse {
             None => Json::obj(vec![("enabled", Json::Bool(false))]),
         },
     );
+    m.insert(
+        "autoscale".to_string(),
+        match &sh.autoscale {
+            Some(state) => state.stats_json(),
+            None => Json::obj(vec![("enabled", Json::Bool(false))]),
+        },
+    );
     m.insert("workers".to_string(), Json::num(sh.n_workers as f64));
     m.insert("queue_depth".to_string(), Json::num(sh.queue_depth as f64));
     m.insert("in_flight".to_string(), Json::num(sh.gate.in_flight() as f64));
@@ -601,7 +704,17 @@ fn classify(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) 
         return fail(400, &format!("index {index} out of range ({} images)", info.dataset.n));
     }
 
-    let cfg = PrecisionConfig::uniform(info.manifest.n_layers(), wfmt, dfmt);
+    let mut cfg = PrecisionConfig::uniform(info.manifest.n_layers(), wfmt, dfmt);
+    // Autoscaling overrides the requested formats with the net's active
+    // rung: under load the whole fleet of clients is degraded together,
+    // and every answer carries the rung that produced it.
+    let mut rung: Option<usize> = None;
+    if let Some(state) = &sh.autoscale {
+        if let Some((r, rcfg)) = state.active_cfg(net) {
+            rung = Some(r);
+            cfg = rcfg;
+        }
+    }
     let cost = info.envelope(&cfg);
     let key = CacheKey {
         net: net.to_string(),
@@ -690,6 +803,7 @@ fn classify(sh: &Arc<Shared>, req: &HttpRequest) -> (HttpResponse, Option<u64>) 
                 ("cache", Json::str(if reply.loaded { "load" } else { cache_state })),
                 ("evicted", Json::num(evicted_n as f64)),
                 ("envelope_bytes", Json::num(cost)),
+                ("rung", rung.map(|r| Json::num(r as f64)).unwrap_or(Json::Null)),
             ]);
             (HttpResponse::json(200, &doc), Some(us))
         }

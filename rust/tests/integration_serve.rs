@@ -342,6 +342,193 @@ fn killed_and_restarted_server_warm_starts_with_zero_packs() {
     let _ = std::fs::remove_dir_all(&store_dir);
 }
 
+// ---- precision autoscaling ----------------------------------------------
+
+/// End-to-end autoscale walk: a synthetic (but real-config) lenet
+/// ladder, a saturating burst that must degrade the active rung, a
+/// drain that must recover it, the accuracy floor clamping off the
+/// ladder's too-lossy tail, and every observed rung's answer checked
+/// against the reference oracle running that rung's exact config.
+#[test]
+fn autoscaler_degrades_under_burst_recovers_after_drain_and_honors_floor() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    use qbound::serve::autoscale::AutoscaleOptions;
+    use qbound::serve::frontier::{Frontier, Rung};
+
+    let dir = testkit::ensure_artifacts();
+    let fdir = std::env::temp_dir()
+        .join(format!("qbound-serve-autoscale-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&fdir);
+
+    // Three rungs inside a 1% floor plus a fourth that busts it: the
+    // loader must clamp the ladder to the first three. Accuracies are
+    // fabricated (ladder shape is what's under test); the configs are
+    // real, so served predictions can be oracle-checked per rung.
+    let mk = |w: QFormat, rel: f64, fp: f64| Rung {
+        cfg: lenet_cfg(w),
+        accuracy: 0.95 * (1.0 - rel),
+        rel_err: rel,
+        footprint_ratio: fp,
+        envelope_bytes: envelope("lenet", &lenet_cfg(w)),
+    };
+    let frontier = Frontier {
+        net: "lenet".to_string(),
+        baseline_accuracy: 0.95,
+        rungs: vec![
+            mk(QFormat::new(3, 8), 0.0, 1.0),
+            mk(QFormat::new(2, 7), 0.004, 0.8),
+            mk(QFormat::new(1, 6), 0.008, 0.6),
+            mk(QFormat::new(1, 4), 0.05, 0.5),
+        ],
+    };
+    frontier.save(&fdir.join(Frontier::file_name("lenet"))).unwrap();
+
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        // One worker + a two-slot queue: a concurrent burst pins the
+        // occupancy fraction at 1.0 within a tick.
+        workers: 1,
+        queue_depth: 2,
+        mem_budget_bytes: 1024.0 * 1024.0 * 1024.0,
+        autoscale: Some(AutoscaleOptions {
+            frontier_dir: fdir.to_string_lossy().into_owned(),
+            accuracy_floor: 0.01,
+            // A lone in-flight request (frac 0.5) sits in the dead band;
+            // only the saturated burst (frac 1.0) reads as pressure.
+            high_water: 0.6,
+            low_water: 0.3,
+            burst_ticks: 2,
+            hysteresis_ticks: 2,
+            tick_ms: 20,
+            p99_slo_us: 0.0,
+        }),
+        ..ServeOptions::default()
+    };
+    let server = Server::start(&dir, &opts).unwrap();
+    let addr = server.addr();
+
+    // Quiet request: answered at rung 0, and the answer says so.
+    let (st, resp) = post(addr, "/v1/classify", "{\"net\":\"lenet\",\"index\":0}");
+    assert_eq!(st, 200, "{resp}");
+    assert_eq!(resp.get("rung").and_then(Json::as_usize), Some(0), "{resp}");
+    let (st, stats) = get(addr, "/v1/stats");
+    assert_eq!(st, 200);
+    assert_eq!(
+        stats.at(&["autoscale", "nets", "lenet", "usable_rungs"]).as_u64(),
+        Some(3),
+        "the 5% rung must be clamped off by the 1% floor: {stats}"
+    );
+
+    // Burst phase: saturate the queue until /v1/stats shows a degrade,
+    // then linger until an answer served at the narrow rung is in hand.
+    let stop = AtomicBool::new(false);
+    let observed: Mutex<Vec<(usize, usize, usize)>> = Mutex::new(Vec::new());
+    let mut degraded = false;
+    std::thread::scope(|s| {
+        for _ in 0..6 {
+            s.spawn(|| {
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let idx = i % 4;
+                    i += 1;
+                    let body = format!("{{\"net\":\"lenet\",\"index\":{idx}}}");
+                    // 429 backpressure is expected while saturated.
+                    let (st, resp) = post(addr, "/v1/classify", &body);
+                    if st == 200 {
+                        if let (Some(r), Some(p)) = (
+                            resp.get("rung").and_then(Json::as_usize),
+                            resp.get("pred").and_then(Json::as_usize),
+                        ) {
+                            observed.lock().unwrap().push((r, idx, p));
+                        }
+                    }
+                }
+            });
+        }
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(25));
+            let (st, stats) = get(addr, "/v1/stats");
+            if st == 200
+                && stats.at(&["autoscale", "nets", "lenet", "active_rung"]).as_u64()
+                    >= Some(1)
+            {
+                degraded = true;
+                break;
+            }
+        }
+        let grace = Instant::now() + Duration::from_secs(10);
+        while degraded && Instant::now() < grace {
+            if observed.lock().unwrap().iter().any(|(r, _, _)| *r >= 1) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert!(degraded, "the burst never degraded the active rung");
+
+    // Drain phase: no traffic — the hysteresis window must walk the
+    // rung back to 0 and count at least one recovery.
+    let mut recovered = false;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+        let (st, stats) = get(addr, "/v1/stats");
+        if st == 200
+            && stats.at(&["autoscale", "nets", "lenet", "active_rung"]).as_u64() == Some(0)
+            && stats.at(&["autoscale", "recoveries"]).as_u64() >= Some(1)
+        {
+            recovered = true;
+            break;
+        }
+    }
+    assert!(recovered, "the drain never recovered the rung");
+
+    // The floor guarantee, checked against the recorded transitions:
+    // every rung the controller ever selected is inside the clamped
+    // prefix, i.e. within 1% relative accuracy of fp32.
+    let (st, stats) = get(addr, "/v1/stats");
+    assert_eq!(st, 200);
+    assert!(stats.at(&["autoscale", "degrades"]).as_u64() >= Some(1), "{stats}");
+    let transitions = stats.at(&["autoscale", "transitions"]).as_arr().unwrap();
+    assert!(!transitions.is_empty(), "{stats}");
+    for t in transitions {
+        let to = t.get("to").and_then(Json::as_usize).unwrap();
+        assert!(to < 3, "rung {to} is past the floor-clamped prefix: {stats}");
+        assert!(frontier.rungs[to].rel_err <= 0.01, "floor violated at rung {to}");
+    }
+
+    // Every observed rung's predictions match the reference oracle
+    // running that rung's exact per-layer config.
+    let samples = observed.into_inner().unwrap();
+    assert!(
+        samples.iter().any(|(r, _, _)| *r >= 1),
+        "no answer was served at a degraded rung"
+    );
+    let manifest = NetManifest::load(&dir, "lenet").unwrap();
+    let dataset = Dataset::load(&manifest).unwrap();
+    let oracle = BackendKind::Reference.create().unwrap();
+    let mut seen: std::collections::BTreeMap<usize, usize> = Default::default();
+    for (r, idx, pred) in samples {
+        let n = seen.entry(r).or_insert(0);
+        if *n >= 3 {
+            continue; // 3 checks per rung is plenty
+        }
+        *n += 1;
+        let want =
+            reference_prediction(&manifest, &dataset, oracle.as_ref(), &frontier.rungs[r].cfg, idx)
+                .unwrap();
+        assert_eq!(pred, want, "rung {r} index {idx} diverges from the oracle");
+    }
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&fdir);
+}
+
 #[test]
 fn keep_alive_connection_pipelines_requests() {
     let server = start(1024.0 * 1024.0 * 1024.0);
